@@ -1,0 +1,143 @@
+//! End-to-end system driver — proves all three layers compose.
+//!
+//! For every emulated paper dataset (scaled): generate data → build
+//! distribution-aware partitions → train SODM (Algorithm 1, RBF) and the
+//! DSVRG linear accelerator (Algorithm 2) on the simulated cluster → serve
+//! batched predictions through the **AOT Pallas/PJRT artifacts** (L1/L2)
+//! and cross-check them against the rust-native decision path → report
+//! accuracy, train time, serving latency/throughput, and communication.
+//!
+//! This is the EXPERIMENTS.md §E2E driver. Requires `make artifacts`.
+//!
+//! Run with: `cargo run --release --example e2e_benchmark [scale]`
+
+use std::time::Instant;
+
+use sodm::cluster::SimCluster;
+use sodm::data::synth::SynthSpec;
+use sodm::exp::rbf_for;
+use sodm::odm::{OdmModel, OdmParams};
+use sodm::partition::PartitionStrategy;
+use sodm::qp::SolveBudget;
+use sodm::runtime::XlaEngine;
+use sodm::sodm::{train_sodm, SodmConfig};
+use sodm::svrg::{train_dsvrg, NativeGrad, SvrgConfig};
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let engine = XlaEngine::load_default().expect(
+        "AOT artifacts not found — run `make artifacts` first (python lowers the \
+         Pallas kernels to HLO text once; rust is self-contained afterwards)",
+    );
+    println!(
+        "PJRT engine up: feature buckets {:?}, gram tile {}x{}, grad batch {}\n",
+        engine.geometry.feature_buckets,
+        engine.geometry.gram_m,
+        engine.geometry.gram_p,
+        engine.geometry.grad_b
+    );
+
+    println!(
+        "{:<14}{:>7}{:>10}{:>10}{:>10}{:>12}{:>12}{:>12}{:>10}",
+        "dataset", "rows", "rbf acc", "rbf t(s)", "lin acc", "lin t(s)", "serve ms/b", "serve q/s", "max |Δ|"
+    );
+
+    let mut worst_delta_all: f64 = 0.0;
+    for spec in SynthSpec::all(scale, 9) {
+        let ds = spec.generate();
+        let (train, test) = ds.split(0.8, 9);
+        let kernel = rbf_for(&train);
+        let params = OdmParams::default();
+        let cluster = SimCluster::new(8);
+
+        // --- L3: SODM hierarchical merge training (RBF) ---
+        let t0 = Instant::now();
+        let rbf_model = train_sodm(
+            &train,
+            &kernel,
+            &params,
+            &SodmConfig {
+                p: 4,
+                levels: 2,
+                stratums: 16,
+                strategy: PartitionStrategy::StratifiedRkhs { stratums: 16 },
+                budget: SolveBudget { max_sweeps: 40, ..Default::default() },
+                level_tol: 1e-3,
+                final_exact: train.rows <= 6000,
+                seed: 9,
+            },
+            Some(&cluster),
+        );
+        let rbf_secs = t0.elapsed().as_secs_f64();
+
+        // --- L3: DSVRG linear accelerator ---
+        let t1 = Instant::now();
+        let lin_run = train_dsvrg(
+            &train,
+            &params,
+            &SvrgConfig { epochs: 3, partitions: 8, seed: 9, ..Default::default() },
+            Some(&cluster),
+            &NativeGrad { workers: 1 },
+        );
+        let lin_secs = t1.elapsed().as_secs_f64();
+
+        // --- L1/L2 serving: batched decisions through the PJRT artifacts ---
+        let batch = engine.geometry.dec_b;
+        let n_batches = test.rows.div_ceil(batch);
+        let (xla_decisions, serve_secs) = match &rbf_model {
+            OdmModel::Kernel { kernel: k, sv_x, coef, cols } => {
+                let sodm::kernel::KernelKind::Rbf { gamma } = k else { unreachable!() };
+                let t2 = Instant::now();
+                let dec = engine
+                    .rbf_decisions(sv_x, coef, &test.x, *cols, *gamma)
+                    .expect("pjrt decision");
+                (dec, t2.elapsed().as_secs_f64())
+            }
+            OdmModel::Linear { w } => {
+                let t2 = Instant::now();
+                let dec = engine.linear_decisions(w, &test.x, test.cols).expect("pjrt");
+                (dec, t2.elapsed().as_secs_f64())
+            }
+        };
+        // cross-check against the native path (same math, different engine)
+        let native_decisions = rbf_model.decisions(&test);
+        let mut worst = 0.0f64;
+        for (a, b) in xla_decisions.iter().zip(&native_decisions) {
+            worst = worst.max((a - b).abs());
+        }
+        worst_delta_all = worst_delta_all.max(worst);
+        let xla_acc = xla_decisions
+            .iter()
+            .zip(&test.y)
+            .filter(|(d, y)| (**d >= 0.0) == (**y > 0.0))
+            .count() as f64
+            / test.rows as f64;
+        assert!(
+            (xla_acc - rbf_model.accuracy(&test)).abs() < 1e-9,
+            "XLA and native serving disagree on accuracy"
+        );
+
+        println!(
+            "{:<14}{:>7}{:>10.4}{:>10.2}{:>10.4}{:>12.2}{:>12.2}{:>12.0}{:>10.2e}",
+            train.name,
+            train.rows,
+            xla_acc,
+            rbf_secs,
+            lin_run.model.accuracy(&test),
+            lin_secs,
+            serve_secs * 1e3 / n_batches as f64,
+            test.rows as f64 / serve_secs,
+            worst
+        );
+    }
+    println!(
+        "\nnative-vs-PJRT decision agreement: max |Δ| = {worst_delta_all:.2e} (f32 artifact vs f64 native)"
+    );
+    let counts = engine.execution_counts();
+    let mut names: Vec<_> = counts.keys().collect();
+    names.sort();
+    println!("PJRT executions:");
+    for n in names {
+        println!("  {n}: {}", counts[n]);
+    }
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: jax/pallas entry points -> HLO *text* artifacts + manifest.
+
+HLO text (NOT serialized HloModuleProto): jax >= 0.5 emits protos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out-dir ../artifacts` from python/ (the
+Makefile drives this). Idempotent: skips lowering when the manifest is newer
+than all kernel/model sources unless --force.
+
+Artifacts are emitted per feature-dimension bucket (rust pads features up to
+the nearest bucket). Scalar hyperparameters travel as small arrays so one
+artifact serves every dataset/gamma.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Feature-dimension buckets. Smallest paper dataset has 3 features,
+# largest (gisette, scaled per DESIGN.md) 512; rust pads to the bucket.
+FEATURE_BUCKETS = (128, 512)
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entry_points():
+    """(name, fn, arg_specs) for every AOT artifact."""
+    eps = []
+    for n in FEATURE_BUCKETS:
+        eps.append(
+            (
+                f"rbf_gram_n{n}",
+                model.rbf_gram_block,
+                [
+                    _spec(model.GRAM_M, n),
+                    _spec(model.GRAM_M),
+                    _spec(model.GRAM_P, n),
+                    _spec(model.GRAM_P),
+                    _spec(1),
+                ],
+            )
+        )
+        eps.append(
+            (
+                f"linear_gram_n{n}",
+                model.linear_gram_block,
+                [
+                    _spec(model.GRAM_M, n),
+                    _spec(model.GRAM_M),
+                    _spec(model.GRAM_P, n),
+                    _spec(model.GRAM_P),
+                ],
+            )
+        )
+        eps.append(
+            (
+                f"odm_grad_n{n}",
+                model.odm_full_grad,
+                [_spec(n), _spec(model.GRAD_B, n), _spec(model.GRAD_B), _spec(3)],
+            )
+        )
+        eps.append(
+            (
+                f"rbf_decision_n{n}",
+                model.kernel_decision,
+                [
+                    _spec(model.DEC_S, n),
+                    _spec(model.DEC_S),
+                    _spec(model.DEC_B, n),
+                    _spec(1),
+                ],
+            )
+        )
+        eps.append(
+            (
+                f"linear_decision_n{n}",
+                model.linear_decision,
+                [_spec(n), _spec(model.DEC_B, n)],
+            )
+        )
+    return eps
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_fingerprint() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root in (here, os.path.join(here, "kernels")):
+        for fname in sorted(os.listdir(root)):
+            if fname.endswith(".py"):
+                with open(os.path.join(root, fname), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = _source_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp and all(
+            os.path.exists(os.path.join(args.out_dir, e["file"]))
+            for e in old.get("entries", [])
+        ):
+            print(f"artifacts up to date ({len(old['entries'])} entries); skipping")
+            return
+
+    entries = []
+    for name, fn, specs in entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_info = jax.eval_shape(fn, *specs)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [{"shape": list(s.shape), "dtype": "f32"} for s in specs],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": "f32"}
+                    for o in jax.tree_util.tree_leaves(out_info)
+                ],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars", file=sys.stderr)
+
+    geometry = {
+        "gram_m": model.GRAM_M,
+        "gram_p": model.GRAM_P,
+        "grad_b": model.GRAD_B,
+        "dec_s": model.DEC_S,
+        "dec_b": model.DEC_B,
+        "feature_buckets": list(FEATURE_BUCKETS),
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(
+            {"fingerprint": fp, "geometry": geometry, "entries": entries}, f, indent=2
+        )
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for SODM's compute hot-spots (build-time only)."""
+
+from .decision import rbf_decision
+from .gram import linear_gram, rbf_gram
+from .odm_grad import odm_grad
+
+__all__ = ["rbf_gram", "linear_gram", "odm_grad", "rbf_decision"]

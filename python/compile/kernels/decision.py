@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: tiled RBF kernel-expansion decision values.
+
+Batch prediction f(x) = sum_s coef_s * exp(-gamma ||x - z_s||^2) over the
+support set — the serving hot path for nonlinear SODM models. Grid tiles
+(test-batch x support-set); the support axis is the accumulation axis
+(revisiting the same output tile, sequential in interpret mode).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = 128  # test-batch tile
+BS = 256  # support tile
+
+
+def _rbf_decision_kernel(xsv_ref, coef_ref, xt_ref, g_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xsv = xsv_ref[...]  # [bs, N]
+    xt = xt_ref[...]  # [bt, N]
+    sqs = jnp.sum(xsv * xsv, axis=1)[None, :]
+    sqt = jnp.sum(xt * xt, axis=1)[:, None]
+    cross = jax.lax.dot_general(
+        xt, xsv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d = jnp.maximum(sqt + sqs - 2.0 * cross, 0.0)
+    k = jnp.exp(-g_ref[0, 0] * d)  # [bt, bs]
+    o_ref[...] += jax.lax.dot_general(
+        k, coef_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bs"))
+def rbf_decision(xsv, coef, xt, gamma, *, bt=BT, bs=BS):
+    """Decision values [B] for xt [B,N] against support xsv [S,N], coef [S].
+
+    B % bt == 0 and S % bs == 0; pad support rows with coef = 0.
+    """
+    s_total, n = xsv.shape
+    b, _ = xt.shape
+    g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _rbf_decision_kernel,
+        grid=(b // bt, s_total // bs),
+        in_specs=[
+            pl.BlockSpec((bs, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,
+    )(xsv, coef.reshape(s_total, 1), xt, g)
+    return out[:, 0]

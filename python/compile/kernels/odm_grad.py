@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused primal ODM gradient + loss for the linear path.
+
+This is the hot-spot of Algorithm 2 (DSVRG): every epoch starts with a full
+gradient over all M instances. The kernel fuses margin computation, the
+I1/I2 interval masks, the weighted X^T contraction, and the loss reduction
+into one pass over the batch, accumulating the [N] gradient tile across grid
+steps (sequential grid in interpret mode == TPU revisiting semantics).
+
+Scalar hyperparameters (lam, theta, upsilon) are runtime inputs, not
+compile-time constants, so a single AOT artifact serves every dataset.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BB = 256  # batch tile
+
+
+def _odm_grad_kernel(w_ref, x_ref, y_ref, p_ref, g_ref, l_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    x = x_ref[...]  # [bb, N]
+    y = y_ref[...]  # [bb]
+    w = w_ref[...]  # [1, N]
+    lam, theta, ups = p_ref[0, 0], p_ref[0, 1], p_ref[0, 2]
+    mask = y * y
+    m = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0] * y  # [bb] margins
+    s = lam / ((1.0 - theta) * (1.0 - theta))
+    in1 = jnp.where(m < 1.0 - theta, 1.0, 0.0) * mask
+    in2 = jnp.where(m > 1.0 + theta, 1.0, 0.0) * mask
+    coef = s * (m + theta - 1.0) * in1 + s * ups * (m - theta - 1.0) * in2
+    cy = (coef * y)[None, :]  # [1, bb]
+    # MXU: [1, bb] @ [bb, N] -> [1, N]
+    g_ref[...] += jax.lax.dot_general(
+        cy, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    xi = (1.0 - theta - m) * in1
+    eps = (m - 1.0 - theta) * in2
+    l_ref[...] += 0.5 * s * jnp.sum(xi * xi + ups * (eps * eps))
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def odm_grad(w, x, y, lam, theta, upsilon, *, bb=BB):
+    """Summed data-gradient [N] and loss [] over the batch (B % bb == 0).
+
+    Caller adds `count * w` for the regulariser term of the summed gradient.
+    """
+    b, n = x.shape
+    params = jnp.stack(
+        [jnp.asarray(lam, jnp.float32), jnp.asarray(theta, jnp.float32),
+         jnp.asarray(upsilon, jnp.float32)]
+    ).reshape(1, 3)
+    grad, loss = pl.pallas_call(
+        _odm_grad_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(w.reshape(1, n), x, y, params)
+    return grad[0], loss[0, 0]

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an oracle here with an identical
+signature; pytest (and hypothesis sweeps) assert allclose between the two.
+These are also the semantic spec the rust-native compute mirrors.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "rbf_gram_ref",
+    "linear_gram_ref",
+    "odm_grad_ref",
+    "rbf_decision_ref",
+    "linear_decision_ref",
+]
+
+
+def rbf_gram_ref(x1, y1, x2, y2, gamma):
+    """Signed RBF Gram block: Q[i,j] = y1[i] * y2[j] * exp(-gamma * ||x1_i - x2_j||^2).
+
+    Padding convention: rows with label 0 contribute 0 to the block.
+    """
+    sq1 = jnp.sum(x1 * x1, axis=1, keepdims=True)  # [m,1]
+    sq2 = jnp.sum(x2 * x2, axis=1, keepdims=True).T  # [1,n]
+    cross = x1 @ x2.T
+    d = jnp.maximum(sq1 + sq2 - 2.0 * cross, 0.0)
+    return (y1[:, None] * y2[None, :]) * jnp.exp(-gamma * d)
+
+
+def linear_gram_ref(x1, y1, x2, y2):
+    """Signed linear Gram block: Q[i,j] = y1[i] * y2[j] * <x1_i, x2_j>."""
+    return (y1[:, None] * y2[None, :]) * (x1 @ x2.T)
+
+
+def odm_grad_ref(w, x, y, lam, theta, upsilon):
+    """Batched primal ODM data-gradient and loss (paper §3.3).
+
+    Per instance i with margin m_i = y_i <w, x_i>:
+      I1 = {m_i < 1-theta}:  xi_i  = (1-theta) - m_i
+      I2 = {m_i > 1+theta}:  eps_i = m_i - (1+theta)
+      grad_i (data part, excludes the +w regulariser term)
+            = lam/(1-theta)^2 * (m_i + theta - 1) y_i x_i            if i in I1
+            + lam*upsilon/(1-theta)^2 * (m_i - theta - 1) y_i x_i    if i in I2
+      loss_i = lam/(2*(1-theta)^2) * (xi_i^2 + upsilon * eps_i^2)
+
+    Padding convention: label-0 rows contribute nothing (mask = y^2).
+    Returns (grad_data [N], loss_sum []) summed over the batch; the caller
+    adds `count * w` for the regulariser part of the summed gradient.
+    """
+    mask = y * y  # 1 for real rows (y in {-1,+1}), 0 for padding
+    m = (x @ w) * y
+    s = lam / (1.0 - theta) ** 2
+    in1 = (m < 1.0 - theta).astype(x.dtype) * mask
+    in2 = (m > 1.0 + theta).astype(x.dtype) * mask
+    coef = s * (m + theta - 1.0) * in1 + s * upsilon * (m - theta - 1.0) * in2
+    grad = x.T @ (coef * y)
+    xi = (1.0 - theta - m) * in1
+    eps = (m - 1.0 - theta) * in2
+    loss = 0.5 * s * jnp.sum(xi * xi + upsilon * (eps * eps))
+    return grad, loss
+
+
+def rbf_decision_ref(xsv, coef, xt, gamma):
+    """Kernel-expansion decision values: f(x) = sum_s coef_s exp(-gamma ||x - xsv_s||^2).
+
+    coef already folds in y_s (coef_s = gamma_s^dual * y_s). Padding: coef 0.
+    """
+    sqs = jnp.sum(xsv * xsv, axis=1)[None, :]  # [1,S]
+    sqt = jnp.sum(xt * xt, axis=1)[:, None]  # [B,1]
+    d = jnp.maximum(sqt + sqs - 2.0 * (xt @ xsv.T), 0.0)
+    return jnp.exp(-gamma * d) @ coef
+
+
+def linear_decision_ref(w, xt):
+    """Linear decision values f(x) = <w, x>."""
+    return xt @ w

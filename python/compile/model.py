@@ -1,0 +1,50 @@
+"""L2: JAX compute graphs for SODM, composed from the L1 Pallas kernels.
+
+Each public function is an AOT entry point: fixed-shape, jit-lowered once by
+aot.py to HLO text, loaded and executed by the rust runtime. Shapes are the
+tiling contract with rust (see aot.py BUCKETS and artifacts/manifest.json);
+rust pads inputs (label/coef 0 padding rows are no-ops by construction).
+
+All entry points return tuples (lowered with return_tuple=True; rust unwraps
+with to_tupleN).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import linear_gram, odm_grad, rbf_decision, rbf_gram
+
+# Fixed batch geometry of the AOT artifacts.
+GRAM_M = 256  # gram block rows
+GRAM_P = 256  # gram block cols
+GRAD_B = 1024  # gradient batch
+DEC_S = 1024  # decision support rows
+DEC_B = 256  # decision test batch
+
+
+def rbf_gram_block(x1, y1, x2, y2, gamma):
+    """Signed RBF Gram block Q[i,j] = y1_i y2_j k(x1_i, x2_j). gamma: [1] array."""
+    return (rbf_gram(x1, y1, x2, y2, gamma[0]),)
+
+
+def linear_gram_block(x1, y1, x2, y2):
+    """Signed linear Gram block."""
+    return (linear_gram(x1, y1, x2, y2),)
+
+
+def odm_full_grad(w, x, y, params):
+    """Summed primal ODM data-gradient [N] + loss [1] over the batch.
+
+    params = [lam, theta, upsilon] as a [3] array. Caller adds count*w.
+    """
+    g, l = odm_grad(w, x, y, params[0], params[1], params[2])
+    return g, l.reshape(1)
+
+
+def kernel_decision(xsv, coef, xt, gamma):
+    """RBF kernel-expansion decision values [B]. gamma: [1] array."""
+    return (rbf_decision(xsv, coef, xt, gamma[0]),)
+
+
+def linear_decision(w, xt):
+    """Linear decision values [B] (plain XLA matvec; no Pallas needed)."""
+    return (xt @ w,)

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import linear_gram, odm_grad, rbf_decision, rbf_gram
+from compile.kernels.ref import (
+    linear_gram_ref,
+    odm_grad_ref,
+    rbf_decision_ref,
+    rbf_gram_ref,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _data(m, n, rng=RNG, label_pad=0):
+    x = rng.standard_normal((m, n)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=m).astype(np.float32)
+    if label_pad:
+        y[-label_pad:] = 0.0
+        x[-label_pad:] = rng.standard_normal((label_pad, n)).astype(np.float32)
+    return x, y
+
+
+@pytest.mark.parametrize("m,p,n", [(128, 128, 8), (256, 128, 32), (128, 256, 128)])
+@pytest.mark.parametrize("gamma", [0.05, 1.0])
+def test_rbf_gram_matches_ref(m, p, n, gamma):
+    x1, y1 = _data(m, n)
+    x2, y2 = _data(p, n)
+    got = rbf_gram(x1, y1, x2, y2, gamma)
+    want = rbf_gram_ref(x1, y1, x2, y2, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rbf_gram_padding_rows_zero():
+    x1, y1 = _data(128, 16, label_pad=13)
+    x2, y2 = _data(128, 16, label_pad=5)
+    got = np.asarray(rbf_gram(x1, y1, x2, y2, 0.3))
+    assert np.all(got[-13:, :] == 0.0)
+    assert np.all(got[:, -5:] == 0.0)
+
+
+def test_rbf_gram_diagonal_is_one_signed():
+    x, y = _data(128, 8)
+    got = np.asarray(rbf_gram(x, y, x, y, 0.7))
+    np.testing.assert_allclose(np.diag(got), y * y, rtol=1e-5, atol=1e-5)
+    # symmetry of the signed matrix
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,p,n", [(128, 128, 4), (256, 256, 64)])
+def test_linear_gram_matches_ref(m, p, n):
+    x1, y1 = _data(m, n)
+    x2, y2 = _data(p, n)
+    got = linear_gram(x1, y1, x2, y2)
+    want = linear_gram_ref(x1, y1, x2, y2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,n", [(256, 8), (512, 32), (1024, 128)])
+@pytest.mark.parametrize("lam,theta,ups", [(1.0, 0.3, 0.5), (8.0, 0.1, 1.0)])
+def test_odm_grad_matches_ref(b, n, lam, theta, ups):
+    x, y = _data(b, n)
+    w = RNG.standard_normal(n).astype(np.float32) * 0.3
+    g, l = odm_grad(w, x, y, lam, theta, ups)
+    gr, lr = odm_grad_ref(w, x, y, lam, theta, ups)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(l, lr, rtol=1e-4, atol=1e-4)
+
+
+def test_odm_grad_padding_contributes_nothing():
+    x, y = _data(512, 16)
+    w = RNG.standard_normal(16).astype(np.float32)
+    g0, l0 = odm_grad(w, x[:256], y[:256], 2.0, 0.2, 0.8, bb=256)
+    xp = np.concatenate([x[:256], x[256:]])
+    yp = np.concatenate([y[:256], np.zeros(256, np.float32)])
+    g1, l1 = odm_grad(w, xp, yp, 2.0, 0.2, 0.8, bb=256)
+    np.testing.assert_allclose(g0, g1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(l0, l1, rtol=1e-5, atol=1e-5)
+
+
+def test_odm_grad_zero_w_all_in_I1():
+    # w = 0 -> margins 0 < 1-theta, every instance in I1.
+    b, n = 256, 8
+    x, y = _data(b, n)
+    w = np.zeros(n, np.float32)
+    g, l = odm_grad(w, x, y, 1.0, 0.25, 0.5)
+    s = 1.0 / 0.75**2
+    want_g = (x.T * y).sum(axis=1) * s * (0.25 - 1.0)
+    want_l = 0.5 * s * b * 0.75**2
+    np.testing.assert_allclose(g, want_g, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(l, want_l, rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,b,n", [(256, 128, 8), (1024, 256, 32)])
+def test_rbf_decision_matches_ref(s, b, n):
+    xsv, _ = _data(s, n)
+    coef = RNG.standard_normal(s).astype(np.float32)
+    xt, _ = _data(b, n)
+    got = rbf_decision(xsv, coef, xt, 0.4)
+    want = rbf_decision_ref(xsv, coef, xt, 0.4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rbf_decision_zero_coef_padding():
+    xsv, _ = _data(512, 8)
+    coef = RNG.standard_normal(512).astype(np.float32)
+    coef[256:] = 0.0
+    xt, _ = _data(128, 8)
+    full = rbf_decision(xsv, coef, xt, 0.9)
+    half = rbf_decision_ref(xsv[:256], coef[:256], xt, 0.9)
+    np.testing.assert_allclose(full, half, rtol=1e-4, atol=1e-4)

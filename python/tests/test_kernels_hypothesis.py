@@ -1,0 +1,103 @@
+"""Hypothesis sweeps: Pallas kernels vs oracles over random shapes/params.
+
+Shapes are drawn as multiples of the tile sizes (the kernels' contract);
+values and hyperparameters are drawn adversarially (large/small gamma,
+theta near its ends, mixed padding).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear_gram, odm_grad, rbf_decision, rbf_gram
+from compile.kernels.ref import (
+    linear_gram_ref,
+    odm_grad_ref,
+    rbf_decision_ref,
+    rbf_gram_ref,
+)
+
+finite_f = st.floats(-3.0, 3.0, allow_nan=False, width=32)
+
+
+def _arr(draw_seed, shape, scale=1.0):
+    rng = np.random.default_rng(draw_seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mi=st.integers(1, 2),
+    pi=st.integers(1, 2),
+    n=st.sampled_from([4, 17, 64, 128]),
+    gamma=st.floats(1e-3, 8.0),
+    pad=st.integers(0, 100),
+)
+def test_rbf_gram_sweep(seed, mi, pi, n, gamma, pad):
+    m, p = 128 * mi, 128 * pi
+    rng = np.random.default_rng(seed)
+    x1 = _arr(seed, (m, n))
+    x2 = _arr(seed + 1, (p, n))
+    y1 = rng.choice([-1.0, 1.0], m).astype(np.float32)
+    y2 = rng.choice([-1.0, 1.0], p).astype(np.float32)
+    y1[m - min(pad, m // 2):] = 0.0
+    got = rbf_gram(x1, y1, x2, y2, gamma)
+    want = rbf_gram_ref(x1, y1, x2, y2, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mi=st.integers(1, 2),
+    n=st.sampled_from([3, 22, 128]),
+)
+def test_linear_gram_sweep(seed, mi, n):
+    m = 128 * mi
+    rng = np.random.default_rng(seed)
+    x1, x2 = _arr(seed, (m, n)), _arr(seed + 9, (128, n))
+    y1 = rng.choice([-1.0, 1.0], m).astype(np.float32)
+    y2 = rng.choice([-1.0, 1.0], 128).astype(np.float32)
+    got = linear_gram(x1, y1, x2, y2)
+    want = linear_gram_ref(x1, y1, x2, y2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bi=st.integers(1, 4),
+    n=st.sampled_from([5, 32, 100]),
+    lam=st.floats(1e-2, 32.0),
+    theta=st.floats(0.0, 0.9),
+    ups=st.floats(0.0, 1.0),
+    wscale=st.floats(0.0, 2.0),
+)
+def test_odm_grad_sweep(seed, bi, n, lam, theta, ups, wscale):
+    b = 256 * bi
+    rng = np.random.default_rng(seed)
+    x = _arr(seed, (b, n))
+    y = rng.choice([-1.0, 1.0], b).astype(np.float32)
+    w = _arr(seed + 3, (n,), wscale)
+    g, l = odm_grad(w, x, y, lam, theta, ups)
+    gr, lr = odm_grad_ref(w, x, y, lam, theta, ups)
+    np.testing.assert_allclose(g, gr, rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(l, lr, rtol=2e-4, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    si=st.integers(1, 3),
+    bi=st.integers(1, 2),
+    n=st.sampled_from([4, 50, 128]),
+    gamma=st.floats(1e-2, 4.0),
+)
+def test_rbf_decision_sweep(seed, si, bi, n, gamma):
+    s, b = 256 * si, 128 * bi
+    xsv = _arr(seed, (s, n))
+    coef = _arr(seed + 5, (s,))
+    xt = _arr(seed + 7, (b, n))
+    got = rbf_decision(xsv, coef, xt, gamma)
+    want = rbf_decision_ref(xsv, coef, xt, gamma)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)

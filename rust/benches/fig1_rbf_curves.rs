@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Figure 1 (RBF accuracy-vs-time curves).
+use sodm::exp::figures::figure1;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        datasets: vec!["svmguide1".into(), "cod-rna".into()],
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let out = figure1(&cfg).expect("figure1");
+    println!("{out}");
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate paper Figure 2 (speedup vs cores, task-replay model).
+use sodm::exp::figures::figure2;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig { scale: 0.05, out_dir: "results/bench".into(), ..Default::default() };
+    let (out, _) = figure2(&cfg, &[1, 2, 4, 8, 16, 32], "ijcnn1").expect("figure2");
+    println!("{out}");
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Figure 3 (linear accuracy-vs-time curves).
+use sodm::exp::figures::figure3;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        datasets: vec!["svmguide1".into(), "a7a".into()],
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let out = figure3(&cfg).expect("figure3");
+    println!("{out}");
+}

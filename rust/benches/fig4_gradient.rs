@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Figure 4 (gradient-based methods).
+use sodm::exp::figures::figure4;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        datasets: vec!["svmguide1".into(), "SUSY".into()],
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let out = figure4(&cfg).expect("figure4");
+    println!("{out}");
+}

@@ -1,0 +1,98 @@
+//! Hot-path microbenchmarks — the §Perf instrument (EXPERIMENTS.md).
+//!
+//! Measures the kernels the whole stack stands on: signed Gram row
+//! evaluation, DCD sweep throughput (kernel + linear), the SVRG full
+//! gradient, landmark selection, batch prediction, and (when artifacts are
+//! present) the PJRT Pallas paths. In-crate harness (`util::bench_loop`)
+//! reports mean/min over repeated runs.
+
+use sodm::data::{all_indices, synth::SynthSpec, DataView};
+use sodm::kernel::{signed_row, KernelKind};
+use sodm::odm::OdmParams;
+use sodm::partition::landmarks::Nystrom;
+use sodm::qp::{solve_odm_dual, SolveBudget};
+use sodm::runtime::XlaEngine;
+use sodm::svrg::grad_sum_native;
+use sodm::util::bench_loop;
+
+fn report(name: &str, unit_count: f64, unit: &str, stats: &sodm::util::TimingStats) {
+    println!(
+        "{name:<34} mean {:>9.3} ms   min {:>9.3} ms   {:>12.0} {unit}/s",
+        stats.mean() * 1e3,
+        stats.min() * 1e3,
+        unit_count / stats.min()
+    );
+}
+
+fn main() {
+    let mut spec = SynthSpec::named("ijcnn1", 0.02, 5);
+    spec.rows = 4000;
+    let ds = spec.generate();
+    let idx = all_indices(&ds);
+    let view = DataView::new(&ds, &idx);
+    let rbf = KernelKind::Rbf { gamma: 1.0 };
+    let params = OdmParams::default();
+    println!(
+        "hotpath benches on {} rows x {} features\n",
+        ds.rows, ds.cols
+    );
+
+    // 1. signed Gram row (the unit the DCD cache stores)
+    let mut row = vec![0.0f32; view.len()];
+    let stats = bench_loop(2, 10, || {
+        signed_row(&view, &rbf, 7, &mut row);
+        row[0]
+    });
+    report("gram row (rbf, 4k cols)", view.len() as f64, "kval", &stats);
+
+    // 2. one DCD sweep, kernel path (fresh solver, 1 sweep)
+    let budget1 = SolveBudget { max_sweeps: 1, ..Default::default() };
+    let stats = bench_loop(1, 5, || solve_odm_dual(&view, &rbf, &params, None, &budget1));
+    report("DCD sweep (rbf kernel path)", 2.0 * view.len() as f64, "coord", &stats);
+
+    // 3. one DCD sweep, linear path
+    let stats = bench_loop(1, 5, || {
+        solve_odm_dual(&view, &KernelKind::Linear, &params, None, &budget1)
+    });
+    report("DCD sweep (linear path)", 2.0 * view.len() as f64, "coord", &stats);
+
+    // 4. SVRG full gradient (native)
+    let w = vec![0.1f64; ds.cols];
+    let stats = bench_loop(2, 10, || grad_sum_native(&w, &view, &params, 1));
+    report("full gradient (native)", view.len() as f64, "row", &stats);
+
+    // 5. landmark selection (greedy pivoted Cholesky, S=32)
+    let stats = bench_loop(1, 5, || Nystrom::select(&view, &rbf, 32, 2048, 3));
+    report("landmark select (S=32, pool 2048)", 2048.0 * 32.0, "cand*s", &stats);
+
+    // 6. batch prediction, native
+    let model = sodm::odm::train_exact_odm(
+        &ds,
+        &rbf,
+        &params,
+        &SolveBudget { max_sweeps: 5, ..Default::default() },
+    );
+    let stats = bench_loop(1, 5, || model.accuracy(&ds));
+    report("batch predict (native kernel)", ds.rows as f64, "row", &stats);
+
+    // 7-8. PJRT artifact paths (skipped without artifacts)
+    match XlaEngine::load_default() {
+        Some(engine) => {
+            let m = engine.geometry.gram_m;
+            let x1 = &ds.x[..m * ds.cols];
+            let y1 = &ds.y[..m];
+            let stats = bench_loop(2, 10, || {
+                engine.rbf_gram_block(x1, y1, x1, y1, ds.cols, 1.0).expect("gram")
+            });
+            report("PJRT gram block (256x256 pallas)", (m * m) as f64, "kval", &stats);
+
+            let stats = bench_loop(2, 10, || {
+                engine
+                    .odm_grad_sum(&w, &ds.x[..1024 * ds.cols], &ds.y[..1024], ds.cols, &params)
+                    .expect("grad")
+            });
+            report("PJRT odm_grad (1024 pallas)", 1024.0, "row", &stats);
+        }
+        None => println!("(PJRT benches skipped: run `make artifacts`)"),
+    }
+}

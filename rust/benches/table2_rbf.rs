@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 2 (RBF kernel, 5 QP methods) at bench scale.
+//! `cargo bench --bench table2_rbf` — see EXPERIMENTS.md for full-scale runs.
+use sodm::exp::tables::table2;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        datasets: vec!["svmguide1".into(), "cod-rna".into(), "ijcnn1".into()],
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = table2(&cfg).expect("table2");
+    println!("{out}");
+    println!("bench total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Table 3 (linear kernel) at bench scale.
+use sodm::exp::tables::table3;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        datasets: vec!["svmguide1".into(), "a7a".into(), "SUSY".into()],
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = table3(&cfg).expect("table3");
+    println!("{out}");
+    println!("bench total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Table 4 (SVM vs ODM meta-solvers) at bench scale.
+use sodm::exp::tables::table4;
+use sodm::exp::ExpConfig;
+
+fn main() {
+    let cfg = ExpConfig {
+        scale: 0.02,
+        datasets: vec!["svmguide1".into(), "phishing".into()],
+        out_dir: "results/bench".into(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = table4(&cfg).expect("table4");
+    println!("{out}");
+    println!("bench total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,226 @@
+//! Cascade meta-solver (Graf et al. 2004) — `Ca-ODM` / `Ca-SVM`.
+//!
+//! Random partitions at the leaves; each solve keeps only its support
+//! vectors (γ ≠ 0), pairs of SV sets are unioned and re-solved up a binary
+//! tree. Greedy SV filtering is what makes Cascade fast — and what costs it
+//! accuracy relative to SODM (instances discarded early can never return; we
+//! follow the single-pass variant the paper benchmarks).
+
+use std::time::Instant;
+
+use crate::baselines::{LocalSolverKind, MetaLevel, MetaRun};
+use crate::cluster::SimCluster;
+use crate::data::{all_indices, DataView, Dataset};
+use crate::kernel::KernelKind;
+use crate::odm::OdmModel;
+use crate::partition::random_partitions;
+use crate::qp::SolveBudget;
+
+/// Cascade configuration.
+#[derive(Clone, Debug)]
+pub struct CascadeConfig {
+    /// Number of leaf partitions (rounded up to a power of two).
+    pub leaves: usize,
+    pub budget: SolveBudget,
+    pub seed: u64,
+}
+
+impl Default for CascadeConfig {
+    fn default() -> Self {
+        Self { leaves: 8, budget: SolveBudget::default(), seed: 0xCA5 }
+    }
+}
+
+/// Train with the cascade tree. Works for both local solvers.
+pub fn train_cascade(
+    data: &Dataset,
+    kernel: &KernelKind,
+    solver: LocalSolverKind,
+    cfg: &CascadeConfig,
+    cluster: Option<&SimCluster>,
+) -> MetaRun {
+    let local_cluster;
+    let cluster = match cluster {
+        Some(c) => c,
+        None => {
+            local_cluster = SimCluster::local();
+            &local_cluster
+        }
+    };
+    let t0 = Instant::now();
+    let all_idx = all_indices(data);
+    let view = DataView::new(data, &all_idx);
+
+    let mut leaves = cfg.leaves.next_power_of_two().max(2);
+    while leaves > 1 && data.rows / leaves < 4 {
+        leaves /= 2;
+    }
+    // (indices, warm alpha) per active node
+    let mut nodes: Vec<(Vec<usize>, Option<Vec<f64>>)> = random_partitions(&view, leaves, cfg.seed)
+        .into_iter()
+        .map(|idx| (idx, None))
+        .collect();
+    let mut trace: Vec<MetaLevel> = Vec::new();
+
+    loop {
+        let n = nodes.len();
+        let solutions = cluster.map_partitions(n, |i| {
+            let (idx, warm) = &nodes[i];
+            let pview = DataView::new(data, idx);
+            let budget = SolveBudget { seed: cfg.budget.seed ^ (i as u64) << 2, ..cfg.budget };
+            solver.solve(&pview, kernel, warm.as_deref(), &budget)
+        });
+        let objective: f64 = solutions.iter().map(|s| s.objective).sum();
+
+        // SV filtering: keep view-local positions with γ != 0.
+        let kept: Vec<(Vec<usize>, Vec<f64>)> = solutions
+            .iter()
+            .zip(&nodes)
+            .map(|(sol, (idx, _))| {
+                let keep_pos: Vec<usize> =
+                    (0..idx.len()).filter(|&i| sol.gamma[i] != 0.0).collect();
+                // never drop everything — keep at least one instance
+                let keep_pos = if keep_pos.is_empty() { vec![0] } else { keep_pos };
+                let kept_idx: Vec<usize> = keep_pos.iter().map(|&i| idx[i]).collect();
+                let kept_alpha = solver.filter_alpha(sol, &keep_pos);
+                cluster.send(kept_idx.len() * 8 * (1 + solver.stride()));
+                (kept_idx, kept_alpha)
+            })
+            .collect();
+
+        // Level snapshot: model over the kept SVs (what cascade would serve
+        // if stopped here).
+        let snap_idx: Vec<usize> = kept.iter().flat_map(|(i, _)| i.iter().copied()).collect();
+        let snap_gamma: Vec<f64> = solutions
+            .iter()
+            .zip(&nodes)
+            .flat_map(|(sol, (idx, _))| {
+                (0..idx.len()).filter(|&i| sol.gamma[i] != 0.0).map(|i| sol.gamma[i]).collect::<Vec<_>>()
+            })
+            .collect();
+        // Degenerate keep-one fallback can desync lengths; guard.
+        let model = if snap_gamma.len() == snap_idx.len() {
+            let snap_view = DataView::new(data, &snap_idx);
+            OdmModel::from_dual(&snap_view, kernel, &snap_gamma)
+        } else {
+            trace.last().map(|t: &MetaLevel| t.model.clone()).unwrap_or(OdmModel::Linear {
+                w: vec![0.0; data.cols],
+            })
+        };
+        trace.push(MetaLevel {
+            n_partitions: n,
+            elapsed: t0.elapsed().as_secs_f64(),
+            model,
+            objective,
+        });
+
+        if n == 1 {
+            break;
+        }
+        // Pairwise merge of SV sets + their dual values as warm start.
+        let mut next: Vec<(Vec<usize>, Option<Vec<f64>>)> = Vec::with_capacity(n / 2);
+        let mut it = kept.into_iter();
+        while let (Some((ia, aa)), b) = (it.next(), it.next()) {
+            match b {
+                Some((ib, ab)) => {
+                    let mut idx = ia;
+                    idx.extend(ib);
+                    let warm = match solver {
+                        LocalSolverKind::Odm(_) => {
+                            let ma = aa.len() / 2;
+                            let mb = ab.len() / 2;
+                            let mut z: Vec<f64> = aa[..ma].to_vec();
+                            z.extend_from_slice(&ab[..mb]);
+                            z.extend_from_slice(&aa[ma..]);
+                            z.extend_from_slice(&ab[mb..]);
+                            z
+                        }
+                        LocalSolverKind::Svm { .. } => {
+                            let mut g = aa;
+                            g.extend(ab);
+                            g
+                        }
+                    };
+                    next.push((idx, Some(warm)));
+                }
+                None => next.push((ia, Some(aa))),
+            }
+        }
+        nodes = next;
+    }
+
+    let total_seconds = t0.elapsed().as_secs_f64();
+    let model = trace.last().expect("at least one level").model.clone();
+    MetaRun { model, trace, total_seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::odm::OdmParams;
+
+    fn fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn cascade_odm_trains() {
+        let ds = fixture(320, 1);
+        let (train, test) = ds.split(0.8, 3);
+        let run = train_cascade(
+            &train,
+            &KernelKind::Rbf { gamma: 2.0 },
+            LocalSolverKind::Odm(OdmParams::default()),
+            &CascadeConfig { leaves: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.accuracy(&test) > 0.8);
+        // binary tree: 4 -> 2 -> 1 = 3 levels
+        assert_eq!(run.trace.len(), 3);
+    }
+
+    #[test]
+    fn cascade_svm_trains() {
+        let ds = fixture(320, 5);
+        let (train, test) = ds.split(0.8, 9);
+        let run = train_cascade(
+            &train,
+            &KernelKind::Rbf { gamma: 2.0 },
+            LocalSolverKind::Svm { c: 1.0 },
+            &CascadeConfig { leaves: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.accuracy(&test) > 0.8);
+    }
+
+    #[test]
+    fn cascade_discards_instances() {
+        // the final solve must see (far) fewer instances than the dataset —
+        // that's the mechanism of cascade
+        let ds = fixture(400, 7);
+        let run = train_cascade(
+            &ds,
+            &KernelKind::Rbf { gamma: 2.0 },
+            LocalSolverKind::Svm { c: 1.0 },
+            &CascadeConfig { leaves: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.support_size() < 400);
+    }
+
+    #[test]
+    fn tiny_data_collapses_tree() {
+        let ds = fixture(64, 11);
+        let run = train_cascade(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.0 },
+            LocalSolverKind::Odm(OdmParams::default()),
+            &CascadeConfig { leaves: 64, ..Default::default() },
+            None,
+        );
+        assert!(run.trace[0].n_partitions <= 16);
+    }
+}

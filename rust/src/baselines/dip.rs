@@ -1,0 +1,190 @@
+//! DiP meta-solver (Singh et al. 2017) — `DiP-ODM` / `DiP-SVM`.
+//!
+//! Distribution-preserving partitions (input-space k-means clusters dealt
+//! proportionally over partitions), one level of parallel local solves, then
+//! a final solve on the union of all local support vectors, warm-started
+//! from the local dual values.
+
+use std::time::Instant;
+
+use crate::baselines::{LocalSolverKind, MetaLevel, MetaRun};
+use crate::cluster::SimCluster;
+use crate::data::{all_indices, DataView, Dataset};
+use crate::kernel::KernelKind;
+use crate::odm::OdmModel;
+use crate::partition::{make_partitions, PartitionStrategy};
+use crate::qp::SolveBudget;
+
+/// DiP configuration.
+#[derive(Clone, Debug)]
+pub struct DipConfig {
+    /// Parallel partitions at the first level.
+    pub partitions: usize,
+    /// k-means cluster count used by the distribution-preserving split.
+    pub clusters: usize,
+    pub budget: SolveBudget,
+    pub seed: u64,
+}
+
+impl Default for DipConfig {
+    fn default() -> Self {
+        Self { partitions: 8, clusters: 8, budget: SolveBudget::default(), seed: 0xD1F }
+    }
+}
+
+/// Train DiP: local solves on distribution-preserving partitions, then one
+/// global solve restricted to the SV union.
+pub fn train_dip(
+    data: &Dataset,
+    kernel: &KernelKind,
+    solver: LocalSolverKind,
+    cfg: &DipConfig,
+    cluster: Option<&SimCluster>,
+) -> MetaRun {
+    let local_cluster;
+    let cluster = match cluster {
+        Some(c) => c,
+        None => {
+            local_cluster = SimCluster::local();
+            &local_cluster
+        }
+    };
+    let t0 = Instant::now();
+    let all_idx = all_indices(data);
+    let view = DataView::new(data, &all_idx);
+
+    let k = cfg.partitions.clamp(1, (data.rows / 4).max(1));
+    let partitions = make_partitions(
+        &view,
+        kernel,
+        k,
+        PartitionStrategy::KmeansProportional { clusters: cfg.clusters },
+        cfg.seed,
+        cluster.workers,
+    );
+
+    // Level 1: parallel local solves.
+    let solutions = cluster.map_partitions(partitions.len(), |i| {
+        let pview = DataView::new(data, &partitions[i]);
+        let budget = SolveBudget { seed: cfg.budget.seed ^ (i as u64) << 2, ..cfg.budget };
+        solver.solve(&pview, kernel, None, &budget)
+    });
+    let mut trace: Vec<MetaLevel> = Vec::new();
+    {
+        let concat_idx: Vec<usize> = partitions.iter().flatten().copied().collect();
+        let concat_gamma: Vec<f64> = solutions.iter().flat_map(|s| s.gamma.clone()).collect();
+        let snap_view = DataView::new(data, &concat_idx);
+        trace.push(MetaLevel {
+            n_partitions: partitions.len(),
+            elapsed: t0.elapsed().as_secs_f64(),
+            model: OdmModel::from_dual(&snap_view, kernel, &concat_gamma),
+            objective: solutions.iter().map(|s| s.objective).sum(),
+        });
+    }
+
+    // SV union + warm start.
+    let mut sv_idx: Vec<usize> = Vec::new();
+    let mut kept_alphas: Vec<Vec<f64>> = Vec::new();
+    for (sol, idx) in solutions.iter().zip(&partitions) {
+        let keep_pos: Vec<usize> = (0..idx.len()).filter(|&i| sol.gamma[i] != 0.0).collect();
+        let keep_pos = if keep_pos.is_empty() { vec![0] } else { keep_pos };
+        sv_idx.extend(keep_pos.iter().map(|&i| idx[i]));
+        kept_alphas.push(solver.filter_alpha(sol, &keep_pos));
+        cluster.send(keep_pos.len() * 8 * (1 + solver.stride()));
+    }
+    let warm = match solver {
+        LocalSolverKind::Odm(_) => {
+            let mut zeta = Vec::new();
+            let mut beta = Vec::new();
+            for a in &kept_alphas {
+                let m = a.len() / 2;
+                zeta.extend_from_slice(&a[..m]);
+                beta.extend_from_slice(&a[m..]);
+            }
+            zeta.extend_from_slice(&beta);
+            zeta
+        }
+        LocalSolverKind::Svm { .. } => kept_alphas.concat(),
+    };
+
+    // Level 0: final solve on the SV union.
+    let sv_view = DataView::new(data, &sv_idx);
+    let final_sol = solver.solve(&sv_view, kernel, Some(&warm), &cfg.budget);
+    let model = OdmModel::from_dual(&sv_view, kernel, &final_sol.gamma);
+    trace.push(MetaLevel {
+        n_partitions: 1,
+        elapsed: t0.elapsed().as_secs_f64(),
+        model: model.clone(),
+        objective: final_sol.objective,
+    });
+
+    MetaRun { model, trace, total_seconds: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::odm::OdmParams;
+
+    fn fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn dip_odm_trains() {
+        let ds = fixture(320, 1);
+        let (train, test) = ds.split(0.8, 3);
+        let run = train_dip(
+            &train,
+            &KernelKind::Rbf { gamma: 2.0 },
+            LocalSolverKind::Odm(OdmParams::default()),
+            &DipConfig { partitions: 4, clusters: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.accuracy(&test) > 0.8);
+        assert_eq!(run.trace.len(), 2);
+    }
+
+    #[test]
+    fn dip_svm_trains() {
+        let ds = fixture(320, 5);
+        let (train, test) = ds.split(0.8, 7);
+        let run = train_dip(
+            &train,
+            &KernelKind::Rbf { gamma: 2.0 },
+            LocalSolverKind::Svm { c: 1.0 },
+            &DipConfig { partitions: 4, clusters: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.accuracy(&test) > 0.8);
+    }
+
+    #[test]
+    fn final_model_uses_sv_union_only() {
+        let ds = fixture(400, 9);
+        let run = train_dip(
+            &ds,
+            &KernelKind::Rbf { gamma: 2.0 },
+            LocalSolverKind::Svm { c: 1.0 },
+            &DipConfig { partitions: 4, clusters: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.support_size() < 400);
+    }
+
+    #[test]
+    fn linear_kernel_supported() {
+        let ds = fixture(240, 11);
+        let run = train_dip(
+            &ds,
+            &KernelKind::Linear,
+            LocalSolverKind::Odm(OdmParams::default()),
+            &DipConfig { partitions: 4, clusters: 4, ..Default::default() },
+            None,
+        );
+        assert!(run.model.accuracy(&ds) > 0.8);
+    }
+}

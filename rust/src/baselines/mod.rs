@@ -1,0 +1,232 @@
+//! Baseline scalable QP meta-solvers the paper compares against (Tables 2-4):
+//!
+//! * **Ca-** — Cascade (Graf et al. 2004): random partitions, pairwise
+//!   support-vector merge tree ([`cascade`]).
+//! * **DiP-** — DiP (Singh et al. 2017): distribution-preserving input-space
+//!   k-means partitions, one parallel level, final solve on the SV union
+//!   ([`dip`]).
+//! * **DC-** — Divide-and-Conquer (Hsieh et al. 2014): kernel-k-means
+//!   clusters as partitions, hierarchical merge ([`hierarchical`] with the
+//!   cluster strategy).
+//!
+//! Every meta-solver is generic over the *local solver* ([`LocalSolverKind`]:
+//! the ODM dual or the hinge-loss SVM dual), which is how the Table-4
+//! `*-SVM` variants (including SSVM = SODM pipeline + SVM solver) reuse the
+//! exact same coordination code.
+
+pub mod cascade;
+pub mod dip;
+pub mod hierarchical;
+
+use crate::data::DataView;
+use crate::kernel::KernelKind;
+use crate::odm::{OdmModel, OdmParams};
+use crate::qp::{solve_odm_dual, solve_svm_dual, SolveBudget};
+
+/// The local dual solver a meta-algorithm runs on each partition.
+#[derive(Clone, Copy, Debug)]
+pub enum LocalSolverKind {
+    /// ODM dual (paper Eqn. 2); α layout `[ζ; β]`, 2 values per instance.
+    Odm(OdmParams),
+    /// Hinge-loss C-SVM dual; α layout `γ`, 1 value per instance.
+    Svm { c: f64 },
+}
+
+/// Solver-agnostic local solution.
+#[derive(Clone, Debug)]
+pub struct GenericSolution {
+    /// Solver-specific stacked dual variables (warm-start interchange).
+    pub alpha: Vec<f64>,
+    /// Expansion coefficients γ (model interchange; same for both solvers).
+    pub gamma: Vec<f64>,
+    pub objective: f64,
+    pub converged: bool,
+    pub sweeps: usize,
+}
+
+impl LocalSolverKind {
+    /// Dual values stored per instance (2 for ODM's `[ζ; β]`, 1 for SVM).
+    pub fn stride(&self) -> usize {
+        match self {
+            LocalSolverKind::Odm(_) => 2,
+            LocalSolverKind::Svm { .. } => 1,
+        }
+    }
+
+    /// Solve the local dual on `view`, optionally warm-started.
+    pub fn solve(
+        &self,
+        view: &DataView,
+        kernel: &KernelKind,
+        warm: Option<&[f64]>,
+        budget: &SolveBudget,
+    ) -> GenericSolution {
+        match self {
+            LocalSolverKind::Odm(params) => {
+                let sol = solve_odm_dual(view, kernel, params, warm, budget);
+                GenericSolution {
+                    alpha: sol.alpha(),
+                    gamma: sol.gamma(),
+                    objective: sol.stats.objective,
+                    converged: sol.stats.converged,
+                    sweeps: sol.stats.sweeps,
+                }
+            }
+            LocalSolverKind::Svm { c } => {
+                let sol = solve_svm_dual(view, kernel, *c, warm, budget);
+                GenericSolution {
+                    alpha: sol.gamma.clone(),
+                    gamma: sol.gamma,
+                    objective: sol.stats.objective,
+                    converged: sol.stats.converged,
+                    sweeps: sol.stats.sweeps,
+                }
+            }
+        }
+    }
+
+    /// Concatenate child α vectors into the parent's warm start, respecting
+    /// the solver's layout (ODM needs `[ζ_1;…;ζ_p; β_1;…;β_p]`).
+    pub fn concat_alpha(&self, children: &[&GenericSolution]) -> Vec<f64> {
+        match self {
+            LocalSolverKind::Odm(_) => {
+                let mut zeta = Vec::new();
+                let mut beta = Vec::new();
+                for ch in children {
+                    let m = ch.alpha.len() / 2;
+                    zeta.extend_from_slice(&ch.alpha[..m]);
+                    beta.extend_from_slice(&ch.alpha[m..]);
+                }
+                zeta.extend_from_slice(&beta);
+                zeta
+            }
+            LocalSolverKind::Svm { .. } => {
+                children.iter().flat_map(|ch| ch.alpha.iter().copied()).collect()
+            }
+        }
+    }
+
+    /// Extract the per-instance α rows for a subset of view-local positions
+    /// (support-vector filtering in Cascade/DiP).
+    pub fn filter_alpha(&self, sol: &GenericSolution, keep: &[usize]) -> Vec<f64> {
+        match self {
+            LocalSolverKind::Odm(_) => {
+                let m = sol.alpha.len() / 2;
+                let mut zeta: Vec<f64> = keep.iter().map(|&i| sol.alpha[i]).collect();
+                let beta: Vec<f64> = keep.iter().map(|&i| sol.alpha[m + i]).collect();
+                zeta.extend(beta);
+                zeta
+            }
+            LocalSolverKind::Svm { .. } => keep.iter().map(|&i| sol.alpha[i]).collect(),
+        }
+    }
+}
+
+/// One checkpoint along a meta-solver run ("stop at different levels").
+pub struct MetaLevel {
+    pub n_partitions: usize,
+    pub elapsed: f64,
+    pub model: OdmModel,
+    pub objective: f64,
+}
+
+/// Result of a meta-solver run.
+pub struct MetaRun {
+    pub model: OdmModel,
+    pub trace: Vec<MetaLevel>,
+    pub total_seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{all_indices, synth::SynthSpec, Dataset};
+
+    fn fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn generic_solver_odm_and_svm_produce_models() {
+        let ds = fixture(120, 1);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let k = KernelKind::Rbf { gamma: 2.0 };
+        let budget = SolveBudget::default();
+        for solver in [
+            LocalSolverKind::Odm(OdmParams::default()),
+            LocalSolverKind::Svm { c: 1.0 },
+        ] {
+            let sol = solver.solve(&view, &k, None, &budget);
+            assert_eq!(sol.gamma.len(), 120);
+            assert_eq!(sol.alpha.len(), 120 * solver.stride());
+            let model = OdmModel::from_dual(&view, &k, &sol.gamma);
+            assert!(model.accuracy(&ds) > 0.8);
+        }
+    }
+
+    #[test]
+    fn concat_alpha_odm_layout() {
+        let solver = LocalSolverKind::Odm(OdmParams::default());
+        let a = GenericSolution {
+            alpha: vec![1.0, 2.0, 10.0, 20.0], // ζ=[1,2] β=[10,20]
+            gamma: vec![],
+            objective: 0.0,
+            converged: true,
+            sweeps: 1,
+        };
+        let b = GenericSolution {
+            alpha: vec![3.0, 30.0], // ζ=[3] β=[30]
+            gamma: vec![],
+            objective: 0.0,
+            converged: true,
+            sweeps: 1,
+        };
+        let c = solver.concat_alpha(&[&a, &b]);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn filter_alpha_layouts() {
+        let odm = LocalSolverKind::Odm(OdmParams::default());
+        let sol = GenericSolution {
+            alpha: vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0],
+            gamma: vec![],
+            objective: 0.0,
+            converged: true,
+            sweeps: 1,
+        };
+        assert_eq!(odm.filter_alpha(&sol, &[0, 2]), vec![1.0, 3.0, 10.0, 30.0]);
+        let svm = LocalSolverKind::Svm { c: 1.0 };
+        let sol2 = GenericSolution {
+            alpha: vec![5.0, 6.0, 7.0],
+            gamma: vec![],
+            objective: 0.0,
+            converged: true,
+            sweeps: 1,
+        };
+        assert_eq!(svm.filter_alpha(&sol2, &[2, 0]), vec![7.0, 5.0]);
+    }
+
+    #[test]
+    fn svm_warm_start_round_trips() {
+        let ds = fixture(100, 5);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let solver = LocalSolverKind::Svm { c: 1.0 };
+        let budget = SolveBudget::default();
+        let sol = solver.solve(&view, &k, None, &budget);
+        let warm = solver.solve(&view, &k, Some(&sol.alpha), &budget);
+        assert!(
+            warm.sweeps <= sol.sweeps.max(3),
+            "warm restart ({}) should not exceed cold solve ({})",
+            warm.sweeps,
+            sol.sweeps
+        );
+        // f32 row recomputation noise allowed
+        assert!(warm.objective <= sol.objective + 1e-5 * (1.0 + sol.objective.abs()));
+    }
+}

@@ -1,0 +1,148 @@
+//! LIBSVM sparse text format reader/writer.
+//!
+//! The paper evaluates on eight LIBSVM datasets (Table 1). We emulate them
+//! synthetically by default (DESIGN.md §3), but this loader lets the real
+//! files be dropped in (`sodm experiment --data-dir ...`) unchanged.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::Result;
+
+/// Parse a LIBSVM format file: each line `label idx:val idx:val ...`
+/// (1-based feature indices). `cols` can force a dimension (0 = infer).
+pub fn read_libsvm(path: impl AsRef<Path>, cols: usize) -> Result<Dataset> {
+    let f = File::open(path.as_ref())?;
+    let reader = BufReader::new(f);
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_col = cols;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing label", lineno + 1))?;
+        let raw: f32 = label_tok
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad label {label_tok:?}: {e}", lineno + 1))?;
+        // Common conventions: {1,-1}, {1,0}, {1,2} -> map non-positive/2 to -1.
+        let label = if raw > 0.0 && raw != 2.0 { 1.0 } else { -1.0 };
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let i: usize = i.parse()?;
+            let v: f32 = v.parse()?;
+            anyhow::ensure!(i >= 1, "line {}: feature index must be >= 1", lineno + 1);
+            max_col = max_col.max(i);
+            feats.push((i - 1, v));
+        }
+        rows.push((label, feats));
+    }
+    let n = max_col;
+    let mut x = vec![0.0f32; rows.len() * n];
+    let mut y = Vec::with_capacity(rows.len());
+    for (r, (label, feats)) in rows.iter().enumerate() {
+        y.push(*label);
+        for &(j, v) in feats {
+            x[r * n + j] = v;
+        }
+    }
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(Dataset::new(name, x, y, n))
+}
+
+/// Write a dataset in LIBSVM format (dense rows; zeros omitted).
+pub fn write_libsvm(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..data.rows {
+        write!(w, "{}", if data.y[i] > 0.0 { "+1" } else { "-1" })?;
+        for (j, &v) in data.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::temp_dir;
+    use std::io::Write as _;
+
+    struct Cleanup(std::path::PathBuf);
+    impl Drop for Cleanup {
+        fn drop(&mut self) {
+            std::fs::remove_dir_all(&self.0).ok();
+        }
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("toy.txt");
+        let mut f = File::create(&p).unwrap();
+        writeln!(f, "+1 1:0.5 3:2.0").unwrap();
+        writeln!(f, "-1 2:1.5").unwrap();
+        drop(f);
+        let d = read_libsvm(&p, 0).unwrap();
+        assert_eq!(d.rows, 2);
+        assert_eq!(d.cols, 3);
+        assert_eq!(d.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(d.row(1), &[0.0, 1.5, 0.0]);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+
+        let p2 = dir.0.join("out.txt");
+        write_libsvm(&d, &p2).unwrap();
+        let d2 = read_libsvm(&p2, 0).unwrap();
+        assert_eq!(d.x, d2.x);
+        assert_eq!(d.y, d2.y);
+    }
+
+    #[test]
+    fn label_conventions() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("lbl.txt");
+        let mut f = File::create(&p).unwrap();
+        writeln!(f, "1 1:1").unwrap();
+        writeln!(f, "0 1:1").unwrap();
+        writeln!(f, "2 1:1").unwrap();
+        writeln!(f, "-1 1:1").unwrap();
+        drop(f);
+        let d = read_libsvm(&p, 0).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("c.txt");
+        std::fs::write(&p, "# header\n\n+1 1:2.0\n").unwrap();
+        let d = read_libsvm(&p, 0).unwrap();
+        assert_eq!(d.rows, 1);
+    }
+
+    #[test]
+    fn forced_min_cols() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("f.txt");
+        std::fs::write(&p, "+1 1:1.0\n").unwrap();
+        let d = read_libsvm(&p, 5).unwrap();
+        assert_eq!(d.cols, 5);
+    }
+}

@@ -1,0 +1,235 @@
+//! Data layer: dense row-major matrices, libsvm I/O, normalization, splits,
+//! and synthetic emulators for the paper's eight benchmark datasets.
+
+pub mod libsvm;
+pub mod synth;
+
+use crate::util::rng::Pcg32;
+
+/// A dense, row-major labelled dataset. Labels are `+1.0` / `-1.0` (`0.0` is
+/// reserved as the padding sentinel understood by the AOT kernels).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Row-major `rows x cols` feature matrix.
+    pub x: Vec<f32>,
+    /// Labels in `{-1, +1}`, length `rows`.
+    pub y: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Human-readable provenance (dataset name).
+    pub name: String,
+}
+
+impl Dataset {
+    /// Create from parts, validating invariants.
+    pub fn new(name: impl Into<String>, x: Vec<f32>, y: Vec<f32>, cols: usize) -> Self {
+        let rows = y.len();
+        assert_eq!(x.len(), rows * cols, "x/y size mismatch");
+        debug_assert!(y.iter().all(|v| *v == 1.0 || *v == -1.0), "labels must be ±1");
+        Self { x, y, rows, cols, name: name.into() }
+    }
+
+    /// The `i`-th feature row.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_fraction(&self) -> f64 {
+        if self.rows == 0 {
+            return 0.0;
+        }
+        self.y.iter().filter(|v| **v > 0.0).count() as f64 / self.rows as f64
+    }
+
+    /// Min-max normalize every feature into `[0, 1]` in place (paper §4.1).
+    /// Constant features map to 0.
+    pub fn normalize_min_max(&mut self) {
+        if self.rows == 0 {
+            return;
+        }
+        let mut lo = vec![f32::INFINITY; self.cols];
+        let mut hi = vec![f32::NEG_INFINITY; self.cols];
+        for i in 0..self.rows {
+            let r = &self.x[i * self.cols..(i + 1) * self.cols];
+            for (j, &v) in r.iter().enumerate() {
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        for i in 0..self.rows {
+            let r = &mut self.x[i * self.cols..(i + 1) * self.cols];
+            for (j, v) in r.iter_mut().enumerate() {
+                let span = hi[j] - lo[j];
+                *v = if span > 0.0 { (*v - lo[j]) / span } else { 0.0 };
+            }
+        }
+    }
+
+    /// Append a constant-1 bias column (feature augmentation for the
+    /// bias-free ODM/SVM formulations). For RBF kernels the constant column
+    /// cancels in every pairwise distance, so it is always safe.
+    pub fn push_bias_column(&mut self) {
+        let n = self.cols;
+        let mut x = Vec::with_capacity(self.rows * (n + 1));
+        for i in 0..self.rows {
+            x.extend_from_slice(&self.x[i * n..(i + 1) * n]);
+            x.push(1.0);
+        }
+        self.x = x;
+        self.cols = n + 1;
+    }
+
+    /// Copy out the subset of rows given by `idx` (meta-solvers use index
+    /// views; this is for final materialization / tests).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.cols);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(self.name.clone(), x, y, self.cols)
+    }
+
+    /// Deterministic shuffled train/test split; `train_frac` in (0,1].
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!(self.rows > 1, "cannot split dataset with <2 rows");
+        let mut idx: Vec<usize> = (0..self.rows).collect();
+        let mut rng = Pcg32::seeded(seed);
+        rng.shuffle(&mut idx);
+        let ntr = ((self.rows as f64 * train_frac).round() as usize).clamp(1, self.rows - 1);
+        (self.subset(&idx[..ntr]), self.subset(&idx[ntr..]))
+    }
+}
+
+/// A borrowed view of a subset of a [`Dataset`]'s rows. All solvers operate
+/// on views so partitioning/merging never copies feature data.
+#[derive(Clone, Copy)]
+pub struct DataView<'a> {
+    pub data: &'a Dataset,
+    pub idx: &'a [usize],
+}
+
+impl<'a> DataView<'a> {
+    pub fn new(data: &'a Dataset, idx: &'a [usize]) -> Self {
+        debug_assert!(idx.iter().all(|&i| i < data.rows), "index out of range");
+        Self { data, idx }
+    }
+
+    /// Full-dataset view.
+    pub fn full(data: &'a Dataset, all: &'a [usize]) -> Self {
+        Self::new(data, all)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Feature row of the view-local `i`-th instance.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        self.data.row(self.idx[i])
+    }
+
+    /// Label of the view-local `i`-th instance.
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.data.y[self.idx[i]]
+    }
+}
+
+/// Identity index vector `0..rows`, the "all rows" view backing.
+pub fn all_indices(data: &Dataset) -> Vec<usize> {
+    (0..data.rows).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            vec![0.0, 2.0, 1.0, 4.0, 2.0, 6.0, 3.0, 8.0],
+            vec![1.0, -1.0, 1.0, -1.0],
+            2,
+        )
+    }
+
+    #[test]
+    fn row_access() {
+        let d = toy();
+        assert_eq!(d.row(0), &[0.0, 2.0]);
+        assert_eq!(d.row(3), &[3.0, 8.0]);
+    }
+
+    #[test]
+    fn normalize_min_max_maps_to_unit_interval() {
+        let mut d = toy();
+        d.normalize_min_max();
+        for i in 0..d.rows {
+            for &v in d.row(i) {
+                assert!((0.0..=1.0).contains(&v), "{v}");
+            }
+        }
+        assert_eq!(d.row(0), &[0.0, 0.0]);
+        assert_eq!(d.row(3), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn normalize_constant_feature_is_zero() {
+        let mut d = Dataset::new("c", vec![5.0, 1.0, 5.0, 2.0], vec![1.0, -1.0], 2);
+        d.normalize_min_max();
+        assert_eq!(d.row(0)[0], 0.0);
+        assert_eq!(d.row(1)[0], 0.0);
+    }
+
+    #[test]
+    fn split_partitions_all_rows() {
+        let d = toy();
+        let (tr, te) = d.split(0.5, 1);
+        assert_eq!(tr.rows + te.rows, d.rows);
+        assert_eq!(tr.rows, 2);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let d = toy();
+        let (a, _) = d.split(0.75, 9);
+        let (b, _) = d.split(0.75, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn view_indexing() {
+        let d = toy();
+        let idx = vec![2usize, 0];
+        let v = DataView::new(&d, &idx);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.row(0), &[2.0, 6.0]);
+        assert_eq!(v.label(1), 1.0);
+    }
+
+    #[test]
+    fn subset_copies_rows() {
+        let d = toy();
+        let s = d.subset(&[3, 1]);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.row(0), &[3.0, 8.0]);
+        assert_eq!(s.y, vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn positive_fraction() {
+        assert!((toy().positive_fraction() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,259 @@
+//! Synthetic emulators for the paper's eight benchmark datasets (Table 1).
+//!
+//! The real LIBSVM files are not bundled; per DESIGN.md §3 each dataset is
+//! replaced by a Gaussian-mixture generator with the same instance/feature
+//! geometry and a class structure tuned to the same difficulty regime
+//! (linear vs nonlinear, balance, overlap). The algorithms only interact
+//! with data through kernels and gradients, so these exercise identical
+//! code paths; relative method ordering is what the tables validate.
+
+use crate::data::Dataset;
+use crate::util::rng::Pcg32;
+
+/// Geometry of the class-conditional mixture for one emulated dataset.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    /// Instance count (already scaled; see [`SynthSpec::named`]).
+    pub rows: usize,
+    /// Feature count.
+    pub cols: usize,
+    /// Gaussian modes per class.
+    pub modes: usize,
+    /// Distance between class structures in units of mode std. Higher = easier.
+    pub sep: f32,
+    /// Per-mode isotropic std.
+    pub noise: f32,
+    /// XOR-style interleaving: modes of the two classes alternate in space so
+    /// no hyperplane separates them (RBF beats linear, as on cod-rna/ijcnn1/skin).
+    pub nonlinear: bool,
+    /// Fraction of positive instances.
+    pub pos_frac: f64,
+    /// Label-flip probability — sets the Bayes-accuracy ceiling (≈ 1 - q),
+    /// the lever that matches each paper dataset's accuracy band.
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+/// Paper Table 1 statistics: (name, instances, features).
+pub const PAPER_DATASETS: [(&str, usize, usize); 8] = [
+    ("gisette", 6_000, 5_000),
+    ("svmguide1", 7_089, 4),
+    ("phishing", 11_055, 68),
+    ("a7a", 32_561, 123),
+    ("cod-rna", 59_535, 8),
+    ("ijcnn1", 141_691, 22),
+    ("skin-nonskin", 245_057, 3),
+    ("SUSY", 5_000_000, 18),
+];
+
+impl SynthSpec {
+    /// Emulator profile for one of the eight paper datasets.
+    ///
+    /// `scale` multiplies the instance count (the benches run scaled-down
+    /// workloads; `1.0` reproduces Table 1 sizes except the documented
+    /// substitutions: gisette's 5000 features -> 512, SUSY capped at 500k
+    /// rows at scale 1.0).
+    pub fn named(name: &str, scale: f64, seed: u64) -> SynthSpec {
+        let (rows, cols) = PAPER_DATASETS
+            .iter()
+            .find(|(n, _, _)| *n == name)
+            .map(|&(_, m, n)| (m, n))
+            .unwrap_or_else(|| panic!("unknown dataset {name:?}"));
+        // Documented substitutions (DESIGN.md §3).
+        let cols = if name == "gisette" { 512 } else { cols };
+        let rows_cap = if name == "SUSY" { 500_000 } else { rows };
+        let rows = ((rows_cap as f64 * scale).round() as usize).max(64);
+        // Difficulty profiles: label_noise sets the accuracy ceiling near
+        // the paper's per-dataset band (Table 2's ODM column), sep/noise the
+        // geometry, `nonlinear` whether RBF should beat linear (Tables 2v3).
+        let (modes, sep, noise, nonlinear, pos_frac, label_noise) = match name {
+            "gisette" => (2, 4.5, 1.0, false, 0.5, 0.02),
+            "svmguide1" => (2, 4.0, 1.0, false, 0.35, 0.025),
+            "phishing" => (3, 3.2, 1.0, false, 0.56, 0.055),
+            "a7a" => (4, 3.0, 1.0, false, 0.24, 0.115),
+            "cod-rna" => (4, 3.4, 0.8, true, 0.33, 0.06),
+            "ijcnn1" => (5, 3.1, 1.0, true, 0.10, 0.07),
+            "skin-nonskin" => (3, 4.2, 0.5, true, 0.21, 0.04),
+            "SUSY" => (6, 4.0, 1.0, false, 0.46, 0.23),
+            _ => (3, 2.5, 1.0, false, 0.5, 0.05),
+        };
+        SynthSpec {
+            name: name.into(),
+            rows,
+            cols,
+            modes,
+            sep,
+            noise,
+            nonlinear,
+            pos_frac,
+            label_noise,
+            seed,
+        }
+    }
+
+    /// All eight emulated datasets at a common scale.
+    pub fn all(scale: f64, seed: u64) -> Vec<SynthSpec> {
+        PAPER_DATASETS
+            .iter()
+            .map(|(n, _, _)| SynthSpec::named(n, scale, seed))
+            .collect()
+    }
+
+    /// Draw the dataset. Deterministic in `seed`. Features are min-max
+    /// normalized into `[0,1]` afterwards (paper §4.1); the LAST column is a
+    /// constant bias feature (= 1), the standard augmentation for the
+    /// bias-free ODM/SVM formulations (total feature count matches `cols`).
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Pcg32::seeded(self.seed ^ 0x50D4);
+        let d = (self.cols - 1).max(1);
+        let g = self.modes.max(1);
+
+        // Mode centers. Nonlinear: 2g centers on a common lattice with
+        // alternating class labels (XOR generalization). Linear: each class
+        // gets its own cluster of centers, classes displaced by `sep` along
+        // a random direction.
+        let mut centers: Vec<(Vec<f32>, f32)> = Vec::with_capacity(2 * g);
+        if self.nonlinear {
+            // XOR-style: alternating labels on random centers, with rejection
+            // so opposite-class modes keep >= 3*noise clearance (the label
+            // noise parameter, not accidental mode overlap, sets the Bayes
+            // error — critical in low dimension)
+            let min_gap = 3.0 * self.noise;
+            for k in 0..2 * g {
+                let label = if k % 2 == 0 { 1.0 } else { -1.0 };
+                let mut c: Vec<f32> = Vec::new();
+                for _try in 0..200 {
+                    c = (0..d).map(|_| rng.gen_range_f32(-1.0, 1.0) * self.sep).collect();
+                    let ok = centers.iter().all(|(other, olab): &(Vec<f32>, f32)| {
+                        if *olab == label {
+                            return true;
+                        }
+                        let dist2: f32 = other
+                            .iter()
+                            .zip(&c)
+                            .map(|(a, b)| (a - b) * (a - b))
+                            .sum();
+                        dist2.sqrt() >= min_gap
+                    });
+                    if ok {
+                        break;
+                    }
+                }
+                centers.push((c, label));
+            }
+        } else {
+            // random unit direction
+            let dir: Vec<f32> = {
+                let v: Vec<f32> = (0..d).map(|_| rng.standard_normal()).collect();
+                let norm = v.iter().map(|a| a * a).sum::<f32>().sqrt().max(1e-6);
+                v.iter().map(|a| a / norm).collect()
+            };
+            for k in 0..2 * g {
+                let label = if k < g { 1.0f32 } else { -1.0 };
+                // jitter orthogonal to the separating direction so modes
+                // never cross the class boundary (linear separability is the
+                // property these profiles emulate; noise sets Bayes error)
+                let mut jitter: Vec<f32> =
+                    (0..d).map(|_| rng.standard_normal() * self.sep * 0.35).collect();
+                let proj: f32 = jitter.iter().zip(&dir).map(|(a, b)| a * b).sum();
+                for (jv, dv) in jitter.iter_mut().zip(&dir) {
+                    *jv -= proj * dv;
+                }
+                let c: Vec<f32> = (0..d)
+                    .map(|j| dir[j] * (label * self.sep / 2.0) + jitter[j])
+                    .collect();
+                centers.push((c, label));
+            }
+        }
+        let pos_centers: Vec<usize> =
+            (0..centers.len()).filter(|&k| centers[k].1 > 0.0).collect();
+        let neg_centers: Vec<usize> =
+            (0..centers.len()).filter(|&k| centers[k].1 < 0.0).collect();
+
+        let mut x = Vec::with_capacity(self.rows * d);
+        let mut y = Vec::with_capacity(self.rows);
+        for _ in 0..self.rows {
+            let positive = rng.gen_bool(self.pos_frac);
+            let pool = if positive { &pos_centers } else { &neg_centers };
+            let k = pool[rng.gen_range(pool.len())];
+            let (c, label) = &centers[k];
+            for j in 0..d {
+                x.push(c[j] + rng.standard_normal() * self.noise);
+            }
+            // label noise: the irreducible error every method shares
+            let flipped = rng.gen_bool(self.label_noise);
+            y.push(if flipped { -*label } else { *label });
+        }
+        let mut ds = Dataset::new(self.name.clone(), x, y, d);
+        ds.normalize_min_max();
+        if self.cols > 1 {
+            ds.push_bias_column();
+        }
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_profiles_cover_paper_table1() {
+        for (name, _, _) in PAPER_DATASETS {
+            let s = SynthSpec::named(name, 0.01, 1);
+            assert_eq!(s.name, name);
+            assert!(s.rows >= 64);
+        }
+    }
+
+    #[test]
+    fn generate_shapes_and_labels() {
+        let s = SynthSpec::named("svmguide1", 0.05, 3);
+        let d = s.generate();
+        assert_eq!(d.rows, (7089.0f64 * 0.05).round() as usize);
+        assert_eq!(d.cols, 4);
+        assert!(d.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        // normalized
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = SynthSpec::named("phishing", 0.02, 11).generate();
+        let b = SynthSpec::named("phishing", 0.02, 11).generate();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn class_balance_respected() {
+        let spec = SynthSpec::named("ijcnn1", 0.05, 5);
+        let d = spec.generate();
+        let pf = d.positive_fraction();
+        // label noise shifts the observed positive fraction:
+        // E[pf] = p(1-q) + (1-p)q
+        let expect = spec.pos_frac * (1.0 - spec.label_noise)
+            + (1.0 - spec.pos_frac) * spec.label_noise;
+        assert!((pf - expect).abs() < 0.03, "pos fraction {pf}, expected {expect}");
+    }
+
+    #[test]
+    fn susy_capped_and_scaled() {
+        let s = SynthSpec::named("SUSY", 0.01, 1);
+        assert_eq!(s.rows, 5_000);
+        assert_eq!(s.cols, 18);
+    }
+
+    #[test]
+    fn gisette_feature_substitution() {
+        let s = SynthSpec::named("gisette", 0.1, 1);
+        assert_eq!(s.cols, 512);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_dataset_panics() {
+        SynthSpec::named("nope", 1.0, 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Ablations of SODM's design choices (DESIGN.md §4 extension):
+//!
+//! * **A1 — partition strategy**: stratified-RKHS vs random vs k-means vs
+//!   kernel-k-means under the *same* hierarchical trainer (isolates §3.2).
+//! * **A2 — warm start**: concatenated child solutions vs cold restarts at
+//!   every merge level (isolates Algorithm 1 line 12 / Theorem 1).
+//! * **A3 — stratum count**: S ∈ {2, 8, 32} (landmark budget sensitivity).
+//!
+//! Each row reports test accuracy, single-core seconds, and the total DCD
+//! sweeps spent — the mechanism (warm starts save sweeps) is visible
+//! directly, independent of the machine.
+
+use std::time::Instant;
+
+use crate::baselines::hierarchical::{train_hierarchical, HierConfig};
+use crate::baselines::LocalSolverKind;
+use crate::data::{DataView, Dataset};
+use crate::exp::{prepare_dataset, rbf_for, table_budget, ExpConfig};
+use crate::kernel::KernelKind;
+use crate::odm::{OdmModel, OdmParams};
+use crate::partition::{make_partitions, PartitionStrategy};
+use crate::qp::{solve_odm_dual, SolveBudget};
+use crate::Result;
+
+/// One ablation row.
+pub struct AblationRow {
+    pub name: String,
+    pub accuracy: f64,
+    pub seconds: f64,
+    pub sweeps: usize,
+}
+
+/// A1 + A3: run the hierarchical trainer with each partition strategy.
+pub fn ablate_partition_strategy(
+    train: &Dataset,
+    test: &Dataset,
+    kernel: &KernelKind,
+) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for (name, strategy) in [
+        ("stratified S=8", PartitionStrategy::StratifiedRkhs { stratums: 8 }),
+        ("stratified S=2", PartitionStrategy::StratifiedRkhs { stratums: 2 }),
+        ("stratified S=32", PartitionStrategy::StratifiedRkhs { stratums: 32 }),
+        ("random", PartitionStrategy::Random),
+        ("kmeans-prop", PartitionStrategy::KmeansProportional { clusters: 8 }),
+        ("kernel-kmeans", PartitionStrategy::KernelKmeansClusters { embed_dim: 16 }),
+    ] {
+        let t0 = Instant::now();
+        let run = train_hierarchical(
+            train,
+            kernel,
+            LocalSolverKind::Odm(OdmParams::default()),
+            &HierConfig {
+                p: 4,
+                levels: 2,
+                strategy,
+                budget: table_budget(),
+                level_tol: 0.0, // full merge: every variant does all levels
+                seed: 7,
+            },
+            None,
+        );
+        rows.push(AblationRow {
+            name: name.into(),
+            accuracy: run.model.accuracy(test),
+            seconds: t0.elapsed().as_secs_f64(),
+            sweeps: 0, // per-level sweep counts are inside the trace; omitted
+        });
+    }
+    rows
+}
+
+/// A2: warm-started merges vs cold restarts at every level — the sweep
+/// counts expose Theorem 1's effect directly.
+pub fn ablate_warm_start(
+    train: &Dataset,
+    test: &Dataset,
+    kernel: &KernelKind,
+) -> Vec<AblationRow> {
+    let params = OdmParams::default();
+    let budget = SolveBudget { max_sweeps: 200, ..table_budget() };
+    let all_idx = crate::data::all_indices(train);
+    let view = DataView::new(train, &all_idx);
+    let parts = make_partitions(
+        &view,
+        kernel,
+        8,
+        PartitionStrategy::StratifiedRkhs { stratums: 8 },
+        7,
+        1,
+    );
+
+    let mut rows = Vec::new();
+    for warm in [true, false] {
+        let t0 = Instant::now();
+        let mut total_sweeps = 0usize;
+        // leaf solves
+        let mut sols: Vec<_> = parts
+            .iter()
+            .map(|p| {
+                let pv = DataView::new(train, p);
+                let s = solve_odm_dual(&pv, kernel, &params, None, &budget);
+                total_sweeps += s.stats.sweeps;
+                s
+            })
+            .collect();
+        // one 8-way merge to the full problem
+        let concat_idx: Vec<usize> = parts.iter().flatten().copied().collect();
+        let cview = DataView::new(train, &concat_idx);
+        let warm_alpha: Option<Vec<f64>> = if warm {
+            let mut zeta = Vec::new();
+            let mut beta = Vec::new();
+            for s in &sols {
+                zeta.extend_from_slice(&s.zeta);
+                beta.extend_from_slice(&s.beta);
+            }
+            zeta.extend_from_slice(&beta);
+            Some(zeta)
+        } else {
+            None
+        };
+        let final_sol = solve_odm_dual(&cview, kernel, &params, warm_alpha.as_deref(), &budget);
+        total_sweeps += final_sol.stats.sweeps;
+        sols.clear();
+        let model = OdmModel::from_dual(&cview, kernel, &final_sol.gamma());
+        rows.push(AblationRow {
+            name: if warm { "warm start (Alg. 1)" } else { "cold restart" }.into(),
+            accuracy: model.accuracy(test),
+            seconds: t0.elapsed().as_secs_f64(),
+            sweeps: total_sweeps,
+        });
+    }
+    rows
+}
+
+/// Render + run the full ablation suite.
+pub fn ablation(cfg: &ExpConfig) -> Result<String> {
+    let name = cfg.datasets.first().map(|s| s.as_str()).unwrap_or("ijcnn1");
+    let (train, test) = prepare_dataset(name, cfg);
+    let kernel = rbf_for(&train);
+    let mut out = format!(
+        "## Ablations on {name} ({} train rows, RBF)\n\n### A1/A3: partition strategy\n",
+        train.rows
+    );
+    out.push_str(&format!("{:<22}{:>10}{:>10}\n", "strategy", "acc", "time(s)"));
+    for r in ablate_partition_strategy(&train, &test, &kernel) {
+        out.push_str(&format!("{:<22}{:>10.4}{:>10.2}\n", r.name, r.accuracy, r.seconds));
+    }
+    out.push_str("\n### A2: warm start at merge levels\n");
+    out.push_str(&format!("{:<22}{:>10}{:>10}{:>10}\n", "variant", "acc", "time(s)", "sweeps"));
+    for r in ablate_warm_start(&train, &test, &kernel) {
+        out.push_str(&format!(
+            "{:<22}{:>10.4}{:>10.2}{:>10}\n",
+            r.name, r.accuracy, r.seconds, r.sweeps
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_start_uses_fewer_sweeps_than_cold() {
+        // needs partitions large enough that the local mc-scaling is close
+        // to the global one (Theorem 1's m -> M regime)
+        let cfg = ExpConfig {
+            scale: 0.1,
+            datasets: vec!["phishing".into()],
+            ..Default::default()
+        };
+        let (train, test) = prepare_dataset("phishing", &cfg);
+        let kernel = rbf_for(&train);
+        let rows = ablate_warm_start(&train, &test, &kernel);
+        let warm = &rows[0];
+        let cold = &rows[1];
+        assert!(
+            warm.sweeps <= cold.sweeps + 5,
+            "warm {} sweeps vs cold {}",
+            warm.sweeps,
+            cold.sweeps
+        );
+        assert!(warm.accuracy >= cold.accuracy - 0.03);
+    }
+
+    #[test]
+    fn ablation_renders() {
+        let cfg = ExpConfig {
+            scale: 0.01,
+            datasets: vec!["svmguide1".into()],
+            ..Default::default()
+        };
+        let out = ablation(&cfg).unwrap();
+        assert!(out.contains("stratified S=8"));
+        assert!(out.contains("warm start"));
+    }
+}

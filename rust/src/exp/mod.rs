@@ -1,0 +1,406 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section on the emulated datasets (DESIGN.md §4 maps each
+//! experiment id to the modules exercised here).
+
+pub mod ablation;
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+use std::time::Instant;
+
+use crate::baselines::cascade::{train_cascade, CascadeConfig};
+use crate::baselines::dip::{train_dip, DipConfig};
+use crate::baselines::hierarchical::{train_hierarchical, HierConfig};
+use crate::baselines::LocalSolverKind;
+use crate::cluster::SimCluster;
+use crate::data::synth::SynthSpec;
+use crate::data::Dataset;
+use crate::kernel::KernelKind;
+use crate::odm::{train_exact_odm, OdmModel, OdmParams};
+use crate::partition::PartitionStrategy;
+use crate::qp::SolveBudget;
+use crate::sodm::{train_sodm_traced, SodmConfig};
+use crate::svrg::{train_csvrg, train_dsvrg, train_svrg, NativeGrad, SvrgConfig};
+
+/// Harness configuration (CLI `experiment` flags).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Instance-count scale on the Table-1 sizes.
+    pub scale: f64,
+    pub seed: u64,
+    /// Worker slots of the simulated cluster.
+    pub workers: usize,
+    /// Datasets to run (default: all eight).
+    pub datasets: Vec<String>,
+    /// Directory for JSON result files.
+    pub out_dir: std::path::PathBuf,
+    /// Exact-ODM row cap: above this the reference column reports N/A —
+    /// the paper's 48-hour-timeout analogue (its Table 2 has N/A from
+    /// cod-rna up; the default cap reproduces that pattern at scale 0.05).
+    pub odm_cap: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self {
+            scale: 0.05,
+            seed: 7,
+            workers: crate::util::pool::num_cpus(),
+            datasets: SynthSpec::all(1.0, 0).iter().map(|s| s.name.clone()).collect(),
+            out_dir: "results".into(),
+            odm_cap: 2_000,
+        }
+    }
+}
+
+/// One method's outcome on one dataset.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: String,
+    pub dataset: String,
+    /// Test accuracy; NaN encodes the paper's "N/A".
+    pub accuracy: f64,
+    /// Measured single-core wall clock.
+    pub seconds: f64,
+    /// Task-replay modeled wall clock on the paper's 32 cores
+    /// ([`crate::cluster::SimCluster::modeled_time`]); equals `seconds` for
+    /// methods with no parallel phase.
+    pub modeled_seconds: f64,
+    /// (elapsed seconds, accuracy) checkpoints — the Fig. 1/3 curves.
+    pub curve: Vec<(f64, f64)>,
+}
+
+impl MethodResult {
+    pub fn not_run(method: &str, dataset: &str) -> Self {
+        Self {
+            method: method.into(),
+            dataset: dataset.into(),
+            accuracy: f64::NAN,
+            seconds: f64::NAN,
+            modeled_seconds: f64::NAN,
+            curve: Vec::new(),
+        }
+    }
+}
+
+/// Cores assumed by the tables' modeled wall clock (the paper's Fig-2 max).
+pub const MODEL_CORES: usize = 32;
+
+/// Train/test pair for one emulated dataset.
+pub fn prepare_dataset(name: &str, cfg: &ExpConfig) -> (Dataset, Dataset) {
+    let ds = SynthSpec::named(name, cfg.scale, cfg.seed).generate();
+    ds.split(0.8, cfg.seed ^ 0x7E57)
+}
+
+/// Per-dataset RBF bandwidth by the median heuristic: gamma = 1 / median
+/// pairwise squared distance (estimated on a deterministic sample) — robust
+/// across the emulated datasets' very different feature counts.
+pub fn rbf_for(train: &Dataset) -> KernelKind {
+    let mut rng = crate::util::rng::Pcg32::seeded(0x9A);
+    let pairs = 256.min(train.rows * (train.rows - 1) / 2).max(1);
+    let mut d2: Vec<f32> = (0..pairs)
+        .map(|_| {
+            let i = rng.gen_range(train.rows);
+            let j = rng.gen_range(train.rows);
+            crate::kernel::sq_dist(train.row(i), train.row(j))
+        })
+        .filter(|d| *d > 0.0)
+        .collect();
+    if d2.is_empty() {
+        return KernelKind::default_rbf(train.cols);
+    }
+    d2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = d2[d2.len() / 2].max(1e-6);
+    KernelKind::Rbf { gamma: 1.0 / med }
+}
+
+/// Shared solver budget for the tables (kept moderate so the harness scales
+/// with `--scale`; convergence flags are recorded either way).
+pub fn table_budget() -> SolveBudget {
+    SolveBudget { eps: 1e-3, max_sweeps: 60, ..Default::default() }
+}
+
+fn sodm_tree(train_rows: usize) -> (usize, usize) {
+    // p=4; depth so leaves hold ~500-2000 rows.
+    let mut levels = 1usize;
+    while train_rows / 4usize.pow(levels as u32) > 2000 && levels < 4 {
+        levels += 1;
+    }
+    (4, levels)
+}
+
+/// The method names of Tables 2/3 in paper order.
+pub const QP_METHODS: [&str; 5] = ["ODM", "Ca-ODM", "DiP-ODM", "DC-ODM", "SODM"];
+
+/// Run one QP meta-method (Tables 2-3, Figs 1/3) on a prepared split.
+pub fn run_qp_method(
+    method: &str,
+    train: &Dataset,
+    test: &Dataset,
+    kernel: &KernelKind,
+    cfg: &ExpConfig,
+) -> MethodResult {
+    let cluster = SimCluster::new(cfg.workers);
+    let params = OdmParams::default();
+    let budget = table_budget();
+    let (p, levels) = sodm_tree(train.rows);
+    let t0 = Instant::now();
+    let (model, curve): (OdmModel, Vec<(f64, f64)>) = match method {
+        "ODM" => {
+            if train.rows > cfg.odm_cap {
+                return MethodResult::not_run(method, &train.name);
+            }
+            let exact_budget = SolveBudget { max_sweeps: 300, ..budget };
+            let m = train_exact_odm(train, kernel, &params, &exact_budget);
+            let acc = m.accuracy(test);
+            (m, vec![(t0.elapsed().as_secs_f64(), acc)])
+        }
+        "Ca-ODM" | "Ca-SVM" => {
+            let solver = pick_solver(method, params);
+            let run = train_cascade(
+                train,
+                kernel,
+                solver,
+                &CascadeConfig { leaves: p.pow(levels as u32), budget, seed: cfg.seed },
+                Some(&cluster),
+            );
+            let curve =
+                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
+            (run.model, curve)
+        }
+        "DiP-ODM" | "DiP-SVM" => {
+            let solver = pick_solver(method, params);
+            let run = train_dip(
+                train,
+                kernel,
+                solver,
+                &DipConfig {
+                    partitions: p.pow(levels as u32),
+                    clusters: 8,
+                    budget,
+                    seed: cfg.seed,
+                },
+                Some(&cluster),
+            );
+            let curve =
+                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
+            (run.model, curve)
+        }
+        "DC-ODM" | "DC-SVM" => {
+            let solver = pick_solver(method, params);
+            let run = train_hierarchical(
+                train,
+                kernel,
+                solver,
+                &HierConfig {
+                    p,
+                    levels,
+                    strategy: PartitionStrategy::KernelKmeansClusters { embed_dim: 16 },
+                    budget,
+                    level_tol: 1e-3,
+                    seed: cfg.seed,
+                },
+                Some(&cluster),
+            );
+            let curve =
+                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
+            (run.model, curve)
+        }
+        "SSVM" => {
+            let run = train_hierarchical(
+                train,
+                kernel,
+                LocalSolverKind::Svm { c: 1.0 },
+                &HierConfig {
+                    p,
+                    levels,
+                    strategy: PartitionStrategy::StratifiedRkhs { stratums: 16 },
+                    budget,
+                    level_tol: 1e-3,
+                    seed: cfg.seed,
+                },
+                Some(&cluster),
+            );
+            let curve =
+                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
+            (run.model, curve)
+        }
+        "SODM" => {
+            let run = train_sodm_traced(
+                train,
+                kernel,
+                &params,
+                &SodmConfig {
+                    p,
+                    levels,
+                    stratums: 16,
+                    strategy: PartitionStrategy::StratifiedRkhs { stratums: 16 },
+                    budget,
+                    level_tol: 1e-3,
+                    // Algorithm 1 returns the concatenated level-1 solutions
+                    // WITHOUT solving the fully merged problem (the paper's
+                    // early exit; Theorem 1 bounds the gap) — this is where
+                    // SODM's wall-clock advantage comes from.
+                    final_exact: false,
+                    seed: cfg.seed,
+                },
+                Some(&cluster),
+            );
+            let curve =
+                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
+            (run.model, curve)
+        }
+        other => panic!("unknown QP method {other:?}"),
+    };
+    let seconds = t0.elapsed().as_secs_f64();
+    let modeled_seconds = if method == "ODM" {
+        seconds // single solve, no parallel phase
+    } else {
+        cluster.modeled_time(MODEL_CORES, seconds)
+    };
+    MethodResult {
+        method: method.into(),
+        dataset: train.name.clone(),
+        accuracy: model.accuracy(test),
+        seconds,
+        modeled_seconds,
+        curve,
+    }
+}
+
+fn pick_solver(method: &str, params: OdmParams) -> LocalSolverKind {
+    if method.ends_with("SVM") {
+        LocalSolverKind::Svm { c: 1.0 }
+    } else {
+        LocalSolverKind::Odm(params)
+    }
+}
+
+/// Linear-kernel SODM = the DSVRG accelerator (paper §3.3 / Table 3 row).
+pub fn run_sodm_linear(train: &Dataset, test: &Dataset, cfg: &ExpConfig) -> MethodResult {
+    let cluster = SimCluster::new(cfg.workers);
+    let params = OdmParams::default();
+    let svrg_cfg = SvrgConfig {
+        epochs: 5,
+        partitions: cfg.workers.clamp(2, 16),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let grad = NativeGrad { workers: cfg.workers };
+    let t0 = Instant::now();
+    let run = train_dsvrg(train, &params, &svrg_cfg, Some(&cluster), &grad);
+    let seconds = t0.elapsed().as_secs_f64();
+    let modeled_seconds = cluster.modeled_time(MODEL_CORES, seconds);
+    let curve = run
+        .checkpoints
+        .iter()
+        .map(|c| (c.elapsed, OdmModel::Linear { w: c.w.clone() }.accuracy(test)))
+        .collect();
+    MethodResult {
+        method: "SODM".into(),
+        dataset: train.name.clone(),
+        accuracy: run.model.accuracy(test),
+        seconds,
+        modeled_seconds,
+        curve,
+    }
+}
+
+/// Gradient-based comparators for Fig. 4.
+pub fn run_gradient_method(
+    method: &str,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &ExpConfig,
+) -> MethodResult {
+    let params = OdmParams::default();
+    let svrg_cfg = SvrgConfig {
+        epochs: 5,
+        partitions: cfg.workers.clamp(2, 16),
+        coreset: (train.rows / 20).clamp(32, 1024),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let grad = NativeGrad { workers: cfg.workers };
+    let t0 = Instant::now();
+    let run = match method {
+        "SODM" => {
+            let cluster = SimCluster::new(cfg.workers);
+            train_dsvrg(train, &params, &svrg_cfg, Some(&cluster), &grad)
+        }
+        "ODM-SVRG" => train_svrg(train, &params, &svrg_cfg, &grad),
+        "ODM-CSVRG" => train_csvrg(train, &params, &svrg_cfg, &grad),
+        other => panic!("unknown gradient method {other:?}"),
+    };
+    let seconds = t0.elapsed().as_secs_f64();
+    // SVRG/CSVRG are single-machine methods; DSVRG models its parallel phase.
+    let modeled_seconds = seconds;
+    let curve = run
+        .checkpoints
+        .iter()
+        .map(|c| (c.elapsed, OdmModel::Linear { w: c.w.clone() }.accuracy(test)))
+        .collect();
+    MethodResult {
+        method: method.into(),
+        dataset: train.name.clone(),
+        accuracy: run.model.accuracy(test),
+        seconds,
+        modeled_seconds,
+        curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExpConfig {
+        ExpConfig {
+            scale: 0.01,
+            workers: 2,
+            datasets: vec!["svmguide1".into()],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn qp_methods_all_run_on_small_data() {
+        let cfg = quick_cfg();
+        let (train, test) = prepare_dataset("svmguide1", &cfg);
+        let k = rbf_for(&train);
+        for m in QP_METHODS {
+            let r = run_qp_method(m, &train, &test, &k, &cfg);
+            assert!(r.accuracy.is_nan() || r.accuracy > 0.6, "{m}: {}", r.accuracy);
+        }
+    }
+
+    #[test]
+    fn sodm_linear_runs() {
+        let cfg = quick_cfg();
+        let (train, test) = prepare_dataset("svmguide1", &cfg);
+        let r = run_sodm_linear(&train, &test, &cfg);
+        assert!(r.accuracy > 0.6);
+        assert!(!r.curve.is_empty());
+    }
+
+    #[test]
+    fn gradient_methods_run() {
+        let cfg = quick_cfg();
+        let (train, test) = prepare_dataset("svmguide1", &cfg);
+        for m in ["SODM", "ODM-SVRG", "ODM-CSVRG"] {
+            let r = run_gradient_method(m, &train, &test, &cfg);
+            assert!(r.accuracy > 0.6, "{m}: {}", r.accuracy);
+        }
+    }
+
+    #[test]
+    fn odm_cap_yields_not_run() {
+        let mut cfg = quick_cfg();
+        cfg.odm_cap = 1;
+        let (train, test) = prepare_dataset("svmguide1", &cfg);
+        let k = rbf_for(&train);
+        let r = run_qp_method("ODM", &train, &test, &k, &cfg);
+        assert!(r.accuracy.is_nan());
+    }
+}

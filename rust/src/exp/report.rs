@@ -1,0 +1,178 @@
+//! Result formatting (console tables) and JSON emission for the experiment
+//! harness. Output files land in `results/` and are the raw material of
+//! EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::exp::MethodResult;
+use crate::util::json::{jnum, jstr, Json};
+use crate::Result;
+
+/// Render a paper-style table: one row per dataset, (Acc, Time) per method.
+pub fn render_table(title: &str, methods: &[&str], results: &[MethodResult]) -> String {
+    let mut by_ds: BTreeMap<&str, BTreeMap<&str, &MethodResult>> = BTreeMap::new();
+    let mut ds_order: Vec<&str> = Vec::new();
+    for r in results {
+        if !ds_order.contains(&r.dataset.as_str()) {
+            ds_order.push(&r.dataset);
+        }
+        by_ds.entry(&r.dataset).or_default().insert(&r.method, r);
+    }
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    out.push_str("(time = task-replay modeled wall clock at 32 workers; see DESIGN.md §3)\n\n");
+    out.push_str(&format!("{:<14}", "dataset"));
+    for m in methods {
+        out.push_str(&format!("| {:>9} {:>9} ", format!("{m}"), "time(s)"));
+    }
+    out.push('\n');
+    out.push_str(&"-".repeat(14 + methods.len() * 22));
+    out.push('\n');
+    for ds in ds_order {
+        out.push_str(&format!("{ds:<14}"));
+        // bold-equivalent: mark the best accuracy with '*'
+        let best = methods
+            .iter()
+            .filter_map(|m| by_ds[ds].get(m))
+            .map(|r| r.accuracy)
+            .filter(|a| !a.is_nan())
+            .fold(f64::NEG_INFINITY, f64::max);
+        for m in methods {
+            match by_ds[ds].get(m) {
+                Some(r) if !r.accuracy.is_nan() => {
+                    let mark = if (r.accuracy - best).abs() < 5e-4 { "*" } else { " " };
+                    let t = if r.modeled_seconds.is_nan() { r.seconds } else { r.modeled_seconds };
+                    out.push_str(&format!("| {:>8.3}{} {:>9.2} ", r.accuracy, mark, t));
+                }
+                _ => out.push_str(&format!("| {:>9} {:>9} ", "N/A", "N/A")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Serialize results (including curves) as JSON.
+pub fn results_to_json(results: &[MethodResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("method", jstr(r.method.clone())),
+                    ("dataset", jstr(r.dataset.clone())),
+                    (
+                        "accuracy",
+                        if r.accuracy.is_nan() { Json::Null } else { jnum(r.accuracy) },
+                    ),
+                    ("seconds", if r.seconds.is_nan() { Json::Null } else { jnum(r.seconds) }),
+                    (
+                        "modeled_seconds",
+                        if r.modeled_seconds.is_nan() {
+                            Json::Null
+                        } else {
+                            jnum(r.modeled_seconds)
+                        },
+                    ),
+                    (
+                        "curve",
+                        Json::Arr(
+                            r.curve
+                                .iter()
+                                .map(|(t, a)| Json::Arr(vec![jnum(*t), jnum(*a)]))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write results JSON under `out_dir/<name>.json`.
+pub fn write_results(out_dir: &Path, name: &str, results: &[MethodResult]) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(format!("{name}.json"));
+    std::fs::write(&path, results_to_json(results).to_string())?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Render per-dataset accuracy-over-time series (the figures' data).
+pub fn render_curves(title: &str, results: &[MethodResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let mut ds_order: Vec<&str> = Vec::new();
+    for r in results {
+        if !ds_order.contains(&r.dataset.as_str()) {
+            ds_order.push(&r.dataset);
+        }
+    }
+    for ds in ds_order {
+        out.push_str(&format!("\n### {ds}\n"));
+        for r in results.iter().filter(|r| r.dataset == ds) {
+            out.push_str(&format!("  {:<10}", r.method));
+            if r.curve.is_empty() {
+                out.push_str(" (no checkpoints)\n");
+                continue;
+            }
+            for (t, a) in &r.curve {
+                out.push_str(&format!(" ({t:.2}s,{a:.3})"));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(method: &str, ds: &str, acc: f64, secs: f64) -> MethodResult {
+        MethodResult {
+            method: method.into(),
+            dataset: ds.into(),
+            accuracy: acc,
+            seconds: secs,
+            modeled_seconds: secs,
+            curve: vec![(0.5, acc - 0.01), (secs, acc)],
+        }
+    }
+
+    #[test]
+    fn table_renders_all_cells() {
+        let results =
+            vec![r("ODM", "a", 0.9, 1.0), r("SODM", "a", 0.91, 0.5), r("SODM", "b", 0.8, 2.0)];
+        let t = render_table("T", &["ODM", "SODM"], &results);
+        assert!(t.contains("0.900"));
+        assert!(t.contains("0.910*")); // best marked
+        assert!(t.contains("N/A")); // ODM missing on b
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let results = vec![r("SODM", "a", 0.9, 1.0)];
+        let j = results_to_json(&results);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr[0].req("method").unwrap().as_str().unwrap(), "SODM");
+        assert_eq!(arr[0].req("curve").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let results = vec![MethodResult::not_run("ODM", "big")];
+        let j = results_to_json(&results);
+        assert!(j.to_string().contains("null"));
+    }
+
+    #[test]
+    fn curves_render() {
+        let results = vec![r("SODM", "a", 0.9, 1.0)];
+        let c = render_curves("F", &results);
+        assert!(c.contains("### a"));
+        assert!(c.contains("(1.00s,0.900)"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Table drivers: Table 1 (dataset statistics), Table 2 (RBF), Table 3
+//! (linear), Table 4 (SVM-vs-ODM variants).
+
+use crate::data::synth::{SynthSpec, PAPER_DATASETS};
+use crate::exp::report::{render_table, write_results};
+use crate::exp::{
+    prepare_dataset, rbf_for, run_qp_method, run_sodm_linear, ExpConfig, MethodResult,
+    QP_METHODS,
+};
+use crate::kernel::KernelKind;
+use crate::Result;
+
+/// Table 1: dataset statistics (paper sizes + emulated sizes at this scale).
+pub fn table1(cfg: &ExpConfig) -> String {
+    let mut out = String::from("## Table 1: dataset statistics\n\n");
+    out.push_str(&format!(
+        "{:<14}{:>12}{:>10}{:>14}{:>10}\n",
+        "dataset", "#inst(paper)", "#feat", "#inst(here)", "#feat(here)"
+    ));
+    for (name, m, n) in PAPER_DATASETS {
+        let s = SynthSpec::named(name, cfg.scale, cfg.seed);
+        out.push_str(&format!("{name:<14}{m:>12}{n:>10}{:>14}{:>10}\n", s.rows, s.cols));
+    }
+    out
+}
+
+/// Table 2: accuracy + time with the RBF kernel for
+/// ODM / Ca-ODM / DiP-ODM / DC-ODM / SODM.
+pub fn table2(cfg: &ExpConfig) -> Result<String> {
+    let mut results: Vec<MethodResult> = Vec::new();
+    for name in &cfg.datasets {
+        let (train, test) = prepare_dataset(name, cfg);
+        let kernel = rbf_for(&train);
+        for m in QP_METHODS {
+            eprintln!("[table2] {name} / {m} ({} rows)", train.rows);
+            results.push(run_qp_method(m, &train, &test, &kernel, cfg));
+        }
+    }
+    write_results(&cfg.out_dir, "table2_rbf", &results)?;
+    Ok(render_table(
+        "Table 2: RBF kernel (accuracy / training seconds)",
+        &QP_METHODS,
+        &results,
+    ))
+}
+
+/// Table 3: accuracy + time with the linear kernel. SODM's linear row is the
+/// DSVRG accelerator of Algorithm 2; the baselines run their usual pipelines
+/// with a linear kernel.
+pub fn table3(cfg: &ExpConfig) -> Result<String> {
+    let mut results: Vec<MethodResult> = Vec::new();
+    for name in &cfg.datasets {
+        let (train, test) = prepare_dataset(name, cfg);
+        let kernel = KernelKind::Linear;
+        for m in ["ODM", "Ca-ODM", "DiP-ODM", "DC-ODM"] {
+            eprintln!("[table3] {name} / {m} ({} rows)", train.rows);
+            results.push(run_qp_method(m, &train, &test, &kernel, cfg));
+        }
+        eprintln!("[table3] {name} / SODM (DSVRG)");
+        results.push(run_sodm_linear(&train, &test, cfg));
+    }
+    write_results(&cfg.out_dir, "table3_linear", &results)?;
+    Ok(render_table(
+        "Table 3: linear kernel (accuracy / training seconds)",
+        &QP_METHODS,
+        &results,
+    ))
+}
+
+/// Table 4: every meta-solver with both local solvers (RBF kernel):
+/// Ca/DiP/DC/stratified-hierarchical x {SVM, ODM}.
+pub fn table4(cfg: &ExpConfig) -> Result<String> {
+    const METHODS: [&str; 8] = [
+        "Ca-SVM", "Ca-ODM", "DiP-SVM", "DiP-ODM", "DC-SVM", "DC-ODM", "SSVM", "SODM",
+    ];
+    let mut results: Vec<MethodResult> = Vec::new();
+    for name in &cfg.datasets {
+        let (train, test) = prepare_dataset(name, cfg);
+        let kernel = rbf_for(&train);
+        for m in METHODS {
+            eprintln!("[table4] {name} / {m} ({} rows)", train.rows);
+            results.push(run_qp_method(m, &train, &test, &kernel, cfg));
+        }
+    }
+    write_results(&cfg.out_dir, "table4_svm", &results)?;
+    Ok(render_table(
+        "Table 4: SVM vs ODM meta-solvers, RBF kernel (accuracy / seconds)",
+        &METHODS,
+        &results,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            scale: 0.01,
+            workers: 2,
+            datasets: vec!["svmguide1".into()],
+            out_dir: crate::util::temp_dir("tables"),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table1_lists_all_paper_datasets() {
+        let t = table1(&ExpConfig::default());
+        for (name, _, _) in PAPER_DATASETS {
+            assert!(t.contains(name), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn table2_smoke() {
+        let cfg = tiny_cfg();
+        let t = table2(&cfg).unwrap();
+        assert!(t.contains("svmguide1"));
+        assert!(t.contains("SODM"));
+        assert!(cfg.out_dir.join("table2_rbf.json").exists());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn table3_smoke() {
+        let cfg = tiny_cfg();
+        let t = table3(&cfg).unwrap();
+        assert!(t.contains("svmguide1"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

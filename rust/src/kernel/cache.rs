@@ -1,0 +1,180 @@
+//! LRU cache of signed Gram rows — the classic kernel-solver cache
+//! (LIBSVM's `Cache`): DCD revisits the same coordinates across sweeps, so
+//! row reuse is what makes kernel DCD tractable.
+
+use std::collections::HashMap;
+
+use crate::data::DataView;
+use crate::kernel::{dot, signed_row, KernelKind};
+
+/// Fixed-budget LRU row cache. Keys are *view-local* row indices; the cache
+/// must be rebuilt (or [`RowCache::clear`]-ed) whenever the view changes
+/// (e.g. after a partition merge).
+pub struct RowCache {
+    rows: HashMap<usize, Entry>,
+    stamp: u64,
+    row_len: usize,
+    capacity_rows: usize,
+    hits: u64,
+    misses: u64,
+    /// Lazily-computed ‖x_j‖² per view row (RBF fast path: the distance
+    /// becomes nᵢ + nⱼ − 2·dot, one fewer pass-wide op than sq_dist).
+    sq_norms: Vec<f32>,
+}
+
+struct Entry {
+    last_used: u64,
+    data: Box<[f32]>,
+}
+
+impl RowCache {
+    /// `budget_bytes` of f32 rows of length `row_len` (min 2 rows).
+    pub fn new(budget_bytes: usize, row_len: usize) -> Self {
+        let capacity_rows = (budget_bytes / (row_len.max(1) * 4)).max(2);
+        Self {
+            rows: HashMap::new(),
+            stamp: 0,
+            row_len,
+            capacity_rows,
+            hits: 0,
+            misses: 0,
+            sq_norms: Vec::new(),
+        }
+    }
+
+    /// Get row `i`, computing it through `view`/`kernel` on a miss.
+    pub fn get(&mut self, view: &DataView, kernel: &KernelKind, i: usize) -> &[f32] {
+        debug_assert_eq!(view.len(), self.row_len);
+        self.stamp += 1;
+        let stamp = self.stamp;
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            let e = self.rows.get_mut(&i).unwrap();
+            e.last_used = stamp;
+            return &e.data;
+        }
+        self.misses += 1;
+        if self.rows.len() >= self.capacity_rows {
+            // Evict the least-recently-used row.
+            if let Some((&victim, _)) = self.rows.iter().min_by_key(|(_, e)| e.last_used) {
+                self.rows.remove(&victim);
+            }
+        }
+        let mut data = vec![0.0f32; self.row_len].into_boxed_slice();
+        self.compute_row(view, kernel, i, &mut data);
+        self.rows.insert(i, Entry { last_used: stamp, data });
+        &self.rows[&i].data
+    }
+
+    /// Row computation with the norms fast path for RBF (§Perf: ~15% fewer
+    /// FLOPs per entry than the naive sq_dist form).
+    fn compute_row(&mut self, view: &DataView, kernel: &KernelKind, i: usize, out: &mut [f32]) {
+        match kernel {
+            KernelKind::Rbf { gamma } => {
+                if self.sq_norms.is_empty() {
+                    self.sq_norms =
+                        (0..view.len()).map(|j| dot(view.row(j), view.row(j))).collect();
+                }
+                let xi = view.row(i);
+                let yi = view.label(i);
+                let ni = self.sq_norms[i];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let d = (ni + self.sq_norms[j] - 2.0 * dot(xi, view.row(j))).max(0.0);
+                    *o = yi * view.label(j) * (-gamma * d).exp();
+                }
+            }
+            _ => signed_row(view, kernel, i, out),
+        }
+    }
+
+    /// Drop all rows (view changed).
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.sq_norms.clear();
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Cache hit rate in [0,1]; 0 when unused.
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 { 0.0 } else { self.hits as f64 / t as f64 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn fixture() -> (Dataset, Vec<usize>) {
+        let n = 8;
+        let x: Vec<f32> = (0..n * 2).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        (Dataset::new("c", x, y, 2), (0..n).collect())
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let mut c = RowCache::new(1 << 20, v.len());
+        let r0 = c.get(&v, &k, 0).to_vec();
+        let r0b = c.get(&v, &k, 0).to_vec();
+        assert_eq!(r0, r0b);
+        assert_eq!(c.stats(), (1, 1));
+        assert!(c.hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn eviction_under_budget() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Linear;
+        // room for exactly 2 rows
+        let mut c = RowCache::new(2 * v.len() * 4, v.len());
+        c.get(&v, &k, 0);
+        c.get(&v, &k, 1);
+        c.get(&v, &k, 2); // evicts 0
+        assert_eq!(c.len(), 2);
+        c.get(&v, &k, 1); // still cached
+        assert_eq!(c.stats().0, 1);
+    }
+
+    #[test]
+    fn cached_row_matches_direct() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 0.4 };
+        let mut c = RowCache::new(1 << 20, v.len());
+        let got = c.get(&v, &k, 3).to_vec();
+        let mut want = vec![0.0; v.len()];
+        signed_row(&v, &k, 3, &mut want);
+        // norms fast path reorders FLOPs: equal to f32 roundoff
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clear_resets_rows() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let mut c = RowCache::new(1 << 20, v.len());
+        c.get(&v, &KernelKind::Linear, 0);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,204 @@
+//! Kernels: linear and RBF (shift-invariant), row/block evaluation, and the
+//! LIBSVM-style LRU row cache that dominates kernel-DCD performance.
+//!
+//! The rust-native evaluation here mirrors the Pallas kernels byte-for-byte
+//! semantically (`python/compile/kernels/ref.py` is the shared spec);
+//! integration tests cross-check the two through the PJRT runtime.
+
+pub mod cache;
+
+use crate::data::DataView;
+
+/// Positive-definite kernel choices used in the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelKind {
+    /// k(x,z) = <x,z>
+    Linear,
+    /// k(x,z) = exp(-gamma ||x - z||^2) — shift-invariant, k(x,x) = 1 (r = 1).
+    Rbf { gamma: f32 },
+}
+
+impl KernelKind {
+    /// Evaluate k(a, b).
+    #[inline]
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            KernelKind::Linear => dot(a, b),
+            KernelKind::Rbf { gamma } => {
+                let d = sq_dist(a, b);
+                (-gamma * d).exp()
+            }
+        }
+    }
+
+    /// k(x, x) for this kernel: `Some(r^2)` if constant (shift-invariant),
+    /// else `None` (linear). Theorem 2's `r` comes from here.
+    #[inline]
+    pub fn self_similarity(&self) -> Option<f32> {
+        match self {
+            KernelKind::Linear => None,
+            KernelKind::Rbf { .. } => Some(1.0),
+        }
+    }
+
+    /// Whether the kernel is shift-invariant (Theorem 2's assumption).
+    pub fn is_shift_invariant(&self) -> bool {
+        matches!(self, KernelKind::Rbf { .. })
+    }
+
+    /// A reasonable default RBF bandwidth: gamma = 1 / num_features
+    /// (the LIBSVM default), on [0,1]-normalized data.
+    pub fn default_rbf(cols: usize) -> KernelKind {
+        KernelKind::Rbf { gamma: 1.0 / cols.max(1) as f32 }
+    }
+}
+
+/// Dense dot product; f32 accumulation in 4 lanes helps the autovectorizer.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Squared euclidean distance with the same lane structure as [`dot`].
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s.max(0.0)
+}
+
+/// Fill `out[j] = y_i y_j k(x_i, x_j)` for all `j` in the view — one signed
+/// Gram row, the unit of work the DCD cache stores.
+pub fn signed_row(view: &DataView, kernel: &KernelKind, i: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), view.len());
+    let xi = view.row(i);
+    let yi = view.label(i);
+    match kernel {
+        KernelKind::Linear => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = yi * view.label(j) * dot(xi, view.row(j));
+            }
+        }
+        KernelKind::Rbf { gamma } => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = yi * view.label(j) * (-gamma * sq_dist(xi, view.row(j))).exp();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn ds() -> Dataset {
+        Dataset::new(
+            "k",
+            vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.5, 0.5],
+            vec![1.0, -1.0, 1.0, -1.0],
+            2,
+        )
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.3).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32 * 0.1).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sq_dist_matches_naive() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [0.0f32, 1.0, 1.0, 1.0, 1.0];
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((sq_dist(&a, &b) - naive).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rbf_properties() {
+        let k = KernelKind::Rbf { gamma: 0.7 };
+        let a = [0.2f32, 0.4];
+        let b = [0.9f32, 0.1];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-6);
+        assert!((k.eval(&a, &b) - k.eval(&b, &a)).abs() < 1e-7);
+        assert!(k.eval(&a, &b) > 0.0 && k.eval(&a, &b) < 1.0);
+        assert_eq!(k.self_similarity(), Some(1.0));
+        assert!(k.is_shift_invariant());
+    }
+
+    #[test]
+    fn linear_kernel_is_dot() {
+        let k = KernelKind::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(k.self_similarity(), None);
+    }
+
+    #[test]
+    fn signed_row_signs() {
+        let d = ds();
+        let idx: Vec<usize> = (0..4).collect();
+        let v = DataView::new(&d, &idx);
+        let mut row = vec![0.0; 4];
+        signed_row(&v, &KernelKind::Rbf { gamma: 1.0 }, 0, &mut row);
+        assert!(row[0] > 0.0); // y0*y0 = +1
+        assert!(row[1] < 0.0); // y0*y1 = -1
+        assert!((row[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn signed_row_symmetry() {
+        let d = ds();
+        let idx: Vec<usize> = (0..4).collect();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 0.5 };
+        let mut r0 = vec![0.0; 4];
+        let mut r2 = vec![0.0; 4];
+        signed_row(&v, &k, 0, &mut r0);
+        signed_row(&v, &k, 2, &mut r2);
+        assert!((r0[2] - r2[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn default_rbf_gamma() {
+        match KernelKind::default_rbf(20) {
+            KernelKind::Rbf { gamma } => assert!((gamma - 0.05).abs() < 1e-7),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! # SODM — Scalable Optimal margin Distribution Machine
+//!
+//! Production-oriented reproduction of *"Scalable Optimal Margin Distribution
+//! Machine"* (Wang, Cao, Zhang, Shi, Jin — IJCAI 2023) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the
+//!   distribution-aware [`partition`] strategy (§3.2), the hierarchical
+//!   merge trainer of Algorithm 1 ([`sodm`]), the DSVRG linear-kernel
+//!   accelerator of Algorithm 2 ([`svrg`]), the baseline scalable QP
+//!   meta-solvers ([`baselines`]), and a simulated distributed substrate
+//!   ([`cluster`]) standing in for the paper's Spark cluster.
+//! * **L2/L1 (python/, build-time only)** — JAX compute graphs + Pallas
+//!   kernels for the dense hot-spots (signed Gram blocks, fused primal ODM
+//!   gradients, kernel-expansion decisions), AOT-lowered to HLO text and
+//!   executed from rust through the PJRT CPU client ([`runtime`]).
+//!
+//! The crate is self-contained after `make artifacts`: python never runs on
+//! the training or serving path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sodm::data::synth::SynthSpec;
+//! use sodm::kernel::KernelKind;
+//! use sodm::odm::OdmParams;
+//! use sodm::sodm::{SodmConfig, train_sodm};
+//!
+//! let ds = SynthSpec::named("svmguide1", 0.2, 7).generate();
+//! let (train, test) = ds.split(0.8, 42);
+//! let model = train_sodm(
+//!     &train,
+//!     &KernelKind::Rbf { gamma: 0.5 },
+//!     &OdmParams::default(),
+//!     &SodmConfig::default(),
+//!     None,
+//! );
+//! let acc = model.accuracy(&test);
+//! println!("test accuracy {acc:.3}");
+//! ```
+
+pub mod baselines;
+pub mod cluster;
+pub mod data;
+pub mod exp;
+pub mod kernel;
+pub mod odm;
+pub mod partition;
+pub mod qp;
+pub mod runtime;
+pub mod serve;
+pub mod sodm;
+pub mod svrg;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

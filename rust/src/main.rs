@@ -1,0 +1,472 @@
+//! `sodm` — CLI for the Scalable Optimal margin Distribution Machine.
+//!
+//! Subcommands:
+//! * `gen-data`   — materialize an emulated dataset in LIBSVM format
+//! * `train`      — train a model (exact ODM / SODM / baselines) on a dataset
+//! * `predict`    — score a saved model on a dataset (native or `--backend xla`)
+//! * `experiment` — regenerate a paper table (`--table 1..4`) or figure
+//!                  (`--figure 1..4`)
+//! * `info`       — toolchain, artifact, and cluster info
+//!
+//! Argument parsing is in-crate (offline build; no clap): `--key value`
+//! flags after the subcommand.
+
+use std::collections::HashMap;
+
+use sodm::baselines::cascade::{train_cascade, CascadeConfig};
+use sodm::baselines::dip::{train_dip, DipConfig};
+use sodm::baselines::hierarchical::{train_hierarchical, HierConfig};
+use sodm::baselines::LocalSolverKind;
+use sodm::data::synth::SynthSpec;
+use sodm::data::{libsvm, Dataset};
+use sodm::exp::figures::{figure1, figure2, figure3, figure4};
+use sodm::exp::tables::{table1, table2, table3, table4};
+use sodm::exp::ExpConfig;
+use sodm::kernel::KernelKind;
+use sodm::odm::{train_exact_odm, OdmModel, OdmParams};
+use sodm::partition::PartitionStrategy;
+use sodm::qp::SolveBudget;
+use sodm::runtime::XlaEngine;
+use sodm::sodm::{train_sodm, SodmConfig};
+use sodm::svrg::{train_dsvrg, NativeGrad, SvrgConfig};
+use sodm::util::pool::num_cpus;
+use sodm::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&flags),
+        "train" => cmd_train(&flags),
+        "predict" => cmd_predict(&flags),
+        "experiment" => cmd_experiment(&flags),
+        "serve-bench" => cmd_serve_bench(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "sodm — Scalable Optimal margin Distribution Machine (IJCAI 2023 reproduction)
+
+USAGE: sodm <command> [--flag value]...
+
+  gen-data   --name <dataset> [--scale 0.05] [--seed 7] --out <file.libsvm>
+  train      --data <file.libsvm | synth:name[:scale]> [--method sodm|odm|cascade|dip|dc|ssvm|dsvrg]
+             [--kernel rbf|linear] [--gamma g] [--lambda l] [--theta t] [--upsilon u]
+             [--p 4] [--levels 2] [--stratums 16] [--workers N] [--model-out m.json]
+  predict    --model m.json --data <...> [--backend native|xla]
+  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation) [--scale 0.05]
+             [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
+  serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
+  info
+"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            eprintln!("ignoring stray argument {a:?}");
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str) -> Option<&'a str> {
+    flags.get(key).map(|s| s.as_str())
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        Some(v) => Ok(v.parse()?),
+        None => Ok(default),
+    }
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        Some(v) => Ok(v.parse()?),
+        None => Ok(default),
+    }
+}
+
+/// `--data` accepts a LIBSVM path or `synth:<name>[:<scale>]`.
+fn load_data(spec: &str, seed: u64) -> Result<Dataset> {
+    if let Some(rest) = spec.strip_prefix("synth:") {
+        let mut parts = rest.split(':');
+        let name = parts.next().unwrap_or("svmguide1");
+        let scale: f64 = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(0.05);
+        let mut ds = SynthSpec::named(name, scale, seed).generate();
+        ds.name = name.to_string();
+        Ok(ds)
+    } else {
+        let mut ds = libsvm::read_libsvm(spec, 0)?;
+        ds.normalize_min_max();
+        ds.push_bias_column();
+        Ok(ds)
+    }
+}
+
+fn cmd_gen_data(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flag(flags, "name").unwrap_or("svmguide1");
+    let scale = flag_f64(flags, "scale", 0.05)?;
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let out = flag(flags, "out").unwrap_or("dataset.libsvm");
+    let ds = SynthSpec::named(name, scale, seed).generate();
+    libsvm::write_libsvm(&ds, out)?;
+    println!("wrote {} rows x {} features to {out}", ds.rows, ds.cols);
+    Ok(())
+}
+
+fn parse_kernel(flags: &HashMap<String, String>, cols: usize) -> Result<KernelKind> {
+    match flag(flags, "kernel").unwrap_or("rbf") {
+        "linear" => Ok(KernelKind::Linear),
+        "rbf" => {
+            let gamma = flag_f64(flags, "gamma", 1.0 / cols.max(1) as f64)? as f32;
+            Ok(KernelKind::Rbf { gamma })
+        }
+        other => anyhow::bail!("unknown kernel {other:?}"),
+    }
+}
+
+fn parse_params(flags: &HashMap<String, String>) -> Result<OdmParams> {
+    Ok(OdmParams {
+        lambda: flag_f64(flags, "lambda", 8.0)? as f32,
+        theta: flag_f64(flags, "theta", 0.2)? as f32,
+        upsilon: flag_f64(flags, "upsilon", 0.5)? as f32,
+    }
+    .validated())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let data_spec = flag(flags, "data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let ds = load_data(data_spec, seed)?;
+    let (train, test) = ds.split(0.8, seed);
+    let kernel = parse_kernel(flags, train.cols)?;
+    let params = parse_params(flags)?;
+    let workers = flag_usize(flags, "workers", num_cpus())?;
+    let p = flag_usize(flags, "p", 4)?;
+    let levels = flag_usize(flags, "levels", 2)?;
+    let stratums = flag_usize(flags, "stratums", 16)?;
+    let method = flag(flags, "method").unwrap_or("sodm");
+    let cluster = sodm::cluster::SimCluster::new(workers);
+    let budget = SolveBudget::default();
+
+    let t0 = std::time::Instant::now();
+    let model: OdmModel = match method {
+        "odm" => train_exact_odm(&train, &kernel, &params, &budget),
+        "sodm" => {
+            if matches!(kernel, KernelKind::Linear) {
+                // linear SODM = DSVRG accelerator (paper §3.3)
+                let run = train_dsvrg(
+                    &train,
+                    &params,
+                    &SvrgConfig {
+                        epochs: 6,
+                        partitions: workers.clamp(2, 16),
+                        stratums,
+                        seed,
+                        ..Default::default()
+                    },
+                    Some(&cluster),
+                    &NativeGrad { workers },
+                );
+                run.model
+            } else {
+                train_sodm(
+                    &train,
+                    &kernel,
+                    &params,
+                    &SodmConfig {
+                        p,
+                        levels,
+                        stratums,
+                        strategy: PartitionStrategy::StratifiedRkhs { stratums },
+                        budget,
+                        level_tol: 1e-3,
+                        final_exact: true,
+                        seed,
+                    },
+                    Some(&cluster),
+                )
+            }
+        }
+        "cascade" => {
+            train_cascade(
+                &train,
+                &kernel,
+                LocalSolverKind::Odm(params),
+                &CascadeConfig { leaves: p.pow(levels as u32), budget, seed },
+                Some(&cluster),
+            )
+            .model
+        }
+        "dip" => {
+            train_dip(
+                &train,
+                &kernel,
+                LocalSolverKind::Odm(params),
+                &DipConfig { partitions: p.pow(levels as u32), clusters: 8, budget, seed },
+                Some(&cluster),
+            )
+            .model
+        }
+        "dc" => {
+            train_hierarchical(
+                &train,
+                &kernel,
+                LocalSolverKind::Odm(params),
+                &HierConfig {
+                    p,
+                    levels,
+                    strategy: PartitionStrategy::KernelKmeansClusters { embed_dim: 16 },
+                    budget,
+                    level_tol: 1e-3,
+                    seed,
+                },
+                Some(&cluster),
+            )
+            .model
+        }
+        "ssvm" => {
+            train_hierarchical(
+                &train,
+                &kernel,
+                LocalSolverKind::Svm { c: 1.0 },
+                &HierConfig {
+                    p,
+                    levels,
+                    strategy: PartitionStrategy::StratifiedRkhs { stratums },
+                    budget,
+                    level_tol: 1e-3,
+                    seed,
+                },
+                Some(&cluster),
+            )
+            .model
+        }
+        "dsvrg" => {
+            train_dsvrg(
+                &train,
+                &params,
+                &SvrgConfig {
+                    epochs: 6,
+                    partitions: workers.clamp(2, 16),
+                    stratums,
+                    seed,
+                    ..Default::default()
+                },
+                Some(&cluster),
+                &NativeGrad { workers },
+            )
+            .model
+        }
+        other => anyhow::bail!("unknown method {other:?}"),
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let acc_train = model.accuracy(&train);
+    let acc_test = model.accuracy(&test);
+    let comm = cluster.comm();
+    println!(
+        "method={method} kernel={kernel:?} rows={} time={secs:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} comm_bytes={} comm_rounds={}",
+        train.rows,
+        model.support_size(),
+        comm.bytes,
+        comm.rounds
+    );
+    if let Some(out) = flag(flags, "model-out") {
+        model.save(out)?;
+        println!("model saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
+    let model_path =
+        flag(flags, "model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let data_spec = flag(flags, "data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let model = OdmModel::load(model_path)?;
+    let ds = load_data(data_spec, seed)?;
+    let backend = flag(flags, "backend").unwrap_or("native");
+    let t0 = std::time::Instant::now();
+    let (acc, used) = match backend {
+        "xla" => {
+            let engine = XlaEngine::load_default()
+                .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?;
+            let decisions: Vec<f64> = match &model {
+                OdmModel::Linear { w } => engine.linear_decisions(w, &ds.x, ds.cols)?,
+                OdmModel::Kernel { kernel, sv_x, coef, cols } => match kernel {
+                    KernelKind::Rbf { gamma } => {
+                        engine.rbf_decisions(sv_x, coef, &ds.x, *cols, *gamma)?
+                    }
+                    KernelKind::Linear => anyhow::bail!("linear kernel models use Linear repr"),
+                },
+            };
+            let correct = decisions
+                .iter()
+                .zip(&ds.y)
+                .filter(|(d, y)| (**d >= 0.0) == (**y > 0.0))
+                .count();
+            (correct as f64 / ds.rows as f64, "xla/pjrt")
+        }
+        _ => (model.accuracy(&ds), "native"),
+    };
+    println!(
+        "backend={used} rows={} accuracy={acc:.4} elapsed={:.3}s",
+        ds.rows,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = ExpConfig {
+        scale: flag_f64(flags, "scale", 0.05)?,
+        seed: flag_usize(flags, "seed", 7)? as u64,
+        workers: flag_usize(flags, "workers", num_cpus())?,
+        out_dir: flag(flags, "out-dir").unwrap_or("results").into(),
+        ..Default::default()
+    };
+    if let Some(ds) = flag(flags, "datasets") {
+        cfg.datasets = ds.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(cap) = flags.get("odm-cap") {
+        cfg.odm_cap = cap.parse()?;
+    }
+    if let Some(t) = flag(flags, "table") {
+        let out = match t {
+            "1" => table1(&cfg),
+            "2" => table2(&cfg)?,
+            "3" => table3(&cfg)?,
+            "4" => table4(&cfg)?,
+            other => anyhow::bail!("unknown table {other:?}"),
+        };
+        println!("{out}");
+        return Ok(());
+    }
+    if flags.contains_key("ablation") {
+        let out = sodm::exp::ablation::ablation(&cfg)?;
+        println!("{out}");
+        return Ok(());
+    }
+    if let Some(f) = flag(flags, "figure") {
+        let out = match f {
+            "1" => figure1(&cfg)?,
+            "2" => {
+                let cores: Vec<usize> = flag(flags, "cores")
+                    .unwrap_or("1,2,4,8,16,32")
+                    .split(',')
+                    .map(|s| s.trim().parse().unwrap_or(1))
+                    .collect();
+                let dataset = flag(flags, "dataset").unwrap_or("ijcnn1").to_string();
+                figure2(&cfg, &cores, &dataset)?.0
+            }
+            "3" => figure3(&cfg)?,
+            "4" => figure4(&cfg)?,
+            other => anyhow::bail!("unknown figure {other:?}"),
+        };
+        println!("{out}");
+        return Ok(());
+    }
+    anyhow::bail!("experiment needs --table N, --figure N, or --ablation")
+}
+
+/// Serve a saved model under synthetic concurrent load and report
+/// latency/throughput/batching metrics (the deployment story of the repo).
+fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::serve::{serve, Backend, ServeConfig};
+    let model_path =
+        flag(flags, "model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let data_spec = flag(flags, "data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let clients = flag_usize(flags, "clients", 8)?;
+    let per_client = flag_usize(flags, "requests", 200)?;
+    let model = OdmModel::load(model_path)?;
+    let ds = load_data(data_spec, seed)?;
+    let backend = match flag(flags, "backend").unwrap_or("native") {
+        "xla" => Backend::Xla(
+            XlaEngine::load_default()
+                .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?,
+        ),
+        _ => Backend::Native,
+    };
+    let handle = serve(model, backend, ServeConfig::default());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = handle.clone();
+            let ds = &ds;
+            s.spawn(move || {
+                for r in 0..per_client {
+                    let i = (c * per_client + r * 7919) % ds.rows;
+                    let _ = h.score(ds.row(i));
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let m = handle.metrics();
+    use std::sync::atomic::Ordering;
+    println!(
+        "served {} requests from {clients} clients in {secs:.2}s: {:.0} req/s, mean batch {:.1}, mean queue wait {:.2} ms, padded rows {}",
+        m.requests.load(Ordering::Relaxed),
+        (clients * per_client) as f64 / secs,
+        m.mean_batch_size(),
+        m.mean_queue_wait_ms(),
+        m.padded_rows.load(Ordering::Relaxed),
+    );
+    handle.stop();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("sodm {} — three-layer rust+JAX+Pallas SODM", env!("CARGO_PKG_VERSION"));
+    println!("cpus: {}", num_cpus());
+    match XlaEngine::load_default() {
+        Some(engine) => {
+            println!(
+                "artifacts: loaded (buckets {:?}, gram {}x{}, grad batch {}, dec support {})",
+                engine.geometry.feature_buckets,
+                engine.geometry.gram_m,
+                engine.geometry.gram_p,
+                engine.geometry.grad_b,
+                engine.geometry.dec_s,
+            );
+        }
+        None => println!("artifacts: not found (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,397 @@
+//! The ODM model: hyperparameters, trained-model representation (linear `w`
+//! or kernel expansion), prediction, and (de)serialization.
+
+use crate::data::{DataView, Dataset};
+use crate::kernel::{dot, KernelKind};
+use crate::util::json::{jarr_f64, jstr, Json};
+
+/// ODM hyperparameters (paper Eqn. 1): λ balances regularization vs loss,
+/// θ ∈ [0,1) is the tolerated margin-mean deviation, υ ∈ (0,1] trades off
+/// the two deviation directions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OdmParams {
+    pub lambda: f32,
+    pub theta: f32,
+    pub upsilon: f32,
+}
+
+impl Default for OdmParams {
+    fn default() -> Self {
+        Self { lambda: 512.0, theta: 0.3, upsilon: 0.5 }
+    }
+}
+
+impl OdmParams {
+    /// The dual constant c = (1-θ)² / (λυ) (paper Eqn. 1→2).
+    pub fn c(&self) -> f64 {
+        let t = 1.0 - self.theta as f64;
+        t * t / (self.lambda as f64 * self.upsilon as f64)
+    }
+
+    /// Validate ranges; panics on invalid settings (construction-time check).
+    pub fn validated(self) -> Self {
+        assert!(self.lambda > 0.0, "lambda must be positive");
+        assert!((0.0..1.0).contains(&self.theta), "theta must be in [0,1)");
+        assert!(self.upsilon > 0.0 && self.upsilon <= 1.0, "upsilon in (0,1]");
+        self
+    }
+}
+
+/// A trained ODM (or SVM — same representation) classifier.
+#[derive(Clone, Debug)]
+pub enum OdmModel {
+    /// Explicit primal weights (linear kernel).
+    Linear { w: Vec<f64> },
+    /// Kernel expansion f(x) = Σ coef_s k(x_s, x); `coef = γ_s y_s`.
+    Kernel {
+        kernel: KernelKind,
+        /// Support vectors, row-major `sv_rows x cols`.
+        sv_x: Vec<f32>,
+        /// Expansion coefficients γ_s y_s.
+        coef: Vec<f64>,
+        cols: usize,
+    },
+}
+
+impl OdmModel {
+    /// Build from a dual solution γ over `view` (drops zero coefficients).
+    pub fn from_dual(view: &DataView, kernel: &KernelKind, gamma: &[f64]) -> Self {
+        assert_eq!(gamma.len(), view.len());
+        match kernel {
+            KernelKind::Linear => {
+                let n = view.data.cols;
+                let mut w = vec![0.0f64; n];
+                for i in 0..view.len() {
+                    if gamma[i] != 0.0 {
+                        let g = gamma[i] * view.label(i) as f64;
+                        for (wj, xj) in w.iter_mut().zip(view.row(i)) {
+                            *wj += g * *xj as f64;
+                        }
+                    }
+                }
+                OdmModel::Linear { w }
+            }
+            _ => {
+                let cols = view.data.cols;
+                let mut sv_x = Vec::new();
+                let mut coef = Vec::new();
+                for i in 0..view.len() {
+                    if gamma[i] != 0.0 {
+                        sv_x.extend_from_slice(view.row(i));
+                        coef.push(gamma[i] * view.label(i) as f64);
+                    }
+                }
+                OdmModel::Kernel { kernel: *kernel, sv_x, coef, cols }
+            }
+        }
+    }
+
+    /// Number of support vectors (linear: feature dim).
+    pub fn support_size(&self) -> usize {
+        match self {
+            OdmModel::Linear { w } => w.len(),
+            OdmModel::Kernel { coef, .. } => coef.len(),
+        }
+    }
+
+    /// Decision value f(x).
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        match self {
+            OdmModel::Linear { w } => w.iter().zip(x).map(|(a, b)| a * *b as f64).sum(),
+            OdmModel::Kernel { kernel, sv_x, coef, cols } => {
+                let mut s = 0.0;
+                for (si, c) in coef.iter().enumerate() {
+                    let sv = &sv_x[si * cols..(si + 1) * cols];
+                    s += c * kernel.eval(sv, x) as f64;
+                }
+                s
+            }
+        }
+    }
+
+    /// Predicted label in {-1, +1} (ties to +1).
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        if self.decision(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Test accuracy on a dataset (parallel over rows).
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        if data.rows == 0 {
+            return 0.0;
+        }
+        let workers = crate::util::pool::num_cpus();
+        let correct = crate::util::pool::parallel_sum_f64(data.rows, workers, |i| {
+            if self.predict(data.row(i)) == data.y[i] { 1.0 } else { 0.0 }
+        });
+        correct / data.rows as f64
+    }
+
+    /// Decision values for every row (parallel).
+    pub fn decisions(&self, data: &Dataset) -> Vec<f64> {
+        let workers = crate::util::pool::num_cpus();
+        crate::util::pool::parallel_map(data.rows, workers, |i| self.decision(data.row(i)))
+    }
+
+    /// Serialize to JSON (in-crate writer; see util::json).
+    pub fn to_json(&self) -> Json {
+        match self {
+            OdmModel::Linear { w } => Json::obj(vec![
+                ("kind", jstr("linear")),
+                ("w", jarr_f64(w)),
+            ]),
+            OdmModel::Kernel { kernel, sv_x, coef, cols } => {
+                let (kname, gamma) = match kernel {
+                    KernelKind::Linear => ("linear", 0.0),
+                    KernelKind::Rbf { gamma } => ("rbf", *gamma as f64),
+                };
+                Json::obj(vec![
+                    ("kind", jstr("kernel")),
+                    ("kernel", jstr(kname)),
+                    ("gamma", Json::Num(gamma)),
+                    ("cols", Json::Num(*cols as f64)),
+                    ("sv_x", Json::Arr(sv_x.iter().map(|v| Json::Num(*v as f64)).collect())),
+                    ("coef", jarr_f64(coef)),
+                ])
+            }
+        }
+    }
+
+    /// Parse from the JSON produced by [`OdmModel::to_json`].
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        match j.req("kind")?.as_str()? {
+            "linear" => Ok(OdmModel::Linear { w: j.req("w")?.as_f64_vec()? }),
+            "kernel" => {
+                let kernel = match j.req("kernel")?.as_str()? {
+                    "linear" => KernelKind::Linear,
+                    "rbf" => KernelKind::Rbf { gamma: j.req("gamma")?.as_f64()? as f32 },
+                    other => anyhow::bail!("unknown kernel {other:?}"),
+                };
+                let sv_x: Vec<f32> = j
+                    .req("sv_x")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<crate::Result<_>>()?;
+                Ok(OdmModel::Kernel {
+                    kernel,
+                    sv_x,
+                    coef: j.req("coef")?.as_f64_vec()?,
+                    cols: j.req("cols")?.as_usize()?,
+                })
+            }
+            other => anyhow::bail!("unknown model kind {other:?}"),
+        }
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Margin statistics of a model on a dataset: (mean, variance) of
+/// y_i f(x_i) — what ODM optimizes; used by tests and the examples to show
+/// the margin-distribution story.
+pub fn margin_stats(model: &OdmModel, data: &Dataset) -> (f64, f64) {
+    if data.rows == 0 {
+        return (0.0, 0.0);
+    }
+    let margins: Vec<f64> = (0..data.rows)
+        .map(|i| data.y[i] as f64 * model.decision(data.row(i)))
+        .collect();
+    let mean = margins.iter().sum::<f64>() / margins.len() as f64;
+    let var = margins.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>()
+        / margins.len() as f64;
+    (mean, var)
+}
+
+/// Primal ODM objective for a linear model (paper Eqn. 1 with mapped slacks).
+pub fn primal_objective_linear(w: &[f64], data: &Dataset, params: &OdmParams) -> f64 {
+    let s = params.lambda as f64 / ((1.0 - params.theta as f64).powi(2));
+    let mut loss = 0.0;
+    for i in 0..data.rows {
+        let wf32: f64 = w.iter().zip(data.row(i)).map(|(a, b)| a * *b as f64).sum();
+        let m = data.y[i] as f64 * wf32;
+        let xi = (1.0 - params.theta as f64 - m).max(0.0);
+        let eps = (m - 1.0 - params.theta as f64).max(0.0);
+        loss += xi * xi + params.upsilon as f64 * eps * eps;
+    }
+    0.5 * dot_ff(w, w) + 0.5 * s * loss / data.rows as f64
+}
+
+fn dot_ff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Convenience: fit a single-machine exact ODM by DCD (the paper's "ODM"
+/// reference column) and return the model.
+pub fn train_exact_odm(
+    train: &Dataset,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    budget: &crate::qp::SolveBudget,
+) -> OdmModel {
+    let idx = crate::data::all_indices(train);
+    let view = DataView::new(train, &idx);
+    let sol = crate::qp::solve_odm_dual(&view, kernel, params, None, budget);
+    OdmModel::from_dual(&view, kernel, &sol.gamma())
+}
+
+/// Compute the decision values of a linear weight vector on a view (helper
+/// shared by SVRG and tests).
+pub fn linear_decisions(w: &[f64], view: &DataView) -> Vec<f64> {
+    (0..view.len())
+        .map(|i| {
+            let x = view.row(i);
+            w.iter().zip(x).map(|(a, b)| a * *b as f64).sum()
+        })
+        .collect()
+}
+
+/// f32 helper exposed for benches: decision of a raw f32 weight vector.
+pub fn decision_f32(w: &[f32], x: &[f32]) -> f32 {
+    dot(w, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{all_indices, synth::SynthSpec};
+    use crate::qp::SolveBudget;
+
+    #[test]
+    fn params_c_formula() {
+        let p = OdmParams { lambda: 2.0, theta: 0.5, upsilon: 0.25 };
+        // (1-0.5)^2 / (2*0.25) = 0.25/0.5 = 0.5
+        assert!((p.c() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn params_validation_rejects_bad_theta() {
+        OdmParams { lambda: 1.0, theta: 1.0, upsilon: 0.5 }.validated();
+    }
+
+    #[test]
+    fn exact_odm_learns_separable_data() {
+        let mut spec = SynthSpec::named("svmguide1", 0.02, 3);
+        spec.rows = 200;
+        let ds = spec.generate();
+        let (train, test) = ds.split(0.8, 7);
+        let model = train_exact_odm(
+            &train,
+            &KernelKind::Rbf { gamma: 2.0 },
+            &OdmParams::default(),
+            &SolveBudget::default(),
+        );
+        let acc = model.accuracy(&test);
+        assert!(acc > 0.85, "accuracy {acc}");
+    }
+
+    #[test]
+    fn linear_model_from_dual_matches_manual_w() {
+        let spec = SynthSpec { rows: 50, ..SynthSpec::named("svmguide1", 0.01, 5) };
+        let ds = spec.generate();
+        let idx = all_indices(&ds);
+        let v = DataView::new(&ds, &idx);
+        let sol = crate::qp::solve_odm_dual(
+            &v,
+            &KernelKind::Linear,
+            &OdmParams::default(),
+            None,
+            &SolveBudget::default(),
+        );
+        let gamma = sol.gamma();
+        let model = OdmModel::from_dual(&v, &KernelKind::Linear, &gamma);
+        if let OdmModel::Linear { w } = &model {
+            let mut want = vec![0.0f64; ds.cols];
+            for i in 0..v.len() {
+                for (j, xj) in v.row(i).iter().enumerate() {
+                    want[j] += gamma[i] * v.label(i) as f64 * *xj as f64;
+                }
+            }
+            for (a, b) in w.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        } else {
+            panic!("expected linear model");
+        }
+    }
+
+    #[test]
+    fn kernel_model_drops_zero_coefficients() {
+        let spec = SynthSpec { rows: 60, ..SynthSpec::named("svmguide1", 0.01, 5) };
+        let ds = spec.generate();
+        let idx = all_indices(&ds);
+        let v = DataView::new(&ds, &idx);
+        let mut gamma = vec![0.0f64; 60];
+        gamma[3] = 1.5;
+        gamma[40] = -0.5;
+        let model = OdmModel::from_dual(&v, &KernelKind::Rbf { gamma: 1.0 }, &gamma);
+        assert_eq!(model.support_size(), 2);
+    }
+
+    #[test]
+    fn save_load_round_trip_linear() {
+        let dir = crate::util::temp_dir("odm");
+        let p = dir.join("m.json");
+        let m = OdmModel::Linear { w: vec![1.0, -2.0, 0.5] };
+        m.save(&p).unwrap();
+        let m2 = OdmModel::load(&p).unwrap();
+        assert_eq!(m.decision(&[1.0, 1.0, 1.0]), m2.decision(&[1.0, 1.0, 1.0]));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_load_round_trip_kernel() {
+        let dir = crate::util::temp_dir("odm2");
+        let p = dir.join("k.json");
+        let m = OdmModel::Kernel {
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            sv_x: vec![0.1, 0.2, 0.3, 0.4],
+            coef: vec![1.5, -0.7],
+            cols: 2,
+        };
+        m.save(&p).unwrap();
+        let m2 = OdmModel::load(&p).unwrap();
+        let x = [0.25f32, 0.3];
+        assert!((m.decision(&x) - m2.decision(&x)).abs() < 1e-9);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn margin_stats_mean_near_one_for_trained_model() {
+        let mut spec = SynthSpec::named("svmguide1", 0.02, 9);
+        spec.rows = 150;
+        let ds = spec.generate();
+        let model = train_exact_odm(
+            &ds,
+            &KernelKind::Rbf { gamma: 2.0 },
+            &OdmParams::default(),
+            &SolveBudget::default(),
+        );
+        let (mean, var) = margin_stats(&model, &ds);
+        // ODM pins the margin mean near 1 with small variance
+        assert!(mean > 0.4 && mean < 2.0, "mean {mean}");
+        assert!(var < 1.0, "var {var}");
+    }
+
+    #[test]
+    fn predict_sign_convention() {
+        let m = OdmModel::Linear { w: vec![1.0] };
+        assert_eq!(m.predict(&[2.0]), 1.0);
+        assert_eq!(m.predict(&[-2.0]), -1.0);
+        assert_eq!(m.predict(&[0.0]), 1.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Lloyd k-means with k-means++ seeding — in input space (DiP baseline) or
+//! on Nyström embeddings (kernel k-means for the DC baseline, Hsieh et al.
+//! 2014).
+
+use crate::data::DataView;
+use crate::kernel::KernelKind;
+use crate::partition::landmarks::Nystrom;
+use crate::util::pool;
+use crate::util::rng::Pcg32;
+
+/// K-means result: cluster id per view-local row.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub assignment: Vec<usize>,
+    pub k: usize,
+    pub iterations: usize,
+    pub inertia: f64,
+}
+
+fn sqd(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Lloyd iterations over arbitrary f64 point rows.
+pub fn kmeans_points(
+    points: &[Vec<f64>],
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+    workers: usize,
+) -> KmeansResult {
+    let n = points.len();
+    assert!(n > 0, "kmeans on empty input");
+    let k = k.clamp(1, n);
+    let dim = points[0].len();
+    let mut rng = Pcg32::seeded(seed ^ 0x6B6D);
+
+    // k-means++ seeding
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(points[rng.gen_range(n)].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| sqd(p, &centers[0])).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.gen_range(n)
+        } else {
+            let mut t = rng.next_f64() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centers.push(points[pick].clone());
+        let c = centers.last().unwrap();
+        for (i, p) in points.iter().enumerate() {
+            let d = sqd(p, c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+    let mut inertia = f64::INFINITY;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assign (parallel)
+        let new_assign: Vec<(usize, f64)> = pool::parallel_map(n, workers, |i| {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, center) in centers.iter().enumerate() {
+                let d = sqd(&points[i], center);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            (best, best_d)
+        });
+        let mut changed = false;
+        let mut new_inertia = 0.0;
+        for (i, (a, d)) in new_assign.iter().enumerate() {
+            if assignment[i] != *a {
+                changed = true;
+                assignment[i] = *a;
+            }
+            new_inertia += d;
+        }
+        inertia = new_inertia;
+        if !changed && it > 0 {
+            break;
+        }
+        // update
+        let mut counts = vec![0usize; k];
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        for (i, &a) in assignment.iter().enumerate() {
+            counts[a] += 1;
+            for (s, p) in sums[a].iter_mut().zip(&points[i]) {
+                *s += p;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f64;
+                }
+                centers[c] = sums[c].clone();
+            } else {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sqd(&points[a], &centers[assignment[a]])
+                            .partial_cmp(&sqd(&points[b], &centers[assignment[b]]))
+                            .unwrap()
+                    })
+                    .unwrap_or(0);
+                centers[c] = points[far].clone();
+            }
+        }
+    }
+    KmeansResult { assignment, k, iterations, inertia }
+}
+
+/// Input-space k-means over a data view (DiP partitioning).
+pub fn kmeans_features(
+    view: &DataView,
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+    workers: usize,
+) -> KmeansResult {
+    let points: Vec<Vec<f64>> =
+        (0..view.len()).map(|i| view.row(i).iter().map(|v| *v as f64).collect()).collect();
+    kmeans_points(&points, k, max_iters, seed, workers)
+}
+
+/// Kernel k-means via Nyström embedding (DC-ODM / DC-SVM partitioning):
+/// embed every point with the landmark Cholesky factor, then Lloyd in R^S.
+pub fn kernel_kmeans(
+    view: &DataView,
+    kernel: &KernelKind,
+    k: usize,
+    embed_dim: usize,
+    max_iters: usize,
+    seed: u64,
+    workers: usize,
+) -> KmeansResult {
+    let ny = Nystrom::select(view, kernel, embed_dim, 2048, seed);
+    let points: Vec<Vec<f64>> =
+        pool::parallel_map(view.len(), workers, |i| ny.embed(view.row(i)));
+    kmeans_points(&points, k, max_iters, seed, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{all_indices, Dataset};
+
+    fn two_blobs(n_per: usize) -> Dataset {
+        let mut rng = Pcg32::seeded(77);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..2 * n_per {
+            let cx = if i < n_per { 0.0 } else { 10.0 };
+            x.push(cx + rng.standard_normal() * 0.3);
+            x.push(cx + rng.standard_normal() * 0.3);
+            y.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        Dataset::new("blobs", x, y, 2)
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let d = two_blobs(50);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let r = kmeans_features(&v, 2, 50, 1, 4);
+        // All members of blob 0 share a cluster, likewise blob 1, clusters differ.
+        let c0 = r.assignment[0];
+        assert!((0..50).all(|i| r.assignment[i] == c0));
+        let c1 = r.assignment[50];
+        assert!((50..100).all(|i| r.assignment[i] == c1));
+        assert_ne!(c0, c1);
+    }
+
+    #[test]
+    fn inertia_low_for_tight_blobs() {
+        let d = two_blobs(30);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let r = kmeans_features(&v, 2, 50, 3, 2);
+        assert!(r.inertia / 60.0 < 1.0, "avg inertia {}", r.inertia / 60.0);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let d = two_blobs(2);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let r = kmeans_features(&v, 10, 10, 5, 1);
+        assert!(r.k <= 4);
+        assert_eq!(r.assignment.len(), 4);
+    }
+
+    #[test]
+    fn kernel_kmeans_runs_and_covers_clusters() {
+        let d = two_blobs(40);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let r = kernel_kmeans(&v, &KernelKind::Rbf { gamma: 0.5 }, 2, 8, 30, 7, 2);
+        assert_eq!(r.assignment.len(), 80);
+        let mut seen = vec![false; r.k];
+        for &a in &r.assignment {
+            seen[a] = true;
+        }
+        assert!(seen.iter().filter(|s| **s).count() >= 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = two_blobs(25);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let a = kmeans_features(&v, 3, 20, 9, 2);
+        let b = kmeans_features(&v, 3, 20, 9, 2);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

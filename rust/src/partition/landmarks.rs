@@ -1,0 +1,302 @@
+//! Landmark selection in the RKHS by greedy Gram-determinant maximization
+//! (paper Eqn. 8) — implemented as greedy pivoted Cholesky, which is exactly
+//! equivalent: the residual diagonal `d_i = k(x_i,x_i) − k_iᵀ K_ss⁻¹ k_i`
+//! is the Schur complement the paper maximizes, and the running Cholesky
+//! factors double as a Nyström embedding used for kernel k-means (DC
+//! baseline) and stratum diagnostics.
+
+use crate::data::DataView;
+use crate::kernel::KernelKind;
+use crate::util::rng::Pcg32;
+
+/// Selected landmarks + the pivoted-Cholesky factor restricted to them, which
+/// lets any point be embedded into R^S with `K ≈ E Eᵀ` (Nyström).
+#[derive(Clone, Debug)]
+pub struct Nystrom {
+    /// Feature rows of the selected landmarks (copied).
+    pub landmark_x: Vec<Vec<f32>>,
+    /// Global dataset indices of the landmarks.
+    pub landmark_idx: Vec<usize>,
+    /// Lower-triangular rows: `chol[s]` = embedding of landmark s (length s+1,
+    /// padded to S by zeros implicitly).
+    chol: Vec<Vec<f64>>,
+    kernel: KernelKind,
+}
+
+impl Nystrom {
+    /// Greedy det-max selection of `s_max` landmarks from a candidate pool.
+    ///
+    /// The first landmark is the first candidate (paper: "As for z_1, since
+    /// any choice makes no difference, we can directly set it as x_1");
+    /// subsequent landmarks maximize the residual diagonal (≡ minimize
+    /// Eqn. 8's Schur form). For |view| > `pool_cap`, a uniform random pool
+    /// keeps selection O(pool · S²).
+    pub fn select(
+        view: &DataView,
+        kernel: &KernelKind,
+        s_max: usize,
+        pool_cap: usize,
+        seed: u64,
+    ) -> Nystrom {
+        let m = view.len();
+        assert!(m > 0, "cannot select landmarks from empty view");
+        let s_max = s_max.clamp(1, m);
+        let mut rng = Pcg32::seeded(seed ^ 0x1A9D);
+        let pool: Vec<usize> = if m <= pool_cap {
+            (0..m).collect()
+        } else {
+            rng.sample_indices(m, pool_cap)
+        };
+        let p = pool.len();
+
+        // Residual diagonal and partial embeddings of every pool point.
+        let mut resid: Vec<f64> =
+            pool.iter().map(|&i| kernel.eval(view.row(i), view.row(i)) as f64).collect();
+        let mut emb: Vec<Vec<f64>> = vec![Vec::with_capacity(s_max); p];
+
+        let mut landmark_x = Vec::with_capacity(s_max);
+        let mut landmark_idx = Vec::with_capacity(s_max);
+        let mut chol: Vec<Vec<f64>> = Vec::with_capacity(s_max);
+
+        let mut pivot = 0usize; // z_1 = first candidate
+        for s in 0..s_max {
+            let dp = resid[pivot];
+            if dp <= 1e-10 {
+                break; // numerically dependent — no more informative landmarks
+            }
+            let sqrt_dp = dp.sqrt();
+            let xp = view.row(pool[pivot]).to_vec();
+            // New Cholesky column over the pool.
+            let piv_emb = emb[pivot].clone();
+            for q in 0..p {
+                let kqp = kernel.eval(view.row(pool[q]), &xp) as f64;
+                let mut dotp = 0.0;
+                for (a, b) in emb[q].iter().zip(&piv_emb) {
+                    dotp += a * b;
+                }
+                let l = (kqp - dotp) / sqrt_dp;
+                emb[q].push(l);
+                resid[q] -= l * l;
+                if resid[q] < 0.0 {
+                    resid[q] = 0.0;
+                }
+            }
+            landmark_idx.push(view.idx[pool[pivot]]);
+            landmark_x.push(xp);
+            chol.push(emb[pivot].clone());
+            // Next pivot: max residual (ties to the smallest index).
+            if s + 1 < s_max {
+                let (mut best, mut best_v) = (0usize, f64::NEG_INFINITY);
+                for q in 0..p {
+                    if resid[q] > best_v {
+                        best_v = resid[q];
+                        best = q;
+                    }
+                }
+                pivot = best;
+            }
+        }
+        Nystrom { landmark_x, landmark_idx, chol, kernel: *kernel }
+    }
+
+    /// Number of landmarks actually selected (may be < requested if the pool
+    /// became numerically dependent).
+    pub fn len(&self) -> usize {
+        self.landmark_x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.landmark_x.is_empty()
+    }
+
+    /// Nyström embedding e(x) ∈ R^S with `<e(x), e(z)> ≈ k(x, z)`.
+    /// Forward substitution against the landmark Cholesky factor.
+    pub fn embed(&self, x: &[f32]) -> Vec<f64> {
+        let s_n = self.len();
+        let mut e = Vec::with_capacity(s_n);
+        for s in 0..s_n {
+            let kxs = self.kernel.eval(x, &self.landmark_x[s]) as f64;
+            let mut dotp = 0.0;
+            for (t, et) in e.iter().enumerate().take(s) {
+                dotp += et * self.chol[s][t];
+            }
+            let diag = self.chol[s][s].max(1e-12);
+            e.push((kxs - dotp) / diag);
+        }
+        e
+    }
+
+    /// Index of the nearest landmark in the RKHS:
+    /// argmin_s ‖φ(x) − φ(z_s)‖² = k(x,x) − 2k(x,z_s) + k(z_s,z_s)
+    /// (paper Eqn. 7 — the stratum assignment).
+    pub fn nearest_landmark(&self, x: &[f32]) -> usize {
+        let kxx = self.kernel.eval(x, x);
+        let mut best = 0;
+        let mut best_d = f32::INFINITY;
+        for (s, z) in self.landmark_x.iter().enumerate() {
+            let d = kxx - 2.0 * self.kernel.eval(x, z) + self.kernel.eval(z, z);
+            if d < best_d {
+                best_d = d;
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Gram determinant of the selected landmarks — the quantity Eqn. 8
+    /// greedily maximizes (prod of squared Cholesky diagonals). Diagnostics.
+    pub fn gram_logdet(&self) -> f64 {
+        self.chol.iter().enumerate().map(|(s, r)| 2.0 * r[s].max(1e-300).ln()).sum()
+    }
+
+    /// Minimal principal angle τ between landmark pairs (lower bound of the
+    /// stratum-pair angle used by Theorem 2), in radians. Shift-invariant
+    /// kernels only (`None` otherwise).
+    pub fn min_principal_angle(&self) -> Option<f64> {
+        let r2 = self.kernel.self_similarity()? as f64;
+        let mut min_angle = std::f64::consts::FRAC_PI_2;
+        for i in 0..self.len() {
+            for j in i + 1..self.len() {
+                let c = self.kernel.eval(&self.landmark_x[i], &self.landmark_x[j]) as f64 / r2;
+                let angle = c.clamp(-1.0, 1.0).acos();
+                min_angle = min_angle.min(angle);
+            }
+        }
+        Some(min_angle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{all_indices, synth::SynthSpec, Dataset};
+
+    fn fixture(rows: usize) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.01, 21);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn selects_requested_landmark_count() {
+        let d = fixture(120);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let ny = Nystrom::select(&v, &KernelKind::Rbf { gamma: 2.0 }, 8, 1024, 1);
+        assert_eq!(ny.len(), 8);
+        assert_eq!(ny.landmark_idx.len(), 8);
+    }
+
+    #[test]
+    fn first_landmark_is_first_candidate_small_pool() {
+        let d = fixture(50);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let ny = Nystrom::select(&v, &KernelKind::Rbf { gamma: 1.0 }, 4, 1024, 3);
+        assert_eq!(ny.landmark_idx[0], 0, "paper sets z_1 = x_1");
+    }
+
+    #[test]
+    fn embedding_reconstructs_kernel() {
+        // Nyström guarantee: <e(z_i), e(z_j)> == k(z_i, z_j) exactly on the
+        // landmarks themselves.
+        let d = fixture(60);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.5 };
+        let ny = Nystrom::select(&v, &k, 6, 1024, 5);
+        for i in 0..ny.len() {
+            for j in 0..ny.len() {
+                let ei = ny.embed(&ny.landmark_x[i]);
+                let ej = ny.embed(&ny.landmark_x[j]);
+                let approx: f64 = ei.iter().zip(&ej).map(|(a, b)| a * b).sum();
+                let exact = k.eval(&ny.landmark_x[i], &ny.landmark_x[j]) as f64;
+                assert!(
+                    (approx - exact).abs() < 1e-5,
+                    "({i},{j}): {approx} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_approximates_kernel_off_landmarks() {
+        let d = fixture(80);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        // With S = m the approximation becomes exact (full pivoted Cholesky).
+        let ny = Nystrom::select(&v, &k, 80, 1024, 7);
+        let (a, b) = (v.row(3), v.row(11));
+        let (ea, eb) = (ny.embed(a), ny.embed(b));
+        let approx: f64 = ea.iter().zip(&eb).map(|(x, y)| x * y).sum();
+        let exact = k.eval(a, b) as f64;
+        assert!((approx - exact).abs() < 1e-4, "{approx} vs {exact}");
+    }
+
+    #[test]
+    fn greedy_grows_logdet_monotonically_vs_random() {
+        // Greedy det-max should beat random selection in log-det.
+        let d = fixture(150);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 3.0 };
+        let greedy = Nystrom::select(&v, &k, 10, 1024, 9);
+        // "random" = take first 10 rows as landmarks via a pool of size 10
+        let mut rng = crate::util::rng::Pcg32::seeded(4);
+        let rand_rows = rng.sample_indices(150, 10);
+        let rand_idx: Vec<usize> = rand_rows.iter().map(|&i| idx[i]).collect();
+        let rv = DataView::new(&d, &rand_idx);
+        let random = Nystrom::select(&rv, &k, 10, 10, 4);
+        assert!(
+            greedy.gram_logdet() >= random.gram_logdet() - 1e-9,
+            "greedy {} < random {}",
+            greedy.gram_logdet(),
+            random.gram_logdet()
+        );
+    }
+
+    #[test]
+    fn nearest_landmark_self_is_zero_distance() {
+        let d = fixture(40);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let ny = Nystrom::select(&v, &KernelKind::Rbf { gamma: 2.0 }, 5, 1024, 11);
+        for (s, z) in ny.landmark_x.iter().enumerate() {
+            assert_eq!(ny.nearest_landmark(z), s);
+        }
+    }
+
+    #[test]
+    fn linear_kernel_supported() {
+        let d = fixture(40);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let ny = Nystrom::select(&v, &KernelKind::Linear, 4, 1024, 13);
+        assert!(ny.len() >= 1);
+        assert!(ny.min_principal_angle().is_none());
+        let _ = ny.nearest_landmark(v.row(0));
+    }
+
+    #[test]
+    fn principal_angle_positive_for_distinct_landmarks() {
+        let d = fixture(100);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let ny = Nystrom::select(&v, &KernelKind::Rbf { gamma: 4.0 }, 6, 1024, 15);
+        let tau = ny.min_principal_angle().unwrap();
+        assert!(tau > 0.0 && tau <= std::f64::consts::FRAC_PI_2);
+    }
+
+    #[test]
+    fn degenerate_duplicate_data_stops_early() {
+        // all rows identical -> rank 1 -> only 1 landmark possible
+        let x = vec![0.5f32; 20 * 3];
+        let y: Vec<f32> = (0..20).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let d = Dataset::new("dup", x, y, 3);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let ny = Nystrom::select(&v, &KernelKind::Rbf { gamma: 1.0 }, 5, 1024, 17);
+        assert_eq!(ny.len(), 1);
+    }
+}

@@ -1,0 +1,379 @@
+//! Data partitioning strategies: the paper's distribution-aware stratified
+//! RKHS partitioning (§3.2) and the baselines' partitioners (random for
+//! Cascade, input-space k-means for DiP, kernel k-means for DC).
+//!
+//! All strategies return `Vec<Vec<usize>>` of *global* dataset indices; the
+//! union is exactly the input view and the parts are disjoint (checked in
+//! debug builds and by property tests).
+
+pub mod kmeans;
+pub mod landmarks;
+
+use crate::data::DataView;
+use crate::kernel::KernelKind;
+use crate::partition::landmarks::Nystrom;
+use crate::util::pool;
+use crate::util::rng::Pcg32;
+
+/// Which partitioner a meta-solver uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionStrategy {
+    /// Uniform random equal-size split (Cascade).
+    Random,
+    /// The paper's strategy: `s` landmark stratums in the RKHS + stratified
+    /// sampling so every partition preserves the global distribution.
+    StratifiedRkhs { stratums: usize },
+    /// Input-space k-means clusters, each distributed proportionally across
+    /// partitions (DiP: distribution preserving in input space).
+    KmeansProportional { clusters: usize },
+    /// Kernel k-means clusters *as* partitions (DC: partitions are clusters,
+    /// sizes intentionally unequal).
+    KernelKmeansClusters { embed_dim: usize },
+}
+
+/// Partition `view` into `k` parts with the given strategy. Returns global
+/// dataset indices per part; every part is non-empty when `k <= view.len()`.
+pub fn make_partitions(
+    view: &DataView,
+    kernel: &KernelKind,
+    k: usize,
+    strategy: PartitionStrategy,
+    seed: u64,
+    workers: usize,
+) -> Vec<Vec<usize>> {
+    assert!(k >= 1, "need at least one partition");
+    let m = view.len();
+    assert!(m >= k, "cannot split {m} rows into {k} partitions");
+    let parts = match strategy {
+        PartitionStrategy::Random => random_partitions(view, k, seed),
+        PartitionStrategy::StratifiedRkhs { stratums } => {
+            stratified_rkhs_partitions(view, kernel, k, stratums, seed, workers)
+        }
+        PartitionStrategy::KmeansProportional { clusters } => {
+            let km = kmeans::kmeans_features(view, clusters, 50, seed, workers);
+            proportional_from_clusters(view, &km.assignment, km.k, k, seed)
+        }
+        PartitionStrategy::KernelKmeansClusters { embed_dim } => {
+            let km = kmeans::kernel_kmeans(view, kernel, k, embed_dim, 50, seed, workers);
+            clusters_as_partitions(view, &km.assignment, km.k, k, seed)
+        }
+    };
+    debug_assert!(partitions_valid(view, &parts));
+    parts
+}
+
+/// Uniform random split into `k` nearly equal parts.
+pub fn random_partitions(view: &DataView, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = view.idx.to_vec();
+    let mut rng = Pcg32::seeded(seed ^ 0xAB1);
+    rng.shuffle(&mut order);
+    deal_round_robin(&order, k)
+}
+
+/// The paper's §3.2 strategy.
+///
+/// 1. Select `stratums` landmarks by greedy det-max ([`Nystrom::select`],
+///    Eqn. 8).
+/// 2. Assign every instance to its nearest landmark in the RKHS (Eqn. 7).
+/// 3. Shuffle each stratum and deal its members round-robin over the `k`
+///    partitions, so each partition holds a proportional sample of every
+///    stratum — preserving the data distribution.
+pub fn stratified_rkhs_partitions(
+    view: &DataView,
+    kernel: &KernelKind,
+    k: usize,
+    stratums: usize,
+    seed: u64,
+    workers: usize,
+) -> Vec<Vec<usize>> {
+    let ny = Nystrom::select(view, kernel, stratums, 2048, seed);
+    let assignment: Vec<usize> =
+        pool::parallel_map(view.len(), workers, |i| ny.nearest_landmark(view.row(i)));
+    let s_actual = ny.len();
+    let mut stratum_members: Vec<Vec<usize>> = vec![Vec::new(); s_actual];
+    for (i, &s) in assignment.iter().enumerate() {
+        stratum_members[s].push(view.idx[i]);
+    }
+    let mut rng = Pcg32::seeded(seed ^ 0x57A7);
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for members in stratum_members.iter_mut() {
+        rng.shuffle(members);
+        // Rotate the starting partition per stratum so small stratums do not
+        // all top up partition 0.
+        let offset = rng.gen_range(k);
+        for (j, &gidx) in members.iter().enumerate() {
+            parts[(j + offset) % k].push(gidx);
+        }
+    }
+    rebalance_empty(&mut parts);
+    parts
+}
+
+/// DiP-style: clusters found in input space, then each cluster's members are
+/// dealt proportionally over the `k` partitions (preserves per-cluster
+/// proportions — the "distribution preserving" part of DiP).
+fn proportional_from_clusters(
+    view: &DataView,
+    assignment: &[usize],
+    n_clusters: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let mut cluster_members: Vec<Vec<usize>> = vec![Vec::new(); n_clusters];
+    for (i, &c) in assignment.iter().enumerate() {
+        cluster_members[c].push(view.idx[i]);
+    }
+    let mut rng = Pcg32::seeded(seed ^ 0xD1B);
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for members in cluster_members.iter_mut() {
+        rng.shuffle(members);
+        let offset = rng.gen_range(k);
+        for (j, &gidx) in members.iter().enumerate() {
+            parts[(j + offset) % k].push(gidx);
+        }
+    }
+    rebalance_empty(&mut parts);
+    parts
+}
+
+/// DC-style: the clusters *are* the partitions. If kernel k-means returned
+/// fewer (or degenerate) clusters than `k`, the largest parts are split to
+/// restore the requested count (keeps Algorithm-1-style merge trees sound).
+fn clusters_as_partitions(
+    view: &DataView,
+    assignment: &[usize],
+    n_clusters: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); n_clusters];
+    for (i, &c) in assignment.iter().enumerate() {
+        parts[c].push(view.idx[i]);
+    }
+    parts.retain(|p| !p.is_empty());
+    let mut rng = Pcg32::seeded(seed ^ 0xDC0);
+    // Split largest until we have k parts.
+    while parts.len() < k {
+        parts.sort_by_key(|p| std::cmp::Reverse(p.len()));
+        let mut big = parts.remove(0);
+        if big.len() < 2 {
+            parts.push(big);
+            break;
+        }
+        rng.shuffle(&mut big);
+        let half = big.split_off(big.len() / 2);
+        parts.push(big);
+        parts.push(half);
+    }
+    // Merge smallest if too many.
+    while parts.len() > k {
+        parts.sort_by_key(|p| std::cmp::Reverse(p.len()));
+        let tail = parts.pop().unwrap();
+        let last = parts.len() - 1;
+        parts[last].extend(tail);
+    }
+    parts
+}
+
+/// Deal a pre-shuffled order into `k` round-robin parts.
+fn deal_round_robin(order: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (j, &gidx) in order.iter().enumerate() {
+        parts[j % k].push(gidx);
+    }
+    parts
+}
+
+/// Move items from the largest parts into any empty ones (strategies built
+/// from clusters can leave a part empty on tiny inputs).
+fn rebalance_empty(parts: &mut [Vec<usize>]) {
+    loop {
+        let Some(empty) = parts.iter().position(|p| p.is_empty()) else { break };
+        let largest = (0..parts.len()).max_by_key(|&i| parts[i].len()).unwrap();
+        if parts[largest].len() <= 1 {
+            break;
+        }
+        let moved = {
+            let src = &mut parts[largest];
+            src.split_off(src.len() / 2)
+        };
+        parts[empty] = moved;
+    }
+}
+
+/// Every part non-empty, disjoint, union == view (order-insensitive).
+pub fn partitions_valid(view: &DataView, parts: &[Vec<usize>]) -> bool {
+    let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+    if all.len() != view.len() {
+        return false;
+    }
+    all.sort_unstable();
+    let mut want: Vec<usize> = view.idx.to_vec();
+    want.sort_unstable();
+    all == want && parts.iter().all(|p| !p.is_empty())
+}
+
+/// Distribution-preservation diagnostic: max over partitions of the absolute
+/// difference between the partition's positive-label fraction and the global
+/// one. The paper's strategy should keep this small; DC's clusters will not.
+pub fn label_balance_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
+    let global =
+        (0..view.len()).filter(|&i| view.label(i) > 0.0).count() as f64 / view.len() as f64;
+    parts
+        .iter()
+        .map(|p| {
+            let pos = p.iter().filter(|&&g| view.data.y[g] > 0.0).count() as f64;
+            (pos / p.len() as f64 - global).abs()
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Per-feature mean gap between each partition and the global data — the
+/// first-order-statistics preservation measure used in partition_demo and
+/// the DiP/SODM comparison.
+pub fn mean_shift_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
+    let n = view.data.cols;
+    let mut global = vec![0.0f64; n];
+    for i in 0..view.len() {
+        for (g, v) in global.iter_mut().zip(view.row(i)) {
+            *g += *v as f64;
+        }
+    }
+    for g in global.iter_mut() {
+        *g /= view.len() as f64;
+    }
+    let mut worst = 0.0f64;
+    for p in parts {
+        let mut mean = vec![0.0f64; n];
+        for &gidx in p {
+            for (m, v) in mean.iter_mut().zip(view.data.row(gidx)) {
+                *m += *v as f64;
+            }
+        }
+        let mut gap = 0.0;
+        for (m, g) in mean.iter().zip(&global) {
+            let d = m / p.len() as f64 - g;
+            gap += d * d;
+        }
+        worst = worst.max(gap.sqrt());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{all_indices, synth::SynthSpec};
+
+    fn fixture(rows: usize, seed: u64) -> crate::data::Dataset {
+        let mut s = SynthSpec::named("phishing", 0.01, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn random_partitions_are_valid_and_balanced() {
+        let d = fixture(103, 1);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let parts = random_partitions(&v, 4, 9);
+        assert!(partitions_valid(&v, &parts));
+        for p in &parts {
+            assert!((25..=26).contains(&p.len()));
+        }
+    }
+
+    #[test]
+    fn all_strategies_produce_valid_partitions() {
+        let d = fixture(160, 2);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let kern = KernelKind::Rbf { gamma: 1.0 };
+        for strategy in [
+            PartitionStrategy::Random,
+            PartitionStrategy::StratifiedRkhs { stratums: 6 },
+            PartitionStrategy::KmeansProportional { clusters: 5 },
+            PartitionStrategy::KernelKmeansClusters { embed_dim: 8 },
+        ] {
+            let parts = make_partitions(&v, &kern, 4, strategy, 11, 2);
+            assert!(partitions_valid(&v, &parts), "{strategy:?}");
+            assert_eq!(parts.len(), 4, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn stratified_preserves_label_balance() {
+        let d = fixture(400, 3);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let kern = KernelKind::Rbf { gamma: 1.0 };
+        let strat = make_partitions(
+            &v,
+            &kern,
+            4,
+            PartitionStrategy::StratifiedRkhs { stratums: 8 },
+            5,
+            2,
+        );
+        let gap = label_balance_gap(&v, &strat);
+        assert!(gap < 0.12, "stratified label gap {gap}");
+    }
+
+    #[test]
+    fn stratified_mean_gap_comparable_to_random() {
+        let d = fixture(400, 4);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let kern = KernelKind::Rbf { gamma: 1.0 };
+        let strat = make_partitions(
+            &v,
+            &kern,
+            4,
+            PartitionStrategy::StratifiedRkhs { stratums: 8 },
+            5,
+            2,
+        );
+        let rand = make_partitions(&v, &kern, 4, PartitionStrategy::Random, 5, 2);
+        let gs = mean_shift_gap(&v, &strat);
+        let gr = mean_shift_gap(&v, &rand);
+        assert!(gs < gr * 3.0 + 0.05, "stratified {gs} vs random {gr}");
+    }
+
+    #[test]
+    fn kernel_kmeans_clusters_partitions_valid() {
+        let d = fixture(300, 6);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let parts = make_partitions(
+            &v,
+            &KernelKind::Rbf { gamma: 2.0 },
+            3,
+            PartitionStrategy::KernelKmeansClusters { embed_dim: 8 },
+            13,
+            2,
+        );
+        assert!(partitions_valid(&v, &parts));
+        assert_eq!(parts.len(), 3);
+    }
+
+    #[test]
+    fn partition_on_subset_view_uses_global_indices() {
+        let d = fixture(120, 7);
+        let sub: Vec<usize> = (0..120).filter(|i| i % 2 == 0).collect();
+        let v = DataView::new(&d, &sub);
+        let parts = random_partitions(&v, 3, 1);
+        assert!(partitions_valid(&v, &parts));
+        for p in &parts {
+            assert!(p.iter().all(|g| g % 2 == 0), "global indices expected");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_partitions_than_rows_panics() {
+        let d = fixture(64, 8);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        make_partitions(&v, &KernelKind::Linear, 65, PartitionStrategy::Random, 0, 1);
+    }
+}

@@ -1,0 +1,601 @@
+//! Dual coordinate descent (DCD) solvers for the ODM dual QP (paper Eqn. 2-3)
+//! and the hinge-loss SVM dual (the Table-4 comparator).
+//!
+//! The ODM dual over a partition of size `m` is
+//!
+//! ```text
+//! min_{ζ,β ⪰ 0}  ½(ζ-β)ᵀQ(ζ-β) + (mc/2)(υ‖ζ‖² + ‖β‖²)
+//!               + (θ-1)1ᵀζ + (θ+1)1ᵀβ ,   c = (1-θ)²/(λυ)
+//! ```
+//!
+//! solved one coordinate at a time with the closed form
+//! `α_i ← max(α_i − g_i/H_ii, 0)` (Eqn. 3), maintaining `u = Q(ζ-β)`
+//! incrementally. Kernel path uses the LRU row cache; the linear path
+//! maintains `w = Σ γ_i y_i x_i` directly and never materializes Q.
+
+use crate::data::DataView;
+use crate::kernel::cache::RowCache;
+use crate::kernel::{dot, KernelKind};
+use crate::odm::OdmParams;
+use crate::util::rng::Pcg32;
+
+/// Stopping/budget knobs shared by all DCD solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveBudget {
+    /// Max projected-gradient violation for convergence (LIBSVM-style).
+    pub eps: f64,
+    /// Hard cap on full sweeps over the coordinates.
+    pub max_sweeps: usize,
+    /// Kernel row-cache budget in bytes (kernel path only).
+    pub cache_bytes: usize,
+    /// Seed for the per-sweep coordinate permutation.
+    pub seed: u64,
+}
+
+impl Default for SolveBudget {
+    fn default() -> Self {
+        Self { eps: 1e-3, max_sweeps: 200, cache_bytes: 256 << 20, seed: 0x0D17 }
+    }
+}
+
+/// Solver telemetry, recorded per local solve and aggregated by the
+/// meta-solvers for EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    pub sweeps: usize,
+    pub converged: bool,
+    /// Final dual objective value.
+    pub objective: f64,
+    /// Final max projected-gradient violation.
+    pub max_violation: f64,
+    /// Coordinate updates actually applied (|δ| > 0).
+    pub updates: u64,
+    /// Kernel row cache hit rate (kernel path; 1.0 for linear).
+    pub cache_hit_rate: f64,
+}
+
+/// Solution of the ODM dual on one partition: `α = [ζ; β]`.
+#[derive(Clone, Debug)]
+pub struct OdmDualSolution {
+    pub zeta: Vec<f64>,
+    pub beta: Vec<f64>,
+    pub stats: SolveStats,
+}
+
+impl OdmDualSolution {
+    /// γ = ζ − β, the expansion coefficients of `w = Σ γ_i y_i φ(x_i)`.
+    pub fn gamma(&self) -> Vec<f64> {
+        self.zeta.iter().zip(&self.beta).map(|(z, b)| z - b).collect()
+    }
+
+    /// Stacked `[ζ; β]` (the warm-start interchange format of Algorithm 1).
+    pub fn alpha(&self) -> Vec<f64> {
+        let mut a = self.zeta.clone();
+        a.extend_from_slice(&self.beta);
+        a
+    }
+}
+
+/// Split a stacked `[ζ; β]` warm start (length `2m`) into halves.
+fn split_alpha(warm: &[f64], m: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(warm.len(), 2 * m, "warm start must have length 2m");
+    (warm[..m].to_vec(), warm[m..].to_vec())
+}
+
+/// Solve the local ODM dual on `view` by DCD.
+///
+/// `warm` is the stacked `[ζ; β]` initial point (Algorithm 1 passes the
+/// concatenation of child solutions); `None` starts from 0.
+pub fn solve_odm_dual(
+    view: &DataView,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    warm: Option<&[f64]>,
+    budget: &SolveBudget,
+) -> OdmDualSolution {
+    match kernel {
+        KernelKind::Linear => solve_odm_linear(view, params, warm, budget),
+        _ => solve_odm_kernel(view, kernel, params, warm, budget),
+    }
+}
+
+/// Kernel-path ODM DCD: maintains `u = Q(ζ-β)` (length m) and fetches signed
+/// Gram rows through the LRU cache only when a coordinate actually moves.
+fn solve_odm_kernel(
+    view: &DataView,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    warm: Option<&[f64]>,
+    budget: &SolveBudget,
+) -> OdmDualSolution {
+    let m = view.len();
+    let (mut zeta, mut beta) = match warm {
+        Some(w) => split_alpha(w, m),
+        None => (vec![0.0; m], vec![0.0; m]),
+    };
+    let mc = m as f64 * params.c();
+    let (ups, theta) = (params.upsilon as f64, params.theta as f64);
+
+    // Diagonal of the signed Gram: k(x_i,x_i) (signs cancel).
+    let qdiag: Vec<f64> = (0..m)
+        .map(|i| kernel.eval(view.row(i), view.row(i)) as f64)
+        .collect();
+
+    let mut cache = RowCache::new(budget.cache_bytes, m);
+
+    // u = Q γ. Warm start: one parallel pass over the support of γ.
+    let mut u = vec![0.0f64; m];
+    let gamma0: Vec<f64> = zeta.iter().zip(&beta).map(|(z, b)| z - b).collect();
+    if gamma0.iter().any(|g| *g != 0.0) {
+        recompute_u(view, kernel, &gamma0, &mut u);
+    }
+
+    let mut rng = Pcg32::seeded(budget.seed);
+    let mut order: Vec<usize> = (0..2 * m).collect();
+    let mut stats = SolveStats::default();
+
+    for sweep in 0..budget.max_sweeps {
+        rng.shuffle(&mut order);
+        let mut max_viol = 0.0f64;
+        for &cidx in &order {
+            let (is_zeta, i) = (cidx < m, cidx % m);
+            let (g, h, a) = if is_zeta {
+                (u[i] + mc * ups * zeta[i] + (theta - 1.0), qdiag[i] + mc * ups, zeta[i])
+            } else {
+                (-u[i] + mc * beta[i] + (theta + 1.0), qdiag[i] + mc, beta[i])
+            };
+            let viol = if a > 0.0 { g.abs() } else { (-g).max(0.0) };
+            max_viol = max_viol.max(viol);
+            if viol <= budget.eps * 0.1 {
+                continue; // coordinate already optimal enough — skip row fetch
+            }
+            let new_a = (a - g / h).max(0.0);
+            let delta = new_a - a;
+            if delta == 0.0 {
+                continue;
+            }
+            stats.updates += 1;
+            let dgamma = if is_zeta { delta } else { -delta };
+            if is_zeta {
+                zeta[i] = new_a;
+            } else {
+                beta[i] = new_a;
+            }
+            let row = cache.get(view, kernel, i);
+            for (uj, qj) in u.iter_mut().zip(row.iter()) {
+                *uj += dgamma * *qj as f64;
+            }
+        }
+        stats.sweeps = sweep + 1;
+        stats.max_violation = max_viol;
+        if max_viol < budget.eps {
+            stats.converged = true;
+            break;
+        }
+    }
+    stats.cache_hit_rate = cache.hit_rate();
+    stats.objective = objective_from_u(&zeta, &beta, &u, mc, ups, theta);
+    OdmDualSolution { zeta, beta, stats }
+}
+
+/// Linear-path ODM DCD: maintains `w` (length N) so sweeps cost O(mN) and Q
+/// is never formed. This is the "directly solve the primal-sized state"
+/// observation of paper §3.3 applied to the dual solver.
+fn solve_odm_linear(
+    view: &DataView,
+    params: &OdmParams,
+    warm: Option<&[f64]>,
+    budget: &SolveBudget,
+) -> OdmDualSolution {
+    let m = view.len();
+    let n = view.data.cols;
+    let (mut zeta, mut beta) = match warm {
+        Some(w) => split_alpha(w, m),
+        None => (vec![0.0; m], vec![0.0; m]),
+    };
+    let mc = m as f64 * params.c();
+    let (ups, theta) = (params.upsilon as f64, params.theta as f64);
+    let qdiag: Vec<f64> = (0..m).map(|i| dot(view.row(i), view.row(i)) as f64).collect();
+
+    // w = Σ γ_i y_i x_i  (f64 accumulation for stability across many updates)
+    let mut w = vec![0.0f64; n];
+    for i in 0..m {
+        let g = zeta[i] - beta[i];
+        if g != 0.0 {
+            let yi = view.label(i) as f64;
+            for (wj, xj) in w.iter_mut().zip(view.row(i)) {
+                *wj += g * yi * *xj as f64;
+            }
+        }
+    }
+
+    let mut rng = Pcg32::seeded(budget.seed);
+    let mut order: Vec<usize> = (0..2 * m).collect();
+    let mut stats = SolveStats::default();
+
+    for sweep in 0..budget.max_sweeps {
+        rng.shuffle(&mut order);
+        let mut max_viol = 0.0f64;
+        for &cidx in &order {
+            let (is_zeta, i) = (cidx < m, cidx % m);
+            let xi = view.row(i);
+            let yi = view.label(i) as f64;
+            let ui = yi * dot_f64(&w, xi);
+            let (g, h, a) = if is_zeta {
+                (ui + mc * ups * zeta[i] + (theta - 1.0), qdiag[i] + mc * ups, zeta[i])
+            } else {
+                (-ui + mc * beta[i] + (theta + 1.0), qdiag[i] + mc, beta[i])
+            };
+            let viol = if a > 0.0 { g.abs() } else { (-g).max(0.0) };
+            max_viol = max_viol.max(viol);
+            let new_a = (a - g / h).max(0.0);
+            let delta = new_a - a;
+            if delta == 0.0 {
+                continue;
+            }
+            stats.updates += 1;
+            let dgamma = if is_zeta { delta } else { -delta };
+            if is_zeta {
+                zeta[i] = new_a;
+            } else {
+                beta[i] = new_a;
+            }
+            for (wj, xj) in w.iter_mut().zip(xi) {
+                *wj += dgamma * yi * *xj as f64;
+            }
+        }
+        stats.sweeps = sweep + 1;
+        stats.max_violation = max_viol;
+        if max_viol < budget.eps {
+            stats.converged = true;
+            break;
+        }
+    }
+    stats.cache_hit_rate = 1.0;
+    // u_i for the objective
+    let u: Vec<f64> =
+        (0..m).map(|i| view.label(i) as f64 * dot_f64(&w, view.row(i))).collect();
+    stats.objective = objective_from_u(&zeta, &beta, &u, mc, ups, theta);
+    OdmDualSolution { zeta, beta, stats }
+}
+
+#[inline]
+fn dot_f64(w: &[f64], x: &[f32]) -> f64 {
+    // 4-lane unroll (autovectorizer-friendly; §Perf)
+    let n = w.len().min(x.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += w[i] * x[i] as f64;
+        s1 += w[i + 1] * x[i + 1] as f64;
+        s2 += w[i + 2] * x[i + 2] as f64;
+        s3 += w[i + 3] * x[i + 3] as f64;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += w[i] * x[i] as f64;
+    }
+    s
+}
+
+/// Recompute `u = Q γ` from scratch over the support of γ (rayon-parallel
+/// over output entries). Used to seed warm starts after partition merges.
+pub fn recompute_u(view: &DataView, kernel: &KernelKind, gamma: &[f64], u: &mut [f64]) {
+    let support: Vec<usize> = (0..gamma.len()).filter(|&j| gamma[j] != 0.0).collect();
+    let workers = crate::util::pool::num_cpus();
+    crate::util::pool::parallel_chunks(u, workers, 512, |start, chunk| {
+        for (k, ui) in chunk.iter_mut().enumerate() {
+            let i = start + k;
+            let xi = view.row(i);
+            let yi = view.label(i);
+            let mut s = 0.0f64;
+            for &j in &support {
+                let kv = kernel.eval(xi, view.row(j));
+                s += gamma[j] * (yi * view.label(j) * kv) as f64;
+            }
+            *ui = s;
+        }
+    });
+}
+
+/// ODM dual objective given the maintained `u = Qγ`.
+fn objective_from_u(
+    zeta: &[f64],
+    beta: &[f64],
+    u: &[f64],
+    mc: f64,
+    ups: f64,
+    theta: f64,
+) -> f64 {
+    let mut quad = 0.0;
+    let mut nz = 0.0;
+    let mut nb = 0.0;
+    let mut sz = 0.0;
+    let mut sb = 0.0;
+    for i in 0..zeta.len() {
+        let g = zeta[i] - beta[i];
+        quad += g * u[i];
+        nz += zeta[i] * zeta[i];
+        nb += beta[i] * beta[i];
+        sz += zeta[i];
+        sb += beta[i];
+    }
+    0.5 * quad + 0.5 * mc * (ups * nz + nb) + (theta - 1.0) * sz + (theta + 1.0) * sb
+}
+
+/// Brute-force ODM dual objective (O(m²) kernel evals) — test oracle and
+/// Theorem-1 experiment helper.
+pub fn odm_dual_objective(
+    view: &DataView,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    zeta: &[f64],
+    beta: &[f64],
+) -> f64 {
+    let m = view.len();
+    let mut u = vec![0.0; m];
+    let gamma: Vec<f64> = zeta.iter().zip(beta).map(|(z, b)| z - b).collect();
+    recompute_u(view, kernel, &gamma, &mut u);
+    let mc = m as f64 * params.c();
+    objective_from_u(zeta, beta, &u, mc, params.upsilon as f64, params.theta as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Hinge-loss SVM dual (no-bias C-SVM) — local solver for the *-SVM rows of
+// Table 4. min ½γᵀQγ − 1ᵀγ  s.t. 0 ≤ γ ≤ C.
+// ---------------------------------------------------------------------------
+
+/// Solution of the SVM dual on one partition.
+#[derive(Clone, Debug)]
+pub struct SvmDualSolution {
+    pub gamma: Vec<f64>,
+    pub stats: SolveStats,
+}
+
+/// Solve the no-bias C-SVM dual on `view` by DCD (LIBLINEAR-style for the
+/// linear kernel, cached-row kernel path otherwise).
+pub fn solve_svm_dual(
+    view: &DataView,
+    kernel: &KernelKind,
+    c_svm: f64,
+    warm: Option<&[f64]>,
+    budget: &SolveBudget,
+) -> SvmDualSolution {
+    let m = view.len();
+    let mut gamma = match warm {
+        Some(w) => {
+            assert_eq!(w.len(), m);
+            w.iter().map(|v| v.clamp(0.0, c_svm)).collect()
+        }
+        None => vec![0.0; m],
+    };
+    let qdiag: Vec<f64> = (0..m)
+        .map(|i| kernel.eval(view.row(i), view.row(i)).max(1e-12) as f64)
+        .collect();
+    let linear = matches!(kernel, KernelKind::Linear);
+    let n = view.data.cols;
+
+    let mut w = vec![0.0f64; n]; // linear path
+    let mut u = vec![0.0f64; m]; // kernel path
+    if gamma.iter().any(|g| *g != 0.0) {
+        if linear {
+            for i in 0..m {
+                if gamma[i] != 0.0 {
+                    let yi = view.label(i) as f64;
+                    for (wj, xj) in w.iter_mut().zip(view.row(i)) {
+                        *wj += gamma[i] * yi * *xj as f64;
+                    }
+                }
+            }
+        } else {
+            recompute_u(view, kernel, &gamma, &mut u);
+        }
+    }
+    let mut cache = RowCache::new(budget.cache_bytes, m);
+    let mut rng = Pcg32::seeded(budget.seed ^ 0x5F3);
+    let mut order: Vec<usize> = (0..m).collect();
+    let mut stats = SolveStats::default();
+
+    for sweep in 0..budget.max_sweeps {
+        rng.shuffle(&mut order);
+        let mut max_viol = 0.0f64;
+        for &i in &order {
+            let ui = if linear {
+                view.label(i) as f64 * dot_f64(&w, view.row(i))
+            } else {
+                u[i]
+            };
+            let g = ui - 1.0;
+            let a = gamma[i];
+            // projected-gradient violation with box [0, C]
+            let viol = if a <= 0.0 {
+                (-g).max(0.0)
+            } else if a >= c_svm {
+                g.max(0.0)
+            } else {
+                g.abs()
+            };
+            max_viol = max_viol.max(viol);
+            let new_a = (a - g / qdiag[i]).clamp(0.0, c_svm);
+            let delta = new_a - a;
+            if delta == 0.0 {
+                continue;
+            }
+            stats.updates += 1;
+            gamma[i] = new_a;
+            if linear {
+                let yi = view.label(i) as f64;
+                for (wj, xj) in w.iter_mut().zip(view.row(i)) {
+                    *wj += delta * yi * *xj as f64;
+                }
+            } else {
+                let row = cache.get(view, kernel, i);
+                for (uj, qj) in u.iter_mut().zip(row.iter()) {
+                    *uj += delta * *qj as f64;
+                }
+            }
+        }
+        stats.sweeps = sweep + 1;
+        stats.max_violation = max_viol;
+        if max_viol < budget.eps {
+            stats.converged = true;
+            break;
+        }
+    }
+    if linear {
+        for i in 0..m {
+            u[i] = view.label(i) as f64 * dot_f64(&w, view.row(i));
+        }
+    }
+    stats.cache_hit_rate = if linear { 1.0 } else { cache.hit_rate() };
+    stats.objective =
+        0.5 * gamma.iter().zip(&u).map(|(g, ui)| g * ui).sum::<f64>() - gamma.iter().sum::<f64>();
+    SvmDualSolution { gamma, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{all_indices, Dataset};
+    use crate::data::synth::SynthSpec;
+
+    fn small() -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.01, 17);
+        s.rows = 80;
+        s.generate()
+    }
+
+    fn params() -> OdmParams {
+        OdmParams { lambda: 4.0, theta: 0.3, upsilon: 0.5 }
+    }
+
+    #[test]
+    fn kernel_dcd_converges_and_kkt_holds() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let sol = solve_odm_dual(&v, &k, &params(), None, &SolveBudget::default());
+        assert!(sol.stats.converged, "violation {}", sol.stats.max_violation);
+        assert!(sol.stats.max_violation < 1e-3);
+        assert!(sol.zeta.iter().all(|&z| z >= 0.0));
+        assert!(sol.beta.iter().all(|&b| b >= 0.0));
+    }
+
+    #[test]
+    fn objective_decreases_with_more_sweeps() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let mut b1 = SolveBudget { max_sweeps: 1, ..Default::default() };
+        let o1 = solve_odm_dual(&v, &k, &params(), None, &b1).stats.objective;
+        b1.max_sweeps = 50;
+        let o50 = solve_odm_dual(&v, &k, &params(), None, &b1).stats.objective;
+        assert!(o50 <= o1 + 1e-9, "o1={o1} o50={o50}");
+    }
+
+    #[test]
+    fn maintained_objective_matches_bruteforce() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 0.8 };
+        let sol = solve_odm_dual(&v, &k, &params(), None, &SolveBudget::default());
+        let brute = odm_dual_objective(&v, &k, &params(), &sol.zeta, &sol.beta);
+        assert!(
+            (sol.stats.objective - brute).abs() < 1e-6 * (1.0 + brute.abs()),
+            "maintained {} vs brute {brute}",
+            sol.stats.objective
+        );
+    }
+
+    #[test]
+    fn linear_and_kernel_paths_agree_on_linear_kernel() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let p = params();
+        let budget = SolveBudget { eps: 1e-6, max_sweeps: 2000, ..Default::default() };
+        let lin = solve_odm_linear(&v, &p, None, &budget);
+        let ker = solve_odm_kernel(&v, &KernelKind::Linear, &p, None, &budget);
+        // strictly convex QP -> unique optimum; both paths must find it
+        assert!(
+            (lin.stats.objective - ker.stats.objective).abs()
+                < 1e-4 * (1.0 + lin.stats.objective.abs()),
+            "lin {} ker {}",
+            lin.stats.objective,
+            ker.stats.objective
+        );
+    }
+
+    #[test]
+    fn warm_start_preserves_optimum_and_converges_fast() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let p = params();
+        let sol = solve_odm_dual(&v, &k, &p, None, &SolveBudget::default());
+        let warm = sol.alpha();
+        let resolved = solve_odm_dual(&v, &k, &p, Some(&warm), &SolveBudget::default());
+        assert!(resolved.stats.sweeps <= 3, "warm restart took {} sweeps", resolved.stats.sweeps);
+        assert!(
+            (resolved.stats.objective - sol.stats.objective).abs()
+                < 1e-6 * (1.0 + sol.stats.objective.abs())
+        );
+    }
+
+    #[test]
+    fn zero_is_not_optimal_for_reasonable_params() {
+        // At α = 0 the ζ gradient is θ-1 < 0, so DCD must move.
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let sol = solve_odm_dual(
+            &v,
+            &KernelKind::Rbf { gamma: 1.0 },
+            &params(),
+            None,
+            &SolveBudget::default(),
+        );
+        assert!(sol.stats.updates > 0);
+        assert!(sol.zeta.iter().any(|&z| z > 0.0));
+    }
+
+    #[test]
+    fn svm_dual_box_constraints_and_convergence() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let c = 1.0;
+        let sol = solve_svm_dual(
+            &v,
+            &KernelKind::Rbf { gamma: 1.0 },
+            c,
+            None,
+            &SolveBudget::default(),
+        );
+        assert!(sol.stats.converged);
+        assert!(sol.gamma.iter().all(|&g| (0.0..=c + 1e-12).contains(&g)));
+        // dual objective of a nontrivial SVM is negative at optimum
+        assert!(sol.stats.objective < 0.0);
+    }
+
+    #[test]
+    fn svm_linear_matches_kernel_path() {
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let budget = SolveBudget { eps: 1e-6, max_sweeps: 3000, ..Default::default() };
+        let a = solve_svm_dual(&v, &KernelKind::Linear, 0.5, None, &budget);
+        // kernel path with a Linear kernel goes through the cached-row branch
+        // only if we force it; emulate by comparing objectives via brute force
+        let mut u = vec![0.0; v.len()];
+        recompute_u(&v, &KernelKind::Linear, &a.gamma, &mut u);
+        let obj = 0.5 * a.gamma.iter().zip(&u).map(|(g, ui)| g * ui).sum::<f64>()
+            - a.gamma.iter().sum::<f64>();
+        assert!((obj - a.stats.objective).abs() < 1e-6 * (1.0 + obj.abs()));
+    }
+}

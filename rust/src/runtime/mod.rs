@@ -1,0 +1,461 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! once by `python/compile/aot.py` from the JAX/Pallas entry points) and
+//! executes them from the rust hot path.
+//!
+//! The `xla` crate's client/executable handles hold raw pointers and are not
+//! `Send`, so the engine runs a dedicated executor thread that owns the
+//! `PjRtClient` and every compiled executable; callers talk to it through a
+//! channel. `XlaEngine` handles are cheap to clone and `Send + Sync`.
+//!
+//! Interchange format is HLO *text* (xla_extension 0.5.1 rejects jax >= 0.5
+//! serialized protos — see DESIGN.md and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context};
+
+use crate::data::DataView;
+use crate::odm::OdmParams;
+use crate::svrg::GradSource;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Batch geometry of the AOT artifacts (mirrors `python/compile/model.py`).
+#[derive(Clone, Debug)]
+pub struct Geometry {
+    pub gram_m: usize,
+    pub gram_p: usize,
+    pub grad_b: usize,
+    pub dec_s: usize,
+    pub dec_b: usize,
+    pub feature_buckets: Vec<usize>,
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+struct Entry {
+    file: String,
+    n_outputs: usize,
+}
+
+type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
+
+enum Request {
+    /// Execute `name` with the given (data, dims) inputs; reply with every
+    /// output flattened to f32.
+    Exec { name: String, inputs: Vec<(Vec<f32>, Vec<i64>)>, reply: Reply },
+    Shutdown,
+}
+
+/// Handle to the PJRT executor thread. Clone freely.
+#[derive(Clone)]
+pub struct XlaEngine {
+    tx: mpsc::Sender<Request>,
+    pub geometry: Geometry,
+    /// Executions per entry point (telemetry).
+    counts: Arc<Mutex<HashMap<String, u64>>>,
+}
+
+impl XlaEngine {
+    /// Load `artifacts/manifest.json`, compile every artifact on the PJRT
+    /// CPU client (on the executor thread), and return a handle.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let manifest = Json::parse(&manifest_text)?;
+        let g = manifest.req("geometry")?;
+        let geometry = Geometry {
+            gram_m: g.req("gram_m")?.as_usize()?,
+            gram_p: g.req("gram_p")?.as_usize()?,
+            grad_b: g.req("grad_b")?.as_usize()?,
+            dec_s: g.req("dec_s")?.as_usize()?,
+            dec_b: g.req("dec_b")?.as_usize()?,
+            feature_buckets: g
+                .req("feature_buckets")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+        };
+        let mut entries: HashMap<String, Entry> = HashMap::new();
+        for e in manifest.req("entries")?.as_arr()? {
+            entries.insert(
+                e.req("name")?.as_str()?.to_string(),
+                Entry {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    n_outputs: e.req("outputs")?.as_arr()?.len(),
+                },
+            );
+        }
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_thread(dir, entries, rx, init_tx))
+            .context("spawning pjrt executor")?;
+        init_rx.recv().context("executor thread died during init")??;
+        Ok(XlaEngine { tx, geometry, counts: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    /// Try to locate artifacts next to the crate (`$CARGO_MANIFEST_DIR/artifacts`
+    /// or `./artifacts`), returning None if absent — callers fall back to the
+    /// native backend.
+    pub fn load_default() -> Option<XlaEngine> {
+        for cand in [
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            PathBuf::from("artifacts"),
+        ] {
+            if cand.join("manifest.json").exists() {
+                match XlaEngine::load(&cand) {
+                    Ok(e) => return Some(e),
+                    Err(err) => {
+                        eprintln!("warning: failed to load artifacts at {}: {err:#}", cand.display());
+                        return None;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Smallest feature bucket >= n (artifacts are compiled per bucket).
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.geometry
+            .feature_buckets
+            .iter()
+            .copied()
+            .filter(|b| *b >= n)
+            .min()
+            .with_context(|| {
+                format!("no feature bucket >= {n} (have {:?})", self.geometry.feature_buckets)
+            })
+    }
+
+    /// Raw execution of a named artifact.
+    pub fn execute(&self, name: &str, inputs: Vec<(Vec<f32>, Vec<i64>)>) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("pjrt executor thread is gone"))?;
+        {
+            let mut c = self.counts.lock().unwrap();
+            *c.entry(name.to_string()).or_insert(0) += 1;
+        }
+        reply_rx.recv().context("pjrt executor dropped the reply")?
+    }
+
+    /// Executions per entry point so far.
+    pub fn execution_counts(&self) -> HashMap<String, u64> {
+        self.counts.lock().unwrap().clone()
+    }
+
+    /// Signed RBF Gram block between two row sets (padded internally to the
+    /// artifact's (gram_m x gram_p x bucket) tile). Returns `m x p` row-major.
+    pub fn rbf_gram_block(
+        &self,
+        x1: &[f32],
+        y1: &[f32],
+        x2: &[f32],
+        y2: &[f32],
+        n: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let m = y1.len();
+        let p = y2.len();
+        let (gm, gp) = (self.geometry.gram_m, self.geometry.gram_p);
+        if m > gm || p > gp {
+            bail!("gram block {m}x{p} exceeds artifact tile {gm}x{gp}");
+        }
+        let nb = self.bucket_for(n)?;
+        let x1p = pad_rows(x1, m, n, gm, nb);
+        let x2p = pad_rows(x2, p, n, gp, nb);
+        let y1p = pad_vec(y1, gm);
+        let y2p = pad_vec(y2, gp);
+        let out = self.execute(
+            &format!("rbf_gram_n{nb}"),
+            vec![
+                (x1p, vec![gm as i64, nb as i64]),
+                (y1p, vec![gm as i64]),
+                (x2p, vec![gp as i64, nb as i64]),
+                (y2p, vec![gp as i64]),
+                (vec![gamma], vec![1]),
+            ],
+        )?;
+        // crop gm x gp -> m x p
+        let full = &out[0];
+        let mut block = Vec::with_capacity(m * p);
+        for r in 0..m {
+            block.extend_from_slice(&full[r * gp..r * gp + p]);
+        }
+        Ok(block)
+    }
+
+    /// Summed ODM data-gradient + loss over up to `grad_b` rows per call;
+    /// larger inputs are looped in batches. Mirrors
+    /// `python/compile/kernels/odm_grad.py` semantics.
+    pub fn odm_grad_sum(
+        &self,
+        w: &[f64],
+        x: &[f32],
+        y: &[f32],
+        n: usize,
+        params: &OdmParams,
+    ) -> Result<(Vec<f64>, f64)> {
+        let rows = y.len();
+        let nb = self.bucket_for(n)?;
+        let b = self.geometry.grad_b;
+        let wp: Vec<f32> = {
+            let mut v: Vec<f32> = w.iter().map(|a| *a as f32).collect();
+            v.resize(nb, 0.0);
+            v
+        };
+        let pvec = vec![params.lambda, params.theta, params.upsilon];
+        let mut grad = vec![0.0f64; n];
+        let mut loss = 0.0f64;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let take = b.min(rows - r0);
+            let xb = pad_rows(&x[r0 * n..(r0 + take) * n], take, n, b, nb);
+            let yb = pad_vec(&y[r0..r0 + take], b);
+            let out = self.execute(
+                &format!("odm_grad_n{nb}"),
+                vec![
+                    (wp.clone(), vec![nb as i64]),
+                    (xb, vec![b as i64, nb as i64]),
+                    (yb, vec![b as i64]),
+                    (pvec.clone(), vec![3]),
+                ],
+            )?;
+            for j in 0..n {
+                grad[j] += out[0][j] as f64;
+            }
+            loss += out[1][0] as f64;
+            r0 += take;
+        }
+        Ok((grad, loss))
+    }
+
+    /// Kernel-expansion decisions for a batch of test rows against a support
+    /// set (both padded/tiled internally).
+    pub fn rbf_decisions(
+        &self,
+        sv_x: &[f32],
+        coef: &[f64],
+        xt: &[f32],
+        n: usize,
+        gamma: f32,
+    ) -> Result<Vec<f64>> {
+        let s = coef.len();
+        let t = xt.len() / n;
+        let nb = self.bucket_for(n)?;
+        let (ds_, db_) = (self.geometry.dec_s, self.geometry.dec_b);
+        let mut out = vec![0.0f64; t];
+        // support tiles x test tiles; decisions accumulate over support tiles
+        let mut s0 = 0usize;
+        while s0 < s {
+            let stake = ds_.min(s - s0);
+            let svp = pad_rows(&sv_x[s0 * n..(s0 + stake) * n], stake, n, ds_, nb);
+            let coefp = {
+                let mut v: Vec<f32> = coef[s0..s0 + stake].iter().map(|c| *c as f32).collect();
+                v.resize(ds_, 0.0);
+                v
+            };
+            let mut t0 = 0usize;
+            while t0 < t {
+                let ttake = db_.min(t - t0);
+                let xtp = pad_rows(&xt[t0 * n..(t0 + ttake) * n], ttake, n, db_, nb);
+                let res = self.execute(
+                    &format!("rbf_decision_n{nb}"),
+                    vec![
+                        (svp.clone(), vec![ds_ as i64, nb as i64]),
+                        (coefp.clone(), vec![ds_ as i64]),
+                        (xtp, vec![db_ as i64, nb as i64]),
+                        (vec![gamma], vec![1]),
+                    ],
+                )?;
+                for k in 0..ttake {
+                    out[t0 + k] += res[0][k] as f64;
+                }
+                t0 += ttake;
+            }
+            s0 += stake;
+        }
+        Ok(out)
+    }
+
+    /// Linear decisions `X w` via the linear_decision artifact.
+    pub fn linear_decisions(&self, w: &[f64], xt: &[f32], n: usize) -> Result<Vec<f64>> {
+        let t = xt.len() / n;
+        let nb = self.bucket_for(n)?;
+        let db_ = self.geometry.dec_b;
+        let wp: Vec<f32> = {
+            let mut v: Vec<f32> = w.iter().map(|a| *a as f32).collect();
+            v.resize(nb, 0.0);
+            v
+        };
+        let mut out = Vec::with_capacity(t);
+        let mut t0 = 0usize;
+        while t0 < t {
+            let ttake = db_.min(t - t0);
+            let xtp = pad_rows(&xt[t0 * n..(t0 + ttake) * n], ttake, n, db_, nb);
+            let res = self.execute(
+                &format!("linear_decision_n{nb}"),
+                vec![(wp.clone(), vec![nb as i64]), (xtp, vec![db_ as i64, nb as i64])],
+            )?;
+            out.extend(res[0][..ttake].iter().map(|v| *v as f64));
+            t0 += ttake;
+        }
+        Ok(out)
+    }
+
+    /// Shut the executor down (optional; dropping all handles leaks the
+    /// thread harmlessly at process exit).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// Pad `rows x n` row-major data into `rows_pad x n_pad` (zero fill).
+fn pad_rows(x: &[f32], rows: usize, n: usize, rows_pad: usize, n_pad: usize) -> Vec<f32> {
+    debug_assert!(x.len() >= rows * n);
+    let mut out = vec![0.0f32; rows_pad * n_pad];
+    for r in 0..rows {
+        out[r * n_pad..r * n_pad + n].copy_from_slice(&x[r * n..r * n + n]);
+    }
+    out
+}
+
+fn pad_vec(v: &[f32], len: usize) -> Vec<f32> {
+    let mut out = v.to_vec();
+    out.resize(len, 0.0);
+    out
+}
+
+fn executor_thread(
+    dir: PathBuf,
+    entries: HashMap<String, Entry>,
+    rx: mpsc::Receiver<Request>,
+    init_tx: mpsc::Sender<Result<()>>,
+) {
+    let init = (|| -> Result<(xla::PjRtClient, HashMap<String, (xla::PjRtLoadedExecutable, usize)>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        let mut execs = HashMap::new();
+        for (name, entry) in &entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            execs.insert(name.clone(), (exe, entry.n_outputs));
+        }
+        Ok((client, execs))
+    })();
+    let (client, execs) = match init {
+        Ok(v) => {
+            let _ = init_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    let _client = client; // keep alive for the executables' lifetime
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Exec { name, inputs, reply } => {
+                let result = (|| -> Result<Vec<Vec<f32>>> {
+                    let (exe, n_outputs) = execs
+                        .get(&name)
+                        .with_context(|| format!("unknown artifact {name:?}"))?;
+                    let mut literals = Vec::with_capacity(inputs.len());
+                    for (data, dims) in &inputs {
+                        let lit = xla::Literal::vec1(data);
+                        let lit = if dims.len() == 1 {
+                            lit
+                        } else {
+                            lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                        };
+                        literals.push(lit);
+                    }
+                    let result = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+                    let lit = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+                    // entry points lower with return_tuple=True
+                    let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+                    anyhow::ensure!(
+                        parts.len() == *n_outputs,
+                        "artifact {name}: expected {n_outputs} outputs, got {}",
+                        parts.len()
+                    );
+                    parts
+                        .into_iter()
+                        .map(|p| p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+                        .collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// [`GradSource`] backed by the PJRT `odm_grad` artifact — the Pallas kernel
+/// on the DSVRG hot path.
+pub struct XlaGrad {
+    pub engine: XlaEngine,
+}
+
+impl GradSource for XlaGrad {
+    fn grad_sum(&self, w: &[f64], view: &DataView, params: &OdmParams) -> (Vec<f64>, f64) {
+        // Materialize the view rows (the artifact wants contiguous batches).
+        let n = view.data.cols;
+        let mut x = Vec::with_capacity(view.len() * n);
+        let mut y = Vec::with_capacity(view.len());
+        for i in 0..view.len() {
+            x.extend_from_slice(view.row(i));
+            y.push(view.label(i));
+        }
+        match self.engine.odm_grad_sum(w, &x, &y, n, params) {
+            Ok(r) => r,
+            Err(e) => {
+                // Fail loud: the artifact path is a correctness deliverable.
+                panic!("XlaGrad failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_layout() {
+        let x = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let p = pad_rows(&x, 2, 2, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&p[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&p[8..12], &[0.0; 4]);
+    }
+
+    #[test]
+    fn pad_vec_extends() {
+        assert_eq!(pad_vec(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    // Engine-level tests live in rust/tests/runtime_integration.rs (they
+    // need `make artifacts` to have run).
+}

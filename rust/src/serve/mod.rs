@@ -1,0 +1,334 @@
+//! Model serving: a request router + dynamic batcher over a trained
+//! [`OdmModel`], with the batched compute running through the PJRT
+//! artifacts (L1 Pallas kernels) when available and the rust-native path
+//! otherwise.
+//!
+//! Architecture (vLLM-router-shaped, scaled to a classifier):
+//!
+//! ```text
+//!  clients ──▶ ServerHandle::submit ──▶ bounded queue ──▶ batcher thread
+//!                                                         │  (collect up to
+//!                                                         │   max_batch or
+//!                                                         │   max_wait)
+//!                                                         ▼
+//!                                               scorer (PJRT | native)
+//!                                                         │
+//!  client ◀─── oneshot reply channel ◀────────────────────┘
+//! ```
+//!
+//! The batcher amortizes the PJRT dispatch overhead exactly the way the
+//! Pallas decision kernel wants: fixed-size (dec_b) padded tiles.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::kernel::KernelKind;
+use crate::odm::OdmModel;
+use crate::runtime::XlaEngine;
+use crate::Result;
+
+/// Scoring backend.
+pub enum Backend {
+    /// rust-native decision path.
+    Native,
+    /// PJRT artifacts (Pallas kernels).
+    Xla(XlaEngine),
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max requests per batch (defaults to the artifact decision tile).
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Bounded queue depth (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch: 256, max_wait: Duration::from_millis(2), queue_depth: 4096 }
+    }
+}
+
+/// One scoring request: feature row in, decision value out.
+struct Request {
+    x: Vec<f32>,
+    reply: SyncSender<f64>,
+    enqueued: Instant,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Total queue wait across requests, microseconds.
+    pub queue_wait_us: AtomicU64,
+    /// Total scoring time across batches, microseconds.
+    pub score_us: AtomicU64,
+    /// Rows of padding wasted by fixed-tile execution.
+    pub padded_rows: AtomicU64,
+}
+
+impl ServeMetrics {
+    /// Mean queue wait per request, milliseconds.
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed).max(1);
+        self.queue_wait_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    /// Mean batch occupancy (requests per batch).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// Handle to a running model server. Cloneable; dropping all handles stops
+/// the batcher after the queue drains.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Request>,
+    metrics: Arc<ServeMetrics>,
+    stopping: Arc<AtomicBool>,
+    cols: usize,
+}
+
+impl ServerHandle {
+    /// Submit one feature row; blocks for the decision value.
+    pub fn score(&self, x: &[f32]) -> Result<f64> {
+        anyhow::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Request { x: x.to_vec(), reply: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    /// Submit one row, returning the predicted label.
+    pub fn predict(&self, x: &[f32]) -> Result<f32> {
+        Ok(if self.score(x)? >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    /// Serving metrics snapshot access.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Ask the batcher to stop once the queue drains.
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Start a server for `model`; spawns the batcher thread.
+pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> ServerHandle {
+    let cols = match &model {
+        OdmModel::Linear { w } => w.len(),
+        OdmModel::Kernel { cols, .. } => *cols,
+    };
+    let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+    let metrics = Arc::new(ServeMetrics::default());
+    let stopping = Arc::new(AtomicBool::new(false));
+    let handle = ServerHandle {
+        tx,
+        metrics: Arc::clone(&metrics),
+        stopping: Arc::clone(&stopping),
+        cols,
+    };
+    std::thread::Builder::new()
+        .name("sodm-batcher".into())
+        .spawn(move || batcher_loop(model, backend, cfg, rx, metrics, stopping))
+        .expect("spawn batcher");
+    handle
+}
+
+fn batcher_loop(
+    model: OdmModel,
+    backend: Backend,
+    cfg: ServeConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<ServeMetrics>,
+    stopping: Arc<AtomicBool>,
+) {
+    let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        // Block for the first request (with a stop-poll timeout).
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => {
+                if stopping.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        // Fill the batch up to max_batch or max_wait.
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        score_batch(&model, &backend, &mut batch, &metrics);
+    }
+}
+
+fn score_batch(
+    model: &OdmModel,
+    backend: &Backend,
+    batch: &mut Vec<Request>,
+    metrics: &ServeMetrics,
+) {
+    let n = batch.len();
+    if n == 0 {
+        return;
+    }
+    let t0 = Instant::now();
+    for r in batch.iter() {
+        metrics
+            .queue_wait_us
+            .fetch_add(r.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+    let cols = batch[0].x.len();
+    let mut xt = Vec::with_capacity(n * cols);
+    for r in batch.iter() {
+        xt.extend_from_slice(&r.x);
+    }
+    let decisions: Vec<f64> = match backend {
+        Backend::Native => batch.iter().map(|r| model.decision(&r.x)).collect(),
+        Backend::Xla(engine) => {
+            let res = match model {
+                OdmModel::Linear { w } => engine.linear_decisions(w, &xt, cols),
+                OdmModel::Kernel { kernel, sv_x, coef, cols: mcols } => match kernel {
+                    KernelKind::Rbf { gamma } => {
+                        engine.rbf_decisions(sv_x, coef, &xt, *mcols, *gamma)
+                    }
+                    KernelKind::Linear => {
+                        Ok(batch.iter().map(|r| model.decision(&r.x)).collect())
+                    }
+                },
+            };
+            match res {
+                Ok(d) => {
+                    let tile = engine.geometry.dec_b;
+                    let padded = n.div_ceil(tile) * tile - n;
+                    metrics.padded_rows.fetch_add(padded as u64, Ordering::Relaxed);
+                    d
+                }
+                Err(e) => {
+                    eprintln!("serve: PJRT batch failed ({e:#}); native fallback");
+                    batch.iter().map(|r| model.decision(&r.x)).collect()
+                }
+            }
+        }
+    };
+    metrics.requests.fetch_add(n as u64, Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.score_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    for (r, d) in batch.drain(..).zip(decisions) {
+        let _ = r.reply.send(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::odm::{train_exact_odm, OdmParams};
+    use crate::qp::SolveBudget;
+
+    fn model() -> (OdmModel, crate::data::Dataset) {
+        let mut s = SynthSpec::named("svmguide1", 0.01, 3);
+        s.rows = 120;
+        let ds = s.generate();
+        let m = train_exact_odm(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.0 },
+            &OdmParams::default(),
+            &SolveBudget::default(),
+        );
+        (m, ds)
+    }
+
+    #[test]
+    fn native_serving_matches_direct() {
+        let (m, ds) = model();
+        let direct: Vec<f64> = (0..10).map(|i| m.decision(ds.row(i))).collect();
+        let h = serve(m, Backend::Native, ServeConfig::default());
+        for i in 0..10 {
+            let got = h.score(ds.row(i)).unwrap();
+            assert!((got - direct[i]).abs() < 1e-12);
+        }
+        h.stop();
+    }
+
+    #[test]
+    fn batcher_coalesces_concurrent_requests() {
+        let (m, ds) = model();
+        let h = serve(
+            m,
+            Backend::Native,
+            ServeConfig { max_wait: Duration::from_millis(20), ..Default::default() },
+        );
+        std::thread::scope(|s| {
+            for t in 0..16 {
+                let h = h.clone();
+                let row = ds.row(t % ds.rows).to_vec();
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        h.score(&row).unwrap();
+                    }
+                });
+            }
+        });
+        let reqs = h.metrics().requests.load(Ordering::Relaxed);
+        let batches = h.metrics().batches.load(Ordering::Relaxed);
+        assert_eq!(reqs, 128);
+        assert!(batches < reqs, "batching should coalesce: {batches} batches");
+        h.stop();
+    }
+
+    #[test]
+    fn wrong_dim_rejected() {
+        let (m, _) = model();
+        let h = serve(m, Backend::Native, ServeConfig::default());
+        assert!(h.score(&[0.0]).is_err());
+        h.stop();
+    }
+
+    #[test]
+    fn predict_sign() {
+        let h = serve(
+            OdmModel::Linear { w: vec![1.0, -1.0] },
+            Backend::Native,
+            ServeConfig::default(),
+        );
+        assert_eq!(h.predict(&[1.0, 0.0]).unwrap(), 1.0);
+        assert_eq!(h.predict(&[0.0, 1.0]).unwrap(), -1.0);
+        h.stop();
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (m, ds) = model();
+        let h = serve(m, Backend::Native, ServeConfig::default());
+        for i in 0..5 {
+            h.score(ds.row(i)).unwrap();
+        }
+        assert_eq!(h.metrics().requests.load(Ordering::Relaxed), 5);
+        assert!(h.metrics().mean_batch_size() >= 1.0);
+        h.stop();
+    }
+}

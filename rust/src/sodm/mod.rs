@@ -1,0 +1,371 @@
+//! SODM — Algorithm 1: hierarchical merge training.
+//!
+//! Start from `K = p^L` distribution-preserving partitions, solve every local
+//! ODM in parallel on the simulated cluster, then repeatedly merge groups of
+//! `p` partitions, warm-starting each larger solve with the *concatenation of
+//! the child solutions* `[α_1; …; α_p]`. Theorem 1 bounds the distance of the
+//! block-diagonal solution from the global optimum, which is why the
+//! concatenated warm start converges in a handful of sweeps; Theorem 2 is why
+//! the stratified partitions make the leaf solutions good in the first place.
+//!
+//! `levels = L, p` give the paper's schedule; with `final_exact` (default)
+//! the last merge (the whole dataset, warm-started) is solved too, which is
+//! the "all partitions are merged together" endpoint of §3.
+
+use std::time::Instant;
+
+use crate::cluster::SimCluster;
+use crate::data::{all_indices, DataView, Dataset};
+use crate::kernel::KernelKind;
+use crate::odm::{OdmModel, OdmParams};
+use crate::partition::{make_partitions, PartitionStrategy};
+use crate::qp::{solve_odm_dual, SolveBudget};
+
+/// Configuration of the hierarchical merge trainer.
+#[derive(Clone, Debug)]
+pub struct SodmConfig {
+    /// Merge arity `p` (paper: partitions merged p at a time).
+    pub p: usize,
+    /// Tree depth `L`; initial partition count is `p^L`.
+    pub levels: usize,
+    /// Stratum count `S` for the distribution-aware partitioner.
+    pub stratums: usize,
+    /// Partition strategy (SODM default: stratified RKHS; the DC baseline
+    /// swaps in kernel-k-means clusters and reuses this trainer).
+    pub strategy: PartitionStrategy,
+    /// Budget per local solve.
+    pub budget: SolveBudget,
+    /// Relative objective improvement between levels below which the run is
+    /// declared converged (early exit of Algorithm 1 line 5).
+    pub level_tol: f64,
+    /// Whether to solve the final fully-merged problem (level 0).
+    pub final_exact: bool,
+    pub seed: u64,
+}
+
+impl Default for SodmConfig {
+    fn default() -> Self {
+        Self {
+            p: 4,
+            levels: 2,
+            stratums: 8,
+            strategy: PartitionStrategy::StratifiedRkhs { stratums: 8 },
+            budget: SolveBudget::default(),
+            level_tol: 1e-3,
+            final_exact: true,
+            seed: 0x50D,
+        }
+    }
+}
+
+impl SodmConfig {
+    /// Config with `p^levels` leaves and a matching stratified partitioner.
+    pub fn with_tree(p: usize, levels: usize, stratums: usize) -> Self {
+        Self {
+            p,
+            levels,
+            stratums,
+            strategy: PartitionStrategy::StratifiedRkhs { stratums },
+            ..Default::default()
+        }
+    }
+}
+
+/// Snapshot after one level of Algorithm 1 — the "stop at different levels"
+/// points plotted in Fig. 1/3.
+pub struct LevelTrace {
+    /// Remaining tree level (L = leaves, …, 0 = fully merged).
+    pub level: usize,
+    pub n_partitions: usize,
+    /// Seconds elapsed since training started, inclusive of this level.
+    pub elapsed: f64,
+    /// Sum of local dual objectives (the block-diagonal objective, Eqn. 4).
+    pub objective: f64,
+    /// Model assembled from the concatenated local solutions at this level.
+    pub model: OdmModel,
+    /// True if every local solve converged within its budget.
+    pub all_converged: bool,
+}
+
+/// Result of a traced SODM run.
+pub struct SodmRun {
+    pub model: OdmModel,
+    pub trace: Vec<LevelTrace>,
+    pub total_seconds: f64,
+    /// True if the level loop exited before the final merge because the
+    /// block-diagonal objective stopped improving.
+    pub converged_early: bool,
+}
+
+/// Train SODM and return the final model (see [`train_sodm_traced`]).
+pub fn train_sodm(
+    data: &Dataset,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    cfg: &SodmConfig,
+    cluster: Option<&SimCluster>,
+) -> OdmModel {
+    train_sodm_traced(data, kernel, params, cfg, cluster).model
+}
+
+/// Train SODM with a per-level trace (Algorithm 1).
+pub fn train_sodm_traced(
+    data: &Dataset,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    cfg: &SodmConfig,
+    cluster: Option<&SimCluster>,
+) -> SodmRun {
+    assert!(cfg.p >= 2, "merge arity p must be >= 2");
+    let local_cluster;
+    let cluster = match cluster {
+        Some(c) => c,
+        None => {
+            local_cluster = SimCluster::local();
+            &local_cluster
+        }
+    };
+    let t0 = Instant::now();
+    let all_idx = all_indices(data);
+    let view = DataView::new(data, &all_idx);
+
+    // Cap the tree depth so leaves keep a workable size.
+    let mut k = cfg.p.pow(cfg.levels as u32);
+    while k > 1 && data.rows / k < 2 * cfg.p {
+        k /= cfg.p;
+    }
+    let mut partitions = if k <= 1 {
+        vec![all_idx.clone()]
+    } else {
+        make_partitions(&view, kernel, k, cfg.strategy, cfg.seed, cluster.workers)
+    };
+    // Leaf solves start cold (Algorithm 1 line 3).
+    let mut alphas: Vec<Option<Vec<f64>>> = vec![None; partitions.len()];
+
+    let mut trace: Vec<LevelTrace> = Vec::new();
+    let mut prev_objective = f64::INFINITY;
+    let mut converged_early = false;
+    let mut level = (partitions.len() as f64).log(cfg.p as f64).round() as usize;
+
+    loop {
+        let n_parts = partitions.len();
+        // --- parallel local solves (Algorithm 1 lines 8-9) ---
+        let solutions = cluster.map_partitions(n_parts, |pi| {
+            let idx = &partitions[pi];
+            let pview = DataView::new(data, idx);
+            let warm = alphas[pi].as_deref();
+            let budget = SolveBudget { seed: cfg.budget.seed ^ (pi as u64) << 3, ..cfg.budget };
+            solve_odm_dual(&pview, kernel, params, warm, &budget)
+        });
+        // Leaders gather the local α (comm accounting: one f64 per dual var).
+        for (idx, sol) in partitions.iter().zip(&solutions) {
+            let _ = idx;
+            cluster.send(sol.zeta.len() * 16);
+        }
+
+        let objective: f64 = solutions.iter().map(|s| s.stats.objective).sum();
+        let all_converged = solutions.iter().all(|s| s.stats.converged);
+
+        // Model snapshot: concatenated local solutions over all partitions.
+        let concat_idx: Vec<usize> = partitions.iter().flatten().copied().collect();
+        let concat_gamma: Vec<f64> =
+            solutions.iter().flat_map(|s| s.gamma()).collect();
+        let snap_view = DataView::new(data, &concat_idx);
+        let model = OdmModel::from_dual(&snap_view, kernel, &concat_gamma);
+        trace.push(LevelTrace {
+            level,
+            n_partitions: n_parts,
+            elapsed: t0.elapsed().as_secs_f64(),
+            objective,
+            model,
+            all_converged,
+        });
+
+        if n_parts == 1 {
+            break; // fully merged and solved
+        }
+        // Early exit (Algorithm 1 line 5): block-diagonal objective stopped
+        // improving between levels.
+        if prev_objective.is_finite() {
+            let denom = 1.0 + prev_objective.abs();
+            if (prev_objective - objective).abs() / denom < cfg.level_tol {
+                converged_early = true;
+                break;
+            }
+        }
+        prev_objective = objective;
+
+        // --- merge p children into each parent (lines 10-12) ---
+        let n_parents = n_parts.div_ceil(cfg.p);
+        if n_parents == 1 && !cfg.final_exact {
+            break;
+        }
+        let mut new_parts: Vec<Vec<usize>> = Vec::with_capacity(n_parents);
+        let mut new_alphas: Vec<Option<Vec<f64>>> = Vec::with_capacity(n_parents);
+        for g in 0..n_parents {
+            let lo = g * cfg.p;
+            let hi = ((g + 1) * cfg.p).min(n_parts);
+            let mut idx = Vec::new();
+            let mut zeta = Vec::new();
+            let mut beta = Vec::new();
+            for kk in lo..hi {
+                idx.extend_from_slice(&partitions[kk]);
+                zeta.extend_from_slice(&solutions[kk].zeta);
+                beta.extend_from_slice(&solutions[kk].beta);
+            }
+            // α_{k/p} = [α_{k-p+1}; …; α_k] (line 12) — stacked [ζ; β].
+            let mut alpha = zeta;
+            alpha.extend_from_slice(&beta);
+            new_parts.push(idx);
+            new_alphas.push(Some(alpha));
+        }
+        partitions = new_parts;
+        alphas = new_alphas;
+        level = level.saturating_sub(1);
+    }
+
+    let total_seconds = t0.elapsed().as_secs_f64();
+    let model = match trace.last() {
+        Some(t) => t.model.clone(),
+        None => unreachable!("at least one level always runs"),
+    };
+    // Re-clone for the run (trace keeps its own snapshots).
+    SodmRun { model, trace, total_seconds, converged_early }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::odm::train_exact_odm;
+
+    fn fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn sodm_trains_and_predicts_reasonably() {
+        let ds = fixture(400, 3);
+        let (train, test) = ds.split(0.8, 5);
+        let k = KernelKind::Rbf { gamma: 2.0 };
+        let run = train_sodm_traced(
+            &train,
+            &k,
+            &OdmParams::default(),
+            &SodmConfig::with_tree(2, 2, 6),
+            None,
+        );
+        let acc = run.model.accuracy(&test);
+        assert!(acc > 0.85, "accuracy {acc}");
+        assert!(!run.trace.is_empty());
+    }
+
+    #[test]
+    fn trace_levels_shrink_partitions() {
+        let ds = fixture(300, 7);
+        let run = train_sodm_traced(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.0 },
+            &OdmParams::default(),
+            &SodmConfig::with_tree(2, 3, 4),
+            None,
+        );
+        let counts: Vec<usize> = run.trace.iter().map(|t| t.n_partitions).collect();
+        for w in counts.windows(2) {
+            assert!(w[1] < w[0], "partition counts must shrink: {counts:?}");
+        }
+        assert_eq!(*counts.first().unwrap(), 8);
+    }
+
+    #[test]
+    fn sodm_objective_improves_down_the_tree() {
+        // The block-diagonal objective (Eqn. 4) approaches the global dual
+        // optimum as partitions merge (Theorem 1) — and the final level IS
+        // the global problem, so its objective must be <= any leaf sum + gap.
+        let ds = fixture(240, 11);
+        let run = train_sodm_traced(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.5 },
+            &OdmParams::default(),
+            &SodmConfig {
+                level_tol: 0.0, // force full merge
+                ..SodmConfig::with_tree(2, 2, 4)
+            },
+            None,
+        );
+        assert_eq!(run.trace.last().unwrap().n_partitions, 1);
+    }
+
+    #[test]
+    fn sodm_matches_exact_odm_accuracy() {
+        let ds = fixture(400, 13);
+        let (train, test) = ds.split(0.8, 2);
+        let k = KernelKind::Rbf { gamma: 2.0 };
+        let p = OdmParams::default();
+        let exact = train_exact_odm(&train, &k, &p, &SolveBudget::default());
+        let sodm = train_sodm(&train, &k, &p, &SodmConfig::with_tree(2, 2, 6), None);
+        let (ae, asod) = (exact.accuracy(&test), sodm.accuracy(&test));
+        assert!(
+            asod >= ae - 0.05,
+            "SODM must be within 5pp of exact ODM: exact {ae}, sodm {asod}"
+        );
+    }
+
+    #[test]
+    fn final_level_objective_close_to_exact_dual() {
+        // When fully merged, the last solve IS the global ODM dual; its
+        // objective must essentially equal the direct solve's.
+        let ds = fixture(150, 17);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let p = OdmParams::default();
+        let budget = SolveBudget { eps: 1e-5, max_sweeps: 500, ..Default::default() };
+        let run = train_sodm_traced(
+            &ds,
+            &k,
+            &p,
+            &SodmConfig {
+                level_tol: 0.0,
+                budget,
+                ..SodmConfig::with_tree(2, 1, 4)
+            },
+            None,
+        );
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let direct = solve_odm_dual(&view, &k, &p, None, &budget);
+        let merged = run.trace.last().unwrap().objective;
+        let rel = (merged - direct.stats.objective).abs()
+            / (1.0 + direct.stats.objective.abs());
+        assert!(rel < 1e-3, "merged {merged} vs direct {}", direct.stats.objective);
+    }
+
+    #[test]
+    fn tiny_dataset_degenerates_to_single_solve() {
+        let ds = fixture(64, 19);
+        let run = train_sodm_traced(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.0 },
+            &OdmParams::default(),
+            &SodmConfig::with_tree(4, 3, 4),
+            None,
+        );
+        // 64 rows cannot sustain 64 partitions of >= 2p rows; depth is capped.
+        assert!(run.trace[0].n_partitions <= 16);
+    }
+
+    #[test]
+    fn linear_kernel_supported_end_to_end() {
+        let ds = fixture(300, 23);
+        let (train, test) = ds.split(0.8, 3);
+        let model = train_sodm(
+            &train,
+            &KernelKind::Linear,
+            &OdmParams::default(),
+            &SodmConfig::with_tree(2, 2, 4),
+            None,
+        );
+        assert!(model.accuracy(&test) > 0.8);
+    }
+}

@@ -1,0 +1,393 @@
+//! Minimal JSON parser + writer (offline replacement for serde_json).
+//!
+//! Supports the full JSON grammar minus exotic number forms; used for the
+//! AOT artifact manifest, model (de)serialization, and experiment result
+//! emission. Not performance-critical.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+/// A JSON value. Objects use BTreeMap for deterministic serialization.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).with_context(|| format!("missing key {key:?}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    /// Array of f64 from a numeric JSON array.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// Compact serialization.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors.
+pub fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+pub fn jstr(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+pub fn jarr_f64(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().context("unexpected end of input")
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        let n: f64 = s.parse().with_context(|| format!("bad number {s:?}"))?;
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        if self.peek()? != b'"' {
+            bail!("expected string at {}", self.i);
+        }
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.b.get(self.i..self.i + 4).context("truncated \\u")?,
+                            )?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at {}", self.i),
+                    }
+                }
+                c => {
+                    // collect the full UTF-8 sequence
+                    let len = utf8_len(c);
+                    if len == 1 {
+                        out.push(c as char);
+                    } else {
+                        let bytes = self
+                            .b
+                            .get(self.i - 1..self.i - 1 + len)
+                            .context("truncated utf8")?;
+                        out.push_str(std::str::from_utf8(bytes)?);
+                        self.i += len - 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.i += 1; // [
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected , or ] got {:?}", c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.i += 1; // {
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            if self.peek()? != b':' {
+                bail!("expected : at {}", self.i);
+            }
+            self.i += 1;
+            let v = self.value()?;
+            map.insert(key, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => bail!("expected , or }} got {:?}", c as char),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-2.5e2").unwrap(), Json::Num(-250.0));
+        assert_eq!(Json::parse("\"hi\\nthere\"").unwrap(), Json::Str("hi\nthere".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        assert_eq!(j.req("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.req("a").unwrap().as_arr().unwrap()[2].req("b").unwrap().as_str().unwrap(),
+            "c"
+        );
+    }
+
+    #[test]
+    fn round_trip() {
+        let src = r#"{"arr":[1,2.5,true,null,"s"],"num":7,"obj":{"k":"v"}}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let j = Json::Str("a\"b\\c\nd\te\u{1}".into());
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let j = Json::parse("\"héllo ∀\"").unwrap();
+        assert_eq!(j, Json::Str("héllo ∀".into()));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let j = Json::parse(r#"{"n": 3, "s": "x", "v": [1.0, 2.0]}"#).unwrap();
+        assert_eq!(j.req("n").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("v").unwrap().as_f64_vec().unwrap(), vec![1.0, 2.0]);
+        assert!(j.req("s").unwrap().as_f64().is_err());
+        assert!(j.req("missing").is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! In-crate utility substrate: deterministic RNG, a minimal JSON
+//! parser/writer, a work-stealing-free but effective scoped thread pool, and
+//! bench timing helpers.
+//!
+//! The build environment is offline, so the usual ecosystem crates (rand,
+//! serde, rayon, clap, criterion) are replaced by these small, fully-tested
+//! implementations. Everything here is deterministic and dependency-free.
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure wall-clock seconds of a closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple statistics over repeated timings (bench harness helper).
+#[derive(Clone, Debug, Default)]
+pub struct TimingStats {
+    pub samples: Vec<f64>,
+}
+
+impl TimingStats {
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+}
+
+/// Run `f` `iters` times after `warmup` warmups; returns stats.
+/// The in-crate replacement for the criterion harness (offline build).
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> TimingStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = TimingStats::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        stats.record(t0.elapsed().as_secs_f64());
+    }
+    stats
+}
+
+/// Unique temp directory under the system temp dir (tempfile replacement).
+/// The directory is NOT auto-deleted; tests clean up explicitly or rely on
+/// the OS temp reaper.
+pub fn temp_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let pid = std::process::id();
+    let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!("sodm-{tag}-{pid}-{c}-{nanos}"));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats_basic() {
+        let mut s = TimingStats::default();
+        s.record(1.0);
+        s.record(3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.stddev() - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut n = 0;
+        let stats = bench_loop(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.samples.len(), 5);
+    }
+
+    #[test]
+    fn temp_dirs_are_unique() {
+        let a = temp_dir("t");
+        let b = temp_dir("t");
+        assert_ne!(a, b);
+        std::fs::remove_dir_all(a).ok();
+        std::fs::remove_dir_all(b).ok();
+    }
+}

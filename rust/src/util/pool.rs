@@ -1,0 +1,186 @@
+//! Scoped worker pool (offline replacement for rayon).
+//!
+//! `parallel_map` executes a task per item on at most `workers` OS threads
+//! with dynamic (atomic-counter) scheduling; `parallel_chunks` splits an
+//! output slice into contiguous chunks, one logical task each. Both are the
+//! substrate the simulated cluster ([`crate::cluster`]) schedules on, so the
+//! Fig-2 core-count sweep controls exactly this `workers` knob.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of available CPUs (fallback 4).
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every item index `0..n`, collecting results in order, using
+/// at most `workers` threads. `f` must be `Sync`; items are claimed from an
+/// atomic counter so imbalanced tasks still pack well.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+    // Claim indices; write through the mutex only briefly per item.
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // Safety of design: each i visited once; short critical section.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("task completed")).collect()
+}
+
+/// Fill `out` by applying `f(start, chunk)` over contiguous chunks of
+/// roughly equal size on `workers` threads. Zero-copy output writes: each
+/// worker owns a disjoint `&mut` chunk (safe split).
+pub fn parallel_chunks<T, F>(out: &mut [T], workers: usize, chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let workers = workers.clamp(1, n.div_ceil(chunk));
+    if workers == 1 {
+        let mut start = 0;
+        let mut rest = out;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            f(start, head);
+            start += take;
+            rest = tail;
+        }
+        return;
+    }
+    // Pre-split into chunk descriptors, workers claim by atomic counter.
+    let mut pieces: Vec<(usize, &mut [T])> = Vec::new();
+    {
+        let mut start = 0;
+        let mut rest = out;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            pieces.push((start, head));
+            start += take;
+            rest = tail;
+        }
+    }
+    let claimed = AtomicUsize::new(0);
+    let pieces_cells: Vec<Mutex<Option<(usize, &mut [T])>>> =
+        pieces.into_iter().map(|p| Mutex::new(Some(p))).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = claimed.fetch_add(1, Ordering::Relaxed);
+                if i >= pieces_cells.len() {
+                    break;
+                }
+                if let Some((start, slice)) = pieces_cells[i].lock().unwrap().take() {
+                    f(start, slice);
+                }
+            });
+        }
+    });
+}
+
+/// Sum of `f(i)` over `0..n` computed in parallel (used for reductions like
+/// full gradients and accuracies).
+pub fn parallel_sum_f64<F>(n: usize, workers: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if n == 0 {
+        return 0.0;
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return (0..n).map(f).sum();
+    }
+    let partials = parallel_map(workers, workers, |w| {
+        let lo = n * w / workers;
+        let hi = n * (w + 1) / workers;
+        (lo..hi).map(&f).sum::<f64>()
+    });
+    partials.into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_worker() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut out = vec![0usize; 103];
+        parallel_chunks(&mut out, 4, 10, |start, slice| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = start + k;
+            }
+        });
+        assert_eq!(out, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_single_worker_path() {
+        let mut out = vec![0usize; 7];
+        parallel_chunks(&mut out, 1, 3, |start, slice| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = 10 * (start + k);
+            }
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn sum_matches_serial() {
+        let serial: f64 = (0..1000).map(|i| (i as f64).sqrt()).sum();
+        let par = parallel_sum_f64(1000, 6, |i| (i as f64).sqrt());
+        assert!((serial - par).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! Property-based tests (in-crate harness: deterministic Pcg32 case
+//! generation, many random cases per property — the offline stand-in for
+//! proptest; failures print the offending case seed).
+
+use sodm::data::{all_indices, synth::SynthSpec, DataView, Dataset};
+use sodm::kernel::{signed_row, KernelKind};
+use sodm::odm::{OdmModel, OdmParams};
+use sodm::partition::{make_partitions, partitions_valid, PartitionStrategy};
+use sodm::qp::{solve_odm_dual, solve_svm_dual, SolveBudget};
+use sodm::util::json::Json;
+use sodm::util::rng::Pcg32;
+
+fn random_dataset(rng: &mut Pcg32, rows: usize, cols: usize) -> Dataset {
+    let mut x = Vec::with_capacity(rows * cols);
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        for _ in 0..cols {
+            x.push(rng.next_f32());
+        }
+        y.push(if rng.gen_bool(0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset::new("prop", x, y, cols)
+}
+
+#[test]
+fn prop_partitions_always_valid() {
+    // Any strategy, any (k, rows, cols) in range: disjoint cover, non-empty.
+    let mut rng = Pcg32::seeded(0xA11);
+    for case in 0..25 {
+        let rows = 24 + rng.gen_range(200);
+        let cols = 2 + rng.gen_range(10);
+        let k = 2 + rng.gen_range(5.min(rows / 4));
+        let ds = random_dataset(&mut rng, rows, cols);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let strategy = match rng.gen_range(4) {
+            0 => PartitionStrategy::Random,
+            1 => PartitionStrategy::StratifiedRkhs { stratums: 2 + rng.gen_range(8) },
+            2 => PartitionStrategy::KmeansProportional { clusters: 2 + rng.gen_range(6) },
+            _ => PartitionStrategy::KernelKmeansClusters { embed_dim: 2 + rng.gen_range(8) },
+        };
+        let kernel = if rng.gen_bool(0.5) {
+            KernelKind::Linear
+        } else {
+            KernelKind::Rbf { gamma: 0.1 + rng.next_f32() * 3.0 }
+        };
+        let parts = make_partitions(&view, &kernel, k, strategy, case as u64, 1);
+        assert!(
+            partitions_valid(&view, &parts),
+            "case {case}: invalid partition rows={rows} k={k} {strategy:?}"
+        );
+        assert_eq!(parts.len(), k, "case {case}");
+    }
+}
+
+#[test]
+fn prop_odm_dcd_kkt_and_feasibility() {
+    // Random data + random hyperparameters: the solver must return a
+    // feasible point whose projected-gradient violation meets eps whenever
+    // it reports convergence, and whose objective is below the zero point.
+    let mut rng = Pcg32::seeded(0xB22);
+    for case in 0..15 {
+        let rows = 20 + rng.gen_range(80);
+        let cols = 2 + rng.gen_range(6);
+        let ds = random_dataset(&mut rng, rows, cols);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let params = OdmParams {
+            lambda: 0.5 + rng.next_f32() * 32.0,
+            theta: rng.next_f32() * 0.8,
+            upsilon: 0.1 + rng.next_f32() * 0.9,
+        };
+        let kernel = if rng.gen_bool(0.5) {
+            KernelKind::Linear
+        } else {
+            KernelKind::Rbf { gamma: 0.1 + rng.next_f32() * 2.0 }
+        };
+        let budget = SolveBudget { eps: 1e-4, max_sweeps: 2000, ..Default::default() };
+        let sol = solve_odm_dual(&view, &kernel, &params, None, &budget);
+        assert!(sol.zeta.iter().all(|v| *v >= 0.0), "case {case}: ζ infeasible");
+        assert!(sol.beta.iter().all(|v| *v >= 0.0), "case {case}: β infeasible");
+        if sol.stats.converged {
+            assert!(
+                sol.stats.max_violation < 1e-4,
+                "case {case}: converged but violation {}",
+                sol.stats.max_violation
+            );
+        }
+        // d(0,0) = 0; any descent step from 0 gives a strictly lower value.
+        assert!(sol.stats.objective <= 1e-9, "case {case}: objective {}", sol.stats.objective);
+    }
+}
+
+#[test]
+fn prop_warm_start_never_hurts_objective() {
+    let mut rng = Pcg32::seeded(0xC33);
+    for case in 0..10 {
+        let rows = 30 + rng.gen_range(60);
+        let ds = random_dataset(&mut rng, rows, 4);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let params = OdmParams::default();
+        let kernel = KernelKind::Rbf { gamma: 1.0 };
+        let short = SolveBudget { max_sweeps: 3, ..Default::default() };
+        let partial = solve_odm_dual(&view, &kernel, &params, None, &short);
+        let warm = solve_odm_dual(&view, &kernel, &params, Some(&partial.alpha()), &short);
+        assert!(
+            warm.stats.objective <= partial.stats.objective + 1e-9,
+            "case {case}: warm {} > cold {}",
+            warm.stats.objective,
+            partial.stats.objective
+        );
+    }
+}
+
+#[test]
+fn prop_svm_box_constraints_hold() {
+    let mut rng = Pcg32::seeded(0xD44);
+    for case in 0..10 {
+        let rows = 20 + rng.gen_range(60);
+        let ds = random_dataset(&mut rng, rows, 3);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let c = (0.1 + rng.next_f64() * 10.0).round() / 10.0 + 0.1;
+        let kernel = KernelKind::Rbf { gamma: 0.5 + rng.next_f32() };
+        let sol = solve_svm_dual(&view, &kernel, c, None, &SolveBudget::default());
+        assert!(
+            sol.gamma.iter().all(|g| (-1e-12..=c + 1e-12).contains(g)),
+            "case {case}: box violated (C={c})"
+        );
+    }
+}
+
+#[test]
+fn prop_gram_row_symmetry_and_sign() {
+    // Q_ij == Q_ji and sign(Q_ij) == y_i y_j sign(k) for random data.
+    let mut rng = Pcg32::seeded(0xE55);
+    for case in 0..10 {
+        let rows = 10 + rng.gen_range(30);
+        let cols = 1 + rng.gen_range(8);
+        let ds = random_dataset(&mut rng, rows, cols);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let kernel = KernelKind::Rbf { gamma: 0.3 + rng.next_f32() };
+        let i = rng.gen_range(rows);
+        let j = rng.gen_range(rows);
+        let mut ri = vec![0.0f32; rows];
+        let mut rj = vec![0.0f32; rows];
+        signed_row(&view, &kernel, i, &mut ri);
+        signed_row(&view, &kernel, j, &mut rj);
+        assert!((ri[j] - rj[i]).abs() < 1e-6, "case {case}: asymmetry");
+        let expected_sign = ds.y[i] * ds.y[j];
+        assert!(
+            ri[j] * expected_sign >= 0.0,
+            "case {case}: sign violated (rbf kernel values are positive)"
+        );
+    }
+}
+
+#[test]
+fn prop_model_json_round_trip() {
+    let mut rng = Pcg32::seeded(0xF66);
+    for case in 0..10 {
+        let n = 1 + rng.gen_range(20);
+        let model = if rng.gen_bool(0.5) {
+            OdmModel::Linear {
+                w: (0..n).map(|_| (rng.next_f64() - 0.5) * 10.0).collect(),
+            }
+        } else {
+            let svs = 1 + rng.gen_range(10);
+            OdmModel::Kernel {
+                kernel: KernelKind::Rbf { gamma: rng.next_f32() + 0.01 },
+                sv_x: (0..svs * n).map(|_| rng.next_f32()).collect(),
+                coef: (0..svs).map(|_| (rng.next_f64() - 0.5) * 4.0).collect(),
+                cols: n,
+            }
+        };
+        let j = model.to_json().to_string();
+        let back = OdmModel::from_json(&Json::parse(&j).unwrap()).unwrap();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let (a, b) = (model.decision(&x), back.decision(&x));
+        assert!(
+            (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+            "case {case}: decision drift {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn prop_split_preserves_all_rows() {
+    let mut rng = Pcg32::seeded(0x077);
+    for case in 0..10 {
+        let rows = 10 + rng.gen_range(200);
+        let ds = random_dataset(&mut rng, rows, 3);
+        let frac = 0.3 + rng.next_f64() * 0.6;
+        let (tr, te) = ds.split(frac, case as u64);
+        assert_eq!(tr.rows + te.rows, rows, "case {case}");
+        assert!(tr.rows >= 1 && te.rows >= 1, "case {case}");
+    }
+}
+
+#[test]
+fn prop_synth_profiles_generate_consistently() {
+    let mut rng = Pcg32::seeded(0x188);
+    for _ in 0..8 {
+        let names = ["svmguide1", "phishing", "cod-rna", "SUSY"];
+        let name = names[rng.gen_range(names.len())];
+        let scale = 0.005 + rng.next_f64() * 0.02;
+        let seed = rng.next_u64();
+        let a = SynthSpec::named(name, scale, seed).generate();
+        let b = SynthSpec::named(name, scale, seed).generate();
+        assert_eq!(a.x, b.x);
+        assert!(a.x.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert!(a.rows >= 64);
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT runtime integration: the AOT Pallas artifacts must agree with the
+//! rust-native compute to f32 tolerance. Requires `make artifacts` (tests
+//! are skipped with a notice when the manifest is absent).
+
+use sodm::data::{all_indices, synth::SynthSpec, DataView};
+use sodm::kernel::{signed_row, KernelKind};
+use sodm::odm::{OdmModel, OdmParams};
+use sodm::runtime::{XlaEngine, XlaGrad};
+use sodm::svrg::{grad_sum_native, train_dsvrg, GradSource, NativeGrad, SvrgConfig};
+
+fn engine() -> Option<XlaEngine> {
+    let e = XlaEngine::load_default();
+    if e.is_none() {
+        eprintln!("SKIP: artifacts/manifest.json not found — run `make artifacts`");
+    }
+    e
+}
+
+fn fixture(rows: usize, name: &str) -> sodm::data::Dataset {
+    let mut s = SynthSpec::named(name, 0.01, 77);
+    s.rows = rows;
+    s.generate()
+}
+
+#[test]
+fn gram_block_matches_native() {
+    let Some(engine) = engine() else { return };
+    let ds = fixture(200, "phishing");
+    let idx = all_indices(&ds);
+    let view = DataView::new(&ds, &idx);
+    let gamma = 0.8f32;
+    let kernel = KernelKind::Rbf { gamma };
+    // native rows
+    let mut native = vec![0.0f32; 200 * 200];
+    for i in 0..200 {
+        let row = &mut native[i * 200..(i + 1) * 200];
+        signed_row(&view, &kernel, i, row);
+    }
+    // artifact block (200x200 fits one 256x256 tile)
+    let block = engine
+        .rbf_gram_block(&ds.x, &ds.y, &ds.x, &ds.y, ds.cols, gamma)
+        .expect("gram artifact");
+    assert_eq!(block.len(), 200 * 200);
+    let mut worst = 0.0f32;
+    for (a, b) in block.iter().zip(&native) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 2e-4, "gram mismatch {worst}");
+}
+
+#[test]
+fn odm_grad_artifact_matches_native() {
+    let Some(engine) = engine() else { return };
+    let ds = fixture(1500, "cod-rna"); // > grad_b forces multi-batch looping
+    let idx = all_indices(&ds);
+    let view = DataView::new(&ds, &idx);
+    let params = OdmParams { lambda: 32.0, theta: 0.25, upsilon: 0.5 };
+    let mut w = vec![0.0f64; ds.cols];
+    for (j, wj) in w.iter_mut().enumerate() {
+        *wj = ((j as f64) * 0.37).sin() * 0.5;
+    }
+    let (g_native, l_native) = grad_sum_native(&w, &view, &params, 1);
+    let xg = XlaGrad { engine };
+    let (g_xla, l_xla) = xg.grad_sum(&w, &view, &params);
+    assert_eq!(g_native.len(), g_xla.len());
+    for (a, b) in g_native.iter().zip(&g_xla) {
+        assert!(
+            (a - b).abs() < 1e-2 * (1.0 + a.abs()),
+            "grad mismatch {a} vs {b}"
+        );
+    }
+    assert!(
+        (l_native - l_xla).abs() < 1e-2 * (1.0 + l_native.abs()),
+        "loss mismatch {l_native} vs {l_xla}"
+    );
+}
+
+#[test]
+fn rbf_decisions_match_model() {
+    let Some(engine) = engine() else { return };
+    let ds = fixture(300, "svmguide1");
+    let (train, test) = ds.split(0.8, 1);
+    let kernel = KernelKind::Rbf { gamma: 1.2 };
+    let model = sodm::odm::train_exact_odm(
+        &train,
+        &kernel,
+        &OdmParams::default(),
+        &Default::default(),
+    );
+    let OdmModel::Kernel { sv_x, coef, cols, .. } = &model else { panic!() };
+    let got = engine
+        .rbf_decisions(sv_x, coef, &test.x, *cols, 1.2)
+        .expect("decision artifact");
+    let want = model.decisions(&test);
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn linear_decisions_match() {
+    let Some(engine) = engine() else { return };
+    let ds = fixture(300, "svmguide1");
+    let w: Vec<f64> = (0..ds.cols).map(|j| (j as f64 + 1.0) * 0.3).collect();
+    let got = engine.linear_decisions(&w, &ds.x, ds.cols).expect("linear artifact");
+    for (i, g) in got.iter().enumerate() {
+        let want: f64 = w.iter().zip(ds.row(i)).map(|(a, b)| a * *b as f64).sum();
+        assert!((g - want).abs() < 1e-3 * (1.0 + want.abs()), "{g} vs {want}");
+    }
+}
+
+#[test]
+fn dsvrg_with_xla_grad_matches_native_grad() {
+    // The full Algorithm 2 run with the Pallas artifact as the gradient
+    // source must land at (numerically) the same model as the native run.
+    let Some(engine) = engine() else { return };
+    let ds = fixture(800, "svmguide1");
+    let params = OdmParams::default();
+    let cfg = SvrgConfig { epochs: 2, partitions: 4, ..Default::default() };
+    let native = train_dsvrg(&ds, &params, &cfg, None, &NativeGrad { workers: 1 });
+    let xla = train_dsvrg(&ds, &params, &cfg, None, &XlaGrad { engine });
+    let (OdmModel::Linear { w: wn }, OdmModel::Linear { w: wx }) = (&native.model, &xla.model)
+    else {
+        panic!()
+    };
+    let mut worst = 0.0f64;
+    for (a, b) in wn.iter().zip(wx) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 1e-2, "DSVRG weight divergence {worst}");
+    assert_eq!(native.checkpoints.len(), xla.checkpoints.len());
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let Some(engine) = engine() else { return };
+    let err = engine.execute("no_such_artifact", vec![]).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown artifact"));
+}
+
+#[test]
+fn oversized_gram_request_rejected() {
+    let Some(engine) = engine() else { return };
+    let ds = fixture(300, "svmguide1"); // 300 > 256 tile
+    let err = engine
+        .rbf_gram_block(&ds.x, &ds.y, &ds.x, &ds.y, ds.cols, 0.5)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("exceeds"));
+}

@@ -1,0 +1,195 @@
+//! Numerical verification of the paper's theory on small random instances:
+//!
+//! * Theorem 1 (Eqns. 5-6): the block-diagonal dual optimum is within
+//!   `U²(Q + M(M-m)c)` of the global optimum in objective, and within
+//!   `U²(Q + M(M-m)c)/(Mcυ)` in squared distance.
+//! * Theorem 2's premise: the stratified partitioner's per-partition
+//!   objective gap shrinks as the landmark principal angle grows.
+
+use sodm::data::{all_indices, synth::SynthSpec, DataView, Dataset};
+use sodm::kernel::{signed_row, KernelKind};
+use sodm::odm::OdmParams;
+use sodm::partition::{make_partitions, PartitionStrategy};
+use sodm::qp::{odm_dual_objective, solve_odm_dual, SolveBudget};
+
+fn fixture(rows: usize, seed: u64) -> Dataset {
+    let mut s = SynthSpec::named("svmguide1", 0.01, seed);
+    s.rows = rows;
+    s.generate()
+}
+
+/// Solve global + per-partition duals; return
+/// (global objective, d(ζ̃*, β̃*), ‖α̃*-α*‖², U, Q_offblock, m).
+fn theorem1_quantities(
+    ds: &Dataset,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    k: usize,
+    seed: u64,
+) -> (f64, f64, f64, f64, f64, usize) {
+    let idx = all_indices(ds);
+    let view = DataView::new(ds, &idx);
+    let budget = SolveBudget { eps: 1e-6, max_sweeps: 3000, ..Default::default() };
+    let global = solve_odm_dual(&view, kernel, params, None, &budget);
+
+    let parts = make_partitions(&view, kernel, k, PartitionStrategy::Random, seed, 1);
+    let mut zeta = Vec::new();
+    let mut beta = Vec::new();
+    let mut concat_idx = Vec::new();
+    for p in &parts {
+        let pv = DataView::new(ds, p);
+        let sol = solve_odm_dual(&pv, kernel, params, None, &budget);
+        zeta.extend(sol.zeta);
+        beta.extend(sol.beta);
+        concat_idx.extend_from_slice(p);
+    }
+    // Evaluate the concatenated block-diagonal solution under the TRUE dual.
+    let cview = DataView::new(ds, &concat_idx);
+    let d_tilde = odm_dual_objective(&cview, kernel, params, &zeta, &beta);
+
+    // ‖α̃* − α*‖²: re-solve global in the SAME row order as cview.
+    let global_c = solve_odm_dual(&cview, kernel, params, None, &budget);
+    let mut dist2 = 0.0;
+    for i in 0..zeta.len() {
+        let dz = zeta[i] - global_c.zeta[i];
+        let db = beta[i] - global_c.beta[i];
+        dist2 += dz * dz + db * db;
+    }
+    let u = zeta
+        .iter()
+        .chain(beta.iter())
+        .chain(global_c.zeta.iter())
+        .chain(global_c.beta.iter())
+        .fold(0.0f64, |acc, v| acc.max(v.abs()));
+
+    // Q = sum of |Q_ij| over cross-partition pairs (in cview order, the
+    // blocks are contiguous).
+    let m = cview.len();
+    let mut part_of = vec![0usize; m];
+    {
+        let mut ofs = 0;
+        for (pi, p) in parts.iter().enumerate() {
+            for j in 0..p.len() {
+                part_of[ofs + j] = pi;
+            }
+            ofs += p.len();
+        }
+    }
+    let mut q_off = 0.0f64;
+    let mut row = vec![0.0f32; m];
+    for i in 0..m {
+        signed_row(&cview, kernel, i, &mut row);
+        for j in 0..m {
+            if part_of[i] != part_of[j] {
+                q_off += row[j].abs() as f64;
+            }
+        }
+    }
+    (global.stats.objective, d_tilde, dist2, u, q_off, parts[0].len())
+}
+
+#[test]
+fn theorem1_objective_gap_within_bound() {
+    for seed in [1u64, 2, 3] {
+        let ds = fixture(48, seed);
+        let params = OdmParams { lambda: 8.0, theta: 0.3, upsilon: 0.5 };
+        let kernel = KernelKind::Rbf { gamma: 1.0 };
+        let (d_star, d_tilde, _dist2, u, q_off, m_part) =
+            theorem1_quantities(&ds, &kernel, &params, 4, seed);
+        let gap = d_tilde - d_star;
+        // LHS of Eqn. (5): gap >= 0 (optimality of the global solution)
+        assert!(gap >= -1e-6, "seed {seed}: negative gap {gap}");
+        // RHS of Eqn. (5)
+        let m_total = ds.rows as f64;
+        let c = params.c();
+        let bound = u * u * (q_off + m_total * (m_total - m_part as f64) * c);
+        assert!(
+            gap <= bound + 1e-6,
+            "seed {seed}: gap {gap} exceeds Theorem-1 bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn theorem1_distance_within_bound() {
+    for seed in [5u64, 8] {
+        let ds = fixture(40, seed);
+        let params = OdmParams { lambda: 4.0, theta: 0.2, upsilon: 0.8 };
+        let kernel = KernelKind::Rbf { gamma: 0.7 };
+        let (_d_star, d_tilde, dist2, u, q_off, m_part) =
+            theorem1_quantities(&ds, &kernel, &params, 4, seed);
+        let m_total = ds.rows as f64;
+        let c = params.c();
+        let bound =
+            u * u * (q_off + m_total * (m_total - m_part as f64) * c) / (m_total * c * params.upsilon as f64);
+        assert!(
+            dist2 <= bound + 1e-6,
+            "seed {seed}: dist² {dist2} exceeds Eqn-6 bound {bound} (d_tilde {d_tilde})"
+        );
+    }
+}
+
+#[test]
+fn gap_shrinks_as_partitions_merge() {
+    // Theorem 1's convergence story: larger m (fewer partitions) -> smaller
+    // gap between block-diagonal and global optimum.
+    let ds = fixture(64, 13);
+    let params = OdmParams { lambda: 8.0, theta: 0.3, upsilon: 0.5 };
+    let kernel = KernelKind::Rbf { gamma: 1.0 };
+    let (d_star, d_tilde_8, ..) = theorem1_quantities(&ds, &kernel, &params, 8, 13);
+    let (_, d_tilde_2, ..) = theorem1_quantities(&ds, &kernel, &params, 2, 13);
+    let gap8 = d_tilde_8 - d_star;
+    let gap2 = d_tilde_2 - d_star;
+    assert!(
+        gap2 <= gap8 + 1e-6,
+        "gap with 2 partitions ({gap2}) should be <= gap with 8 ({gap8})"
+    );
+}
+
+#[test]
+fn stratified_gap_not_worse_than_random() {
+    // Theorem 2's motivation: distribution-preserving partitions give local
+    // solutions whose concatenation sits closer to the global optimum.
+    // Averaged over seeds to damp sampling noise.
+    let params = OdmParams { lambda: 8.0, theta: 0.3, upsilon: 0.5 };
+    let kernel = KernelKind::Rbf { gamma: 1.5 };
+    let budget = SolveBudget { eps: 1e-6, max_sweeps: 2000, ..Default::default() };
+    let mut total_strat = 0.0;
+    let mut total_rand = 0.0;
+    for seed in 1..=5u64 {
+        let ds = fixture(96, seed);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let global = solve_odm_dual(&view, &kernel, &params, None, &budget);
+        for (is_strat, strategy) in [
+            (true, PartitionStrategy::StratifiedRkhs { stratums: 8 }),
+            (false, PartitionStrategy::Random),
+        ] {
+            let parts = make_partitions(&view, &kernel, 4, strategy, seed, 1);
+            let mut zeta = Vec::new();
+            let mut beta = Vec::new();
+            let mut cidx = Vec::new();
+            for p in &parts {
+                let pv = DataView::new(&ds, p);
+                let sol = solve_odm_dual(&pv, &kernel, &params, None, &budget);
+                zeta.extend(sol.zeta);
+                beta.extend(sol.beta);
+                cidx.extend_from_slice(p);
+            }
+            let cview = DataView::new(&ds, &cidx);
+            let gap = odm_dual_objective(&cview, &kernel, &params, &zeta, &beta)
+                - global.stats.objective;
+            if is_strat {
+                total_strat += gap;
+            } else {
+                total_rand += gap;
+            }
+        }
+    }
+    // allow slack: both are random processes; stratified should not be
+    // dramatically worse on average
+    assert!(
+        total_strat <= total_rand * 1.5 + 1e-3,
+        "stratified total gap {total_strat} vs random {total_rand}"
+    );
+}
