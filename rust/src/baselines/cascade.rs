@@ -112,6 +112,8 @@ pub fn train_cascade(
             elapsed: t0.elapsed().as_secs_f64(),
             model,
             objective,
+            sweeps: solutions.iter().map(|s| s.sweeps).sum(),
+            updates: solutions.iter().map(|s| s.updates).sum(),
         });
 
         if n == 1 {

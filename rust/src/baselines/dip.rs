@@ -79,6 +79,8 @@ pub fn train_dip(
             elapsed: t0.elapsed().as_secs_f64(),
             model: OdmModel::from_dual(&snap_view, kernel, &concat_gamma),
             objective: solutions.iter().map(|s| s.objective).sum(),
+            sweeps: solutions.iter().map(|s| s.sweeps).sum(),
+            updates: solutions.iter().map(|s| s.updates).sum(),
         });
     }
 
@@ -116,6 +118,8 @@ pub fn train_dip(
         elapsed: t0.elapsed().as_secs_f64(),
         model: model.clone(),
         objective: final_sol.objective,
+        sweeps: final_sol.sweeps,
+        updates: final_sol.updates,
     });
 
     MetaRun { model, trace, total_seconds: t0.elapsed().as_secs_f64() }

@@ -95,6 +95,8 @@ pub fn train_hierarchical(
             elapsed: t0.elapsed().as_secs_f64(),
             model: OdmModel::from_dual(&snap_view, kernel, &concat_gamma),
             objective,
+            sweeps: solutions.iter().map(|s| s.sweeps).sum(),
+            updates: solutions.iter().map(|s| s.updates).sum(),
         });
 
         if n_parts == 1 {

@@ -42,6 +42,8 @@ pub struct GenericSolution {
     pub objective: f64,
     pub converged: bool,
     pub sweeps: usize,
+    /// Coordinate updates spent by the local solve.
+    pub updates: u64,
 }
 
 impl LocalSolverKind {
@@ -70,6 +72,7 @@ impl LocalSolverKind {
                     objective: sol.stats.objective,
                     converged: sol.stats.converged,
                     sweeps: sol.stats.sweeps,
+                    updates: sol.stats.updates,
                 }
             }
             LocalSolverKind::Svm { c } => {
@@ -80,6 +83,7 @@ impl LocalSolverKind {
                     objective: sol.stats.objective,
                     converged: sol.stats.converged,
                     sweeps: sol.stats.sweeps,
+                    updates: sol.stats.updates,
                 }
             }
         }
@@ -128,6 +132,10 @@ pub struct MetaLevel {
     pub elapsed: f64,
     pub model: OdmModel,
     pub objective: f64,
+    /// Total DCD sweeps across this level's local solves.
+    pub sweeps: usize,
+    /// Total coordinate updates across this level's local solves.
+    pub updates: u64,
 }
 
 /// Result of a meta-solver run.
@@ -176,6 +184,7 @@ mod tests {
             objective: 0.0,
             converged: true,
             sweeps: 1,
+            updates: 0,
         };
         let b = GenericSolution {
             alpha: vec![3.0, 30.0], // ζ=[3] β=[30]
@@ -183,6 +192,7 @@ mod tests {
             objective: 0.0,
             converged: true,
             sweeps: 1,
+            updates: 0,
         };
         let c = solver.concat_alpha(&[&a, &b]);
         assert_eq!(c, vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
@@ -197,6 +207,7 @@ mod tests {
             objective: 0.0,
             converged: true,
             sweeps: 1,
+            updates: 0,
         };
         assert_eq!(odm.filter_alpha(&sol, &[0, 2]), vec![1.0, 3.0, 10.0, 30.0]);
         let svm = LocalSolverKind::Svm { c: 1.0 };
@@ -206,6 +217,7 @@ mod tests {
             objective: 0.0,
             converged: true,
             sweeps: 1,
+            updates: 0,
         };
         assert_eq!(svm.filter_alpha(&sol2, &[2, 0]), vec![7.0, 5.0]);
     }

@@ -27,20 +27,20 @@ pub fn read_libsvm(path: impl AsRef<Path>, cols: usize) -> Result<Dataset> {
         let mut parts = line.split_ascii_whitespace();
         let label_tok = parts
             .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: missing label", lineno + 1))?;
+            .ok_or_else(|| crate::err!("line {}: missing label", lineno + 1))?;
         let raw: f32 = label_tok
             .parse()
-            .map_err(|e| anyhow::anyhow!("line {}: bad label {label_tok:?}: {e}", lineno + 1))?;
+            .map_err(|e| crate::err!("line {}: bad label {label_tok:?}: {e}", lineno + 1))?;
         // Common conventions: {1,-1}, {1,0}, {1,2} -> map non-positive/2 to -1.
         let label = if raw > 0.0 && raw != 2.0 { 1.0 } else { -1.0 };
         let mut feats = Vec::new();
         for tok in parts {
             let (i, v) = tok
                 .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair {tok:?}", lineno + 1))?;
+                .ok_or_else(|| crate::err!("line {}: bad pair {tok:?}", lineno + 1))?;
             let i: usize = i.parse()?;
             let v: f32 = v.parse()?;
-            anyhow::ensure!(i >= 1, "line {}: feature index must be >= 1", lineno + 1);
+            crate::ensure!(i >= 1, "line {}: feature index must be >= 1", lineno + 1);
             max_col = max_col.max(i);
             feats.push((i - 1, v));
         }

@@ -128,6 +128,9 @@ pub fn figure2(
                 .iter()
                 .map(|p| (p.cores as f64, base_rbf / p.rbf_seconds))
                 .collect(),
+            sweeps: 0,
+            updates: 0,
+            shrink_ratio: 0.0,
         },
         MethodResult {
             method: "SODM-linear".into(),
@@ -139,6 +142,9 @@ pub fn figure2(
                 .iter()
                 .map(|p| (p.cores as f64, base_lin / p.linear_seconds))
                 .collect(),
+            sweeps: 0,
+            updates: 0,
+            shrink_ratio: 0.0,
         },
     ];
     write_results(&cfg.out_dir, "fig2_speedup", &results)?;

@@ -17,7 +17,7 @@ use crate::cluster::SimCluster;
 use crate::data::synth::SynthSpec;
 use crate::data::Dataset;
 use crate::kernel::KernelKind;
-use crate::odm::{train_exact_odm, OdmModel, OdmParams};
+use crate::odm::{OdmModel, OdmParams};
 use crate::partition::PartitionStrategy;
 use crate::qp::SolveBudget;
 use crate::sodm::{train_sodm_traced, SodmConfig};
@@ -69,6 +69,14 @@ pub struct MethodResult {
     pub modeled_seconds: f64,
     /// (elapsed seconds, accuracy) checkpoints — the Fig. 1/3 curves.
     pub curve: Vec<(f64, f64)>,
+    /// Total DCD sweeps across every local solve (0 for gradient methods).
+    pub sweeps: usize,
+    /// Total DCD coordinate updates across every local solve (0 for
+    /// gradient methods) — the work metric the shrinking solver minimizes.
+    pub updates: u64,
+    /// Mean shrink ratio of the local solves (ODM/SODM methods; 0 where the
+    /// solver does not report it).
+    pub shrink_ratio: f64,
 }
 
 impl MethodResult {
@@ -80,6 +88,9 @@ impl MethodResult {
             seconds: f64::NAN,
             modeled_seconds: f64::NAN,
             curve: Vec::new(),
+            sweeps: 0,
+            updates: 0,
+            shrink_ratio: 0.0,
         }
     }
 }
@@ -130,6 +141,12 @@ fn sodm_tree(train_rows: usize) -> (usize, usize) {
     (4, levels)
 }
 
+/// Sum sweeps/updates across a meta-solver trace (single source of the
+/// aggregation all Table-2/3/4 arms share).
+fn meta_totals(trace: &[crate::baselines::MetaLevel]) -> (usize, u64) {
+    (trace.iter().map(|l| l.sweeps).sum(), trace.iter().map(|l| l.updates).sum())
+}
+
 /// The method names of Tables 2/3 in paper order.
 pub const QP_METHODS: [&str; 5] = ["ODM", "Ca-ODM", "DiP-ODM", "DC-ODM", "SODM"];
 
@@ -146,13 +163,20 @@ pub fn run_qp_method(
     let budget = table_budget();
     let (p, levels) = sodm_tree(train.rows);
     let t0 = Instant::now();
+    let mut total_sweeps = 0usize;
+    let mut total_updates = 0u64;
+    let mut total_shrink = 0.0f64;
     let (model, curve): (OdmModel, Vec<(f64, f64)>) = match method {
         "ODM" => {
             if train.rows > cfg.odm_cap {
                 return MethodResult::not_run(method, &train.name);
             }
             let exact_budget = SolveBudget { max_sweeps: 300, ..budget };
-            let m = train_exact_odm(train, kernel, &params, &exact_budget);
+            let (m, stats) =
+                crate::odm::train_exact_odm_stats(train, kernel, &params, &exact_budget);
+            total_sweeps = stats.sweeps;
+            total_updates = stats.updates;
+            total_shrink = stats.shrink_ratio;
             let acc = m.accuracy(test);
             (m, vec![(t0.elapsed().as_secs_f64(), acc)])
         }
@@ -165,6 +189,7 @@ pub fn run_qp_method(
                 &CascadeConfig { leaves: p.pow(levels as u32), budget, seed: cfg.seed },
                 Some(&cluster),
             );
+            (total_sweeps, total_updates) = meta_totals(&run.trace);
             let curve =
                 run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
             (run.model, curve)
@@ -183,6 +208,7 @@ pub fn run_qp_method(
                 },
                 Some(&cluster),
             );
+            (total_sweeps, total_updates) = meta_totals(&run.trace);
             let curve =
                 run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
             (run.model, curve)
@@ -203,6 +229,7 @@ pub fn run_qp_method(
                 },
                 Some(&cluster),
             );
+            (total_sweeps, total_updates) = meta_totals(&run.trace);
             let curve =
                 run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
             (run.model, curve)
@@ -222,6 +249,7 @@ pub fn run_qp_method(
                 },
                 Some(&cluster),
             );
+            (total_sweeps, total_updates) = meta_totals(&run.trace);
             let curve =
                 run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
             (run.model, curve)
@@ -247,6 +275,10 @@ pub fn run_qp_method(
                 },
                 Some(&cluster),
             );
+            total_sweeps = run.trace.iter().map(|l| l.sweeps).sum();
+            total_updates = run.trace.iter().map(|l| l.updates).sum();
+            total_shrink = run.trace.iter().map(|l| l.shrink_ratio).sum::<f64>()
+                / run.trace.len().max(1) as f64;
             let curve =
                 run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
             (run.model, curve)
@@ -266,6 +298,9 @@ pub fn run_qp_method(
         seconds,
         modeled_seconds,
         curve,
+        sweeps: total_sweeps,
+        updates: total_updates,
+        shrink_ratio: total_shrink,
     }
 }
 
@@ -304,6 +339,9 @@ pub fn run_sodm_linear(train: &Dataset, test: &Dataset, cfg: &ExpConfig) -> Meth
         seconds,
         modeled_seconds,
         curve,
+        sweeps: 0,
+        updates: 0,
+        shrink_ratio: 0.0,
     }
 }
 
@@ -348,6 +386,9 @@ pub fn run_gradient_method(
         seconds,
         modeled_seconds,
         curve,
+        sweeps: 0,
+        updates: 0,
+        shrink_ratio: 0.0,
     }
 }
 
@@ -373,6 +414,16 @@ mod tests {
             let r = run_qp_method(m, &train, &test, &k, &cfg);
             assert!(r.accuracy.is_nan() || r.accuracy > 0.6, "{m}: {}", r.accuracy);
         }
+    }
+
+    #[test]
+    fn qp_telemetry_flows_to_method_result() {
+        let cfg = quick_cfg();
+        let (train, test) = prepare_dataset("svmguide1", &cfg);
+        let k = rbf_for(&train);
+        let r = run_qp_method("SODM", &train, &test, &k, &cfg);
+        assert!(r.sweeps > 0, "sweeps should aggregate from the level trace");
+        assert!(r.updates > 0, "updates should aggregate from the level trace");
     }
 
     #[test]

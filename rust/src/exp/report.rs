@@ -84,6 +84,9 @@ pub fn results_to_json(results: &[MethodResult]) -> Json {
                                 .collect(),
                         ),
                     ),
+                    ("sweeps", jnum(r.sweeps as f64)),
+                    ("updates", jnum(r.updates as f64)),
+                    ("shrink_ratio", jnum(r.shrink_ratio)),
                 ])
             })
             .collect(),
@@ -138,6 +141,9 @@ mod tests {
             seconds: secs,
             modeled_seconds: secs,
             curve: vec![(0.5, acc - 0.01), (secs, acc)],
+            sweeps: 3,
+            updates: 42,
+            shrink_ratio: 0.25,
         }
     }
 
@@ -159,6 +165,9 @@ mod tests {
         let arr = parsed.as_arr().unwrap();
         assert_eq!(arr[0].req("method").unwrap().as_str().unwrap(), "SODM");
         assert_eq!(arr[0].req("curve").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(arr[0].req("sweeps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(arr[0].req("updates").unwrap().as_usize().unwrap(), 42);
+        assert!((arr[0].req("shrink_ratio").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -54,32 +54,98 @@ impl RowCache {
             return &e.data;
         }
         self.misses += 1;
-        if self.rows.len() >= self.capacity_rows {
-            // Evict the least-recently-used row.
+        self.ensure_norms(view, kernel);
+        let mut data = vec![0.0f32; self.row_len].into_boxed_slice();
+        Self::compute_row_into(view, kernel, &self.sq_norms, i, &mut data);
+        self.insert_row(i, data);
+        &self.rows[&i].data
+    }
+
+    /// Bulk-insert: compute not-yet-cached rows of `rows` concurrently on up
+    /// to `workers` threads and insert them — but only into *free* capacity
+    /// (front of `rows` wins; callers pass rows in upcoming-use order).
+    /// Never evicting means a full cache degrades to the serial on-demand
+    /// path instead of thrashing rows the same sweep still needs. Returns
+    /// the number of rows actually computed; each counts as one miss, so the
+    /// hit/miss ledger keeps meaning "row computations" either way.
+    ///
+    /// Numerics are identical to [`RowCache::get`] (same per-row kernel
+    /// path), so prefetching never changes solver trajectories — only
+    /// wall-clock.
+    pub fn prefetch(
+        &mut self,
+        view: &DataView,
+        kernel: &KernelKind,
+        rows: &[usize],
+        workers: usize,
+    ) -> usize {
+        debug_assert_eq!(view.len(), self.row_len);
+        let mut queued = vec![false; self.row_len];
+        let mut missing: Vec<usize> = Vec::new();
+        for &i in rows {
+            if !queued[i] && !self.rows.contains_key(&i) {
+                queued[i] = true;
+                missing.push(i);
+            }
+        }
+        missing.truncate(self.capacity_rows.saturating_sub(self.rows.len()));
+        if missing.is_empty() {
+            return 0;
+        }
+        self.ensure_norms(view, kernel);
+        let row_len = self.row_len;
+        let norms: &[f32] = &self.sq_norms;
+        let todo: &[usize] = &missing;
+        let computed: Vec<Box<[f32]>> =
+            crate::util::pool::parallel_map(todo.len(), workers, |k| {
+                let mut out = vec![0.0f32; row_len].into_boxed_slice();
+                Self::compute_row_into(view, kernel, norms, todo[k], &mut out);
+                out
+            });
+        let n = missing.len();
+        self.misses += n as u64;
+        for (i, data) in missing.into_iter().zip(computed) {
+            self.insert_row(i, data);
+        }
+        n
+    }
+
+    /// Insert a computed row, evicting the least-recently-used entry when at
+    /// capacity.
+    fn insert_row(&mut self, i: usize, data: Box<[f32]>) {
+        self.stamp += 1;
+        if self.rows.len() >= self.capacity_rows && !self.rows.contains_key(&i) {
             if let Some((&victim, _)) = self.rows.iter().min_by_key(|(_, e)| e.last_used) {
                 self.rows.remove(&victim);
             }
         }
-        let mut data = vec![0.0f32; self.row_len].into_boxed_slice();
-        self.compute_row(view, kernel, i, &mut data);
-        self.rows.insert(i, Entry { last_used: stamp, data });
-        &self.rows[&i].data
+        self.rows.insert(i, Entry { last_used: self.stamp, data });
+    }
+
+    /// Lazily materialize ‖x_j‖² for the RBF fast path.
+    fn ensure_norms(&mut self, view: &DataView, kernel: &KernelKind) {
+        if matches!(kernel, KernelKind::Rbf { .. }) && self.sq_norms.is_empty() {
+            self.sq_norms = (0..view.len()).map(|j| dot(view.row(j), view.row(j))).collect();
+        }
     }
 
     /// Row computation with the norms fast path for RBF (§Perf: ~15% fewer
-    /// FLOPs per entry than the naive sq_dist form).
-    fn compute_row(&mut self, view: &DataView, kernel: &KernelKind, i: usize, out: &mut [f32]) {
+    /// FLOPs per entry than the naive sq_dist form). Associated (no `&mut
+    /// self`) so [`RowCache::prefetch`] can run it from worker threads.
+    fn compute_row_into(
+        view: &DataView,
+        kernel: &KernelKind,
+        sq_norms: &[f32],
+        i: usize,
+        out: &mut [f32],
+    ) {
         match kernel {
-            KernelKind::Rbf { gamma } => {
-                if self.sq_norms.is_empty() {
-                    self.sq_norms =
-                        (0..view.len()).map(|j| dot(view.row(j), view.row(j))).collect();
-                }
+            KernelKind::Rbf { gamma } if !sq_norms.is_empty() => {
                 let xi = view.row(i);
                 let yi = view.label(i);
-                let ni = self.sq_norms[i];
+                let ni = sq_norms[i];
                 for (j, o) in out.iter_mut().enumerate() {
-                    let d = (ni + self.sq_norms[j] - 2.0 * dot(xi, view.row(j))).max(0.0);
+                    let d = (ni + sq_norms[j] - 2.0 * dot(xi, view.row(j))).max(0.0);
                     *o = yi * view.label(j) * (-gamma * d).exp();
                 }
             }
@@ -106,6 +172,12 @@ impl RowCache {
 
     pub fn len(&self) -> usize {
         self.rows.len()
+    }
+
+    /// True once every budgeted slot holds a row — [`RowCache::prefetch`]
+    /// can no longer insert, so callers should skip mover prediction.
+    pub fn is_full(&self) -> bool {
+        self.rows.len() >= self.capacity_rows
     }
 
     pub fn is_empty(&self) -> bool {
@@ -176,5 +248,68 @@ mod tests {
         c.get(&v, &KernelKind::Linear, 0);
         c.clear();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency_order() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Linear;
+        let mut c = RowCache::new(2 * v.len() * 4, v.len()); // 2 rows
+        c.get(&v, &k, 0);
+        c.get(&v, &k, 1);
+        c.get(&v, &k, 0); // refresh 0 — now 1 is the LRU
+        c.get(&v, &k, 2); // must evict 1, keep 0
+        let (hits_before, _) = c.stats();
+        c.get(&v, &k, 0); // hit (kept)
+        assert_eq!(c.stats().0, hits_before + 1, "row 0 should have survived");
+        c.get(&v, &k, 1); // miss (evicted)
+        assert_eq!(c.stats().0, hits_before + 1, "row 1 should have been evicted");
+    }
+
+    #[test]
+    fn prefetch_bulk_insert_matches_direct_compute() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 0.7 };
+        let mut c = RowCache::new(1 << 20, v.len());
+        let n = c.prefetch(&v, &k, &[1, 3, 5], 2);
+        assert_eq!(n, 3);
+        assert_eq!(c.len(), 3);
+        for i in [1usize, 3, 5] {
+            let got = c.get(&v, &k, i).to_vec();
+            let mut want = vec![0.0; v.len()];
+            signed_row(&v, &k, i, &mut want);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_accounting_miss_once_then_hits() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Linear;
+        let mut c = RowCache::new(1 << 20, v.len());
+        assert_eq!(c.prefetch(&v, &k, &[0, 1], 2), 2);
+        assert_eq!(c.stats(), (0, 2), "each prefetched row costs one miss");
+        c.get(&v, &k, 0);
+        c.get(&v, &k, 1);
+        assert_eq!(c.stats(), (2, 2), "prefetched rows serve as hits");
+        // re-prefetching cached rows is free
+        assert_eq!(c.prefetch(&v, &k, &[0, 1], 2), 0);
+        assert_eq!(c.stats(), (2, 2));
+    }
+
+    #[test]
+    fn prefetch_respects_capacity() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Linear;
+        let mut c = RowCache::new(2 * v.len() * 4, v.len()); // 2 rows
+        let n = c.prefetch(&v, &k, &[0, 1, 2, 3, 4], 2);
+        assert_eq!(n, 2, "bulk compute capped at capacity");
+        assert_eq!(c.len(), 2);
     }
 }

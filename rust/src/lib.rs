@@ -18,6 +18,24 @@
 //! The crate is self-contained after `make artifacts`: python never runs on
 //! the training or serving path.
 //!
+//! ## Building
+//!
+//! `cargo build --release && cargo test -q` from the repo root — no external
+//! dependencies (the [`util`] substrate replaces rand/serde/rayon/anyhow/
+//! criterion for the offline build). The PJRT/XLA execution path is behind
+//! the off-by-default `pjrt` feature; without it [`runtime::XlaEngine`]
+//! fails load cleanly and callers fall back to native compute.
+//!
+//! ## Solver knobs
+//!
+//! The DCD solvers ([`qp`]) default to working-set v2: LIBSVM-style
+//! shrinking with a reactivation pass ([`qp::SolveBudget::shrink`], CLI
+//! `--no-shrink`), opt-in greedy violation-ordered sweeps
+//! ([`qp::SolveBudget::ordered_every`]), and batched parallel Gram-row
+//! precompute through [`kernel::cache::RowCache::prefetch`]. Per-solve
+//! telemetry (sweeps / updates / shrink ratio / cache hit rate) is reported
+//! in [`qp::SolveStats`].
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -53,5 +71,8 @@ pub mod sodm;
 pub mod svrg;
 pub mod util;
 
+/// Crate-wide error type (in-crate `anyhow` replacement; see [`util::error`]).
+pub use util::error::Error;
+
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;

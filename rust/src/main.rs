@@ -73,6 +73,10 @@ USAGE: sodm <command> [--flag value]...
   train      --data <file.libsvm | synth:name[:scale]> [--method sodm|odm|cascade|dip|dc|ssvm|dsvrg]
              [--kernel rbf|linear] [--gamma g] [--lambda l] [--theta t] [--upsilon u]
              [--p 4] [--levels 2] [--stratums 16] [--workers N] [--model-out m.json]
+             [--no-shrink] [--ordered-every k]
+             (--no-shrink disables DCD active-set shrinking — the reference
+              solver; --ordered-every k makes every k-th sweep visit
+              coordinates in descending violation order)
   predict    --model m.json --data <...> [--backend native|xla]
   experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation) [--scale 0.05]
              [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
@@ -156,7 +160,7 @@ fn parse_kernel(flags: &HashMap<String, String>, cols: usize) -> Result<KernelKi
             let gamma = flag_f64(flags, "gamma", 1.0 / cols.max(1) as f64)? as f32;
             Ok(KernelKind::Rbf { gamma })
         }
-        other => anyhow::bail!("unknown kernel {other:?}"),
+        other => sodm::bail!("unknown kernel {other:?}"),
     }
 }
 
@@ -171,7 +175,7 @@ fn parse_params(flags: &HashMap<String, String>) -> Result<OdmParams> {
 
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let seed = flag_usize(flags, "seed", 7)? as u64;
-    let data_spec = flag(flags, "data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let ds = load_data(data_spec, seed)?;
     let (train, test) = ds.split(0.8, seed);
     let kernel = parse_kernel(flags, train.cols)?;
@@ -182,7 +186,11 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let stratums = flag_usize(flags, "stratums", 16)?;
     let method = flag(flags, "method").unwrap_or("sodm");
     let cluster = sodm::cluster::SimCluster::new(workers);
-    let budget = SolveBudget::default();
+    let budget = SolveBudget {
+        shrink: !flags.contains_key("no-shrink"),
+        ordered_every: flag_usize(flags, "ordered-every", 0)?,
+        ..SolveBudget::default()
+    };
 
     let t0 = std::time::Instant::now();
     let model: OdmModel = match method {
@@ -293,7 +301,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
             )
             .model
         }
-        other => anyhow::bail!("unknown method {other:?}"),
+        other => sodm::bail!("unknown method {other:?}"),
     };
     let secs = t0.elapsed().as_secs_f64();
     let acc_train = model.accuracy(&train);
@@ -315,8 +323,8 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
     let model_path =
-        flag(flags, "model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
-    let data_spec = flag(flags, "data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+        flag(flags, "model").ok_or_else(|| sodm::err!("--model is required"))?;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let model = OdmModel::load(model_path)?;
     let ds = load_data(data_spec, seed)?;
@@ -325,14 +333,14 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
     let (acc, used) = match backend {
         "xla" => {
             let engine = XlaEngine::load_default()
-                .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?;
+                .ok_or_else(|| sodm::err!("artifacts not found — run `make artifacts`"))?;
             let decisions: Vec<f64> = match &model {
                 OdmModel::Linear { w } => engine.linear_decisions(w, &ds.x, ds.cols)?,
                 OdmModel::Kernel { kernel, sv_x, coef, cols } => match kernel {
                     KernelKind::Rbf { gamma } => {
                         engine.rbf_decisions(sv_x, coef, &ds.x, *cols, *gamma)?
                     }
-                    KernelKind::Linear => anyhow::bail!("linear kernel models use Linear repr"),
+                    KernelKind::Linear => sodm::bail!("linear kernel models use Linear repr"),
                 },
             };
             let correct = decisions
@@ -372,7 +380,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
             "2" => table2(&cfg)?,
             "3" => table3(&cfg)?,
             "4" => table4(&cfg)?,
-            other => anyhow::bail!("unknown table {other:?}"),
+            other => sodm::bail!("unknown table {other:?}"),
         };
         println!("{out}");
         return Ok(());
@@ -396,12 +404,12 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
             }
             "3" => figure3(&cfg)?,
             "4" => figure4(&cfg)?,
-            other => anyhow::bail!("unknown figure {other:?}"),
+            other => sodm::bail!("unknown figure {other:?}"),
         };
         println!("{out}");
         return Ok(());
     }
-    anyhow::bail!("experiment needs --table N, --figure N, or --ablation")
+    sodm::bail!("experiment needs --table N, --figure N, or --ablation")
 }
 
 /// Serve a saved model under synthetic concurrent load and report
@@ -409,8 +417,8 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     use sodm::serve::{serve, Backend, ServeConfig};
     let model_path =
-        flag(flags, "model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
-    let data_spec = flag(flags, "data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+        flag(flags, "model").ok_or_else(|| sodm::err!("--model is required"))?;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let clients = flag_usize(flags, "clients", 8)?;
     let per_client = flag_usize(flags, "requests", 200)?;
@@ -419,7 +427,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     let backend = match flag(flags, "backend").unwrap_or("native") {
         "xla" => Backend::Xla(
             XlaEngine::load_default()
-                .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?,
+                .ok_or_else(|| sodm::err!("artifacts not found — run `make artifacts`"))?,
         ),
         _ => Backend::Native,
     };

@@ -168,7 +168,7 @@ impl OdmModel {
                 let kernel = match j.req("kernel")?.as_str()? {
                     "linear" => KernelKind::Linear,
                     "rbf" => KernelKind::Rbf { gamma: j.req("gamma")?.as_f64()? as f32 },
-                    other => anyhow::bail!("unknown kernel {other:?}"),
+                    other => crate::bail!("unknown kernel {other:?}"),
                 };
                 let sv_x: Vec<f32> = j
                     .req("sv_x")?
@@ -183,7 +183,7 @@ impl OdmModel {
                     cols: j.req("cols")?.as_usize()?,
                 })
             }
-            other => anyhow::bail!("unknown model kind {other:?}"),
+            other => crate::bail!("unknown model kind {other:?}"),
         }
     }
 
@@ -242,10 +242,21 @@ pub fn train_exact_odm(
     params: &OdmParams,
     budget: &crate::qp::SolveBudget,
 ) -> OdmModel {
+    train_exact_odm_stats(train, kernel, params, budget).0
+}
+
+/// [`train_exact_odm`] variant that also returns the solver telemetry
+/// (the experiment harness records sweeps/updates per method).
+pub fn train_exact_odm_stats(
+    train: &Dataset,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    budget: &crate::qp::SolveBudget,
+) -> (OdmModel, crate::qp::SolveStats) {
     let idx = crate::data::all_indices(train);
     let view = DataView::new(train, &idx);
     let sol = crate::qp::solve_odm_dual(&view, kernel, params, None, budget);
-    OdmModel::from_dual(&view, kernel, &sol.gamma())
+    (OdmModel::from_dual(&view, kernel, &sol.gamma()), sol.stats)
 }
 
 /// Compute the decision values of a linear weight vector on a view (helper

@@ -9,13 +9,20 @@
 //!
 //! Interchange format is HLO *text* (xla_extension 0.5.1 rejects jax >= 0.5
 //! serialized protos — see DESIGN.md and /opt/xla-example/README.md).
+//!
+//! The `xla` crate (PJRT bindings) is only available in environments with the
+//! vendored xla_extension toolchain, so the executor body is gated behind the
+//! off-by-default `pjrt` cargo feature. Without it, [`XlaEngine::load`]
+//! returns an error at init and every caller falls back to the rust-native
+//! backend; the public API is identical either way.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 use crate::data::DataView;
 use crate::odm::OdmParams;
@@ -36,6 +43,7 @@ pub struct Geometry {
 
 /// One artifact entry from the manifest.
 #[derive(Clone, Debug)]
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 struct Entry {
     file: String,
     n_outputs: usize,
@@ -43,6 +51,7 @@ struct Entry {
 
 type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 enum Request {
     /// Execute `name` with the given (data, dims) inputs; reply with every
     /// output flattened to f32.
@@ -141,7 +150,7 @@ impl XlaEngine {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Request::Exec { name: name.to_string(), inputs, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("pjrt executor thread is gone"))?;
+            .map_err(|_| crate::err!("pjrt executor thread is gone"))?;
         {
             let mut c = self.counts.lock().unwrap();
             *c.entry(name.to_string()).or_insert(0) += 1;
@@ -336,6 +345,30 @@ fn pad_vec(v: &[f32], len: usize) -> Vec<f32> {
     out
 }
 
+/// Stub executor for builds without the `pjrt` feature: fail init with a
+/// clear message so [`XlaEngine::load_default`] falls back to native compute.
+#[cfg(not(feature = "pjrt"))]
+fn executor_thread(
+    _dir: PathBuf,
+    _entries: HashMap<String, Entry>,
+    _rx: mpsc::Receiver<Request>,
+    init_tx: mpsc::Sender<Result<()>>,
+) {
+    let _ = init_tx.send(Err(crate::err!(
+        "PJRT backend unavailable: crate built without the `pjrt` feature \
+         (requires the vendored xla_extension toolchain)"
+    )));
+}
+
+// The `pjrt` feature needs the vendored `xla` crate (xla_extension
+// toolchain), which cannot be expressed as a cargo dependency in this
+// offline build. This explicit extern makes `--features pjrt` without the
+// vendored crate fail right here with "can't find crate for `xla`" instead
+// of scattered resolution errors below.
+#[cfg(feature = "pjrt")]
+extern crate xla;
+
+#[cfg(feature = "pjrt")]
 fn executor_thread(
     dir: PathBuf,
     entries: HashMap<String, Entry>,
@@ -343,16 +376,16 @@ fn executor_thread(
     init_tx: mpsc::Sender<Result<()>>,
 ) {
     let init = (|| -> Result<(xla::PjRtClient, HashMap<String, (xla::PjRtLoadedExecutable, usize)>)> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu: {e:?}"))?;
         let mut execs = HashMap::new();
         for (name, entry) in &entries {
             let path = dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+                .map_err(|e| crate::err!("parse {}: {e:?}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+                .map_err(|e| crate::err!("compile {name}: {e:?}"))?;
             execs.insert(name.clone(), (exe, entry.n_outputs));
         }
         Ok((client, execs))
@@ -383,26 +416,26 @@ fn executor_thread(
                         let lit = if dims.len() == 1 {
                             lit
                         } else {
-                            lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                            lit.reshape(dims).map_err(|e| crate::err!("reshape: {e:?}"))?
                         };
                         literals.push(lit);
                     }
                     let result = exe
                         .execute::<xla::Literal>(&literals)
-                        .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+                        .map_err(|e| crate::err!("execute {name}: {e:?}"))?;
                     let lit = result[0][0]
                         .to_literal_sync()
-                        .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+                        .map_err(|e| crate::err!("fetch {name}: {e:?}"))?;
                     // entry points lower with return_tuple=True
-                    let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
-                    anyhow::ensure!(
+                    let parts = lit.to_tuple().map_err(|e| crate::err!("tuple: {e:?}"))?;
+                    crate::ensure!(
                         parts.len() == *n_outputs,
                         "artifact {name}: expected {n_outputs} outputs, got {}",
                         parts.len()
                     );
                     parts
                         .into_iter()
-                        .map(|p| p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+                        .map(|p| p.to_vec::<f32>().map_err(|e| crate::err!("to_vec: {e:?}")))
                         .collect()
                 })();
                 let _ = reply.send(result);

@@ -101,12 +101,12 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Submit one feature row; blocks for the decision value.
     pub fn score(&self, x: &[f32]) -> Result<f64> {
-        anyhow::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
+        crate::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
         let (rtx, rrx) = sync_channel(1);
         self.tx
             .send(Request { x: x.to_vec(), reply: rtx, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+            .map_err(|_| crate::err!("server stopped"))?;
+        rrx.recv().map_err(|_| crate::err!("server dropped request"))
     }
 
     /// Submit one row, returning the predicted label.

@@ -85,6 +85,13 @@ pub struct LevelTrace {
     pub model: OdmModel,
     /// True if every local solve converged within its budget.
     pub all_converged: bool,
+    /// Total DCD sweeps across this level's local solves.
+    pub sweeps: usize,
+    /// Total coordinate updates across this level's local solves.
+    pub updates: u64,
+    /// Mean shrink ratio across this level's local solves (0 when shrinking
+    /// is disabled).
+    pub shrink_ratio: f64,
 }
 
 /// Result of a traced SODM run.
@@ -165,6 +172,10 @@ pub fn train_sodm_traced(
 
         let objective: f64 = solutions.iter().map(|s| s.stats.objective).sum();
         let all_converged = solutions.iter().all(|s| s.stats.converged);
+        let level_sweeps: usize = solutions.iter().map(|s| s.stats.sweeps).sum();
+        let level_updates: u64 = solutions.iter().map(|s| s.stats.updates).sum();
+        let level_shrink: f64 = solutions.iter().map(|s| s.stats.shrink_ratio).sum::<f64>()
+            / solutions.len().max(1) as f64;
 
         // Model snapshot: concatenated local solutions over all partitions.
         let concat_idx: Vec<usize> = partitions.iter().flatten().copied().collect();
@@ -179,6 +190,9 @@ pub fn train_sodm_traced(
             objective,
             model,
             all_converged,
+            sweeps: level_sweeps,
+            updates: level_updates,
+            shrink_ratio: level_shrink,
         });
 
         if n_parts == 1 {

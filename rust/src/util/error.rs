@@ -1,0 +1,160 @@
+//! Minimal in-crate error type — the offline replacement for `anyhow`,
+//! following the crate's no-external-deps convention (see `util`).
+//!
+//! [`Error`] is a flat message string; context is chained by prefixing
+//! (`"reading manifest: No such file"`), which is all the crate ever needed
+//! from `anyhow`. The [`Context`] trait mirrors `anyhow::Context` for both
+//! `Result` and `Option`, and the [`crate::err!`]/[`crate::bail!`]/
+//! [`crate::ensure!`] macros mirror `anyhow!`/`bail!`/`ensure!`.
+//!
+//! `Error` deliberately does NOT implement `std::error::Error`: that keeps
+//! the blanket `From<E: std::error::Error>` conversion coherent (the same
+//! trick `anyhow` uses), so `?` works on `io::Error`, parse errors, channel
+//! errors, etc. without per-type boilerplate.
+
+use std::fmt;
+
+/// Crate-wide error: a human-readable message, optionally context-prefixed.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Result alias with the in-crate [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` replacement for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a static context message to the error/none case.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Attach a lazily-built context message to the error/none case.
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string
+/// (`anyhow::anyhow!` replacement).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error)
+/// (`anyhow::bail!` replacement).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless `cond` holds (`anyhow::ensure!`
+/// replacement).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{bail, ensure, err};
+
+    fn parse_then_io() -> Result<u32> {
+        let n: u32 = "12".parse()?; // ParseIntError -> Error via blanket From
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        assert_eq!(parse_then_io().unwrap(), 12);
+        let bad: Result<u32> = "nope".parse::<u32>().map_err(Error::from);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting: "));
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        let some: Option<u8> = Some(3);
+        assert_eq!(some.context("never used").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(f(-3).unwrap_err().to_string(), "negative input -3");
+        assert_eq!(err!("v={}", 7).to_string(), "v=7");
+    }
+
+    #[test]
+    fn display_and_alternate_form_match() {
+        let e = Error::msg("outer: inner");
+        assert_eq!(format!("{e}"), "outer: inner");
+        assert_eq!(format!("{e:#}"), "outer: inner"); // alternate form is identical
+        assert_eq!(format!("{e:?}"), "outer: inner"); // Debug is the message too
+    }
+}

@@ -7,7 +7,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// A JSON value. Objects use BTreeMap for deterministic serialization.
 #[derive(Clone, Debug, PartialEq)]

@@ -6,11 +6,25 @@
 //! serde, rayon, clap, criterion) are replaced by these small, fully-tested
 //! implementations. Everything here is deterministic and dependency-free.
 
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod rng;
 
 use std::time::Instant;
+
+/// Sort `items` into descending order of `key(item)`, deterministically:
+/// NaN keys compare equal and ties break on the item value itself. Shared by
+/// the DCD ordered sweeps ([`crate::qp`]) and the DSVRG violation-ordered
+/// pass ([`crate::svrg`]).
+pub fn sort_desc_by_key(items: &mut Vec<usize>, mut key: impl FnMut(usize) -> f64) {
+    let mut keyed: Vec<(f64, usize)> = items.iter().map(|&c| (key(c), c)).collect();
+    keyed.sort_unstable_by(|x, y| {
+        y.0.partial_cmp(&x.0).unwrap_or(std::cmp::Ordering::Equal).then(x.1.cmp(&y.1))
+    });
+    items.clear();
+    items.extend(keyed.into_iter().map(|(_, c)| c));
+}
 
 /// Measure wall-clock seconds of a closure.
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {

@@ -1,0 +1,227 @@
+//! Working-set DCD v2 equivalence and telemetry tests (ISSUE 1).
+//!
+//! The shrinking solver must reach the no-shrink reference solver's dual
+//! objective within the solve tolerance with the same support set while
+//! performing measurably fewer coordinate updates, across seeds, on both the
+//! kernel and linear paths; warm-started merge solves must stay
+//! deterministic; and `SolveStats` telemetry must be internally consistent.
+
+use sodm::data::{all_indices, DataView, Dataset};
+use sodm::kernel::KernelKind;
+use sodm::odm::OdmParams;
+use sodm::qp::{solve_odm_dual, solve_svm_dual, SolveBudget};
+use sodm::sodm::{train_sodm_traced, SodmConfig};
+use sodm::util::rng::Pcg32;
+
+fn random_dataset(rng: &mut Pcg32, rows: usize, cols: usize) -> Dataset {
+    let mut x = Vec::with_capacity(rows * cols);
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        for _ in 0..cols {
+            x.push(rng.next_f32());
+        }
+        y.push(if rng.gen_bool(0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset::new("v2", x, y, cols)
+}
+
+fn params() -> OdmParams {
+    OdmParams { lambda: 8.0, theta: 0.3, upsilon: 0.5 }
+}
+
+fn tight() -> SolveBudget {
+    SolveBudget { eps: 1e-5, max_sweeps: 3000, ..Default::default() }
+}
+
+/// Core equivalence property (ISSUE acceptance criterion): for every seed,
+/// the shrunk solver and the `--no-shrink` reference reach the same
+/// objective and support set, with the shrunk solve spending no more — and
+/// in aggregate measurably fewer — coordinate updates.
+fn check_odm_equivalence(kernel: &KernelKind, seeds: std::ops::Range<u64>) {
+    let p = params();
+    let shrunk_budget = tight();
+    let reference_budget = SolveBudget { shrink: false, ..tight() };
+    let mut total_shrunk = 0u64;
+    let mut total_reference = 0u64;
+    for seed in seeds {
+        let mut rng = Pcg32::seeded(0xA7 + seed);
+        let rows = 60 + 20 * (seed as usize % 5);
+        let cols = 3 + seed as usize % 4;
+        let ds = random_dataset(&mut rng, rows, cols);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+
+        let reference = solve_odm_dual(&view, kernel, &p, None, &reference_budget);
+        let shrunk = solve_odm_dual(&view, kernel, &p, None, &shrunk_budget);
+        assert!(reference.stats.converged, "seed {seed}: reference did not converge");
+        assert!(shrunk.stats.converged, "seed {seed}: shrunk did not converge");
+
+        // Same objective within the solve tolerance.
+        let rel = (reference.stats.objective - shrunk.stats.objective).abs()
+            / (1.0 + reference.stats.objective.abs());
+        assert!(
+            rel < 1e-4,
+            "seed {seed}: objective drift {rel} (ref {} vs shrunk {})",
+            reference.stats.objective,
+            shrunk.stats.objective
+        );
+
+        // Identical support set: the strictly convex dual has a unique
+        // optimum, so coefficients must agree coordinate-wise and the
+        // support sets must match at the eps scale.
+        let g_ref = reference.gamma();
+        let g_shr = shrunk.gamma();
+        let mut s_ref: Vec<usize> = Vec::new();
+        let mut s_shr: Vec<usize> = Vec::new();
+        for i in 0..rows {
+            assert!(
+                (g_ref[i] - g_shr[i]).abs() < 1e-3,
+                "seed {seed}: gamma[{i}] {} vs {}",
+                g_ref[i],
+                g_shr[i]
+            );
+            if g_ref[i].abs() > 1e-3 {
+                s_ref.push(i);
+            }
+            if g_shr[i].abs() > 1e-3 {
+                s_shr.push(i);
+            }
+        }
+        assert_eq!(s_ref, s_shr, "seed {seed}: support sets differ");
+
+        // Never (materially) more updates than the reference, per seed.
+        assert!(
+            shrunk.stats.updates <= reference.stats.updates + reference.stats.updates / 50,
+            "seed {seed}: shrunk spent {} updates vs reference {}",
+            shrunk.stats.updates,
+            reference.stats.updates
+        );
+        assert!(shrunk.stats.shrink_ratio > 0.0, "seed {seed}: shrinking never engaged");
+        assert_eq!(reference.stats.shrink_ratio, 0.0);
+        total_shrunk += shrunk.stats.updates;
+        total_reference += reference.stats.updates;
+    }
+    // Measurably fewer updates in aggregate (prototyped margin ≈ 15-20%).
+    assert!(
+        total_shrunk * 100 < total_reference * 95,
+        "aggregate updates not reduced: shrunk {total_shrunk} vs reference {total_reference}"
+    );
+}
+
+#[test]
+fn shrink_matches_noshrink_rbf_kernel_path() {
+    check_odm_equivalence(&KernelKind::Rbf { gamma: 1.0 }, 0..6);
+}
+
+#[test]
+fn shrink_matches_noshrink_linear_path() {
+    check_odm_equivalence(&KernelKind::Linear, 0..4);
+}
+
+#[test]
+fn ordered_sweeps_match_reference_objective() {
+    // The greedy second-order ordered sweeps are an equivalence-preserving
+    // reordering: same unique optimum, converged to the same tolerance.
+    let p = params();
+    for seed in 0..3u64 {
+        let mut rng = Pcg32::seeded(0x0D + seed);
+        let ds = random_dataset(&mut rng, 90, 4);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let reference =
+            solve_odm_dual(&view, &k, &p, None, &SolveBudget { shrink: false, ..tight() });
+        let ordered = solve_odm_dual(
+            &view,
+            &k,
+            &p,
+            None,
+            &SolveBudget { ordered_every: 4, ..tight() },
+        );
+        assert!(ordered.stats.converged);
+        let rel = (reference.stats.objective - ordered.stats.objective).abs()
+            / (1.0 + reference.stats.objective.abs());
+        assert!(rel < 1e-4, "seed {seed}: ordered drifted {rel}");
+    }
+}
+
+#[test]
+fn svm_shrink_matches_reference_objective_and_box() {
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::seeded(0xB0 + seed);
+        let ds = random_dataset(&mut rng, 70 + 20 * (seed as usize % 3), 3);
+        let idx = all_indices(&ds);
+        let view = DataView::new(&ds, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let c = 1.0;
+        let reference =
+            solve_svm_dual(&view, &k, c, None, &SolveBudget { shrink: false, ..tight() });
+        let shrunk = solve_svm_dual(&view, &k, c, None, &tight());
+        assert!(reference.stats.converged && shrunk.stats.converged, "seed {seed}");
+        let rel = (reference.stats.objective - shrunk.stats.objective).abs()
+            / (1.0 + reference.stats.objective.abs());
+        assert!(rel < 1e-3, "seed {seed}: objective drift {rel}");
+        assert!(shrunk.gamma.iter().all(|g| (-1e-12..=c + 1e-12).contains(g)));
+        assert!(shrunk.stats.shrink_ratio > 0.0, "seed {seed}: no shrinking on SVM path");
+    }
+}
+
+#[test]
+fn warm_started_merge_solves_are_deterministic() {
+    // Regression (ISSUE): SodmConfig::with_tree merge training — including
+    // the shrinking solver's active-set resets at every warm-started merge —
+    // must be bit-deterministic given a seed.
+    let mut rng = Pcg32::seeded(0x5EED);
+    let ds = random_dataset(&mut rng, 240, 4);
+    let k = KernelKind::Rbf { gamma: 1.5 };
+    let p = params();
+    let cfg = SodmConfig::with_tree(2, 2, 6);
+    let a = train_sodm_traced(&ds, &k, &p, &cfg, None);
+    let b = train_sodm_traced(&ds, &k, &p, &cfg, None);
+    assert_eq!(a.trace.len(), b.trace.len());
+    for (la, lb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(la.n_partitions, lb.n_partitions);
+        assert_eq!(la.sweeps, lb.sweeps, "sweep counts must be reproducible");
+        assert_eq!(la.updates, lb.updates, "update counts must be reproducible");
+        assert_eq!(la.objective, lb.objective, "objectives must be bit-identical");
+    }
+    for i in 0..10 {
+        let x = ds.row(i * 7 % ds.rows);
+        assert_eq!(a.model.decision(x), b.model.decision(x));
+    }
+}
+
+#[test]
+fn telemetry_populated_and_internally_consistent() {
+    let mut rng = Pcg32::seeded(0x7E1E);
+    let ds = random_dataset(&mut rng, 120, 4);
+    let idx = all_indices(&ds);
+    let view = DataView::new(&ds, &idx);
+    let k = KernelKind::Rbf { gamma: 1.0 };
+    let p = params();
+    let shrunk = solve_odm_dual(&view, &k, &p, None, &tight());
+    let reference =
+        solve_odm_dual(&view, &k, &p, None, &SolveBudget { shrink: false, ..tight() });
+
+    for (name, s) in [("shrunk", &shrunk.stats), ("reference", &reference.stats)] {
+        assert!(s.sweeps > 0, "{name}: sweeps unset");
+        assert!(s.updates > 0, "{name}: updates unset");
+        assert!((0.0..=1.0).contains(&s.cache_hit_rate), "{name}: hit rate {}", s.cache_hit_rate);
+        assert!((0.0..1.0).contains(&s.shrink_ratio), "{name}: shrink ratio {}", s.shrink_ratio);
+        assert!(s.converged);
+        assert!(s.max_violation < 1e-5, "{name}: violation {}", s.max_violation);
+    }
+    // Internal consistency: the shrunk solve never reports more updates than
+    // the unshrunk one on the same problem (eps-scale slack only).
+    assert!(
+        shrunk.stats.updates <= reference.stats.updates + reference.stats.updates / 50,
+        "shrunk {} vs reference {}",
+        shrunk.stats.updates,
+        reference.stats.updates
+    );
+    assert_eq!(reference.stats.shrink_ratio, 0.0);
+    assert!(shrunk.stats.shrink_ratio > 0.0);
+    // An update requires a visit: shrink_ratio bounds visits from above.
+    let visited_bound = (shrunk.stats.sweeps as u64) * 2 * (view.len() as u64);
+    assert!(shrunk.stats.updates <= visited_bound);
+}
