@@ -98,6 +98,9 @@ fn main() {
                 let dec = engine.linear_decisions(w, &test.x, test.cols).expect("pjrt");
                 (dec, t2.elapsed().as_secs_f64())
             }
+            OdmModel::SparseKernel { .. } => {
+                unreachable!("dense training keeps dense SV storage")
+            }
         };
         // cross-check against the native path (same math, different engine)
         let native_decisions = rbf_model.decisions(&test);

@@ -2,59 +2,122 @@
 //!
 //! Measures the kernels the whole stack stands on: signed Gram row
 //! evaluation, DCD sweep throughput (kernel + linear), the SVRG full
-//! gradient, landmark selection, batch prediction, and (when artifacts are
-//! present) the PJRT Pallas paths. In-crate harness (`util::bench_loop`)
-//! reports mean/min over repeated runs.
+//! gradient, landmark selection, batch prediction, the sparse CSR path
+//! against its densified twin, and (when artifacts are present) the PJRT
+//! Pallas paths. In-crate harness (`util::bench_loop`) reports mean/min
+//! over repeated runs.
+//!
+//! Flags (after `--` in `cargo bench --bench hotpath -- ...`):
+//! * `--quick`        — CI budget: smaller fixtures, fewer iterations
+//! * `--json <path>`  — write the run as a JSON summary (the CI bench
+//!   artifact; seeds the bench trajectory)
 
-use sodm::data::{all_indices, synth::SynthSpec, DataView};
+use sodm::data::sparse::SparseSynthSpec;
+use sodm::data::{all_indices, identity_indices, synth::SynthSpec, DataView};
 use sodm::kernel::{signed_row, KernelKind};
-use sodm::odm::OdmParams;
+use sodm::odm::{OdmModel, OdmParams};
 use sodm::partition::landmarks::Nystrom;
 use sodm::qp::{solve_odm_dual, SolveBudget};
 use sodm::runtime::XlaEngine;
-use sodm::svrg::grad_sum_native;
+use sodm::svrg::{grad_sum_native, train_svrg, NativeGrad, SvrgConfig};
 use sodm::util::bench_loop;
+use sodm::util::json::{jstr, Json};
 
-fn report(name: &str, unit_count: f64, unit: &str, stats: &sodm::util::TimingStats) {
-    println!(
-        "{name:<34} mean {:>9.3} ms   min {:>9.3} ms   {:>12.0} {unit}/s",
-        stats.mean() * 1e3,
-        stats.min() * 1e3,
-        unit_count / stats.min()
-    );
+/// One reported line, kept for the JSON summary.
+struct Entry {
+    name: String,
+    mean_ms: f64,
+    min_ms: f64,
+    rate: f64,
+    unit: String,
+}
+
+struct Report {
+    entries: Vec<Entry>,
+}
+
+impl Report {
+    fn push(&mut self, name: &str, unit_count: f64, unit: &str, stats: &sodm::util::TimingStats) {
+        let e = Entry {
+            name: name.to_string(),
+            mean_ms: stats.mean() * 1e3,
+            min_ms: stats.min() * 1e3,
+            rate: unit_count / stats.min(),
+            unit: unit.to_string(),
+        };
+        println!(
+            "{:<34} mean {:>9.3} ms   min {:>9.3} ms   {:>12.0} {}/s",
+            e.name, e.mean_ms, e.min_ms, e.rate, e.unit
+        );
+        self.entries.push(e);
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "benches",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", jstr(e.name.clone())),
+                            ("mean_ms", Json::Num(e.mean_ms)),
+                            ("min_ms", Json::Num(e.min_ms)),
+                            ("rate", Json::Num(e.rate)),
+                            ("unit", jstr(e.unit.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut report = Report { entries: Vec::new() };
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+
     let mut spec = SynthSpec::named("ijcnn1", 0.02, 5);
-    spec.rows = 4000;
+    spec.rows = if quick { 1500 } else { 4000 };
     let ds = spec.generate();
     let idx = all_indices(&ds);
     let view = DataView::new(&ds, &idx);
     let rbf = KernelKind::Rbf { gamma: 1.0 };
     let params = OdmParams::default();
     println!(
-        "hotpath benches on {} rows x {} features\n",
-        ds.rows, ds.cols
+        "hotpath benches on {} rows x {} features{}\n",
+        ds.rows,
+        ds.cols,
+        if quick { " (quick budget)" } else { "" }
     );
 
     // 1. signed Gram row (the unit the DCD cache stores)
     let mut row = vec![0.0f32; view.len()];
-    let stats = bench_loop(2, 10, || {
+    let stats = bench_loop(warm, iters, || {
         signed_row(&view, &rbf, 7, &mut row);
         row[0]
     });
-    report("gram row (rbf, 4k cols)", view.len() as f64, "kval", &stats);
+    report.push("gram row (rbf, dense)", view.len() as f64, "kval", &stats);
 
     // 2. one DCD sweep, kernel path (fresh solver, 1 sweep)
     let budget1 = SolveBudget { max_sweeps: 1, ..Default::default() };
-    let stats = bench_loop(1, 5, || solve_odm_dual(&view, &rbf, &params, None, &budget1));
-    report("DCD sweep (rbf kernel path)", 2.0 * view.len() as f64, "coord", &stats);
+    let stats = bench_loop(1, iters.min(5), || {
+        solve_odm_dual(&view, &rbf, &params, None, &budget1)
+    });
+    report.push("DCD sweep (rbf kernel path)", 2.0 * view.len() as f64, "coord", &stats);
 
     // 3. one DCD sweep, linear path
-    let stats = bench_loop(1, 5, || {
+    let stats = bench_loop(1, iters.min(5), || {
         solve_odm_dual(&view, &KernelKind::Linear, &params, None, &budget1)
     });
-    report("DCD sweep (linear path)", 2.0 * view.len() as f64, "coord", &stats);
+    report.push("DCD sweep (linear path)", 2.0 * view.len() as f64, "coord", &stats);
 
     // 3b. DCD v2: shrinking + prefetch vs the no-shrink reference, to
     // convergence on a 1k-row subproblem — prints the telemetry that makes
@@ -86,12 +149,12 @@ fn main() {
 
     // 4. SVRG full gradient (native)
     let w = vec![0.1f64; ds.cols];
-    let stats = bench_loop(2, 10, || grad_sum_native(&w, &view, &params, 1));
-    report("full gradient (native)", view.len() as f64, "row", &stats);
+    let stats = bench_loop(warm, iters, || grad_sum_native(&w, &view, &params, 1));
+    report.push("full gradient (native)", view.len() as f64, "row", &stats);
 
     // 5. landmark selection (greedy pivoted Cholesky, S=32)
-    let stats = bench_loop(1, 5, || Nystrom::select(&view, &rbf, 32, 2048, 3));
-    report("landmark select (S=32, pool 2048)", 2048.0 * 32.0, "cand*s", &stats);
+    let stats = bench_loop(1, iters.min(5), || Nystrom::select(&view, &rbf, 32, 2048, 3));
+    report.push("landmark select (S=32, pool 2048)", 2048.0 * 32.0, "cand*s", &stats);
 
     // 6. batch prediction, native
     let model = sodm::odm::train_exact_odm(
@@ -100,27 +163,86 @@ fn main() {
         &params,
         &SolveBudget { max_sweeps: 5, ..Default::default() },
     );
-    let stats = bench_loop(1, 5, || model.accuracy(&ds));
-    report("batch predict (native kernel)", ds.rows as f64, "row", &stats);
+    let stats = bench_loop(1, iters.min(5), || model.accuracy(&ds));
+    report.push("batch predict (native kernel)", ds.rows as f64, "row", &stats);
 
-    // 7-8. PJRT artifact paths (skipped without artifacts)
+    // 7. sparse CSR path vs densified twin — the representation win the
+    // sparse data path exists for: identical semantics, O(nnz) work.
+    {
+        let rows = if quick { 800 } else { 2000 };
+        let cols = if quick { 2000 } else { 4000 };
+        let sp = SparseSynthSpec::new(rows, cols, 0.01, 9).generate();
+        let dense = sp.to_dense();
+        println!(
+            "\nsparse section: {} rows x {} cols, nnz {} (density {:.4})",
+            sp.rows,
+            sp.cols,
+            sp.nnz(),
+            sp.density()
+        );
+        let sp_idx = identity_indices(sp.rows);
+        let d_idx = all_indices(&dense);
+        let sp_view = DataView::sparse(&sp, &sp_idx);
+        let d_view = DataView::new(&dense, &d_idx);
+        let gamma = KernelKind::Rbf { gamma: 0.1 };
+        let mut out = vec![0.0f32; sp.rows];
+        let stats = bench_loop(warm, iters, || {
+            signed_row(&sp_view, &gamma, 3, &mut out);
+            out[0]
+        });
+        report.push("gram row (rbf, sparse CSR)", sp.rows as f64, "kval", &stats);
+        let stats = bench_loop(warm, iters, || {
+            signed_row(&d_view, &gamma, 3, &mut out);
+            out[0]
+        });
+        report.push("gram row (rbf, dense twin)", sp.rows as f64, "kval", &stats);
+
+        let wlin = vec![0.05f64; sp.cols];
+        let stats = bench_loop(warm, iters, || grad_sum_native(&wlin, &sp_view, &params, 1));
+        report.push("full gradient (sparse CSR)", sp.rows as f64, "row", &stats);
+        let stats = bench_loop(warm, iters, || grad_sum_native(&wlin, &d_view, &params, 1));
+        report.push("full gradient (dense twin)", sp.rows as f64, "row", &stats);
+
+        // one full SVRG epoch, lazy sparse steps vs eager dense steps
+        let cfg = SvrgConfig { epochs: 1, checkpoints_per_epoch: 1, ..Default::default() };
+        let grad = NativeGrad { workers: 1 };
+        let stats = bench_loop(1, iters.min(3), || {
+            let run = train_svrg(&sp, &params, &cfg, &grad);
+            let OdmModel::Linear { w } = run.model else { unreachable!() };
+            w[0]
+        });
+        report.push("SVRG epoch (sparse lazy)", sp.rows as f64, "step", &stats);
+        let stats = bench_loop(1, iters.min(3), || {
+            let run = train_svrg(&dense, &params, &cfg, &grad);
+            let OdmModel::Linear { w } = run.model else { unreachable!() };
+            w[0]
+        });
+        report.push("SVRG epoch (dense eager)", sp.rows as f64, "step", &stats);
+    }
+
+    // 8-9. PJRT artifact paths (skipped without artifacts)
     match XlaEngine::load_default() {
         Some(engine) => {
             let m = engine.geometry.gram_m;
             let x1 = &ds.x[..m * ds.cols];
             let y1 = &ds.y[..m];
-            let stats = bench_loop(2, 10, || {
+            let stats = bench_loop(warm, iters, || {
                 engine.rbf_gram_block(x1, y1, x1, y1, ds.cols, 1.0).expect("gram")
             });
-            report("PJRT gram block (256x256 pallas)", (m * m) as f64, "kval", &stats);
+            report.push("PJRT gram block (256x256 pallas)", (m * m) as f64, "kval", &stats);
 
-            let stats = bench_loop(2, 10, || {
+            let stats = bench_loop(warm, iters, || {
                 engine
                     .odm_grad_sum(&w, &ds.x[..1024 * ds.cols], &ds.y[..1024], ds.cols, &params)
                     .expect("grad")
             });
-            report("PJRT odm_grad (1024 pallas)", 1024.0, "row", &stats);
+            report.push("PJRT odm_grad (1024 pallas)", 1024.0, "row", &stats);
         }
         None => println!("(PJRT benches skipped: run `make artifacts`)"),
+    }
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_json().to_string()).expect("write json summary");
+        println!("\nwrote JSON summary to {path}");
     }
 }

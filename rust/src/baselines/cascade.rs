@@ -95,7 +95,10 @@ pub fn train_cascade(
             .iter()
             .zip(&nodes)
             .flat_map(|(sol, (idx, _))| {
-                (0..idx.len()).filter(|&i| sol.gamma[i] != 0.0).map(|i| sol.gamma[i]).collect::<Vec<_>>()
+                (0..idx.len())
+                    .filter(|&i| sol.gamma[i] != 0.0)
+                    .map(|i| sol.gamma[i])
+                    .collect::<Vec<_>>()
             })
             .collect();
         // Degenerate keep-one fallback can desync lengths; guard.

@@ -1,69 +1,209 @@
 //! LIBSVM sparse text format reader/writer.
 //!
-//! The paper evaluates on eight LIBSVM datasets (Table 1). We emulate them
-//! synthetically by default (DESIGN.md §3), but this loader lets the real
-//! files be dropped in (`sodm experiment --data-dir ...`) unchanged.
+//! The paper evaluates on eight LIBSVM datasets (Table 1); its largest
+//! (rcv1/news20-class text corpora) are >99% sparse. The reader streams the
+//! file once into CSR — O(nnz) memory, one reused line buffer — and
+//! [`read_libsvm_auto`] then picks the backing store: files dense enough to
+//! benefit from contiguous rows are densified, everything else stays CSR.
+//! This loader lets the real files be dropped in
+//! (`sodm experiment --data-dir ...`) unchanged.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use crate::data::Dataset;
+use crate::data::sparse::SparseDataset;
+use crate::data::{Dataset, Rows};
 use crate::Result;
 
-/// Parse a LIBSVM format file: each line `label idx:val idx:val ...`
-/// (1-based feature indices). `cols` can force a dimension (0 = infer).
-pub fn read_libsvm(path: impl AsRef<Path>, cols: usize) -> Result<Dataset> {
+/// Density at or above which [`read_libsvm_auto`] materializes a dense
+/// `Dataset`; below it the CSR representation wins on both memory and
+/// kernel-evaluation cost.
+pub const DENSE_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// Cell-count cap for auto-densification (`rows * cols`); 2^27 f32 cells =
+/// 512 MB. Above this the loader stays sparse regardless of density.
+pub const DENSE_MAX_CELLS: usize = 1 << 27;
+
+/// A loaded dataset in whichever backing [`read_libsvm_auto`] selected.
+pub enum LoadedDataset {
+    Dense(Dataset),
+    Sparse(SparseDataset),
+}
+
+impl LoadedDataset {
+    pub fn rows(&self) -> usize {
+        match self {
+            LoadedDataset::Dense(d) => d.rows,
+            LoadedDataset::Sparse(s) => s.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            LoadedDataset::Dense(d) => d.cols,
+            LoadedDataset::Sparse(s) => s.cols,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            LoadedDataset::Dense(d) => &d.name,
+            LoadedDataset::Sparse(s) => &s.name,
+        }
+    }
+
+    /// Borrow as the backing-agnostic [`Rows`] view.
+    pub fn as_rows(&self) -> Rows<'_> {
+        match self {
+            LoadedDataset::Dense(d) => Rows::Dense(d),
+            LoadedDataset::Sparse(s) => Rows::Sparse(s),
+        }
+    }
+
+    /// Deterministic shuffled train/test split preserving the backing.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (LoadedDataset, LoadedDataset) {
+        match self {
+            LoadedDataset::Dense(d) => {
+                let (a, b) = d.split(train_frac, seed);
+                (LoadedDataset::Dense(a), LoadedDataset::Dense(b))
+            }
+            LoadedDataset::Sparse(s) => {
+                let (a, b) = s.split(train_frac, seed);
+                (LoadedDataset::Sparse(a), LoadedDataset::Sparse(b))
+            }
+        }
+    }
+}
+
+/// Map a raw libsvm label to ±1. Common conventions: {1,-1}, {1,0}, {1,2}
+/// -> non-positive and 2 map to -1.
+#[inline]
+fn map_label(raw: f32) -> f32 {
+    if raw > 0.0 && raw != 2.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Streaming CSR parse of a LIBSVM file: each line `label idx:val ...`
+/// (1-based feature indices). `cols` can force a minimum dimension
+/// (0 = infer from the max index). One pass, one reused line buffer,
+/// O(nnz) memory.
+pub fn read_libsvm_sparse(path: impl AsRef<Path>, cols: usize) -> Result<SparseDataset> {
     let f = File::open(path.as_ref())?;
-    let reader = BufReader::new(f);
-    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut reader = BufReader::new(f);
+    let mut indptr: Vec<usize> = vec![0];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut y: Vec<f32> = Vec::new();
     let mut max_col = cols;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
             continue;
         }
-        let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts
-            .next()
-            .ok_or_else(|| crate::err!("line {}: missing label", lineno + 1))?;
+        let mut parts = trimmed.split_ascii_whitespace();
+        let label_tok =
+            parts.next().ok_or_else(|| crate::err!("line {lineno}: missing label"))?;
         let raw: f32 = label_tok
             .parse()
-            .map_err(|e| crate::err!("line {}: bad label {label_tok:?}: {e}", lineno + 1))?;
-        // Common conventions: {1,-1}, {1,0}, {1,2} -> map non-positive/2 to -1.
-        let label = if raw > 0.0 && raw != 2.0 { 1.0 } else { -1.0 };
-        let mut feats = Vec::new();
+            .map_err(|e| crate::err!("line {lineno}: bad label {label_tok:?}: {e}"))?;
+        y.push(map_label(raw));
+        let row_start = indices.len();
+        // `canonical` = sorted, unique, no explicit zeros — the CSR
+        // invariant shared with `SparseDataset::from_dense`. Rows that
+        // break it take the normalization pass below.
+        let mut canonical = true;
         for tok in parts {
             let (i, v) = tok
                 .split_once(':')
-                .ok_or_else(|| crate::err!("line {}: bad pair {tok:?}", lineno + 1))?;
+                .ok_or_else(|| crate::err!("line {lineno}: bad pair {tok:?}"))?;
             let i: usize = i.parse()?;
             let v: f32 = v.parse()?;
-            crate::ensure!(i >= 1, "line {}: feature index must be >= 1", lineno + 1);
+            crate::ensure!(i >= 1, "line {lineno}: feature index must be >= 1");
+            crate::ensure!(
+                i - 1 <= u32::MAX as usize,
+                "line {lineno}: feature index {i} exceeds the u32 column range"
+            );
             max_col = max_col.max(i);
-            feats.push((i - 1, v));
+            let col = (i - 1) as u32;
+            if v == 0.0 {
+                canonical = false;
+            }
+            if let Some(&prev) = indices.last() {
+                if indices.len() > row_start && prev >= col {
+                    canonical = false;
+                }
+            }
+            indices.push(col);
+            values.push(v);
         }
-        rows.push((label, feats));
-    }
-    let n = max_col;
-    let mut x = vec![0.0f32; rows.len() * n];
-    let mut y = Vec::with_capacity(rows.len());
-    for (r, (label, feats)) in rows.iter().enumerate() {
-        y.push(*label);
-        for &(j, v) in feats {
-            x[r * n + j] = v;
+        if !canonical {
+            // Out-of-convention row: sort the tail; on duplicate columns the
+            // last occurrence wins, and explicit zeros are dropped — both
+            // matching the dense scatter semantics (writing 0 is a no-op).
+            let mut pairs: Vec<(u32, f32)> = indices[row_start..]
+                .iter()
+                .copied()
+                .zip(values[row_start..].iter().copied())
+                .collect();
+            pairs.sort_by_key(|p| p.0);
+            indices.truncate(row_start);
+            values.truncate(row_start);
+            let mut k = 0;
+            while k < pairs.len() {
+                let mut last = pairs[k];
+                while k + 1 < pairs.len() && pairs[k + 1].0 == last.0 {
+                    k += 1;
+                    last = pairs[k];
+                }
+                if last.1 != 0.0 {
+                    indices.push(last.0);
+                    values.push(last.1);
+                }
+                k += 1;
+            }
         }
+        indptr.push(indices.len());
     }
     let name = path
         .as_ref()
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "libsvm".into());
-    Ok(Dataset::new(name, x, y, n))
+    Ok(SparseDataset::new(name, indptr, indices, values, y, max_col))
 }
 
-/// Write a dataset in LIBSVM format (dense rows; zeros omitted).
+/// Parse a LIBSVM file, auto-detecting the backing store: density >=
+/// [`DENSE_DENSITY_THRESHOLD`] (and at most [`DENSE_MAX_CELLS`] cells)
+/// densifies, everything else stays CSR.
+pub fn read_libsvm_auto(path: impl AsRef<Path>, cols: usize) -> Result<LoadedDataset> {
+    let sp = read_libsvm_sparse(path, cols)?;
+    let cells = sp.rows.saturating_mul(sp.cols);
+    if sp.density() >= DENSE_DENSITY_THRESHOLD && cells <= DENSE_MAX_CELLS {
+        Ok(LoadedDataset::Dense(sp.to_dense()))
+    } else {
+        Ok(LoadedDataset::Sparse(sp))
+    }
+}
+
+/// Parse a LIBSVM format file into a dense [`Dataset`] unconditionally
+/// (the historical entry point; prefer [`read_libsvm_auto`] for data that
+/// may be high-dimensional).
+pub fn read_libsvm(path: impl AsRef<Path>, cols: usize) -> Result<Dataset> {
+    Ok(read_libsvm_sparse(path, cols)?.to_dense())
+}
+
+/// Write a dense dataset in LIBSVM format (zeros omitted).
 pub fn write_libsvm(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     let f = File::create(path)?;
     let mut w = BufWriter::new(f);
@@ -72,6 +212,22 @@ pub fn write_libsvm(data: &Dataset, path: impl AsRef<Path>) -> Result<()> {
         for (j, &v) in data.row(i).iter().enumerate() {
             if v != 0.0 {
                 write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write a CSR dataset in LIBSVM format — O(nnz), no densification.
+pub fn write_libsvm_sparse(data: &SparseDataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..data.rows {
+        write!(w, "{}", if data.y[i] > 0.0 { "+1" } else { "-1" })?;
+        for k in data.indptr[i]..data.indptr[i + 1] {
+            if data.values[k] != 0.0 {
+                write!(w, " {}:{}", data.indices[k] + 1, data.values[k])?;
             }
         }
         writeln!(w)?;
@@ -144,5 +300,90 @@ mod tests {
         std::fs::write(&p, "+1 1:1.0\n").unwrap();
         let d = read_libsvm(&p, 5).unwrap();
         assert_eq!(d.cols, 5);
+    }
+
+    #[test]
+    fn sparse_parse_preserves_csr_structure() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("sp.txt");
+        std::fs::write(&p, "+1 2:0.5 100000:1.5\n-1 7:2.0\n").unwrap();
+        let s = read_libsvm_sparse(&p, 0).unwrap();
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.cols, 100_000);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.indptr, vec![0, 2, 3]);
+        assert_eq!(s.indices, vec![1, 99_999, 6]);
+        assert_eq!(s.values, vec![0.5, 1.5, 2.0]);
+        // sparse write round-trips without densifying 100k columns
+        let p2 = dir.0.join("sp2.txt");
+        write_libsvm_sparse(&s, &p2).unwrap();
+        let s2 = read_libsvm_sparse(&p2, 0).unwrap();
+        assert_eq!(s.indices, s2.indices);
+        assert_eq!(s.values, s2.values);
+        assert_eq!(s.y, s2.y);
+    }
+
+    #[test]
+    fn unsorted_and_duplicate_indices_normalize() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("u.txt");
+        // out-of-order indices plus a duplicate (last occurrence wins,
+        // matching the dense scatter semantics)
+        std::fs::write(&p, "+1 3:3.0 1:1.0 3:9.0\n").unwrap();
+        let s = read_libsvm_sparse(&p, 0).unwrap();
+        assert_eq!(s.indices, vec![0, 2]);
+        assert_eq!(s.values, vec![1.0, 9.0]);
+        let d = s.to_dense();
+        assert_eq!(d.row(0), &[1.0, 0.0, 9.0]);
+    }
+
+    #[test]
+    fn explicit_zeros_are_dropped() {
+        // Explicit zeros must not be stored (the from_dense/write round-trip
+        // invariant), including a duplicate whose last occurrence is zero.
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("z.txt");
+        std::fs::write(&p, "+1 2:0 4:1.5\n-1 1:2.0 1:0\n").unwrap();
+        let s = read_libsvm_sparse(&p, 0).unwrap();
+        assert_eq!(s.indptr, vec![0, 1, 1]);
+        assert_eq!(s.indices, vec![3]);
+        assert_eq!(s.values, vec![1.5]);
+        // fixed point: write -> reread preserves the CSR exactly
+        let p2 = dir.0.join("z2.txt");
+        write_libsvm_sparse(&s, &p2).unwrap();
+        let s2 = read_libsvm_sparse(&p2, s.cols).unwrap();
+        assert_eq!(s.indptr, s2.indptr);
+        assert_eq!(s.indices, s2.indices);
+        assert_eq!(s.values, s2.values);
+    }
+
+    #[test]
+    fn auto_detection_picks_backing_by_density() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let dense_p = dir.0.join("dense.txt");
+        std::fs::write(&dense_p, "+1 1:1 2:2 3:3\n-1 1:4 2:5 3:6\n").unwrap();
+        assert!(matches!(
+            read_libsvm_auto(&dense_p, 0).unwrap(),
+            LoadedDataset::Dense(_)
+        ));
+        let sparse_p = dir.0.join("sparse.txt");
+        std::fs::write(&sparse_p, "+1 1:1 1000:1\n-1 500:1\n").unwrap();
+        let loaded = read_libsvm_auto(&sparse_p, 0).unwrap();
+        assert!(matches!(loaded, LoadedDataset::Sparse(_)));
+        assert_eq!(loaded.cols(), 1000);
+        assert_eq!(loaded.rows(), 2);
+    }
+
+    #[test]
+    fn sparse_and_dense_readers_agree() {
+        let dir = Cleanup(temp_dir("libsvm"));
+        let p = dir.0.join("agree.txt");
+        std::fs::write(&p, "+1 1:0.5 3:2.0\n-1 2:1.5\n0 4:0.25\n").unwrap();
+        let dense = read_libsvm(&p, 0).unwrap();
+        let sparse = read_libsvm_sparse(&p, 0).unwrap();
+        let densified = sparse.to_dense();
+        assert_eq!(dense.x, densified.x);
+        assert_eq!(dense.y, densified.y);
+        assert_eq!(dense.cols, densified.cols);
     }
 }

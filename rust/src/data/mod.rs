@@ -1,9 +1,16 @@
-//! Data layer: dense row-major matrices, libsvm I/O, normalization, splits,
-//! and synthetic emulators for the paper's eight benchmark datasets.
+//! Data layer: dense row-major matrices, CSR sparse matrices, libsvm I/O,
+//! normalization, splits, and synthetic emulators for the paper's benchmark
+//! datasets (dense Gaussian mixtures and high-dimensional sparse corpora).
+//!
+//! Every consumer (kernels, DCD solvers, SVRG, serving) reads feature rows
+//! through [`RowRef`] and whole datasets through [`Rows`]/[`DataView`], so
+//! dense and sparse backings share one code path without copies.
 
 pub mod libsvm;
+pub mod sparse;
 pub mod synth;
 
+use crate::data::sparse::SparseDataset;
 use crate::util::rng::Pcg32;
 
 /// A dense, row-major labelled dataset. Labels are `+1.0` / `-1.0` (`0.0` is
@@ -104,17 +111,247 @@ impl Dataset {
     }
 }
 
-/// A borrowed view of a subset of a [`Dataset`]'s rows. All solvers operate
-/// on views so partitioning/merging never copies feature data.
+/// A borrowed feature row — the single currency every kernel evaluation,
+/// gradient step, and decision function consumes, so dense and sparse
+/// backings share one code path.
+///
+/// `Dense` borrows a contiguous `cols`-length slice; `Sparse` borrows the
+/// CSR (sorted column ids, values) pair of one row. Construction is free in
+/// both cases; nothing here copies feature data.
+#[derive(Clone, Copy, Debug)]
+pub enum RowRef<'a> {
+    /// A dense row: every column stored, zeros included.
+    Dense(&'a [f32]),
+    /// A CSR row: `indices` sorted ascending, parallel to `values`.
+    Sparse {
+        indices: &'a [u32],
+        values: &'a [f32],
+        /// Logical dimensionality of the row (number of columns).
+        cols: usize,
+    },
+}
+
+impl<'a> RowRef<'a> {
+    /// Logical number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            RowRef::Dense(x) => x.len(),
+            RowRef::Sparse { cols, .. } => *cols,
+        }
+    }
+
+    /// Stored entries: `cols` for dense rows, nonzero count for sparse.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match self {
+            RowRef::Dense(x) => x.len(),
+            RowRef::Sparse { indices, .. } => indices.len(),
+        }
+    }
+
+    /// The dense slice if this row is densely backed.
+    #[inline]
+    pub fn dense(&self) -> Option<&'a [f32]> {
+        match *self {
+            RowRef::Dense(x) => Some(x),
+            RowRef::Sparse { .. } => None,
+        }
+    }
+
+    /// Visit every *stored* entry as `(column, value)`. For dense rows this
+    /// is every column (zeros included) — the iteration is about storage,
+    /// which is what gradient/axpy consumers want: skipping a stored zero
+    /// would change float summation order against the dense reference path.
+    #[inline]
+    pub fn for_each_stored(&self, mut f: impl FnMut(usize, f32)) {
+        match self {
+            RowRef::Dense(x) => {
+                for (j, v) in x.iter().enumerate() {
+                    f(j, *v);
+                }
+            }
+            RowRef::Sparse { indices, values, .. } => {
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    f(*i as usize, *v);
+                }
+            }
+        }
+    }
+
+    /// `w += scale * self` over the stored entries: dense rows keep the
+    /// vectorizable zip loop (the historical update order), sparse rows
+    /// scatter in O(nnz). Column ids must be in range for `w`
+    /// (solver-internal contract) — shared by the DCD and SVRG updates.
+    #[inline]
+    pub fn axpy_into(&self, w: &mut [f64], scale: f64) {
+        match *self {
+            RowRef::Dense(xs) => {
+                for (wj, xj) in w.iter_mut().zip(xs) {
+                    *wj += scale * *xj as f64;
+                }
+            }
+            RowRef::Sparse { indices, values, .. } => {
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    w[*i as usize] += scale * *v as f64;
+                }
+            }
+        }
+    }
+
+    /// Scatter this row into a zeroed dense buffer of length `cols`.
+    /// (The buffer must already be zero where this row has no entry.)
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        match self {
+            RowRef::Dense(x) => out[..x.len()].copy_from_slice(x),
+            RowRef::Sparse { indices, values, .. } => {
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    out[*i as usize] = *v;
+                }
+            }
+        }
+    }
+
+    /// Densify into a fresh `cols`-length vector.
+    pub fn to_dense_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols()];
+        self.scatter_into(&mut out);
+        out
+    }
+}
+
+impl<'a> From<&'a [f32]> for RowRef<'a> {
+    fn from(x: &'a [f32]) -> Self {
+        RowRef::Dense(x)
+    }
+}
+
+impl<'a> From<&'a Vec<f32>> for RowRef<'a> {
+    fn from(x: &'a Vec<f32>) -> Self {
+        RowRef::Dense(x.as_slice())
+    }
+}
+
+/// A borrowed dataset of either backing — the `Rows` abstraction the
+/// solvers, partitioners, and trainers are generic over. `Copy`, so it
+/// moves freely into worker closures.
+///
+/// Dense-only cold paths (input-space k-means, the PJRT batch layouts) may
+/// call [`Rows::row`] and panic on sparse data; everything on the training
+/// and serving hot paths goes through [`Rows::row_ref`].
+#[derive(Clone, Copy)]
+pub enum Rows<'a> {
+    Dense(&'a Dataset),
+    Sparse(&'a SparseDataset),
+}
+
+impl<'a> Rows<'a> {
+    /// Number of instances.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Rows::Dense(d) => d.rows,
+            Rows::Sparse(s) => s.rows,
+        }
+    }
+
+    /// Number of feature columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Rows::Dense(d) => d.cols,
+            Rows::Sparse(s) => s.cols,
+        }
+    }
+
+    /// All labels.
+    #[inline]
+    pub fn labels(&self) -> &'a [f32] {
+        match self {
+            Rows::Dense(d) => &d.y,
+            Rows::Sparse(s) => &s.y,
+        }
+    }
+
+    /// Label of global row `g`.
+    #[inline]
+    pub fn label(&self, g: usize) -> f32 {
+        self.labels()[g]
+    }
+
+    /// Feature row `g` of either backing (no copy).
+    #[inline]
+    pub fn row_ref(&self, g: usize) -> RowRef<'a> {
+        match self {
+            Rows::Dense(d) => RowRef::Dense(d.row(g)),
+            Rows::Sparse(s) => s.row_ref(g),
+        }
+    }
+
+    /// Dense feature row `g`. Panics on sparse backing — reserved for the
+    /// few dense-only paths (see type-level docs).
+    #[inline]
+    pub fn row(&self, g: usize) -> &'a [f32] {
+        match self {
+            Rows::Dense(d) => d.row(g),
+            Rows::Sparse(s) => {
+                panic!("dense row access on sparse dataset {:?}", s.name)
+            }
+        }
+    }
+
+    /// Dataset name.
+    pub fn name(&self) -> &'a str {
+        match self {
+            Rows::Dense(d) => &d.name,
+            Rows::Sparse(s) => &s.name,
+        }
+    }
+
+    /// True for CSR backing.
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Rows::Sparse(_))
+    }
+}
+
+impl<'a> From<&'a Dataset> for Rows<'a> {
+    fn from(d: &'a Dataset) -> Self {
+        Rows::Dense(d)
+    }
+}
+
+impl<'a> From<&'a SparseDataset> for Rows<'a> {
+    fn from(s: &'a SparseDataset) -> Self {
+        Rows::Sparse(s)
+    }
+}
+
+/// A borrowed view of a subset of a dataset's rows (either backing). All
+/// solvers operate on views so partitioning/merging never copies feature
+/// data.
 #[derive(Clone, Copy)]
 pub struct DataView<'a> {
-    pub data: &'a Dataset,
+    /// The backing dataset (dense or sparse).
+    pub data: Rows<'a>,
+    /// Global row indices selected by this view.
     pub idx: &'a [usize],
 }
 
 impl<'a> DataView<'a> {
+    /// View over a dense dataset (the historical constructor).
     pub fn new(data: &'a Dataset, idx: &'a [usize]) -> Self {
-        debug_assert!(idx.iter().all(|&i| i < data.rows), "index out of range");
+        Self::from_rows(Rows::Dense(data), idx)
+    }
+
+    /// View over a sparse dataset.
+    pub fn sparse(data: &'a SparseDataset, idx: &'a [usize]) -> Self {
+        Self::from_rows(Rows::Sparse(data), idx)
+    }
+
+    /// View over either backing.
+    pub fn from_rows(data: Rows<'a>, idx: &'a [usize]) -> Self {
+        debug_assert!(idx.iter().all(|&i| i < data.rows()), "index out of range");
         Self { data, idx }
     }
 
@@ -133,22 +370,41 @@ impl<'a> DataView<'a> {
         self.idx.is_empty()
     }
 
-    /// Feature row of the view-local `i`-th instance.
+    /// Feature dimensionality of the backing dataset.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.data.cols()
+    }
+
+    /// Dense feature row of the view-local `i`-th instance (panics on
+    /// sparse backing; hot paths use [`DataView::row_ref`]).
     #[inline]
     pub fn row(&self, i: usize) -> &'a [f32] {
         self.data.row(self.idx[i])
     }
 
+    /// Feature row of the view-local `i`-th instance, either backing.
+    #[inline]
+    pub fn row_ref(&self, i: usize) -> RowRef<'a> {
+        self.data.row_ref(self.idx[i])
+    }
+
     /// Label of the view-local `i`-th instance.
     #[inline]
     pub fn label(&self, i: usize) -> f32 {
-        self.data.y[self.idx[i]]
+        self.data.label(self.idx[i])
     }
 }
 
 /// Identity index vector `0..rows`, the "all rows" view backing.
 pub fn all_indices(data: &Dataset) -> Vec<usize> {
     (0..data.rows).collect()
+}
+
+/// Identity index vector `0..n` for either backing (pair with
+/// [`DataView::from_rows`]).
+pub fn identity_indices(n: usize) -> Vec<usize> {
+    (0..n).collect()
 }
 
 #[cfg(test)]
@@ -217,6 +473,7 @@ mod tests {
         assert_eq!(v.len(), 2);
         assert_eq!(v.row(0), &[2.0, 6.0]);
         assert_eq!(v.label(1), 1.0);
+        assert_eq!(v.cols(), 2);
     }
 
     #[test]
@@ -231,5 +488,49 @@ mod tests {
     #[test]
     fn positive_fraction() {
         assert!((toy().positive_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_ref_dense_and_sparse_agree() {
+        let d = toy();
+        let sp = SparseDataset::from_dense(&d);
+        for i in 0..d.rows {
+            let dense = Rows::Dense(&d).row_ref(i);
+            let sparse = Rows::Sparse(&sp).row_ref(i);
+            assert_eq!(dense.cols(), sparse.cols());
+            assert_eq!(dense.to_dense_vec(), sparse.to_dense_vec());
+        }
+    }
+
+    #[test]
+    fn sparse_view_indexing() {
+        let d = toy();
+        let sp = SparseDataset::from_dense(&d);
+        let idx = vec![2usize, 0];
+        let v = DataView::sparse(&sp, &idx);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.row_ref(0).to_dense_vec(), vec![2.0, 6.0]);
+        assert_eq!(v.label(1), 1.0);
+        assert!(v.data.is_sparse());
+    }
+
+    #[test]
+    fn for_each_stored_visits_dense_zeros_and_sparse_nonzeros() {
+        let d = toy();
+        let sp = SparseDataset::from_dense(&d);
+        let mut dense_count = 0;
+        Rows::Dense(&d).row_ref(0).for_each_stored(|_, _| dense_count += 1);
+        assert_eq!(dense_count, 2, "dense rows visit every column");
+        let mut sparse_entries = Vec::new();
+        Rows::Sparse(&sp).row_ref(0).for_each_stored(|j, v| sparse_entries.push((j, v)));
+        assert_eq!(sparse_entries, vec![(1, 2.0)], "sparse rows visit nonzeros only");
+    }
+
+    #[test]
+    #[should_panic]
+    fn dense_row_access_on_sparse_panics() {
+        let d = toy();
+        let sp = SparseDataset::from_dense(&d);
+        let _ = Rows::Sparse(&sp).row(0);
     }
 }

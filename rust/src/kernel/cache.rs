@@ -5,7 +5,7 @@
 use std::collections::HashMap;
 
 use crate::data::DataView;
-use crate::kernel::{dot, signed_row, KernelKind};
+use crate::kernel::{dot_rr, signed_row, sq_norm_rr, KernelKind};
 
 /// Fixed-budget LRU row cache. Keys are *view-local* row indices; the cache
 /// must be rebuilt (or [`RowCache::clear`]-ed) whenever the view changes
@@ -122,10 +122,11 @@ impl RowCache {
         self.rows.insert(i, Entry { last_used: self.stamp, data });
     }
 
-    /// Lazily materialize ‖x_j‖² for the RBF fast path.
+    /// Lazily materialize ‖x_j‖² for the RBF fast path (either backing:
+    /// sparse self-dots are O(nnz)).
     fn ensure_norms(&mut self, view: &DataView, kernel: &KernelKind) {
         if matches!(kernel, KernelKind::Rbf { .. }) && self.sq_norms.is_empty() {
-            self.sq_norms = (0..view.len()).map(|j| dot(view.row(j), view.row(j))).collect();
+            self.sq_norms = (0..view.len()).map(|j| sq_norm_rr(view.row_ref(j))).collect();
         }
     }
 
@@ -141,11 +142,11 @@ impl RowCache {
     ) {
         match kernel {
             KernelKind::Rbf { gamma } if !sq_norms.is_empty() => {
-                let xi = view.row(i);
+                let xi = view.row_ref(i);
                 let yi = view.label(i);
                 let ni = sq_norms[i];
                 for (j, o) in out.iter_mut().enumerate() {
-                    let d = (ni + sq_norms[j] - 2.0 * dot(xi, view.row(j))).max(0.0);
+                    let d = (ni + sq_norms[j] - 2.0 * dot_rr(xi, view.row_ref(j))).max(0.0);
                     *o = yi * view.label(j) * (-gamma * d).exp();
                 }
             }
@@ -300,6 +301,24 @@ mod tests {
         // re-prefetching cached rows is free
         assert_eq!(c.prefetch(&v, &k, &[0, 1], 2), 0);
         assert_eq!(c.stats(), (2, 2));
+    }
+
+    #[test]
+    fn sparse_view_rows_match_dense_view_rows() {
+        let (d, idx) = fixture();
+        let sp = crate::data::sparse::SparseDataset::from_dense(&d);
+        let dv = DataView::new(&d, &idx);
+        let sv = DataView::sparse(&sp, &idx);
+        let k = KernelKind::Rbf { gamma: 0.9 };
+        let mut cd = RowCache::new(1 << 20, dv.len());
+        let mut cs = RowCache::new(1 << 20, sv.len());
+        for i in [0usize, 3, 6] {
+            let rd = cd.get(&dv, &k, i).to_vec();
+            let rs = cs.get(&sv, &k, i).to_vec();
+            for (a, b) in rd.iter().zip(&rs) {
+                assert!((a - b).abs() < 1e-6, "row {i}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

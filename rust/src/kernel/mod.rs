@@ -4,10 +4,16 @@
 //! The rust-native evaluation here mirrors the Pallas kernels byte-for-byte
 //! semantically (`python/compile/kernels/ref.py` is the shared spec);
 //! integration tests cross-check the two through the PJRT runtime.
+//!
+//! Every entry point takes [`RowRef`] rows, so dense and CSR-sparse data
+//! share one evaluation path: dense×dense pairs route to the historical
+//! 4-lane loops (bit-identical to the pre-sparse code), sparse×sparse pairs
+//! use an O(nnz) sorted merge, and mixed pairs gather through the sparse
+//! side's indices.
 
 pub mod cache;
 
-use crate::data::DataView;
+use crate::data::{DataView, RowRef};
 
 /// Positive-definite kernel choices used in the paper's experiments.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -19,15 +25,18 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
-    /// Evaluate k(a, b).
+    /// Evaluate k(a, b) on dense rows.
     #[inline]
     pub fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        self.eval_rr(RowRef::Dense(a), RowRef::Dense(b))
+    }
+
+    /// Evaluate k(a, b) on rows of any backing.
+    #[inline]
+    pub fn eval_rr(&self, a: RowRef, b: RowRef) -> f32 {
         match self {
-            KernelKind::Linear => dot(a, b),
-            KernelKind::Rbf { gamma } => {
-                let d = sq_dist(a, b);
-                (-gamma * d).exp()
-            }
+            KernelKind::Linear => dot_rr(a, b),
+            KernelKind::Rbf { gamma } => (-gamma * sq_dist_rr(a, b)).exp(),
         }
     }
 
@@ -100,21 +109,168 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     s.max(0.0)
 }
 
+/// Dot product of two CSR rows: sorted-index merge join, O(nnz_a + nnz_b).
+#[inline]
+pub fn dot_sparse(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f32 {
+    let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f32);
+    while p < ai.len() && q < bi.len() {
+        let (ia, ib) = (ai[p], bi[q]);
+        if ia == ib {
+            s += av[p] * bv[q];
+            p += 1;
+            q += 1;
+        } else if ia < ib {
+            p += 1;
+        } else {
+            q += 1;
+        }
+    }
+    s
+}
+
+/// Dot product of a CSR row against a dense row: gather, O(nnz).
+#[inline]
+pub fn dot_sparse_dense(ai: &[u32], av: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (i, v) in ai.iter().zip(av.iter()) {
+        s += v * b[*i as usize];
+    }
+    s
+}
+
+/// Dot product over rows of any backing. Dense×dense delegates to [`dot`]
+/// (bit-identical to the historical path).
+#[inline]
+pub fn dot_rr(a: RowRef, b: RowRef) -> f32 {
+    debug_assert_eq!(a.cols(), b.cols());
+    match (a, b) {
+        (RowRef::Dense(x), RowRef::Dense(z)) => dot(x, z),
+        (RowRef::Sparse { indices: ai, values: av, .. }, RowRef::Dense(z)) => {
+            dot_sparse_dense(ai, av, z)
+        }
+        (RowRef::Dense(x), RowRef::Sparse { indices: bi, values: bv, .. }) => {
+            dot_sparse_dense(bi, bv, x)
+        }
+        (
+            RowRef::Sparse { indices: ai, values: av, .. },
+            RowRef::Sparse { indices: bi, values: bv, .. },
+        ) => dot_sparse(ai, av, bi, bv),
+    }
+}
+
+/// Squared distance of two CSR rows: merge join over the index union,
+/// summing (a_j - b_j)² — O(nnz_a + nnz_b) and exact in expression form
+/// (no norm expansion), matching the dense [`sq_dist`] semantics.
+#[inline]
+fn sq_dist_sparse(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f32 {
+    let (mut p, mut q, mut s) = (0usize, 0usize, 0.0f32);
+    while p < ai.len() && q < bi.len() {
+        let (ia, ib) = (ai[p], bi[q]);
+        let d = if ia == ib {
+            let d = av[p] - bv[q];
+            p += 1;
+            q += 1;
+            d
+        } else if ia < ib {
+            let d = av[p];
+            p += 1;
+            d
+        } else {
+            let d = -bv[q];
+            q += 1;
+            d
+        };
+        s += d * d;
+    }
+    while p < ai.len() {
+        s += av[p] * av[p];
+        p += 1;
+    }
+    while q < bi.len() {
+        s += bv[q] * bv[q];
+        q += 1;
+    }
+    s.max(0.0)
+}
+
+/// Squared euclidean distance over rows of any backing. Dense×dense
+/// delegates to [`sq_dist`]; mixed pairs walk the dense side once with a
+/// pointer into the sparse side (O(cols), no norm-expansion roundoff).
+#[inline]
+pub fn sq_dist_rr(a: RowRef, b: RowRef) -> f32 {
+    debug_assert_eq!(a.cols(), b.cols());
+    match (a, b) {
+        (RowRef::Dense(x), RowRef::Dense(z)) => sq_dist(x, z),
+        (RowRef::Sparse { indices: ai, values: av, .. }, RowRef::Dense(z)) => {
+            sq_dist_sparse_dense(ai, av, z)
+        }
+        (RowRef::Dense(x), RowRef::Sparse { indices: bi, values: bv, .. }) => {
+            sq_dist_sparse_dense(bi, bv, x)
+        }
+        (
+            RowRef::Sparse { indices: ai, values: av, .. },
+            RowRef::Sparse { indices: bi, values: bv, .. },
+        ) => sq_dist_sparse(ai, av, bi, bv),
+    }
+}
+
+#[inline]
+fn sq_dist_sparse_dense(ai: &[u32], av: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut p = 0usize;
+    for (j, bj) in b.iter().enumerate() {
+        let aj = if p < ai.len() && ai[p] as usize == j {
+            let v = av[p];
+            p += 1;
+            v
+        } else {
+            0.0
+        };
+        let d = aj - bj;
+        s += d * d;
+    }
+    s.max(0.0)
+}
+
+/// ‖x‖² of a row of any backing (the RBF norms fast path input).
+#[inline]
+pub fn sq_norm_rr(x: RowRef) -> f32 {
+    dot_rr(x, x)
+}
+
+/// k(a, b) with both squared norms precomputed: the RBF distance becomes
+/// `na + nb − 2<a,b>`, so a sparse×dense pair costs one O(nnz) gather
+/// instead of the O(cols) dense walk of [`sq_dist_rr`]. This is the same
+/// norms fast path the Gram-row cache uses; callers that evaluate one row
+/// against many (landmark selection, stratum assignment) amortize the norm
+/// computations.
+#[inline]
+pub fn eval_with_norms(kernel: &KernelKind, a: RowRef, na: f32, b: RowRef, nb: f32) -> f32 {
+    match kernel {
+        KernelKind::Linear => dot_rr(a, b),
+        KernelKind::Rbf { gamma } => {
+            let d = (na + nb - 2.0 * dot_rr(a, b)).max(0.0);
+            (-gamma * d).exp()
+        }
+    }
+}
+
 /// Fill `out[j] = y_i y_j k(x_i, x_j)` for all `j` in the view — one signed
-/// Gram row, the unit of work the DCD cache stores.
+/// Gram row, the unit of work the DCD cache stores. Works on dense and
+/// sparse views alike.
 pub fn signed_row(view: &DataView, kernel: &KernelKind, i: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), view.len());
-    let xi = view.row(i);
+    let xi = view.row_ref(i);
     let yi = view.label(i);
     match kernel {
         KernelKind::Linear => {
             for (j, o) in out.iter_mut().enumerate() {
-                *o = yi * view.label(j) * dot(xi, view.row(j));
+                *o = yi * view.label(j) * dot_rr(xi, view.row_ref(j));
             }
         }
         KernelKind::Rbf { gamma } => {
             for (j, o) in out.iter_mut().enumerate() {
-                *o = yi * view.label(j) * (-gamma * sq_dist(xi, view.row(j))).exp();
+                *o = yi * view.label(j) * (-gamma * sq_dist_rr(xi, view.row_ref(j))).exp();
             }
         }
     }
@@ -123,6 +279,7 @@ pub fn signed_row(view: &DataView, kernel: &KernelKind, i: usize, out: &mut [f32
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::sparse::SparseDataset;
     use crate::data::Dataset;
 
     fn ds() -> Dataset {
@@ -200,5 +357,55 @@ mod tests {
             KernelKind::Rbf { gamma } => assert!((gamma - 0.05).abs() < 1e-7),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn sparse_dot_and_dist_match_dense() {
+        // Power-of-two-ish values keep every f32 sum exact, so all four
+        // backing combinations must agree bitwise.
+        let a = vec![0.5f32, 0.0, 0.25, 0.0, 1.0, 0.0];
+        let b = vec![0.0f32, 0.75, 0.25, 0.0, 0.5, 0.5];
+        let da = Dataset::new("a", a.clone(), vec![1.0], 6);
+        let db = Dataset::new("b", b.clone(), vec![1.0], 6);
+        let sa = SparseDataset::from_dense(&da);
+        let sb = SparseDataset::from_dense(&db);
+        let (ra_d, rb_d) = (RowRef::Dense(&a[..]), RowRef::Dense(&b[..]));
+        let (ra_s, rb_s) = (sa.row_ref(0), sb.row_ref(0));
+        let want_dot = dot(&a, &b);
+        let want_dist = sq_dist(&a, &b);
+        for (x, z) in [(ra_d, rb_s), (ra_s, rb_d), (ra_s, rb_s)] {
+            assert_eq!(dot_rr(x, z), want_dot);
+            assert_eq!(sq_dist_rr(x, z), want_dist);
+        }
+        assert_eq!(sq_norm_rr(ra_s), dot(&a, &a));
+    }
+
+    #[test]
+    fn signed_row_sparse_matches_dense() {
+        let d = ds();
+        let sp = SparseDataset::from_dense(&d);
+        let idx: Vec<usize> = (0..4).collect();
+        let dense_view = DataView::new(&d, &idx);
+        let sparse_view = DataView::sparse(&sp, &idx);
+        let k = KernelKind::Rbf { gamma: 0.8 };
+        let mut rd = vec![0.0; 4];
+        let mut rs = vec![0.0; 4];
+        for i in 0..4 {
+            signed_row(&dense_view, &k, i, &mut rd);
+            signed_row(&sparse_view, &k, i, &mut rs);
+            for (a, b) in rd.iter().zip(&rs) {
+                assert!((a - b).abs() < 1e-6, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_rr_disjoint_support() {
+        let a = vec![1.0f32, 0.0, 0.0, 0.0];
+        let b = vec![0.0f32, 0.0, 2.0, 0.0];
+        let sa = SparseDataset::from_dense(&Dataset::new("a", a, vec![1.0], 4));
+        let sb = SparseDataset::from_dense(&Dataset::new("b", b, vec![1.0], 4));
+        assert_eq!(dot_rr(sa.row_ref(0), sb.row_ref(0)), 0.0);
+        assert_eq!(sq_dist_rr(sa.row_ref(0), sb.row_ref(0)), 5.0);
     }
 }

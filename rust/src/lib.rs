@@ -56,6 +56,15 @@
 //! let acc = model.accuracy(&test);
 //! println!("test accuracy {acc:.3}");
 //! ```
+//!
+//! ## Sparse data path
+//!
+//! High-dimensional sparse workloads (the paper's rcv1/news20-class text
+//! corpora) load into [`data::sparse::SparseDataset`] (CSR, O(nnz) memory)
+//! — `data::libsvm::read_libsvm_auto` picks the backing store by density.
+//! Every solver reads rows through [`data::RowRef`]/[`data::Rows`], so the
+//! kernel evaluations, the DCD solvers, the SVRG family (with lazy O(nnz)
+//! steps), and the serving path run on either backing without copies.
 
 pub mod baselines;
 pub mod cluster;

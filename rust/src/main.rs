@@ -17,8 +17,10 @@ use sodm::baselines::cascade::{train_cascade, CascadeConfig};
 use sodm::baselines::dip::{train_dip, DipConfig};
 use sodm::baselines::hierarchical::{train_hierarchical, HierConfig};
 use sodm::baselines::LocalSolverKind;
+use sodm::data::libsvm;
+use sodm::data::libsvm::LoadedDataset;
+use sodm::data::sparse::SparseSynthSpec;
 use sodm::data::synth::SynthSpec;
-use sodm::data::{libsvm, Dataset};
 use sodm::exp::figures::{figure1, figure2, figure3, figure4};
 use sodm::exp::tables::{table1, table2, table3, table4};
 use sodm::exp::ExpConfig;
@@ -69,8 +71,13 @@ fn usage() {
 
 USAGE: sodm <command> [--flag value]...
 
-  gen-data   --name <dataset> [--scale 0.05] [--seed 7] --out <file.libsvm>
-  train      --data <file.libsvm | synth:name[:scale]> [--method sodm|odm|cascade|dip|dc|ssvm|dsvrg]
+  gen-data   --name <dataset|sparse> [--scale 0.05] [--seed 7] --out <file.libsvm>
+             (--name sparse: [--rows 10000] [--cols 100000] [--density 0.001],
+              written in CSR/libsvm without densification)
+  train      --data <file.libsvm | synth:name[:scale] | sparse-synth:rows:cols:density>
+             [--method sodm|odm|cascade|dip|dc|ssvm|dsvrg]
+             (libsvm files auto-detect density and load dense or CSR;
+              CSR data trains odm|sodm|dsvrg without densification)
              [--kernel rbf|linear] [--gamma g] [--lambda l] [--theta t] [--upsilon u]
              [--p 4] [--levels 2] [--stratums 16] [--workers N] [--model-out m.json]
              [--no-shrink] [--ordered-every k]
@@ -78,8 +85,10 @@ USAGE: sodm <command> [--flag value]...
               solver; --ordered-every k makes every k-th sweep visit
               coordinates in descending violation order)
   predict    --model m.json --data <...> [--backend native|xla]
-  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation) [--scale 0.05]
+  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse) [--scale 0.05]
              [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
+             (--sparse: CSR scaling benchmark, [--rows 10000] [--cols 100000]
+              [--density 0.001]; writes results/sparse_bench.json)
   serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
   info
 "
@@ -125,28 +134,69 @@ fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Res
     }
 }
 
-/// `--data` accepts a LIBSVM path or `synth:<name>[:<scale>]`.
-fn load_data(spec: &str, seed: u64) -> Result<Dataset> {
+/// `--data` accepts a LIBSVM path, `synth:<name>[:<scale>]`, or
+/// `sparse-synth:<rows>:<cols>:<density>` (the CSR high-dimensional
+/// generator). LIBSVM files pick their backing store by density
+/// ([`libsvm::read_libsvm_auto`]): sparse files stay CSR end to end.
+fn load_data(spec: &str, seed: u64) -> Result<LoadedDataset> {
     if let Some(rest) = spec.strip_prefix("synth:") {
         let mut parts = rest.split(':');
         let name = parts.next().unwrap_or("svmguide1");
         let scale: f64 = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(0.05);
         let mut ds = SynthSpec::named(name, scale, seed).generate();
         ds.name = name.to_string();
-        Ok(ds)
+        Ok(LoadedDataset::Dense(ds))
+    } else if let Some(rest) = spec.strip_prefix("sparse-synth:") {
+        let mut parts = rest.split(':');
+        let rows: usize = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(10_000);
+        let cols: usize = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(100_000);
+        let density: f64 = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(0.001);
+        Ok(LoadedDataset::Sparse(SparseSynthSpec::new(rows, cols, density, seed).generate()))
     } else {
-        let mut ds = libsvm::read_libsvm(spec, 0)?;
-        ds.normalize_min_max();
-        ds.push_bias_column();
-        Ok(ds)
+        match libsvm::read_libsvm_auto(spec, 0)? {
+            LoadedDataset::Dense(mut ds) => {
+                ds.normalize_min_max();
+                ds.push_bias_column();
+                Ok(LoadedDataset::Dense(ds))
+            }
+            // Sparse corpora ship pre-scaled; min-max normalization would
+            // densify (and a bias column is harmful at these dimensions).
+            // Say so: files near the density threshold would otherwise
+            // silently switch preprocessing pipelines.
+            LoadedDataset::Sparse(s) => {
+                eprintln!(
+                    "loaded {spec} as CSR ({} rows x {} cols, density {:.5}); \
+                     min-max normalization and bias augmentation are dense-only and skipped",
+                    s.rows,
+                    s.cols,
+                    s.density()
+                );
+                Ok(LoadedDataset::Sparse(s))
+            }
+        }
     }
 }
 
 fn cmd_gen_data(flags: &HashMap<String, String>) -> Result<()> {
     let name = flag(flags, "name").unwrap_or("svmguide1");
-    let scale = flag_f64(flags, "scale", 0.05)?;
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let out = flag(flags, "out").unwrap_or("dataset.libsvm");
+    if name == "sparse" {
+        let rows = flag_usize(flags, "rows", 10_000)?;
+        let cols = flag_usize(flags, "cols", 100_000)?;
+        let density = flag_f64(flags, "density", 0.001)?;
+        let ds = SparseSynthSpec::new(rows, cols, density, seed).generate();
+        libsvm::write_libsvm_sparse(&ds, out)?;
+        println!(
+            "wrote {} rows x {} features ({} nnz, density {:.5}) to {out}",
+            ds.rows,
+            ds.cols,
+            ds.nnz(),
+            ds.density()
+        );
+        return Ok(());
+    }
+    let scale = flag_f64(flags, "scale", 0.05)?;
     let ds = SynthSpec::named(name, scale, seed).generate();
     libsvm::write_libsvm(&ds, out)?;
     println!("wrote {} rows x {} features to {out}", ds.rows, ds.cols);
@@ -173,12 +223,16 @@ fn parse_params(flags: &HashMap<String, String>) -> Result<OdmParams> {
     .validated())
 }
 
+/// One training path for both backings: the solvers are `Rows`-generic, so
+/// only the dense-only baselines branch on the backing (and bail with a
+/// clear message on CSR data).
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
-    let ds = load_data(data_spec, seed)?;
-    let (train, test) = ds.split(0.8, seed);
-    let kernel = parse_kernel(flags, train.cols)?;
+    let loaded = load_data(data_spec, seed)?;
+    let (train, test) = loaded.split(0.8, seed);
+    let (train_rows, test_rows) = (train.as_rows(), test.as_rows());
+    let kernel = parse_kernel(flags, train_rows.cols())?;
     let params = parse_params(flags)?;
     let workers = flag_usize(flags, "workers", num_cpus())?;
     let p = flag_usize(flags, "p", 4)?;
@@ -193,123 +247,127 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     };
 
     let t0 = std::time::Instant::now();
+    // linear SODM = the DSVRG accelerator (paper §3.3); shared with the
+    // explicit dsvrg method so the two arms cannot drift.
+    let run_dsvrg = || {
+        train_dsvrg(
+            train_rows,
+            &params,
+            &SvrgConfig {
+                epochs: 6,
+                partitions: workers.clamp(2, 16),
+                stratums,
+                seed,
+                ..Default::default()
+            },
+            Some(&cluster),
+            &NativeGrad { workers },
+        )
+        .model
+    };
     let model: OdmModel = match method {
-        "odm" => train_exact_odm(&train, &kernel, &params, &budget),
-        "sodm" => {
-            if matches!(kernel, KernelKind::Linear) {
-                // linear SODM = DSVRG accelerator (paper §3.3)
-                let run = train_dsvrg(
-                    &train,
-                    &params,
-                    &SvrgConfig {
-                        epochs: 6,
-                        partitions: workers.clamp(2, 16),
-                        stratums,
-                        seed,
-                        ..Default::default()
-                    },
-                    Some(&cluster),
-                    &NativeGrad { workers },
-                );
-                run.model
-            } else {
-                train_sodm(
-                    &train,
-                    &kernel,
-                    &params,
-                    &SodmConfig {
-                        p,
-                        levels,
-                        stratums,
-                        strategy: PartitionStrategy::StratifiedRkhs { stratums },
-                        budget,
-                        level_tol: 1e-3,
-                        final_exact: true,
-                        seed,
-                    },
-                    Some(&cluster),
+        "odm" => train_exact_odm(train_rows, &kernel, &params, &budget),
+        "sodm" if matches!(kernel, KernelKind::Linear) => run_dsvrg(),
+        "dsvrg" => run_dsvrg(),
+        "sodm" => train_sodm(
+            train_rows,
+            &kernel,
+            &params,
+            &SodmConfig {
+                p,
+                levels,
+                stratums,
+                strategy: PartitionStrategy::StratifiedRkhs { stratums },
+                budget,
+                level_tol: 1e-3,
+                final_exact: true,
+                seed,
+            },
+            Some(&cluster),
+        ),
+        "cascade" | "dip" | "dc" | "ssvm" => {
+            let LoadedDataset::Dense(dense_train) = &train else {
+                sodm::bail!(
+                    "method {method:?} is dense-only; sparse data supports odm|sodm|dsvrg"
                 )
+            };
+            match method {
+                "cascade" => {
+                    train_cascade(
+                        dense_train,
+                        &kernel,
+                        LocalSolverKind::Odm(params),
+                        &CascadeConfig { leaves: p.pow(levels as u32), budget, seed },
+                        Some(&cluster),
+                    )
+                    .model
+                }
+                "dip" => {
+                    train_dip(
+                        dense_train,
+                        &kernel,
+                        LocalSolverKind::Odm(params),
+                        &DipConfig {
+                            partitions: p.pow(levels as u32),
+                            clusters: 8,
+                            budget,
+                            seed,
+                        },
+                        Some(&cluster),
+                    )
+                    .model
+                }
+                "dc" => {
+                    train_hierarchical(
+                        dense_train,
+                        &kernel,
+                        LocalSolverKind::Odm(params),
+                        &HierConfig {
+                            p,
+                            levels,
+                            strategy: PartitionStrategy::KernelKmeansClusters {
+                                embed_dim: 16,
+                            },
+                            budget,
+                            level_tol: 1e-3,
+                            seed,
+                        },
+                        Some(&cluster),
+                    )
+                    .model
+                }
+                _ => {
+                    train_hierarchical(
+                        dense_train,
+                        &kernel,
+                        LocalSolverKind::Svm { c: 1.0 },
+                        &HierConfig {
+                            p,
+                            levels,
+                            strategy: PartitionStrategy::StratifiedRkhs { stratums },
+                            budget,
+                            level_tol: 1e-3,
+                            seed,
+                        },
+                        Some(&cluster),
+                    )
+                    .model
+                }
             }
-        }
-        "cascade" => {
-            train_cascade(
-                &train,
-                &kernel,
-                LocalSolverKind::Odm(params),
-                &CascadeConfig { leaves: p.pow(levels as u32), budget, seed },
-                Some(&cluster),
-            )
-            .model
-        }
-        "dip" => {
-            train_dip(
-                &train,
-                &kernel,
-                LocalSolverKind::Odm(params),
-                &DipConfig { partitions: p.pow(levels as u32), clusters: 8, budget, seed },
-                Some(&cluster),
-            )
-            .model
-        }
-        "dc" => {
-            train_hierarchical(
-                &train,
-                &kernel,
-                LocalSolverKind::Odm(params),
-                &HierConfig {
-                    p,
-                    levels,
-                    strategy: PartitionStrategy::KernelKmeansClusters { embed_dim: 16 },
-                    budget,
-                    level_tol: 1e-3,
-                    seed,
-                },
-                Some(&cluster),
-            )
-            .model
-        }
-        "ssvm" => {
-            train_hierarchical(
-                &train,
-                &kernel,
-                LocalSolverKind::Svm { c: 1.0 },
-                &HierConfig {
-                    p,
-                    levels,
-                    strategy: PartitionStrategy::StratifiedRkhs { stratums },
-                    budget,
-                    level_tol: 1e-3,
-                    seed,
-                },
-                Some(&cluster),
-            )
-            .model
-        }
-        "dsvrg" => {
-            train_dsvrg(
-                &train,
-                &params,
-                &SvrgConfig {
-                    epochs: 6,
-                    partitions: workers.clamp(2, 16),
-                    stratums,
-                    seed,
-                    ..Default::default()
-                },
-                Some(&cluster),
-                &NativeGrad { workers },
-            )
-            .model
         }
         other => sodm::bail!("unknown method {other:?}"),
     };
     let secs = t0.elapsed().as_secs_f64();
-    let acc_train = model.accuracy(&train);
-    let acc_test = model.accuracy(&test);
+    let acc_train = model.accuracy(train_rows);
+    let acc_test = model.accuracy(test_rows);
     let comm = cluster.comm();
+    let sparse_info = match &train {
+        LoadedDataset::Sparse(s) => format!(" nnz={} density={:.5}", s.nnz(), s.density()),
+        LoadedDataset::Dense(_) => String::new(),
+    };
     println!(
-        "method={method} kernel={kernel:?} rows={} time={secs:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} comm_bytes={} comm_rounds={}",
-        train.rows,
+        "method={method} kernel={kernel:?} rows={}{sparse_info} time={secs:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} comm_bytes={} comm_rounds={}",
+        train.rows(),
         model.support_size(),
         comm.bytes,
         comm.rounds
@@ -327,11 +385,22 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
     let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let model = OdmModel::load(model_path)?;
-    let ds = load_data(data_spec, seed)?;
+    let loaded = load_data(data_spec, seed)?;
     let backend = flag(flags, "backend").unwrap_or("native");
     let t0 = std::time::Instant::now();
+    let rows = loaded.rows();
+    sodm::ensure!(
+        model.input_cols() == loaded.cols(),
+        "model expects {} features but {} has {} — mismatched train/predict pipelines",
+        model.input_cols(),
+        loaded.name(),
+        loaded.cols()
+    );
     let (acc, used) = match backend {
         "xla" => {
+            let LoadedDataset::Dense(ds) = &loaded else {
+                sodm::bail!("--backend xla scores dense batches; use native for CSR data")
+            };
             let engine = XlaEngine::load_default()
                 .ok_or_else(|| sodm::err!("artifacts not found — run `make artifacts`"))?;
             let decisions: Vec<f64> = match &model {
@@ -342,6 +411,9 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
                     }
                     KernelKind::Linear => sodm::bail!("linear kernel models use Linear repr"),
                 },
+                OdmModel::SparseKernel { .. } => {
+                    sodm::bail!("CSR support vectors have no PJRT tile layout; use native")
+                }
             };
             let correct = decisions
                 .iter()
@@ -350,11 +422,16 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
                 .count();
             (correct as f64 / ds.rows as f64, "xla/pjrt")
         }
-        _ => (model.accuracy(&ds), "native"),
+        _ => {
+            let acc = match &loaded {
+                LoadedDataset::Dense(d) => model.accuracy(d),
+                LoadedDataset::Sparse(s) => model.accuracy(s),
+            };
+            (acc, "native")
+        }
     };
     println!(
-        "backend={used} rows={} accuracy={acc:.4} elapsed={:.3}s",
-        ds.rows,
+        "backend={used} rows={rows} accuracy={acc:.4} elapsed={:.3}s",
         t0.elapsed().as_secs_f64()
     );
     Ok(())
@@ -390,6 +467,14 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("{out}");
         return Ok(());
     }
+    if flags.contains_key("sparse") {
+        let rows = flag_usize(flags, "rows", 10_000)?;
+        let cols = flag_usize(flags, "cols", 100_000)?;
+        let density = flag_f64(flags, "density", 0.001)?;
+        let out = sodm::exp::run_sparse_benchmark(rows, cols, density, &cfg)?;
+        println!("{out}");
+        return Ok(());
+    }
     if let Some(f) = flag(flags, "figure") {
         let out = match f {
             "1" => figure1(&cfg)?,
@@ -409,7 +494,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("{out}");
         return Ok(());
     }
-    sodm::bail!("experiment needs --table N, --figure N, or --ablation")
+    sodm::bail!("experiment needs --table N, --figure N, --ablation, or --sparse")
 }
 
 /// Serve a saved model under synthetic concurrent load and report
@@ -432,15 +517,25 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         _ => Backend::Native,
     };
     let handle = serve(model, backend, ServeConfig::default());
+    // Sparse datasets submit CSR requests (O(nnz) per request end to end).
+    let score_one = |h: &sodm::serve::ServerHandle, i: usize| match &ds {
+        LoadedDataset::Dense(d) => {
+            let _ = h.score(d.row(i % d.rows));
+        }
+        LoadedDataset::Sparse(s) => {
+            let i = i % s.rows;
+            let (lo, hi) = (s.indptr[i], s.indptr[i + 1]);
+            let _ = h.score_sparse(&s.indices[lo..hi], &s.values[lo..hi]);
+        }
+    };
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
             let h = handle.clone();
-            let ds = &ds;
+            let score_one = &score_one;
             s.spawn(move || {
                 for r in 0..per_client {
-                    let i = (c * per_client + r * 7919) % ds.rows;
-                    let _ = h.score(ds.row(i));
+                    score_one(&h, c * per_client + r * 7919);
                 }
             });
         }

@@ -1,7 +1,7 @@
 //! The ODM model: hyperparameters, trained-model representation (linear `w`
 //! or kernel expansion), prediction, and (de)serialization.
 
-use crate::data::{DataView, Dataset};
+use crate::data::{DataView, Dataset, RowRef, Rows};
 use crate::kernel::{dot, KernelKind};
 use crate::util::json::{jarr_f64, jstr, Json};
 
@@ -51,28 +51,68 @@ pub enum OdmModel {
         coef: Vec<f64>,
         cols: usize,
     },
+    /// Kernel expansion with CSR support vectors — produced by kernel
+    /// training on sparse data, where densifying the SVs would reintroduce
+    /// the O(sv · cols) memory the sparse path exists to avoid.
+    SparseKernel {
+        kernel: KernelKind,
+        /// CSR row offsets of the support vectors; length `coef.len() + 1`.
+        sv_indptr: Vec<usize>,
+        /// CSR column ids, sorted within each support vector.
+        sv_indices: Vec<u32>,
+        /// CSR values, parallel to `sv_indices`.
+        sv_values: Vec<f32>,
+        /// Expansion coefficients γ_s y_s.
+        coef: Vec<f64>,
+        cols: usize,
+    },
 }
 
 impl OdmModel {
     /// Build from a dual solution γ over `view` (drops zero coefficients).
+    /// Kernel models keep the backing of their training data: dense views
+    /// produce [`OdmModel::Kernel`], sparse views [`OdmModel::SparseKernel`].
     pub fn from_dual(view: &DataView, kernel: &KernelKind, gamma: &[f64]) -> Self {
         assert_eq!(gamma.len(), view.len());
         match kernel {
             KernelKind::Linear => {
-                let n = view.data.cols;
+                let n = view.cols();
                 let mut w = vec![0.0f64; n];
                 for i in 0..view.len() {
                     if gamma[i] != 0.0 {
                         let g = gamma[i] * view.label(i) as f64;
-                        for (wj, xj) in w.iter_mut().zip(view.row(i)) {
-                            *wj += g * *xj as f64;
-                        }
+                        view.row_ref(i).for_each_stored(|j, xj| w[j] += g * xj as f64);
                     }
                 }
                 OdmModel::Linear { w }
             }
+            _ if view.data.is_sparse() => {
+                let cols = view.cols();
+                let mut sv_indptr = vec![0usize];
+                let mut sv_indices = Vec::new();
+                let mut sv_values = Vec::new();
+                let mut coef = Vec::new();
+                for i in 0..view.len() {
+                    if gamma[i] != 0.0 {
+                        view.row_ref(i).for_each_stored(|j, v| {
+                            sv_indices.push(j as u32);
+                            sv_values.push(v);
+                        });
+                        sv_indptr.push(sv_indices.len());
+                        coef.push(gamma[i] * view.label(i) as f64);
+                    }
+                }
+                OdmModel::SparseKernel {
+                    kernel: *kernel,
+                    sv_indptr,
+                    sv_indices,
+                    sv_values,
+                    coef,
+                    cols,
+                }
+            }
             _ => {
-                let cols = view.data.cols;
+                let cols = view.cols();
                 let mut sv_x = Vec::new();
                 let mut coef = Vec::new();
                 for i in 0..view.len() {
@@ -91,18 +131,62 @@ impl OdmModel {
         match self {
             OdmModel::Linear { w } => w.len(),
             OdmModel::Kernel { coef, .. } => coef.len(),
+            OdmModel::SparseKernel { coef, .. } => coef.len(),
         }
     }
 
-    /// Decision value f(x).
-    pub fn decision(&self, x: &[f32]) -> f64 {
+    /// Feature dimensionality the model scores.
+    pub fn input_cols(&self) -> usize {
         match self {
-            OdmModel::Linear { w } => w.iter().zip(x).map(|(a, b)| a * *b as f64).sum(),
+            OdmModel::Linear { w } => w.len(),
+            OdmModel::Kernel { cols, .. } => *cols,
+            OdmModel::SparseKernel { cols, .. } => *cols,
+        }
+    }
+
+    /// Decision value f(x) for a dense row.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        self.decision_rr(RowRef::Dense(x))
+    }
+
+    /// Decision value f(x) for a row of any backing: sparse requests against
+    /// a linear model cost O(nnz); against kernel models each SV evaluation
+    /// is a sparse gather/merge.
+    pub fn decision_rr(&self, x: RowRef) -> f64 {
+        match self {
+            OdmModel::Linear { w } => match x {
+                // zip keeps the historical dense fast path AND its
+                // truncation semantics when data/model dims disagree
+                RowRef::Dense(xs) => w.iter().zip(xs).map(|(a, b)| a * *b as f64).sum(),
+                RowRef::Sparse { indices, values, .. } => {
+                    let mut s = 0.0;
+                    for (i, v) in indices.iter().zip(values.iter()) {
+                        let j = *i as usize;
+                        if j < w.len() {
+                            s += w[j] * *v as f64;
+                        }
+                    }
+                    s
+                }
+            },
             OdmModel::Kernel { kernel, sv_x, coef, cols } => {
                 let mut s = 0.0;
                 for (si, c) in coef.iter().enumerate() {
                     let sv = &sv_x[si * cols..(si + 1) * cols];
-                    s += c * kernel.eval(sv, x) as f64;
+                    s += c * kernel.eval_rr(RowRef::Dense(sv), x) as f64;
+                }
+                s
+            }
+            OdmModel::SparseKernel { kernel, sv_indptr, sv_indices, sv_values, coef, cols } => {
+                let mut s = 0.0;
+                for (si, c) in coef.iter().enumerate() {
+                    let (lo, hi) = (sv_indptr[si], sv_indptr[si + 1]);
+                    let sv = RowRef::Sparse {
+                        indices: &sv_indices[lo..hi],
+                        values: &sv_values[lo..hi],
+                        cols: *cols,
+                    };
+                    s += c * kernel.eval_rr(sv, x) as f64;
                 }
                 s
             }
@@ -118,22 +202,27 @@ impl OdmModel {
         }
     }
 
-    /// Test accuracy on a dataset (parallel over rows).
-    pub fn accuracy(&self, data: &Dataset) -> f64 {
-        if data.rows == 0 {
+    /// Test accuracy on a dataset of either backing (parallel over rows).
+    pub fn accuracy<'a>(&self, data: impl Into<Rows<'a>>) -> f64 {
+        let rows: Rows = data.into();
+        if rows.rows() == 0 {
             return 0.0;
         }
         let workers = crate::util::pool::num_cpus();
-        let correct = crate::util::pool::parallel_sum_f64(data.rows, workers, |i| {
-            if self.predict(data.row(i)) == data.y[i] { 1.0 } else { 0.0 }
+        let correct = crate::util::pool::parallel_sum_f64(rows.rows(), workers, |i| {
+            let pred = if self.decision_rr(rows.row_ref(i)) >= 0.0 { 1.0 } else { -1.0 };
+            if pred == rows.label(i) { 1.0 } else { 0.0 }
         });
-        correct / data.rows as f64
+        correct / rows.rows() as f64
     }
 
-    /// Decision values for every row (parallel).
-    pub fn decisions(&self, data: &Dataset) -> Vec<f64> {
+    /// Decision values for every row of either backing (parallel).
+    pub fn decisions<'a>(&self, data: impl Into<Rows<'a>>) -> Vec<f64> {
+        let rows: Rows = data.into();
         let workers = crate::util::pool::num_cpus();
-        crate::util::pool::parallel_map(data.rows, workers, |i| self.decision(data.row(i)))
+        crate::util::pool::parallel_map(rows.rows(), workers, |i| {
+            self.decision_rr(rows.row_ref(i))
+        })
     }
 
     /// Serialize to JSON (in-crate writer; see util::json).
@@ -154,6 +243,31 @@ impl OdmModel {
                     ("gamma", Json::Num(gamma)),
                     ("cols", Json::Num(*cols as f64)),
                     ("sv_x", Json::Arr(sv_x.iter().map(|v| Json::Num(*v as f64)).collect())),
+                    ("coef", jarr_f64(coef)),
+                ])
+            }
+            OdmModel::SparseKernel { kernel, sv_indptr, sv_indices, sv_values, coef, cols } => {
+                let (kname, gamma) = match kernel {
+                    KernelKind::Linear => ("linear", 0.0),
+                    KernelKind::Rbf { gamma } => ("rbf", *gamma as f64),
+                };
+                Json::obj(vec![
+                    ("kind", jstr("sparse_kernel")),
+                    ("kernel", jstr(kname)),
+                    ("gamma", Json::Num(gamma)),
+                    ("cols", Json::Num(*cols as f64)),
+                    (
+                        "sv_indptr",
+                        Json::Arr(sv_indptr.iter().map(|v| Json::Num(*v as f64)).collect()),
+                    ),
+                    (
+                        "sv_indices",
+                        Json::Arr(sv_indices.iter().map(|v| Json::Num(*v as f64)).collect()),
+                    ),
+                    (
+                        "sv_values",
+                        Json::Arr(sv_values.iter().map(|v| Json::Num(*v as f64)).collect()),
+                    ),
                     ("coef", jarr_f64(coef)),
                 ])
             }
@@ -179,6 +293,39 @@ impl OdmModel {
                 Ok(OdmModel::Kernel {
                     kernel,
                     sv_x,
+                    coef: j.req("coef")?.as_f64_vec()?,
+                    cols: j.req("cols")?.as_usize()?,
+                })
+            }
+            "sparse_kernel" => {
+                let kernel = match j.req("kernel")?.as_str()? {
+                    "linear" => KernelKind::Linear,
+                    "rbf" => KernelKind::Rbf { gamma: j.req("gamma")?.as_f64()? as f32 },
+                    other => crate::bail!("unknown kernel {other:?}"),
+                };
+                let sv_indptr: Vec<usize> = j
+                    .req("sv_indptr")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<crate::Result<_>>()?;
+                let sv_indices: Vec<u32> = j
+                    .req("sv_indices")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize().map(|u| u as u32))
+                    .collect::<crate::Result<_>>()?;
+                let sv_values: Vec<f32> = j
+                    .req("sv_values")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<crate::Result<_>>()?;
+                Ok(OdmModel::SparseKernel {
+                    kernel,
+                    sv_indptr,
+                    sv_indices,
+                    sv_values,
                     coef: j.req("coef")?.as_f64_vec()?,
                     cols: j.req("cols")?.as_usize()?,
                 })
@@ -235,9 +382,9 @@ fn dot_ff(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Convenience: fit a single-machine exact ODM by DCD (the paper's "ODM"
-/// reference column) and return the model.
-pub fn train_exact_odm(
-    train: &Dataset,
+/// reference column) and return the model. Accepts dense or CSR data.
+pub fn train_exact_odm<'a>(
+    train: impl Into<Rows<'a>>,
     kernel: &KernelKind,
     params: &OdmParams,
     budget: &crate::qp::SolveBudget,
@@ -247,25 +394,27 @@ pub fn train_exact_odm(
 
 /// [`train_exact_odm`] variant that also returns the solver telemetry
 /// (the experiment harness records sweeps/updates per method).
-pub fn train_exact_odm_stats(
-    train: &Dataset,
+pub fn train_exact_odm_stats<'a>(
+    train: impl Into<Rows<'a>>,
     kernel: &KernelKind,
     params: &OdmParams,
     budget: &crate::qp::SolveBudget,
 ) -> (OdmModel, crate::qp::SolveStats) {
-    let idx = crate::data::all_indices(train);
-    let view = DataView::new(train, &idx);
+    let rows: Rows = train.into();
+    let idx = crate::data::identity_indices(rows.rows());
+    let view = DataView::from_rows(rows, &idx);
     let sol = crate::qp::solve_odm_dual(&view, kernel, params, None, budget);
     (OdmModel::from_dual(&view, kernel, &sol.gamma()), sol.stats)
 }
 
 /// Compute the decision values of a linear weight vector on a view (helper
-/// shared by SVRG and tests).
+/// shared by SVRG and tests). Sparse rows cost O(nnz).
 pub fn linear_decisions(w: &[f64], view: &DataView) -> Vec<f64> {
     (0..view.len())
         .map(|i| {
-            let x = view.row(i);
-            w.iter().zip(x).map(|(a, b)| a * *b as f64).sum()
+            let mut s = 0.0f64;
+            view.row_ref(i).for_each_stored(|j, v| s += w[j] * v as f64);
+            s
         })
         .collect()
 }
@@ -378,6 +527,37 @@ mod tests {
         let m2 = OdmModel::load(&p).unwrap();
         let x = [0.25f32, 0.3];
         assert!((m.decision(&x) - m2.decision(&x)).abs() < 1e-9);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparse_kernel_model_round_trip_and_matches_dense() {
+        // Train on a sparse view; the model must keep CSR support vectors,
+        // survive JSON round-tripping, and score identically to the model
+        // trained on the densified twin.
+        let spec = crate::data::sparse::SparseSynthSpec::new(90, 40, 0.2, 13);
+        let sp = spec.generate();
+        let dense = sp.to_dense();
+        let k = KernelKind::Rbf { gamma: 0.8 };
+        let p = OdmParams::default();
+        // Tight eps: sparse/dense Gram entries differ at f32 roundoff, so
+        // both solves must be pinned near the unique optimum to compare.
+        let b = SolveBudget { eps: 1e-7, max_sweeps: 3000, ..SolveBudget::default() };
+        let ms = train_exact_odm(&sp, &k, &p, &b);
+        let md = train_exact_odm(&dense, &k, &p, &b);
+        assert!(matches!(ms, OdmModel::SparseKernel { .. }));
+        assert!(matches!(md, OdmModel::Kernel { .. }));
+        for i in 0..10 {
+            let a = ms.decision_rr(sp.row_ref(i));
+            let b = md.decision(dense.row(i));
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "row {i}: {a} vs {b}");
+        }
+        let dir = crate::util::temp_dir("odm-sparse");
+        let path = dir.join("sk.json");
+        ms.save(&path).unwrap();
+        let back = OdmModel::load(&path).unwrap();
+        let x = sp.row_ref(0);
+        assert!((ms.decision_rr(x) - back.decision_rr(x)).abs() < 1e-9);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -127,7 +127,9 @@ pub fn kmeans_points(
     KmeansResult { assignment, k, iterations, inertia }
 }
 
-/// Input-space k-means over a data view (DiP partitioning).
+/// Input-space k-means over a data view (DiP partitioning). Dense-only:
+/// Lloyd centroids are dense, so every point is materialized densely — use
+/// the RKHS strategies for CSR data.
 pub fn kmeans_features(
     view: &DataView,
     k: usize,
@@ -153,7 +155,7 @@ pub fn kernel_kmeans(
 ) -> KmeansResult {
     let ny = Nystrom::select(view, kernel, embed_dim, 2048, seed);
     let points: Vec<Vec<f64>> =
-        pool::parallel_map(view.len(), workers, |i| ny.embed(view.row(i)));
+        pool::parallel_map(view.len(), workers, |i| ny.embed(view.row_ref(i)));
     kmeans_points(&points, k, max_iters, seed, workers)
 }
 

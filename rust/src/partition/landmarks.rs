@@ -5,8 +5,8 @@
 //! factors double as a Nyström embedding used for kernel k-means (DC
 //! baseline) and stratum diagnostics.
 
-use crate::data::DataView;
-use crate::kernel::KernelKind;
+use crate::data::{DataView, RowRef};
+use crate::kernel::{eval_with_norms, sq_norm_rr, KernelKind};
 use crate::util::rng::Pcg32;
 
 /// Selected landmarks + the pivoted-Cholesky factor restricted to them, which
@@ -20,6 +20,14 @@ pub struct Nystrom {
     /// Lower-triangular rows: `chol[s]` = embedding of landmark s (length s+1,
     /// padded to S by zeros implicitly).
     chol: Vec<Vec<f64>>,
+    /// Cached k(z_s, z_s) — [`Nystrom::nearest_landmark`] is called once per
+    /// instance, and recomputing the dense self-dot there is O(cols) per
+    /// query (prohibitive at text-corpus dimensionality).
+    self_sim: Vec<f32>,
+    /// Cached ‖z_s‖² — with query norms this turns every query×landmark RBF
+    /// evaluation into an O(nnz) gather ([`eval_with_norms`]) instead of an
+    /// O(cols) dense-side walk.
+    landmark_norm: Vec<f32>,
     kernel: KernelKind,
 }
 
@@ -49,13 +57,20 @@ impl Nystrom {
         };
         let p = pool.len();
 
-        // Residual diagonal and partial embeddings of every pool point.
-        let mut resid: Vec<f64> =
-            pool.iter().map(|&i| kernel.eval(view.row(i), view.row(i)) as f64).collect();
+        // Residual diagonal and partial embeddings of every pool point;
+        // squared norms once per pool row make every subsequent pool×pivot
+        // evaluation an O(nnz) gather (eval_with_norms).
+        let mut resid: Vec<f64> = pool
+            .iter()
+            .map(|&i| kernel.eval_rr(view.row_ref(i), view.row_ref(i)) as f64)
+            .collect();
+        let pool_norms: Vec<f32> =
+            pool.iter().map(|&i| sq_norm_rr(view.row_ref(i))).collect();
         let mut emb: Vec<Vec<f64>> = vec![Vec::with_capacity(s_max); p];
 
         let mut landmark_x = Vec::with_capacity(s_max);
         let mut landmark_idx = Vec::with_capacity(s_max);
+        let mut landmark_norm = Vec::with_capacity(s_max);
         let mut chol: Vec<Vec<f64>> = Vec::with_capacity(s_max);
 
         let mut pivot = 0usize; // z_1 = first candidate
@@ -65,11 +80,20 @@ impl Nystrom {
                 break; // numerically dependent — no more informative landmarks
             }
             let sqrt_dp = dp.sqrt();
-            let xp = view.row(pool[pivot]).to_vec();
+            // Landmarks are densified copies (S rows, S·cols memory) so
+            // sparse×landmark kernel evaluations stay O(nnz) gathers.
+            let xp = view.row_ref(pool[pivot]).to_dense_vec();
+            let np = pool_norms[pivot];
             // New Cholesky column over the pool.
             let piv_emb = emb[pivot].clone();
             for q in 0..p {
-                let kqp = kernel.eval(view.row(pool[q]), &xp) as f64;
+                let kqp = eval_with_norms(
+                    kernel,
+                    view.row_ref(pool[q]),
+                    pool_norms[q],
+                    RowRef::Dense(&xp),
+                    np,
+                ) as f64;
                 let mut dotp = 0.0;
                 for (a, b) in emb[q].iter().zip(&piv_emb) {
                     dotp += a * b;
@@ -83,6 +107,7 @@ impl Nystrom {
             }
             landmark_idx.push(view.idx[pool[pivot]]);
             landmark_x.push(xp);
+            landmark_norm.push(np);
             chol.push(emb[pivot].clone());
             // Next pivot: max residual (ties to the smallest index).
             if s + 1 < s_max {
@@ -96,7 +121,8 @@ impl Nystrom {
                 pivot = best;
             }
         }
-        Nystrom { landmark_x, landmark_idx, chol, kernel: *kernel }
+        let self_sim = landmark_x.iter().map(|z: &Vec<f32>| kernel.eval(z, z)).collect();
+        Nystrom { landmark_x, landmark_idx, chol, self_sim, landmark_norm, kernel: *kernel }
     }
 
     /// Number of landmarks actually selected (may be < requested if the pool
@@ -110,12 +136,16 @@ impl Nystrom {
     }
 
     /// Nyström embedding e(x) ∈ R^S with `<e(x), e(z)> ≈ k(x, z)`.
-    /// Forward substitution against the landmark Cholesky factor.
-    pub fn embed(&self, x: &[f32]) -> Vec<f64> {
+    /// Forward substitution against the landmark Cholesky factor. Accepts
+    /// rows of any backing (sparse evaluations gather in O(nnz)).
+    pub fn embed<'b>(&self, x: impl Into<RowRef<'b>>) -> Vec<f64> {
+        let x: RowRef = x.into();
+        let nx = sq_norm_rr(x);
         let s_n = self.len();
         let mut e = Vec::with_capacity(s_n);
         for s in 0..s_n {
-            let kxs = self.kernel.eval(x, &self.landmark_x[s]) as f64;
+            let z = RowRef::Dense(&self.landmark_x[s]);
+            let kxs = eval_with_norms(&self.kernel, x, nx, z, self.landmark_norm[s]) as f64;
             let mut dotp = 0.0;
             for (t, et) in e.iter().enumerate().take(s) {
                 dotp += et * self.chol[s][t];
@@ -128,13 +158,18 @@ impl Nystrom {
 
     /// Index of the nearest landmark in the RKHS:
     /// argmin_s ‖φ(x) − φ(z_s)‖² = k(x,x) − 2k(x,z_s) + k(z_s,z_s)
-    /// (paper Eqn. 7 — the stratum assignment).
-    pub fn nearest_landmark(&self, x: &[f32]) -> usize {
-        let kxx = self.kernel.eval(x, x);
+    /// (paper Eqn. 7 — the stratum assignment). Accepts rows of any backing.
+    pub fn nearest_landmark<'b>(&self, x: impl Into<RowRef<'b>>) -> usize {
+        let x: RowRef = x.into();
+        let nx = sq_norm_rr(x);
+        // k(x,x) is the constant r² for shift-invariant kernels and ‖x‖²
+        // for Linear — one self-pass covers both, and kxx only offsets d.
+        let kxx = self.kernel.self_similarity().unwrap_or(nx);
         let mut best = 0;
         let mut best_d = f32::INFINITY;
         for (s, z) in self.landmark_x.iter().enumerate() {
-            let d = kxx - 2.0 * self.kernel.eval(x, z) + self.kernel.eval(z, z);
+            let kxz = eval_with_norms(&self.kernel, x, nx, RowRef::Dense(z), self.landmark_norm[s]);
+            let d = kxx - 2.0 * kxz + self.self_sim[s];
             if d < best_d {
                 best_d = d;
                 best = s;
@@ -286,6 +321,27 @@ mod tests {
         let ny = Nystrom::select(&v, &KernelKind::Rbf { gamma: 4.0 }, 6, 1024, 15);
         let tau = ny.min_principal_angle().unwrap();
         assert!(tau > 0.0 && tau <= std::f64::consts::FRAC_PI_2);
+    }
+
+    #[test]
+    fn sparse_view_selects_and_embeds() {
+        let spec = crate::data::sparse::SparseSynthSpec::new(120, 300, 0.05, 5);
+        let sp = spec.generate();
+        let idx: Vec<usize> = (0..sp.rows).collect();
+        let v = DataView::sparse(&sp, &idx);
+        let k = KernelKind::Rbf { gamma: 0.5 };
+        let ny = Nystrom::select(&v, &k, 6, 1024, 3);
+        assert!(ny.len() >= 2);
+        // Nyström guarantee holds on the landmarks regardless of backing.
+        for i in 0..ny.len() {
+            let ei = ny.embed(&ny.landmark_x[i]);
+            let approx: f64 = ei.iter().map(|a| a * a).sum();
+            let exact = k.eval(&ny.landmark_x[i], &ny.landmark_x[i]) as f64;
+            assert!((approx - exact).abs() < 1e-4, "landmark {i}: {approx} vs {exact}");
+        }
+        // Stratum assignment runs on sparse rows.
+        let s = ny.nearest_landmark(v.row_ref(0));
+        assert!(s < ny.len());
     }
 
     #[test]

@@ -88,7 +88,7 @@ pub fn stratified_rkhs_partitions(
 ) -> Vec<Vec<usize>> {
     let ny = Nystrom::select(view, kernel, stratums, 2048, seed);
     let assignment: Vec<usize> =
-        pool::parallel_map(view.len(), workers, |i| ny.nearest_landmark(view.row(i)));
+        pool::parallel_map(view.len(), workers, |i| ny.nearest_landmark(view.row_ref(i)));
     let s_actual = ny.len();
     let mut stratum_members: Vec<Vec<usize>> = vec![Vec::new(); s_actual];
     for (i, &s) in assignment.iter().enumerate() {
@@ -222,7 +222,7 @@ pub fn label_balance_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
     parts
         .iter()
         .map(|p| {
-            let pos = p.iter().filter(|&&g| view.data.y[g] > 0.0).count() as f64;
+            let pos = p.iter().filter(|&&g| view.data.label(g) > 0.0).count() as f64;
             (pos / p.len() as f64 - global).abs()
         })
         .fold(0.0, f64::max)
@@ -230,14 +230,12 @@ pub fn label_balance_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
 
 /// Per-feature mean gap between each partition and the global data — the
 /// first-order-statistics preservation measure used in partition_demo and
-/// the DiP/SODM comparison.
+/// the DiP/SODM comparison. Sparse views accumulate per-row in O(nnz).
 pub fn mean_shift_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
-    let n = view.data.cols;
+    let n = view.cols();
     let mut global = vec![0.0f64; n];
     for i in 0..view.len() {
-        for (g, v) in global.iter_mut().zip(view.row(i)) {
-            *g += *v as f64;
-        }
+        view.row_ref(i).for_each_stored(|j, v| global[j] += v as f64);
     }
     for g in global.iter_mut() {
         *g /= view.len() as f64;
@@ -246,9 +244,7 @@ pub fn mean_shift_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
     for p in parts {
         let mut mean = vec![0.0f64; n];
         for &gidx in p {
-            for (m, v) in mean.iter_mut().zip(view.data.row(gidx)) {
-                *m += *v as f64;
-            }
+            view.data.row_ref(gidx).for_each_stored(|j, v| mean[j] += v as f64);
         }
         let mut gap = 0.0;
         for (m, g) in mean.iter().zip(&global) {

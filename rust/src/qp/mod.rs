@@ -46,9 +46,9 @@
 //! with a fresh, full active set — shrinking state never leaks across
 //! merges.
 
-use crate::data::DataView;
+use crate::data::{DataView, RowRef};
 use crate::kernel::cache::RowCache;
-use crate::kernel::{dot, KernelKind};
+use crate::kernel::{dot_rr, KernelKind};
 use crate::odm::OdmParams;
 use crate::util::rng::Pcg32;
 
@@ -257,7 +257,7 @@ fn solve_odm_kernel(
 
     // Diagonal of the signed Gram: k(x_i,x_i) (signs cancel).
     let qdiag: Vec<f64> = (0..m)
-        .map(|i| kernel.eval(view.row(i), view.row(i)) as f64)
+        .map(|i| kernel.eval_rr(view.row_ref(i), view.row_ref(i)) as f64)
         .collect();
 
     let mut cache = RowCache::new(budget.cache_bytes, m);
@@ -381,9 +381,11 @@ fn solve_odm_kernel(
     OdmDualSolution { zeta, beta, stats }
 }
 
-/// Linear-path ODM DCD v2: maintains `w` (length N) so sweeps cost O(mN) and
-/// Q is never formed; shrinking and violation-ordered sweeps apply exactly as
-/// in the kernel path (gradients come from one dot product per visit).
+/// Linear-path ODM DCD v2: maintains `w` (length N) so sweeps cost O(m·nnz)
+/// and Q is never formed; shrinking and violation-ordered sweeps apply
+/// exactly as in the kernel path (gradients come from one dot product per
+/// visit). Sparse rows make each visit O(nnz) via [`dot_f64_rr`] and
+/// [`crate::data::RowRef::axpy_into`].
 fn solve_odm_linear(
     view: &DataView,
     params: &OdmParams,
@@ -391,14 +393,15 @@ fn solve_odm_linear(
     budget: &SolveBudget,
 ) -> OdmDualSolution {
     let m = view.len();
-    let n = view.data.cols;
+    let n = view.cols();
     let (mut zeta, mut beta) = match warm {
         Some(w) => split_alpha(w, m),
         None => (vec![0.0; m], vec![0.0; m]),
     };
     let mc = m as f64 * params.c();
     let (ups, theta) = (params.upsilon as f64, params.theta as f64);
-    let qdiag: Vec<f64> = (0..m).map(|i| dot(view.row(i), view.row(i)) as f64).collect();
+    let qdiag: Vec<f64> =
+        (0..m).map(|i| dot_rr(view.row_ref(i), view.row_ref(i)) as f64).collect();
 
     // w = Σ γ_i y_i x_i  (f64 accumulation for stability across many updates)
     let mut w = vec![0.0f64; n];
@@ -406,9 +409,7 @@ fn solve_odm_linear(
         let g = zeta[i] - beta[i];
         if g != 0.0 {
             let yi = view.label(i) as f64;
-            for (wj, xj) in w.iter_mut().zip(view.row(i)) {
-                *wj += g * yi * *xj as f64;
-            }
+            view.row_ref(i).axpy_into(&mut w, g * yi);
         }
     }
 
@@ -424,8 +425,9 @@ fn solve_odm_linear(
             && sweep % budget.ordered_every == budget.ordered_every - 1;
         if ordered {
             // One pass of margins, then priorities for both halves.
-            let margins: Vec<f64> =
-                (0..m).map(|i| view.label(i) as f64 * dot_f64(&w, view.row(i))).collect();
+            let margins: Vec<f64> = (0..m)
+                .map(|i| view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i)))
+                .collect();
             order_by_priority(&mut active, |c| {
                 let (g, h, a) = odm_coord(
                     c, m, margins[c % m], &zeta, &beta, &qdiag, mc, ups, theta,
@@ -441,9 +443,9 @@ fn solve_odm_linear(
         for &cidx in &active {
             visited += 1;
             let (is_zeta, i) = (cidx < m, cidx % m);
-            let xi = view.row(i);
+            let xi = view.row_ref(i);
             let yi = view.label(i) as f64;
-            let ui = yi * dot_f64(&w, xi);
+            let ui = yi * dot_f64_rr(&w, xi);
             let (g, h, a) = odm_coord(cidx, m, ui, &zeta, &beta, &qdiag, mc, ups, theta);
             let viol = pg_violation(g, a);
             max_viol = max_viol.max(viol);
@@ -465,9 +467,7 @@ fn solve_odm_linear(
             } else {
                 beta[i] = new_a;
             }
-            for (wj, xj) in w.iter_mut().zip(xi) {
-                *wj += dgamma * yi * *xj as f64;
-            }
+            xi.axpy_into(&mut w, dgamma * yi);
         }
         stats.sweeps = sweep + 1;
         stats.max_violation = max_viol;
@@ -477,9 +477,10 @@ fn solve_odm_linear(
         }
         if max_viol < budget.eps {
             if budget.shrink {
-                // Reactivation: full-set check (one margin pass, O(mN)).
-                let margins: Vec<f64> =
-                    (0..m).map(|i| view.label(i) as f64 * dot_f64(&w, view.row(i))).collect();
+                // Reactivation: full-set check (one margin pass, O(m·nnz)).
+                let margins: Vec<f64> = (0..m)
+                    .map(|i| view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i)))
+                    .collect();
                 let full_viol = odm_full_violation(
                     m, |i| margins[i], &zeta, &beta, &qdiag, mc, ups, theta,
                 );
@@ -501,7 +502,7 @@ fn solve_odm_linear(
         if budget.shrink { shrink_ratio(visited, stats.sweeps, 2 * m) } else { 0.0 };
     // u_i for the objective (and the final full-set residual)
     let u: Vec<f64> =
-        (0..m).map(|i| view.label(i) as f64 * dot_f64(&w, view.row(i))).collect();
+        (0..m).map(|i| view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i))).collect();
     if budget.shrink && !stats.converged {
         // Budget exhausted with a shrunk active set: report the true
         // full-set KKT residual, not the active subset's.
@@ -532,6 +533,27 @@ fn dot_f64(w: &[f64], x: &[f32]) -> f64 {
     s
 }
 
+/// f64-accumulated dot of the maintained weight vector with a feature row of
+/// any backing. Dense rows take the historical 4-lane path ([`dot_f64`]);
+/// sparse rows gather over their nonzeros, O(nnz). Deliberately distinct
+/// from `svrg`'s order-preserving margin loop (which needs dense/sparse
+/// summation parity) and `OdmModel::decision_rr`'s bounds-guarded arm
+/// (which scores untrusted external rows) — indices here are solver-internal
+/// and trusted.
+#[inline]
+fn dot_f64_rr(w: &[f64], x: RowRef) -> f64 {
+    match x {
+        RowRef::Dense(xs) => dot_f64(w, xs),
+        RowRef::Sparse { indices, values, .. } => {
+            let mut s = 0.0f64;
+            for (i, v) in indices.iter().zip(values.iter()) {
+                s += w[*i as usize] * *v as f64;
+            }
+            s
+        }
+    }
+}
+
 /// Recompute `u = Q γ` from scratch over the support of γ (parallel over
 /// output entries). Used to seed warm starts after partition merges.
 pub fn recompute_u(view: &DataView, kernel: &KernelKind, gamma: &[f64], u: &mut [f64]) {
@@ -540,11 +562,11 @@ pub fn recompute_u(view: &DataView, kernel: &KernelKind, gamma: &[f64], u: &mut 
     crate::util::pool::parallel_chunks(u, workers, 512, |start, chunk| {
         for (k, ui) in chunk.iter_mut().enumerate() {
             let i = start + k;
-            let xi = view.row(i);
+            let xi = view.row_ref(i);
             let yi = view.label(i);
             let mut s = 0.0f64;
             for &j in &support {
-                let kv = kernel.eval(xi, view.row(j));
+                let kv = kernel.eval_rr(xi, view.row_ref(j));
                 s += gamma[j] * (yi * view.label(j) * kv) as f64;
             }
             *ui = s;
@@ -637,10 +659,10 @@ pub fn solve_svm_dual(
         None => vec![0.0; m],
     };
     let qdiag: Vec<f64> = (0..m)
-        .map(|i| kernel.eval(view.row(i), view.row(i)).max(1e-12) as f64)
+        .map(|i| kernel.eval_rr(view.row_ref(i), view.row_ref(i)).max(1e-12) as f64)
         .collect();
     let linear = matches!(kernel, KernelKind::Linear);
-    let n = view.data.cols;
+    let n = view.cols();
     let workers = crate::util::pool::num_cpus();
 
     let mut w = vec![0.0f64; n]; // linear path
@@ -650,9 +672,7 @@ pub fn solve_svm_dual(
             for i in 0..m {
                 if gamma[i] != 0.0 {
                     let yi = view.label(i) as f64;
-                    for (wj, xj) in w.iter_mut().zip(view.row(i)) {
-                        *wj += gamma[i] * yi * *xj as f64;
-                    }
+                    view.row_ref(i).axpy_into(&mut w, gamma[i] * yi);
                 }
             }
         } else {
@@ -673,7 +693,7 @@ pub fn solve_svm_dual(
         if ordered {
             order_by_priority(&mut active, |i| {
                 let ui = if linear {
-                    view.label(i) as f64 * dot_f64(&w, view.row(i))
+                    view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i))
                 } else {
                     u[i]
                 };
@@ -698,7 +718,7 @@ pub fn solve_svm_dual(
         for &i in &active {
             visited += 1;
             let ui = if linear {
-                view.label(i) as f64 * dot_f64(&w, view.row(i))
+                view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i))
             } else {
                 u[i]
             };
@@ -723,9 +743,7 @@ pub fn solve_svm_dual(
             gamma[i] = new_a;
             if linear {
                 let yi = view.label(i) as f64;
-                for (wj, xj) in w.iter_mut().zip(view.row(i)) {
-                    *wj += delta * yi * *xj as f64;
-                }
+                view.row_ref(i).axpy_into(&mut w, delta * yi);
             } else {
                 let row = cache.get(view, kernel, i);
                 for (uj, qj) in u.iter_mut().zip(row.iter()) {
@@ -746,7 +764,7 @@ pub fn solve_svm_dual(
                     m,
                     |i| {
                         if linear {
-                            view.label(i) as f64 * dot_f64(&w, view.row(i))
+                            view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i))
                         } else {
                             u[i]
                         }
@@ -769,7 +787,7 @@ pub fn solve_svm_dual(
     }
     if linear {
         for i in 0..m {
-            u[i] = view.label(i) as f64 * dot_f64(&w, view.row(i));
+            u[i] = view.label(i) as f64 * dot_f64_rr(&w, view.row_ref(i));
         }
     }
     if budget.shrink && !stats.converged {

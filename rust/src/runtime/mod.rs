@@ -375,7 +375,8 @@ fn executor_thread(
     rx: mpsc::Receiver<Request>,
     init_tx: mpsc::Sender<Result<()>>,
 ) {
-    let init = (|| -> Result<(xla::PjRtClient, HashMap<String, (xla::PjRtLoadedExecutable, usize)>)> {
+    type Execs = HashMap<String, (xla::PjRtLoadedExecutable, usize)>;
+    let init = (|| -> Result<(xla::PjRtClient, Execs)> {
         let client = xla::PjRtClient::cpu().map_err(|e| crate::err!("pjrt cpu: {e:?}"))?;
         let mut execs = HashMap::new();
         for (name, entry) in &entries {
@@ -452,12 +453,13 @@ pub struct XlaGrad {
 
 impl GradSource for XlaGrad {
     fn grad_sum(&self, w: &[f64], view: &DataView, params: &OdmParams) -> (Vec<f64>, f64) {
-        // Materialize the view rows (the artifact wants contiguous batches).
-        let n = view.data.cols;
-        let mut x = Vec::with_capacity(view.len() * n);
+        // Materialize the view rows (the artifact wants contiguous dense
+        // batches; sparse rows scatter into the zeroed buffer).
+        let n = view.cols();
+        let mut x = vec![0.0f32; view.len() * n];
         let mut y = Vec::with_capacity(view.len());
         for i in 0..view.len() {
-            x.extend_from_slice(view.row(i));
+            view.row_ref(i).scatter_into(&mut x[i * n..(i + 1) * n]);
             y.push(view.label(i));
         }
         match self.engine.odm_grad_sum(w, &x, &y, n, params) {

@@ -24,6 +24,7 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::data::RowRef;
 use crate::kernel::KernelKind;
 use crate::odm::OdmModel;
 use crate::runtime::XlaEngine;
@@ -56,9 +57,27 @@ impl Default for ServeConfig {
 
 /// One scoring request: feature row in, decision value out.
 struct Request {
-    x: Vec<f32>,
+    x: RowOwned,
     reply: SyncSender<f64>,
     enqueued: Instant,
+}
+
+/// An owned request row — dense copy or CSR pair. Sparse requests carry
+/// O(nnz) bytes through the queue and score in O(nnz) on linear models.
+enum RowOwned {
+    Dense(Vec<f32>),
+    Sparse { indices: Vec<u32>, values: Vec<f32>, cols: usize },
+}
+
+impl RowOwned {
+    fn as_row_ref(&self) -> RowRef<'_> {
+        match self {
+            RowOwned::Dense(x) => RowRef::Dense(x),
+            RowOwned::Sparse { indices, values, cols } => {
+                RowRef::Sparse { indices, values, cols: *cols }
+            }
+        }
+    }
 }
 
 /// Aggregate serving metrics.
@@ -99,12 +118,41 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit one feature row; blocks for the decision value.
+    /// Submit one dense feature row; blocks for the decision value.
     pub fn score(&self, x: &[f32]) -> Result<f64> {
         crate::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
+        self.submit(RowOwned::Dense(x.to_vec()))
+    }
+
+    /// Submit one CSR feature row (`indices` sorted strictly ascending,
+    /// 0-based, parallel to `values`); blocks for the decision value.
+    /// Requests are external input: the full CSR contract is validated here
+    /// so a malformed request errors instead of panicking the batcher.
+    pub fn score_sparse(&self, indices: &[u32], values: &[f32]) -> Result<f64> {
+        crate::ensure!(indices.len() == values.len(), "indices/values length mismatch");
+        let mut prev: Option<u32> = None;
+        for &i in indices {
+            crate::ensure!(
+                (i as usize) < self.cols,
+                "feature index {i} out of range ({} cols)",
+                self.cols
+            );
+            if let Some(p) = prev {
+                crate::ensure!(i > p, "indices must be sorted strictly ascending");
+            }
+            prev = Some(i);
+        }
+        self.submit(RowOwned::Sparse {
+            indices: indices.to_vec(),
+            values: values.to_vec(),
+            cols: self.cols,
+        })
+    }
+
+    fn submit(&self, x: RowOwned) -> Result<f64> {
         let (rtx, rrx) = sync_channel(1);
         self.tx
-            .send(Request { x: x.to_vec(), reply: rtx, enqueued: Instant::now() })
+            .send(Request { x, reply: rtx, enqueued: Instant::now() })
             .map_err(|_| crate::err!("server stopped"))?;
         rrx.recv().map_err(|_| crate::err!("server dropped request"))
     }
@@ -127,10 +175,7 @@ impl ServerHandle {
 
 /// Start a server for `model`; spawns the batcher thread.
 pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> ServerHandle {
-    let cols = match &model {
-        OdmModel::Linear { w } => w.len(),
-        OdmModel::Kernel { cols, .. } => *cols,
-    };
+    let cols = model.input_cols();
     let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
     let metrics = Arc::new(ServeMetrics::default());
     let stopping = Arc::new(AtomicBool::new(false));
@@ -201,24 +246,37 @@ fn score_batch(
             .queue_wait_us
             .fetch_add(r.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
     }
-    let cols = batch[0].x.len();
-    let mut xt = Vec::with_capacity(n * cols);
-    for r in batch.iter() {
-        xt.extend_from_slice(&r.x);
-    }
     let decisions: Vec<f64> = match backend {
-        Backend::Native => batch.iter().map(|r| model.decision(&r.x)).collect(),
+        Backend::Native => batch.iter().map(|r| model.decision_rr(r.x.as_row_ref())).collect(),
         Backend::Xla(engine) => {
+            // PJRT artifacts consume dense row-major tiles: scatter every
+            // request row into a batch buffer — built only by the arms that
+            // actually dispatch to PJRT, so natively-scored models (CSR
+            // support vectors, linear-kernel expansions) never pay the
+            // n×cols densification.
+            let cols = model.input_cols();
+            let build_xt = || {
+                let mut xt = vec![0.0f32; n * cols];
+                for (r, chunk) in batch.iter().zip(xt.chunks_mut(cols)) {
+                    r.x.as_row_ref().scatter_into(chunk);
+                }
+                xt
+            };
             let res = match model {
-                OdmModel::Linear { w } => engine.linear_decisions(w, &xt, cols),
+                OdmModel::Linear { w } => engine.linear_decisions(w, &build_xt(), cols),
                 OdmModel::Kernel { kernel, sv_x, coef, cols: mcols } => match kernel {
                     KernelKind::Rbf { gamma } => {
-                        engine.rbf_decisions(sv_x, coef, &xt, *mcols, *gamma)
+                        engine.rbf_decisions(sv_x, coef, &build_xt(), *mcols, *gamma)
                     }
                     KernelKind::Linear => {
-                        Ok(batch.iter().map(|r| model.decision(&r.x)).collect())
+                        Ok(batch.iter().map(|r| model.decision_rr(r.x.as_row_ref())).collect())
                     }
                 },
+                // CSR support vectors have no PJRT tile layout (yet) —
+                // score natively, still batched.
+                OdmModel::SparseKernel { .. } => {
+                    Ok(batch.iter().map(|r| model.decision_rr(r.x.as_row_ref())).collect())
+                }
             };
             match res {
                 Ok(d) => {
@@ -229,7 +287,7 @@ fn score_batch(
                 }
                 Err(e) => {
                     eprintln!("serve: PJRT batch failed ({e:#}); native fallback");
-                    batch.iter().map(|r| model.decision(&r.x)).collect()
+                    batch.iter().map(|r| model.decision_rr(r.x.as_row_ref())).collect()
                 }
             }
         }
@@ -317,6 +375,39 @@ mod tests {
         );
         assert_eq!(h.predict(&[1.0, 0.0]).unwrap(), 1.0);
         assert_eq!(h.predict(&[0.0, 1.0]).unwrap(), -1.0);
+        h.stop();
+    }
+
+    #[test]
+    fn sparse_requests_match_direct_decisions() {
+        let spec = crate::data::sparse::SparseSynthSpec::new(100, 200, 0.05, 5);
+        let sp = spec.generate();
+        let m = crate::odm::train_exact_odm(
+            &sp,
+            &KernelKind::Rbf { gamma: 0.5 },
+            &OdmParams::default(),
+            &SolveBudget { max_sweeps: 20, ..SolveBudget::default() },
+        );
+        assert!(matches!(m, crate::odm::OdmModel::SparseKernel { .. }));
+        let direct: Vec<f64> = (0..8).map(|i| m.decision_rr(sp.row_ref(i))).collect();
+        let h = serve(m, Backend::Native, ServeConfig::default());
+        for (i, want) in direct.iter().enumerate() {
+            let (lo, hi) = (sp.indptr[i], sp.indptr[i + 1]);
+            let got = h.score_sparse(&sp.indices[lo..hi], &sp.values[lo..hi]).unwrap();
+            assert!((got - want).abs() < 1e-12, "row {i}: {got} vs {want}");
+        }
+        h.stop();
+    }
+
+    #[test]
+    fn sparse_request_rejects_out_of_range_index() {
+        let h = serve(
+            OdmModel::Linear { w: vec![1.0, -1.0, 0.5] },
+            Backend::Native,
+            ServeConfig::default(),
+        );
+        assert!(h.score_sparse(&[0, 5], &[1.0, 1.0]).is_err());
+        assert!((h.score_sparse(&[0, 2], &[1.0, 2.0]).unwrap() - 2.0).abs() < 1e-12);
         h.stop();
     }
 

@@ -89,7 +89,9 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
 
-    /// Compact serialization.
+    /// Compact serialization. Inherent rather than `Display` on purpose:
+    /// serialization is explicit in this crate, never implicit formatting.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

@@ -145,6 +145,26 @@ fn cli_gen_train_predict_round_trip() {
 }
 
 #[test]
+fn cli_sparse_train_runs() {
+    let out = sodm_bin()
+        .args([
+            "train",
+            "--data",
+            "sparse-synth:400:2000:0.02",
+            "--kernel",
+            "linear",
+            "--method",
+            "dsvrg",
+        ])
+        .output()
+        .expect("train sparse");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("nnz="), "{text}");
+    assert!(text.contains("test_acc="), "{text}");
+}
+
+#[test]
 fn cli_unknown_command_fails() {
     let out = sodm_bin().arg("frobnicate").output().expect("spawn");
     assert!(!out.status.success());

@@ -120,8 +120,8 @@ fn theorem1_distance_within_bound() {
             theorem1_quantities(&ds, &kernel, &params, 4, seed);
         let m_total = ds.rows as f64;
         let c = params.c();
-        let bound =
-            u * u * (q_off + m_total * (m_total - m_part as f64) * c) / (m_total * c * params.upsilon as f64);
+        let bound = u * u * (q_off + m_total * (m_total - m_part as f64) * c)
+            / (m_total * c * params.upsilon as f64);
         assert!(
             dist2 <= bound + 1e-6,
             "seed {seed}: dist² {dist2} exceeds Eqn-6 bound {bound} (d_tilde {d_tilde})"
