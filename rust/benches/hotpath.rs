@@ -220,7 +220,72 @@ fn main() {
         report.push("SVRG epoch (dense eager)", sp.rows as f64, "step", &stats);
     }
 
-    // 8-9. PJRT artifact paths (skipped without artifacts)
+    // 8. compiled scoring plan vs the row-at-a-time reference (native RBF
+    // batch scoring): the §Perf claim behind the infer subsystem is that the
+    // batched plan clears >= 3x the single-row baseline on this workload.
+    {
+        use sodm::data::RowRef;
+        use sodm::infer::ScoringPlan;
+        let plan = ScoringPlan::compile(&model);
+        let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+        println!("\nscoring plan section: {} rows x {} SVs", ds.rows, plan.support_size());
+        let stats = bench_loop(warm, iters.min(5), || {
+            refs.iter().map(|r| model.decision_rr(*r)).sum::<f64>()
+        });
+        report.push("score single-row naive (rbf)", ds.rows as f64, "row", &stats);
+        let mut out = vec![0.0f64; refs.len()];
+        let stats = bench_loop(warm, iters.min(5), || {
+            plan.score_block(&refs, &mut out);
+            out[0]
+        });
+        report.push("score plan block serial (rbf)", ds.rows as f64, "row", &stats);
+        let stats = bench_loop(warm, iters.min(5), || {
+            plan.score_block_parallel(&refs, sodm::util::pool::num_cpus(), &mut out);
+            out[0]
+        });
+        report.push("score plan block parallel (rbf)", ds.rows as f64, "row", &stats);
+    }
+
+    // 9. serve worker scaling: the sharded scorer runtime under concurrent
+    // synthetic load, one entry per worker count (shards track workers).
+    {
+        use sodm::serve::{serve, Backend, ServeConfig};
+        let ncpu = sodm::util::pool::num_cpus();
+        let mut counts = vec![1usize, 2, ncpu.min(4), ncpu.min(8)];
+        counts.sort_unstable();
+        counts.dedup();
+        let clients = 8usize;
+        let per_client = if quick { 30 } else { 100 };
+        println!();
+        for &wk in &counts {
+            let cfg = ServeConfig {
+                workers: wk,
+                shards: wk,
+                max_wait: std::time::Duration::from_millis(1),
+                ..ServeConfig::default()
+            };
+            let h = serve(model.clone(), Backend::Native, cfg).expect("serve");
+            let dsr = &ds;
+            let (_, secs) = sodm::util::time_it(|| {
+                std::thread::scope(|s| {
+                    for c in 0..clients {
+                        let h = h.clone();
+                        s.spawn(move || {
+                            for r in 0..per_client {
+                                let _ = h.score(dsr.row((c * per_client + r * 13) % dsr.rows));
+                            }
+                        });
+                    }
+                });
+            });
+            h.stop();
+            let stats = sodm::util::TimingStats { samples: vec![secs] };
+            let total = (clients * per_client) as f64;
+            report.push(&format!("serve scale w={wk}"), total, "req", &stats);
+        }
+    }
+
+    // 10-11. PJRT artifact paths (skipped without artifacts)
     match XlaEngine::load_default() {
         Some(engine) => {
             let m = engine.geometry.gram_m;

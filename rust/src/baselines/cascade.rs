@@ -185,6 +185,14 @@ mod tests {
         assert!(run.model.accuracy(&test) > 0.8);
         // binary tree: 4 -> 2 -> 1 = 3 levels
         assert_eq!(run.trace.len(), 3);
+        // cascade models score through the compiled plan like every other
+        // trainer output: block decisions must track the scalar reference
+        let plan = crate::infer::ScoringPlan::compile(&run.model);
+        for i in 0..8 {
+            let x = crate::data::RowRef::Dense(test.row(i));
+            let (got, want) = (plan.score_rr(x), run.model.decision_rr(x));
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "{got} vs {want}");
+        }
     }
 
     #[test]

@@ -150,6 +150,14 @@ mod tests {
         );
         assert!(run.model.accuracy(&test) > 0.8);
         assert_eq!(run.trace.len(), 2);
+        // DiP models are plan-compilable and plan-equivalent (the serving
+        // path scores them through ScoringPlan, never row-at-a-time)
+        let plan = crate::infer::ScoringPlan::compile(&run.model);
+        for i in 0..8 {
+            let x = crate::data::RowRef::Dense(test.row(i));
+            let (got, want) = (plan.score_rr(x), run.model.decision_rr(x));
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "{got} vs {want}");
+        }
     }
 
     #[test]

@@ -156,6 +156,17 @@ mod tests {
         );
         assert!(run.model.accuracy(&test) > 0.8);
         assert!(run.trace.len() >= 2);
+        // hierarchical merge output must shard cleanly: partial kernel sums
+        // across SV shards reduce to the plan decision (the serving layout)
+        let plan = crate::infer::ScoringPlan::compile(&run.model);
+        let sharded = crate::infer::ShardedPlan::compile(&run.model, 3);
+        for i in 0..8 {
+            let x = crate::data::RowRef::Dense(test.row(i));
+            let mut got = [0.0f64];
+            sharded.score_block(&[x], &mut got);
+            let want = plan.score_rr(x);
+            assert!((got[0] - want).abs() < 1e-9 * (1.0 + want.abs()), "{} vs {want}", got[0]);
+        }
     }
 
     #[test]

@@ -430,6 +430,119 @@ pub fn run_sparse_benchmark(
     ))
 }
 
+/// Serving benchmark — drives the sharded batcher runtime ([`crate::serve`])
+/// with synthetic concurrent load on a dense-RBF and a CSR-RBF model and
+/// reports throughput, batching, and latency percentiles. Shared by
+/// `serve-bench --quick` (the CI smoke, JSON artifact) and
+/// `experiment --serve` (writes `serve_bench.json` in the results dir).
+pub fn run_serve_benchmark(
+    workers: usize,
+    shards: usize,
+    quick: bool,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::data::sparse::SparseSynthSpec;
+    use crate::util::json::Json;
+
+    let (rows, clients, per_client) = if quick { (160, 4, 80) } else { (400, 8, 250) };
+    let budget = SolveBudget { max_sweeps: 20, ..SolveBudget::default() };
+    let params = OdmParams::default();
+
+    let mut spec = SynthSpec::named("svmguide1", 0.01, 7);
+    spec.rows = rows;
+    let ds = spec.generate();
+    let dense_model =
+        crate::odm::train_exact_odm(&ds, &KernelKind::Rbf { gamma: 1.0 }, &params, &budget);
+    let (dense_json, dense_line) =
+        serve_case("dense-rbf", dense_model, workers, shards, clients, per_client, |h, i| {
+            let _ = h.score(ds.row(i % ds.rows));
+        })?;
+
+    let sp = SparseSynthSpec::new(rows, 2000, 0.02, 5).generate();
+    let sparse_model =
+        crate::odm::train_exact_odm(&sp, &KernelKind::Rbf { gamma: 0.5 }, &params, &budget);
+    let (sparse_json, sparse_line) =
+        serve_case("sparse-rbf", sparse_model, workers, shards, clients, per_client, |h, i| {
+            let j = i % sp.rows;
+            let (lo, hi) = (sp.indptr[j], sp.indptr[j + 1]);
+            let _ = h.score_sparse(&sp.indices[lo..hi], &sp.values[lo..hi]);
+        })?;
+
+    let json = Json::obj(vec![
+        ("workers", Json::Num(workers as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("cases", Json::Arr(vec![dense_json, sparse_json])),
+    ]);
+    let summary = format!(
+        "serve benchmark ({workers} workers, {shards} shards)\n{dense_line}\n{sparse_line}"
+    );
+    Ok((json, summary))
+}
+
+/// One serving load case: spin a server, hammer it from `clients` threads,
+/// report one JSON object + one human line.
+fn serve_case(
+    name: &str,
+    model: OdmModel,
+    workers: usize,
+    shards: usize,
+    clients: usize,
+    per_client: usize,
+    score_one: impl Fn(&crate::serve::ServerHandle, usize) + Sync,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::serve::{serve, Backend, ServeConfig};
+    use crate::util::json::{jstr, Json};
+    use std::sync::atomic::Ordering;
+
+    let cfg = ServeConfig {
+        workers,
+        shards,
+        max_wait: std::time::Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
+    let sv = model.support_size();
+    let handle = serve(model, Backend::Native, cfg)?;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = handle.clone();
+            let score_one = &score_one;
+            s.spawn(move || {
+                for r in 0..per_client {
+                    score_one(&h, c * per_client + r * 7919);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    handle.stop();
+    let m = handle.metrics();
+    // Report what the server actually counted, not the intended load —
+    // errored requests (if any) must not inflate the throughput artifact.
+    let served = m.requests.load(Ordering::Relaxed) as f64;
+    let json = Json::obj(vec![
+        ("name", jstr(name)),
+        ("support", Json::Num(sv as f64)),
+        ("requests", Json::Num(served)),
+        ("seconds", Json::Num(secs)),
+        ("req_per_s", Json::Num(served / secs.max(1e-9))),
+        ("mean_batch", Json::Num(m.mean_batch_size())),
+        ("mean_queue_wait_ms", Json::Num(m.mean_queue_wait_ms())),
+        ("p50_ms", Json::Num(m.p50_ms())),
+        ("p95_ms", Json::Num(m.p95_ms())),
+        ("p99_ms", Json::Num(m.p99_ms())),
+    ]);
+    let line = format!(
+        "{name:<10} : {served:.0} reqs in {secs:.2}s ({:.0} req/s), {sv} SVs, mean batch {:.1}, \
+         p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+        served / secs.max(1e-9),
+        m.mean_batch_size(),
+        m.p50_ms(),
+        m.p95_ms(),
+        m.p99_ms(),
+    );
+    Ok((json, line))
+}
+
 /// Gradient-based comparators for Fig. 4.
 pub fn run_gradient_method(
     method: &str,
@@ -528,6 +641,15 @@ mod tests {
             let r = run_gradient_method(m, &train, &test, &cfg);
             assert!(r.accuracy > 0.6, "{m}: {}", r.accuracy);
         }
+    }
+
+    #[test]
+    fn serve_benchmark_quick_reports_both_cases() {
+        let (json, summary) = run_serve_benchmark(2, 2, true).unwrap();
+        let text = json.to_string();
+        assert!(text.contains("dense-rbf") && text.contains("sparse-rbf"), "{text}");
+        assert!(text.contains("p99_ms"), "{text}");
+        assert!(summary.contains("req/s"), "{summary}");
     }
 
     #[test]

@@ -1,0 +1,626 @@
+//! Compiled scoring plans — the inference subsystem every decision in the
+//! repo flows through.
+//!
+//! A trained [`OdmModel`] is a *description* of a decision function; scoring
+//! it row-at-a-time (the historical `decision_rr` loop) re-derives the same
+//! facts for every request: support-vector layout, kernel strategy, ‖x_s‖².
+//! [`ScoringPlan::compile`] hoists all of that out of the hot loop once:
+//!
+//! * **linear dot** — linear models (and linear-kernel expansions, which
+//!   collapse to explicit primal weights at compile time) score as one
+//!   f64-accumulated dot per row.
+//! * **blocked dense RBF** — dense kernel expansions precompute the support
+//!   vectors' squared norms and walk the (row-major, cache-friendly) SV
+//!   tiles in blocks, evaluating k(x_s, x) through the norms fast path
+//!   ([`eval_with_norms`]): `exp(-γ(‖x_s‖² + ‖x‖² − 2⟨x_s, x⟩))`, one dot
+//!   instead of one squared distance per pair, with ‖x‖² amortized across
+//!   the whole expansion.
+//! * **sparse merge-join** — CSR kernel expansions keep CSR support vectors
+//!   and use the same norms fast path, so a sparse SV against a dense row
+//!   costs one O(nnz) gather (not the O(cols) dense walk) and sparse×sparse
+//!   pairs stay an O(nnz) sorted merge.
+//!
+//! The block API ([`ScoringPlan::score_block`]) scores many rows per call —
+//! kernel inference is a blocked-GEMM problem, not a row-at-a-time one
+//! (Sindhwani & Avron, "High-performance Kernel Machines") — and
+//! [`ScoringPlan::score_block_parallel`] fans the block out over the
+//! [`crate::util::pool`] workers. [`ShardedPlan`] splits a kernel expansion
+//! into support-vector shards whose partial sums add up to the full
+//! decision; the serving runtime ([`crate::serve`]) gives each scorer worker
+//! one shard and reduces the partials before replying.
+//!
+//! Numerics: per-pair kernel values differ from the scalar reference
+//! ([`decision_reference`]) only by f32 norm-expansion roundoff, and f64
+//! partial-sum regrouping (tiles, shards) is associativity noise;
+//! `rust/tests/infer_serve.rs` pins plan-vs-reference agreement at 1e-6 on
+//! dense and CSR fixtures.
+
+use crate::data::{RowRef, Rows};
+use crate::kernel::{dot, eval_with_norms, sq_norm_rr, KernelKind};
+use crate::odm::OdmModel;
+
+/// Support vectors walked per tile in the blocked dense/sparse kernel loops:
+/// the tile's SV rows stay hot in L1/L2 while every request row of the block
+/// visits them.
+const SV_TILE: usize = 256;
+
+/// Below this many rows a parallel block falls back to the serial loop (the
+/// scoped-thread spawn would cost more than it saves).
+const PAR_MIN_ROWS: usize = 32;
+
+/// The scalar reference decision — the historical row-at-a-time
+/// `OdmModel::decision_rr` loop, kept verbatim as the semantic spec the
+/// compiled plans are validated against (and the single-row convenience
+/// path; batch call sites go through [`ScoringPlan`]).
+pub fn decision_reference(model: &OdmModel, x: RowRef) -> f64 {
+    match model {
+        OdmModel::Linear { w } => linear_score(w, x),
+        OdmModel::Kernel { kernel, sv_x, coef, cols } => {
+            let mut s = 0.0;
+            for (si, c) in coef.iter().enumerate() {
+                let sv = &sv_x[si * cols..(si + 1) * cols];
+                s += c * kernel.eval_rr(RowRef::Dense(sv), x) as f64;
+            }
+            s
+        }
+        OdmModel::SparseKernel { kernel, sv_indptr, sv_indices, sv_values, coef, cols } => {
+            let mut s = 0.0;
+            for (si, c) in coef.iter().enumerate() {
+                let (lo, hi) = (sv_indptr[si], sv_indptr[si + 1]);
+                let sv = RowRef::Sparse {
+                    indices: &sv_indices[lo..hi],
+                    values: &sv_values[lo..hi],
+                    cols: *cols,
+                };
+                s += c * kernel.eval_rr(sv, x) as f64;
+            }
+            s
+        }
+    }
+}
+
+/// Linear decision with the historical semantics: dense rows keep the
+/// truncating zip (data/model dimension mismatches score the overlap),
+/// sparse rows are bounds-guarded (requests are external input).
+#[inline]
+fn linear_score(w: &[f64], x: RowRef) -> f64 {
+    match x {
+        RowRef::Dense(xs) => w.iter().zip(xs).map(|(a, b)| a * *b as f64).sum(),
+        RowRef::Sparse { indices, values, .. } => {
+            let mut s = 0.0;
+            for (i, v) in indices.iter().zip(values.iter()) {
+                let j = *i as usize;
+                if j < w.len() {
+                    s += w[j] * *v as f64;
+                }
+            }
+            s
+        }
+    }
+}
+
+/// Per-kernel scoring strategy selected at compile time.
+enum Strategy {
+    /// One f64 dot per row (linear models and collapsed linear-kernel
+    /// expansions).
+    Linear { w: Vec<f64> },
+    /// Dense RBF expansion: row-major SV tiles + precomputed ‖x_s‖².
+    DenseRbf { gamma: f32, sv_x: Vec<f32>, sv_norms: Vec<f32>, coef: Vec<f64>, cols: usize },
+    /// CSR RBF expansion: canonical CSR SVs + precomputed ‖x_s‖², norms fast
+    /// path so mixed pairs cost O(nnz).
+    SparseRbf {
+        gamma: f32,
+        sv_indptr: Vec<usize>,
+        sv_indices: Vec<u32>,
+        sv_values: Vec<f32>,
+        sv_norms: Vec<f32>,
+        coef: Vec<f64>,
+        cols: usize,
+    },
+}
+
+/// A scoring plan compiled once from an [`OdmModel`]: strategy selected,
+/// support vectors packed, norms precomputed. Cheap to share across threads
+/// (`Sync`, no interior mutability).
+pub struct ScoringPlan {
+    strategy: Strategy,
+    cols: usize,
+    support: usize,
+}
+
+impl ScoringPlan {
+    /// Compile a plan from any model variant.
+    pub fn compile(model: &OdmModel) -> Self {
+        let cols = model.input_cols();
+        match model {
+            OdmModel::Linear { w } => Self::from_linear(w.clone(), cols, w.len()),
+            OdmModel::Kernel { kernel, sv_x, coef, cols } => match kernel {
+                KernelKind::Linear => {
+                    // Collapse the expansion to primal weights: one dot per
+                    // row instead of one dot per (SV, row) pair.
+                    let mut w = vec![0.0f64; *cols];
+                    for (si, c) in coef.iter().enumerate() {
+                        for (j, wj) in w.iter_mut().enumerate() {
+                            *wj += c * sv_x[si * cols + j] as f64;
+                        }
+                    }
+                    Self::from_linear(w, *cols, coef.len())
+                }
+                KernelKind::Rbf { gamma } => {
+                    Self::dense_rbf(*gamma, sv_x.clone(), coef.clone(), *cols)
+                }
+            },
+            OdmModel::SparseKernel { kernel, sv_indptr, sv_indices, sv_values, coef, cols } => {
+                match kernel {
+                    KernelKind::Linear => {
+                        let mut w = vec![0.0f64; *cols];
+                        for (si, c) in coef.iter().enumerate() {
+                            for k in sv_indptr[si]..sv_indptr[si + 1] {
+                                w[sv_indices[k] as usize] += c * sv_values[k] as f64;
+                            }
+                        }
+                        Self::from_linear(w, *cols, coef.len())
+                    }
+                    KernelKind::Rbf { gamma } => Self::sparse_rbf(
+                        *gamma,
+                        sv_indptr.clone(),
+                        sv_indices.clone(),
+                        sv_values.clone(),
+                        coef.clone(),
+                        *cols,
+                    ),
+                }
+            }
+        }
+    }
+
+    fn from_linear(w: Vec<f64>, cols: usize, support: usize) -> Self {
+        ScoringPlan { strategy: Strategy::Linear { w }, cols, support }
+    }
+
+    fn dense_rbf(gamma: f32, sv_x: Vec<f32>, coef: Vec<f64>, cols: usize) -> Self {
+        let sv_norms: Vec<f32> = (0..coef.len())
+            .map(|s| {
+                let sv = &sv_x[s * cols..(s + 1) * cols];
+                dot(sv, sv)
+            })
+            .collect();
+        let support = coef.len();
+        ScoringPlan {
+            strategy: Strategy::DenseRbf { gamma, sv_x, sv_norms, coef, cols },
+            cols,
+            support,
+        }
+    }
+
+    fn sparse_rbf(
+        gamma: f32,
+        sv_indptr: Vec<usize>,
+        sv_indices: Vec<u32>,
+        sv_values: Vec<f32>,
+        coef: Vec<f64>,
+        cols: usize,
+    ) -> Self {
+        let sv_norms: Vec<f32> = (0..coef.len())
+            .map(|s| sv_values[sv_indptr[s]..sv_indptr[s + 1]].iter().map(|v| v * v).sum::<f32>())
+            .collect();
+        let support = coef.len();
+        ScoringPlan {
+            strategy: Strategy::SparseRbf {
+                gamma,
+                sv_indptr,
+                sv_indices,
+                sv_values,
+                sv_norms,
+                coef,
+                cols,
+            },
+            cols,
+            support,
+        }
+    }
+
+    /// Feature dimensionality the plan scores.
+    #[inline]
+    pub fn input_cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Support vectors behind the plan (linear plans report the expansion
+    /// size they were collapsed from; primal-born linear models report the
+    /// feature dimension, matching [`OdmModel::support_size`]).
+    #[inline]
+    pub fn support_size(&self) -> usize {
+        self.support
+    }
+
+    /// Decision value of one row (block of one).
+    pub fn score_rr(&self, x: RowRef) -> f64 {
+        let mut out = [0.0f64];
+        self.score_block(&[x], &mut out);
+        out[0]
+    }
+
+    /// Score a block of rows into `out` (`out.len() == rows.len()`;
+    /// previous contents are overwritten). This is the API every batch call
+    /// site uses — serving batches, accuracy/decision sweeps, benches.
+    pub fn score_block(&self, rows: &[RowRef], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len(), "rows/out length mismatch");
+        match &self.strategy {
+            Strategy::Linear { w } => {
+                for (r, o) in rows.iter().zip(out.iter_mut()) {
+                    *o = linear_score(w, *r);
+                }
+            }
+            Strategy::DenseRbf { gamma, sv_x, sv_norms, coef, cols } => {
+                rbf_tiled(*gamma, sv_norms, coef, rows, out, |s| {
+                    RowRef::Dense(&sv_x[s * cols..(s + 1) * cols])
+                });
+            }
+            Strategy::SparseRbf {
+                gamma,
+                sv_indptr,
+                sv_indices,
+                sv_values,
+                sv_norms,
+                coef,
+                cols,
+            } => {
+                rbf_tiled(*gamma, sv_norms, coef, rows, out, |s| {
+                    let (lo, hi) = (sv_indptr[s], sv_indptr[s + 1]);
+                    RowRef::Sparse {
+                        indices: &sv_indices[lo..hi],
+                        values: &sv_values[lo..hi],
+                        cols: *cols,
+                    }
+                });
+            }
+        }
+    }
+
+    /// [`Self::score_block`] fanned out over at most `workers` pool threads
+    /// (contiguous row chunks; small blocks stay serial).
+    pub fn score_block_parallel(&self, rows: &[RowRef], workers: usize, out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len(), "rows/out length mismatch");
+        let workers = workers.max(1);
+        if workers == 1 || rows.len() < 2 * PAR_MIN_ROWS {
+            return self.score_block(rows, out);
+        }
+        let chunk = rows.len().div_ceil(workers * 4).max(PAR_MIN_ROWS);
+        crate::util::pool::parallel_chunks(out, workers, chunk, |start, slice| {
+            self.score_block(&rows[start..start + slice.len()], slice);
+        });
+    }
+
+    /// Decision values for every row of a dataset of either backing.
+    pub fn score_rows(&self, data: Rows<'_>, workers: usize) -> Vec<f64> {
+        let refs: Vec<RowRef> = (0..data.rows()).map(|i| data.row_ref(i)).collect();
+        let mut out = vec![0.0f64; refs.len()];
+        self.score_block_parallel(&refs, workers, &mut out);
+        out
+    }
+
+    /// Test accuracy on a dataset of either backing (sign convention:
+    /// decision ≥ 0 predicts +1).
+    pub fn accuracy(&self, data: Rows<'_>, workers: usize) -> f64 {
+        if data.rows() == 0 {
+            return 0.0;
+        }
+        let dec = self.score_rows(data, workers);
+        let correct =
+            dec.iter().zip(data.labels()).filter(|(d, y)| (**d >= 0.0) == (**y > 0.0)).count();
+        correct as f64 / data.rows() as f64
+    }
+}
+
+/// The shared tiled RBF reduction behind both expansion backings: request
+/// norms computed once per block, support vectors walked in [`SV_TILE`]
+/// blocks (`sv_at(s)` yields the s-th SV row), coef-weighted
+/// [`eval_with_norms`] terms accumulated in f64 per row.
+///
+/// Sharded serving calls this once per shard, so request norms are
+/// recomputed `shards` times per batch — an O(shards/sv) overhead that is
+/// negligible at sane shard counts (≤ cpus) against real expansions; keep
+/// it in mind before pushing `shards` toward the SV count.
+fn rbf_tiled<'a>(
+    gamma: f32,
+    sv_norms: &[f32],
+    coef: &[f64],
+    rows: &[RowRef],
+    out: &mut [f64],
+    sv_at: impl Fn(usize) -> RowRef<'a>,
+) {
+    let k = KernelKind::Rbf { gamma };
+    let nx: Vec<f32> = rows.iter().map(|r| sq_norm_rr(*r)).collect();
+    out.fill(0.0);
+    let mut s0 = 0;
+    while s0 < coef.len() {
+        let s1 = (s0 + SV_TILE).min(coef.len());
+        for (ri, r) in rows.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for s in s0..s1 {
+                let kv = eval_with_norms(&k, sv_at(s), sv_norms[s], *r, nx[ri]) as f64;
+                acc += coef[s] * kv;
+            }
+            out[ri] += acc;
+        }
+        s0 = s1;
+    }
+}
+
+/// A plan split into support-vector shards: `shard(s)` scores the s-th
+/// slice of the expansion, and the full decision is the sum of the shard
+/// partials. Linear plans (no expansion to split) always compile to one
+/// shard, as do requests for more shards than support vectors.
+pub struct ShardedPlan {
+    shards: Vec<ScoringPlan>,
+    cols: usize,
+}
+
+impl ShardedPlan {
+    /// Compile `model` into at most `shards` support-vector shards.
+    pub fn compile(model: &OdmModel, shards: usize) -> Self {
+        let cols = model.input_cols();
+        let want = shards.max(1);
+        let plans = match model {
+            OdmModel::Kernel { kernel: KernelKind::Rbf { gamma }, sv_x, coef, cols }
+                if want > 1 && coef.len() > 1 =>
+            {
+                let n = coef.len();
+                let parts = want.min(n);
+                (0..parts)
+                    .map(|s| {
+                        let (lo, hi) = (n * s / parts, n * (s + 1) / parts);
+                        ScoringPlan::dense_rbf(
+                            *gamma,
+                            sv_x[lo * cols..hi * cols].to_vec(),
+                            coef[lo..hi].to_vec(),
+                            *cols,
+                        )
+                    })
+                    .collect()
+            }
+            OdmModel::SparseKernel {
+                kernel: KernelKind::Rbf { gamma },
+                sv_indptr,
+                sv_indices,
+                sv_values,
+                coef,
+                cols,
+            } if want > 1 && coef.len() > 1 => {
+                let n = coef.len();
+                let parts = want.min(n);
+                (0..parts)
+                    .map(|s| {
+                        let (lo, hi) = (n * s / parts, n * (s + 1) / parts);
+                        let base = sv_indptr[lo];
+                        let indptr: Vec<usize> =
+                            sv_indptr[lo..=hi].iter().map(|p| p - base).collect();
+                        ScoringPlan::sparse_rbf(
+                            *gamma,
+                            indptr,
+                            sv_indices[base..sv_indptr[hi]].to_vec(),
+                            sv_values[base..sv_indptr[hi]].to_vec(),
+                            coef[lo..hi].to_vec(),
+                            *cols,
+                        )
+                    })
+                    .collect()
+            }
+            _ => vec![ScoringPlan::compile(model)],
+        };
+        ShardedPlan { shards: plans, cols }
+    }
+
+    /// Number of shards actually compiled (≤ the requested count).
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The s-th shard's plan (its scores are *partial* decisions unless
+    /// there is only one shard).
+    #[inline]
+    pub fn shard(&self, s: usize) -> &ScoringPlan {
+        &self.shards[s]
+    }
+
+    /// Feature dimensionality the plan scores.
+    #[inline]
+    pub fn input_cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total support vectors across shards.
+    pub fn support_size(&self) -> usize {
+        self.shards.iter().map(|p| p.support_size()).sum()
+    }
+
+    /// Full decisions for a block: shard partials reduced serially (the
+    /// serving runtime does the same reduction across worker threads).
+    pub fn score_block(&self, rows: &[RowRef], out: &mut [f64]) {
+        if self.shards.len() == 1 {
+            return self.shards[0].score_block(rows, out);
+        }
+        out.fill(0.0);
+        let mut partial = vec![0.0f64; rows.len()];
+        for p in &self.shards {
+            p.score_block(rows, &mut partial);
+            for (o, v) in out.iter_mut().zip(partial.iter()) {
+                *o += v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::SparseSynthSpec;
+    use crate::data::synth::SynthSpec;
+    use crate::odm::{train_exact_odm, OdmParams};
+    use crate::qp::SolveBudget;
+
+    fn dense_rbf_model() -> (OdmModel, crate::data::Dataset) {
+        let mut s = SynthSpec::named("svmguide1", 0.01, 3);
+        s.rows = 150;
+        let ds = s.generate();
+        let m = train_exact_odm(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.0 },
+            &OdmParams::default(),
+            &SolveBudget { max_sweeps: 40, ..SolveBudget::default() },
+        );
+        (m, ds)
+    }
+
+    fn sparse_rbf_model() -> (OdmModel, crate::data::sparse::SparseDataset) {
+        let sp = SparseSynthSpec::new(120, 300, 0.05, 5).generate();
+        let m = train_exact_odm(
+            &sp,
+            &KernelKind::Rbf { gamma: 0.5 },
+            &OdmParams::default(),
+            &SolveBudget { max_sweeps: 25, ..SolveBudget::default() },
+        );
+        (m, sp)
+    }
+
+    #[test]
+    fn dense_plan_matches_reference() {
+        let (m, ds) = dense_rbf_model();
+        let plan = ScoringPlan::compile(&m);
+        assert_eq!(plan.input_cols(), m.input_cols());
+        assert_eq!(plan.support_size(), m.support_size());
+        let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let mut out = vec![0.0; refs.len()];
+        plan.score_block(&refs, &mut out);
+        for (i, got) in out.iter().enumerate() {
+            let want = decision_reference(&m, refs[i]);
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "row {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sparse_plan_matches_reference_on_both_request_backings() {
+        let (m, sp) = sparse_rbf_model();
+        assert!(matches!(m, OdmModel::SparseKernel { .. }));
+        let plan = ScoringPlan::compile(&m);
+        let dense = sp.to_dense();
+        for i in 0..20 {
+            let want = decision_reference(&m, sp.row_ref(i));
+            let got_sparse = plan.score_rr(sp.row_ref(i));
+            let got_dense = plan.score_rr(RowRef::Dense(dense.row(i)));
+            assert!((got_sparse - want).abs() < 1e-6 * (1.0 + want.abs()));
+            assert!((got_dense - want).abs() < 1e-6 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn linear_kernel_expansion_collapses_to_primal_dot() {
+        let m = OdmModel::Kernel {
+            kernel: KernelKind::Linear,
+            sv_x: vec![1.0, 0.5, -0.25, 2.0],
+            coef: vec![0.75, -1.5],
+            cols: 2,
+        };
+        let plan = ScoringPlan::compile(&m);
+        assert!(matches!(plan.strategy, Strategy::Linear { .. }));
+        for x in [[0.3f32, 0.9], [1.0, -1.0], [0.0, 0.0]] {
+            let want = decision_reference(&m, RowRef::Dense(&x));
+            let got = plan.score_rr(RowRef::Dense(&x));
+            // f64 collapse vs the reference's per-SV f32 dots: agreement is
+            // bounded by f32 roundoff (~1e-7), not exact — 1e-6 contract.
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sparse_linear_kernel_expansion_collapses_too() {
+        let m = OdmModel::SparseKernel {
+            kernel: KernelKind::Linear,
+            sv_indptr: vec![0, 2, 3],
+            sv_indices: vec![0, 3, 1],
+            sv_values: vec![1.0, 2.0, -0.5],
+            coef: vec![1.25, 2.0],
+            cols: 4,
+        };
+        let plan = ScoringPlan::compile(&m);
+        let x = [0.5f32, 1.0, 0.0, 0.25];
+        let want = decision_reference(&m, RowRef::Dense(&x));
+        assert!((plan.score_rr(RowRef::Dense(&x)) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_block_matches_serial() {
+        let (m, ds) = dense_rbf_model();
+        let plan = ScoringPlan::compile(&m);
+        let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let mut serial = vec![0.0; refs.len()];
+        let mut par = vec![0.0; refs.len()];
+        plan.score_block(&refs, &mut serial);
+        plan.score_block_parallel(&refs, 4, &mut par);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a, b, "chunked scoring must be bitwise identical per row");
+        }
+    }
+
+    #[test]
+    fn sharded_partials_sum_to_full_decision() {
+        let (m, ds) = dense_rbf_model();
+        let plan = ScoringPlan::compile(&m);
+        let refs: Vec<RowRef> = (0..16).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let mut full = vec![0.0; refs.len()];
+        plan.score_block(&refs, &mut full);
+        for shards in [1usize, 2, 3, 7] {
+            let sharded = ShardedPlan::compile(&m, shards);
+            assert!(sharded.num_shards() <= shards.max(1));
+            assert_eq!(sharded.support_size(), plan.support_size());
+            let mut out = vec![0.0; refs.len()];
+            sharded.score_block(&refs, &mut out);
+            for (a, b) in full.iter().zip(&out) {
+                assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()), "{shards} shards: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_sparse_plan_rebases_indptr() {
+        let (m, sp) = sparse_rbf_model();
+        let sharded = ShardedPlan::compile(&m, 4);
+        let refs: Vec<RowRef> = (0..10).map(|i| sp.row_ref(i)).collect();
+        let mut out = vec![0.0; refs.len()];
+        sharded.score_block(&refs, &mut out);
+        for (i, got) in out.iter().enumerate() {
+            let want = decision_reference(&m, refs[i]);
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "row {i}");
+        }
+    }
+
+    #[test]
+    fn linear_models_never_shard() {
+        let m = OdmModel::Linear { w: vec![1.0, -2.0, 0.5] };
+        let sharded = ShardedPlan::compile(&m, 8);
+        assert_eq!(sharded.num_shards(), 1);
+        assert!(sharded.shard(0).score_rr(RowRef::Dense(&[1.0, 1.0, 2.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_matches_sign_rule() {
+        let (m, ds) = dense_rbf_model();
+        let plan = ScoringPlan::compile(&m);
+        let dec = plan.score_rows(Rows::Dense(&ds), 2);
+        let correct = dec.iter().zip(&ds.y).filter(|(d, y)| (**d >= 0.0) == (**y > 0.0)).count();
+        let manual = correct as f64 / ds.rows as f64;
+        assert!((plan.accuracy(Rows::Dense(&ds), 2) - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_block_is_a_noop() {
+        let (m, _) = dense_rbf_model();
+        let plan = ScoringPlan::compile(&m);
+        let mut out: Vec<f64> = Vec::new();
+        plan.score_block(&[], &mut out);
+        assert!(out.is_empty());
+        assert_eq!(plan.accuracy(Rows::Dense(&crate::data::Dataset::default()), 2), 0.0);
+    }
+}

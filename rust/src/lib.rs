@@ -57,6 +57,17 @@
 //! println!("test accuracy {acc:.3}");
 //! ```
 //!
+//! ## Inference & serving
+//!
+//! Every batch decision flows through a compiled [`infer::ScoringPlan`]
+//! (per-kernel strategy selection, precomputed SV norms, blocked tiles,
+//! O(nnz) sparse merge-join) — `OdmModel::{accuracy, decisions}`, the
+//! experiment harness, and the model server all score blocks, never rows.
+//! The server ([`serve`]) is a batcher + N scorer workers, each owning a
+//! support-vector shard of a [`infer::ShardedPlan`] whose partial kernel
+//! sums are reduced before reply; [`serve::ServeMetrics`] tracks
+//! p50/p95/p99 latency.
+//!
 //! ## Sparse data path
 //!
 //! High-dimensional sparse workloads (the paper's rcv1/news20-class text
@@ -70,6 +81,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod data;
 pub mod exp;
+pub mod infer;
 pub mod kernel;
 pub mod odm;
 pub mod partition;

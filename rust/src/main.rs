@@ -85,11 +85,15 @@ USAGE: sodm <command> [--flag value]...
               solver; --ordered-every k makes every k-th sweep visit
               coordinates in descending violation order)
   predict    --model m.json --data <...> [--backend native|xla]
-  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse) [--scale 0.05]
-             [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
+  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse | --serve)
+             [--scale 0.05] [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
              (--sparse: CSR scaling benchmark, [--rows 10000] [--cols 100000]
               [--density 0.001]; writes results/sparse_bench.json)
+             (--serve: sharded serving benchmark, [--shards N]; writes
+              results/serve_bench.json)
   serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
+             [--workers N] [--shards N] [--json out.json]
+             (--quick: self-contained dense + sparse RBF smoke, no --model/--data)
   info
 "
     );
@@ -475,6 +479,16 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("{out}");
         return Ok(());
     }
+    if flags.contains_key("serve") {
+        let shards = flag_usize(flags, "shards", cfg.workers)?;
+        let (json, out) = sodm::exp::run_serve_benchmark(cfg.workers, shards, false)?;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("serve_bench.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("{out}");
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
     if let Some(f) = flag(flags, "figure") {
         let out = match f {
             "1" => figure1(&cfg)?,
@@ -494,15 +508,28 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("{out}");
         return Ok(());
     }
-    sodm::bail!("experiment needs --table N, --figure N, --ablation, or --sparse")
+    sodm::bail!("experiment needs --table N, --figure N, --ablation, --sparse, or --serve")
 }
 
-/// Serve a saved model under synthetic concurrent load and report
-/// latency/throughput/batching metrics (the deployment story of the repo).
+/// Serve a model under synthetic concurrent load and report latency/
+/// throughput/batching metrics (the deployment story of the repo).
+/// `--quick` is the self-contained CI smoke: trains small dense + sparse
+/// RBF models and benchmarks both, no `--model`/`--data` needed.
 fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     use sodm::serve::{serve, Backend, ServeConfig};
+    let workers = flag_usize(flags, "workers", num_cpus().clamp(1, 8))?;
+    let shards = flag_usize(flags, "shards", workers)?;
+    if flags.contains_key("quick") {
+        let (json, summary) = sodm::exp::run_serve_benchmark(workers, shards, true)?;
+        println!("{summary}");
+        if let Some(path) = flag(flags, "json") {
+            std::fs::write(path, json.to_string())?;
+            println!("wrote JSON summary to {path}");
+        }
+        return Ok(());
+    }
     let model_path =
-        flag(flags, "model").ok_or_else(|| sodm::err!("--model is required"))?;
+        flag(flags, "model").ok_or_else(|| sodm::err!("--model is required (or --quick)"))?;
     let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let clients = flag_usize(flags, "clients", 8)?;
@@ -516,7 +543,8 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         ),
         _ => Backend::Native,
     };
-    let handle = serve(model, backend, ServeConfig::default());
+    let cfg = ServeConfig { workers, shards, ..ServeConfig::default() };
+    let handle = serve(model, backend, cfg)?;
     // Sparse datasets submit CSR requests (O(nnz) per request end to end).
     let score_one = |h: &sodm::serve::ServerHandle, i: usize| match &ds {
         LoadedDataset::Dense(d) => {
@@ -541,17 +569,39 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         }
     });
     let secs = t0.elapsed().as_secs_f64();
+    handle.stop();
     let m = handle.metrics();
     use std::sync::atomic::Ordering;
+    // Report the counts the server actually saw (errored submissions are
+    // silently dropped by the load loop and must not inflate throughput).
+    let served = m.requests.load(Ordering::Relaxed) as f64;
     println!(
-        "served {} requests from {clients} clients in {secs:.2}s: {:.0} req/s, mean batch {:.1}, mean queue wait {:.2} ms, padded rows {}",
-        m.requests.load(Ordering::Relaxed),
-        (clients * per_client) as f64 / secs,
+        "served {served:.0} requests from {clients} clients in {secs:.2}s ({workers} workers, {shards} shards): {:.0} req/s, mean batch {:.1}, mean queue wait {:.2} ms, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, padded rows {}",
+        served / secs.max(1e-9),
         m.mean_batch_size(),
         m.mean_queue_wait_ms(),
+        m.p50_ms(),
+        m.p95_ms(),
+        m.p99_ms(),
         m.padded_rows.load(Ordering::Relaxed),
     );
-    handle.stop();
+    if let Some(path) = flag(flags, "json") {
+        use sodm::util::json::{jstr, Json};
+        let json = Json::obj(vec![
+            ("name", jstr("serve-bench")),
+            ("workers", Json::Num(workers as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("requests", Json::Num(served)),
+            ("seconds", Json::Num(secs)),
+            ("req_per_s", Json::Num(served / secs.max(1e-9))),
+            ("mean_batch", Json::Num(m.mean_batch_size())),
+            ("p50_ms", Json::Num(m.p50_ms())),
+            ("p95_ms", Json::Num(m.p95_ms())),
+            ("p99_ms", Json::Num(m.p99_ms())),
+        ]);
+        std::fs::write(path, json.to_string())?;
+        println!("wrote JSON summary to {path}");
+    }
     Ok(())
 }
 

@@ -151,46 +151,11 @@ impl OdmModel {
 
     /// Decision value f(x) for a row of any backing: sparse requests against
     /// a linear model cost O(nnz); against kernel models each SV evaluation
-    /// is a sparse gather/merge.
+    /// is a sparse gather/merge. This is the scalar reference path
+    /// ([`crate::infer::decision_reference`]); batch call sites compile a
+    /// [`crate::infer::ScoringPlan`] instead.
     pub fn decision_rr(&self, x: RowRef) -> f64 {
-        match self {
-            OdmModel::Linear { w } => match x {
-                // zip keeps the historical dense fast path AND its
-                // truncation semantics when data/model dims disagree
-                RowRef::Dense(xs) => w.iter().zip(xs).map(|(a, b)| a * *b as f64).sum(),
-                RowRef::Sparse { indices, values, .. } => {
-                    let mut s = 0.0;
-                    for (i, v) in indices.iter().zip(values.iter()) {
-                        let j = *i as usize;
-                        if j < w.len() {
-                            s += w[j] * *v as f64;
-                        }
-                    }
-                    s
-                }
-            },
-            OdmModel::Kernel { kernel, sv_x, coef, cols } => {
-                let mut s = 0.0;
-                for (si, c) in coef.iter().enumerate() {
-                    let sv = &sv_x[si * cols..(si + 1) * cols];
-                    s += c * kernel.eval_rr(RowRef::Dense(sv), x) as f64;
-                }
-                s
-            }
-            OdmModel::SparseKernel { kernel, sv_indptr, sv_indices, sv_values, coef, cols } => {
-                let mut s = 0.0;
-                for (si, c) in coef.iter().enumerate() {
-                    let (lo, hi) = (sv_indptr[si], sv_indptr[si + 1]);
-                    let sv = RowRef::Sparse {
-                        indices: &sv_indices[lo..hi],
-                        values: &sv_values[lo..hi],
-                        cols: *cols,
-                    };
-                    s += c * kernel.eval_rr(sv, x) as f64;
-                }
-                s
-            }
-        }
+        crate::infer::decision_reference(self, x)
     }
 
     /// Predicted label in {-1, +1} (ties to +1).
@@ -202,27 +167,21 @@ impl OdmModel {
         }
     }
 
-    /// Test accuracy on a dataset of either backing (parallel over rows).
+    /// Test accuracy on a dataset of either backing, through a compiled
+    /// [`crate::infer::ScoringPlan`] (block-scored, parallel over rows).
     pub fn accuracy<'a>(&self, data: impl Into<Rows<'a>>) -> f64 {
         let rows: Rows = data.into();
         if rows.rows() == 0 {
             return 0.0;
         }
-        let workers = crate::util::pool::num_cpus();
-        let correct = crate::util::pool::parallel_sum_f64(rows.rows(), workers, |i| {
-            let pred = if self.decision_rr(rows.row_ref(i)) >= 0.0 { 1.0 } else { -1.0 };
-            if pred == rows.label(i) { 1.0 } else { 0.0 }
-        });
-        correct / rows.rows() as f64
+        crate::infer::ScoringPlan::compile(self).accuracy(rows, crate::util::pool::num_cpus())
     }
 
-    /// Decision values for every row of either backing (parallel).
+    /// Decision values for every row of either backing, through a compiled
+    /// [`crate::infer::ScoringPlan`] (block-scored, parallel over rows).
     pub fn decisions<'a>(&self, data: impl Into<Rows<'a>>) -> Vec<f64> {
         let rows: Rows = data.into();
-        let workers = crate::util::pool::num_cpus();
-        crate::util::pool::parallel_map(rows.rows(), workers, |i| {
-            self.decision_rr(rows.row_ref(i))
-        })
+        crate::infer::ScoringPlan::compile(self).score_rows(rows, crate::util::pool::num_cpus())
     }
 
     /// Serialize to JSON (in-crate writer; see util::json).
@@ -349,14 +308,14 @@ impl OdmModel {
 
 /// Margin statistics of a model on a dataset: (mean, variance) of
 /// y_i f(x_i) — what ODM optimizes; used by tests and the examples to show
-/// the margin-distribution story.
+/// the margin-distribution story. Decisions come from the compiled plan
+/// (block-scored), not a row-at-a-time loop.
 pub fn margin_stats(model: &OdmModel, data: &Dataset) -> (f64, f64) {
     if data.rows == 0 {
         return (0.0, 0.0);
     }
-    let margins: Vec<f64> = (0..data.rows)
-        .map(|i| data.y[i] as f64 * model.decision(data.row(i)))
-        .collect();
+    let decisions = model.decisions(data);
+    let margins: Vec<f64> = decisions.iter().zip(&data.y).map(|(d, y)| *y as f64 * d).collect();
     let mean = margins.iter().sum::<f64>() / margins.len() as f64;
     let var = margins.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>()
         / margins.len() as f64;

@@ -5,9 +5,12 @@
 //! output slice into contiguous chunks, one logical task each. Both are the
 //! substrate the simulated cluster ([`crate::cluster`]) schedules on, so the
 //! Fig-2 core-count sweep controls exactly this `workers` knob.
+//! [`WorkQueue`] is the blocking MPMC job queue persistent worker threads
+//! (the serving runtime's scorer pool) drain.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Number of available CPUs (fallback 4).
 pub fn num_cpus() -> usize {
@@ -29,10 +32,11 @@ where
     if workers == 1 {
         return (0..n).map(f).collect();
     }
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    // One slot per item: every index is claimed (and therefore written)
+    // exactly once, so each write takes only its own uncontended slot lock —
+    // no whole-vector mutex serializing result delivery across workers.
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
-    let slots = Mutex::new(&mut out);
-    // Claim indices; write through the mutex only briefly per item.
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -41,13 +45,85 @@ where
                     break;
                 }
                 let v = f(i);
-                // Safety of design: each i visited once; short critical section.
-                let mut guard = slots.lock().unwrap();
-                guard[i] = Some(v);
+                *slots[i].lock().unwrap() = Some(v);
             });
         }
     });
-    out.into_iter().map(|v| v.expect("task completed")).collect()
+    slots.into_iter().map(|m| m.into_inner().unwrap().expect("task completed")).collect()
+}
+
+/// A blocking multi-producer/multi-consumer job queue: persistent worker
+/// threads [`WorkQueue::pop`] jobs until the queue is closed *and* drained.
+/// This is the substrate the serving runtime's scorer workers run on.
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cond: Condvar,
+}
+
+struct QueueState<T> {
+    jobs: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> WorkQueue<T> {
+    /// New, open, empty queue.
+    pub fn new() -> Self {
+        WorkQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job; returns `false` (dropping the job) if the queue is
+    /// already closed.
+    pub fn push(&self, job: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.cond.notify_one();
+        true
+    }
+
+    /// Block until a job is available. Returns `None` once the queue is
+    /// closed and every queued job has been handed out.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: queued jobs still drain, further pushes are refused,
+    /// and blocked poppers wake up.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Jobs currently queued (not yet popped).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// True when no jobs are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Fill `out` by applying `f(start, chunk)` over contiguous chunks of
@@ -170,6 +246,58 @@ mod tests {
             }
         });
         assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn map_contention_heavy_trivial_tasks() {
+        // Near-zero work per item maximizes result-delivery traffic: with
+        // the historical whole-vector mutex this serialized on one lock;
+        // per-slot writes must still land every result in order.
+        let n = 50_000;
+        let out = parallel_map(n, 16, |i| i ^ 0x5A5A);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i ^ 0x5A5A);
+        }
+    }
+
+    #[test]
+    fn work_queue_drains_across_consumers() {
+        let q = WorkQueue::new();
+        for i in 0..200 {
+            assert!(q.push(i));
+        }
+        q.close();
+        assert!(!q.push(999), "push after close must be refused");
+        let got = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut mine = Vec::new();
+                        while let Some(j) = q.pop() {
+                            mine.push(j);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            let mut all: Vec<i32> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            all.sort_unstable();
+            all
+        });
+        assert_eq!(got, (0..200).collect::<Vec<_>>());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn work_queue_pop_blocks_until_push() {
+        let q = std::sync::Arc::new(WorkQueue::new());
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(7usize);
+        assert_eq!(h.join().unwrap(), Some(7));
+        q.close();
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Compiled-plan and serving-runtime equivalence tests (ISSUE 3 acceptance
+//! fixtures): `ScoringPlan` must agree with the scalar row-at-a-time
+//! reference at 1e-6 on dense and CSR models, and the sharded multi-worker
+//! server must return plan-equivalent decisions under heavy concurrent
+//! mixed (dense + CSR) load with reconciling metrics.
+
+use std::sync::atomic::Ordering;
+
+use sodm::data::sparse::{SparseDataset, SparseSynthSpec};
+use sodm::data::synth::SynthSpec;
+use sodm::data::RowRef;
+use sodm::infer::{decision_reference, ScoringPlan, ShardedPlan};
+use sodm::kernel::KernelKind;
+use sodm::odm::{train_exact_odm, OdmModel, OdmParams};
+use sodm::qp::SolveBudget;
+use sodm::serve::{serve, Backend, ServeConfig};
+
+fn dense_fixture() -> (OdmModel, sodm::data::Dataset) {
+    let mut spec = SynthSpec::named("svmguide1", 0.02, 11);
+    spec.rows = 300;
+    let ds = spec.generate();
+    let model = train_exact_odm(
+        &ds,
+        &KernelKind::Rbf { gamma: 1.5 },
+        &OdmParams::default(),
+        &SolveBudget { max_sweeps: 60, ..SolveBudget::default() },
+    );
+    (model, ds)
+}
+
+fn sparse_fixture() -> (OdmModel, SparseDataset) {
+    let sp = SparseSynthSpec::new(250, 1500, 0.02, 13).generate();
+    let model = train_exact_odm(
+        &sp,
+        &KernelKind::Rbf { gamma: 0.4 },
+        &OdmParams::default(),
+        &SolveBudget { max_sweeps: 30, ..SolveBudget::default() },
+    );
+    (model, sp)
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() < 1e-6 * (1.0 + b.abs())
+}
+
+#[test]
+fn plan_matches_reference_on_dense_fixture() {
+    let (model, ds) = dense_fixture();
+    let plan = ScoringPlan::compile(&model);
+    let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+    let mut block = vec![0.0; refs.len()];
+    plan.score_block(&refs, &mut block);
+    for (i, got) in block.iter().enumerate() {
+        let want = decision_reference(&model, refs[i]);
+        assert!(close(*got, want), "row {i}: plan {got} vs reference {want}");
+    }
+    // model-level batch APIs route through the same plan
+    let decisions = model.decisions(&ds);
+    for (a, b) in decisions.iter().zip(&block) {
+        assert!(close(*a, *b));
+    }
+}
+
+#[test]
+fn plan_matches_reference_on_csr_fixture() {
+    let (model, sp) = sparse_fixture();
+    assert!(matches!(model, OdmModel::SparseKernel { .. }));
+    let plan = ScoringPlan::compile(&model);
+    let refs: Vec<RowRef> = (0..sp.rows).map(|i| sp.row_ref(i)).collect();
+    let mut block = vec![0.0; refs.len()];
+    plan.score_block(&refs, &mut block);
+    for (i, got) in block.iter().enumerate() {
+        let want = decision_reference(&model, refs[i]);
+        assert!(close(*got, want), "row {i}: plan {got} vs reference {want}");
+    }
+    // accuracy (plan-routed) equals the sign rule over the plan scores
+    let right = block.iter().zip(&sp.y).filter(|(d, y)| (**d >= 0.0) == (**y > 0.0)).count();
+    let want_acc = right as f64 / sp.rows as f64;
+    assert!((model.accuracy(&sp) - want_acc).abs() < 1e-12);
+}
+
+#[test]
+fn sharded_plans_agree_with_unsharded_across_worker_shard_grid() {
+    let (model, ds) = dense_fixture();
+    let plan = ScoringPlan::compile(&model);
+    let refs: Vec<RowRef> = (0..32).map(|i| RowRef::Dense(ds.row(i))).collect();
+    let mut want = vec![0.0; refs.len()];
+    plan.score_block(&refs, &mut want);
+    for shards in [2usize, 4, 9] {
+        let sharded = ShardedPlan::compile(&model, shards);
+        let mut got = vec![0.0; refs.len()];
+        sharded.score_block(&refs, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{shards} shards: {a} vs {b}");
+        }
+    }
+}
+
+/// Satellite: many client threads submitting dense + CSR requests
+/// simultaneously against one sharded multi-worker server; every decision
+/// must match the single-threaded plan at 1e-6 and the metrics must
+/// reconcile with the submitted load.
+#[test]
+fn concurrent_mixed_serving_matches_plan_and_metrics_reconcile() {
+    let (model, ds) = dense_fixture();
+    let plan = ScoringPlan::compile(&model);
+    let csr = SparseDataset::from_dense(&ds);
+    let cfg = ServeConfig {
+        workers: 4,
+        shards: 3,
+        max_wait: std::time::Duration::from_millis(5),
+        ..ServeConfig::default()
+    };
+    let h = serve(model, Backend::Native, cfg).unwrap();
+    let threads = 12usize;
+    let per_thread = 24usize;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let h = h.clone();
+            let (ds, csr, plan) = (&ds, &csr, &plan);
+            s.spawn(move || {
+                for r in 0..per_thread {
+                    let i = (t * per_thread + r * 31) % ds.rows;
+                    let (got, want) = if (t + r) % 2 == 0 {
+                        let row = RowRef::Dense(ds.row(i));
+                        (h.score(ds.row(i)).unwrap(), plan.score_rr(row))
+                    } else {
+                        let (lo, hi) = (csr.indptr[i], csr.indptr[i + 1]);
+                        let got =
+                            h.score_sparse(&csr.indices[lo..hi], &csr.values[lo..hi]).unwrap();
+                        (got, plan.score_rr(csr.row_ref(i)))
+                    };
+                    assert!(close(got, want), "thread {t} req {r}: {got} vs {want}");
+                }
+            });
+        }
+    });
+    let m = h.metrics();
+    let total = (threads * per_thread) as u64;
+    let requests = m.requests.load(Ordering::Relaxed);
+    let batches = m.batches.load(Ordering::Relaxed);
+    assert_eq!(requests, total, "every submitted request must be counted");
+    assert!(batches >= 1, "at least one batch must have been dispatched");
+    assert!(batches <= requests, "{batches} batches for {requests} requests");
+    assert_eq!(m.latency.count(), total, "every reply must record a latency sample");
+    let mean = m.mean_batch_size();
+    assert!((mean * batches as f64 - requests as f64).abs() < 1e-6, "counts must reconcile");
+    h.stop();
+}
+
+#[test]
+fn csr_model_server_accepts_both_request_backings() {
+    let (model, sp) = sparse_fixture();
+    let plan = ScoringPlan::compile(&model);
+    let dense = sp.to_dense();
+    let cfg = ServeConfig { workers: 2, shards: 2, ..ServeConfig::default() };
+    let h = serve(model, Backend::Native, cfg).unwrap();
+    for i in 0..12 {
+        let (lo, hi) = (sp.indptr[i], sp.indptr[i + 1]);
+        let got_sparse = h.score_sparse(&sp.indices[lo..hi], &sp.values[lo..hi]).unwrap();
+        let got_dense = h.score(dense.row(i)).unwrap();
+        assert!(close(got_sparse, plan.score_rr(sp.row_ref(i))), "row {i} (csr)");
+        assert!(close(got_dense, plan.score_rr(RowRef::Dense(dense.row(i)))), "row {i} (dense)");
+    }
+    h.stop();
+}
