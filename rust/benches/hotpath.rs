@@ -285,7 +285,44 @@ fn main() {
         }
     }
 
-    // 10-11. PJRT artifact paths (skipped without artifacts)
+    // 10. multiclass OVR: K one-vs-rest class solves sharing one unsigned
+    // Gram-row cache vs per-class signed caches. The models are
+    // bit-identical (±1 sign application is exact), so the delta is pure
+    // kernel-row amortization — the speedup entry is the acceptance number.
+    {
+        use sodm::multiclass::{train_ovr, MulticlassSynthSpec, OvrConfig};
+        let classes = 4usize;
+        let rows = if quick { 300 } else { 800 };
+        let mc = MulticlassSynthSpec::new(classes, rows, 8, 23).generate();
+        let kernel = KernelKind::Rbf { gamma: 1.0 / 16.0 };
+        let sweeps = if quick { 20 } else { 40 };
+        let budget = SolveBudget { max_sweeps: sweeps, ..SolveBudget::default() };
+        println!("\nmulticlass OVR section: {classes} classes x {rows} rows");
+        let shared_cfg = OvrConfig { budget, ..Default::default() };
+        let private_cfg = OvrConfig { budget, share_cache: false, ..Default::default() };
+        let stats_shared =
+            bench_loop(0, iters.min(3), || train_ovr(&mc, &kernel, &params, &shared_cfg).seconds);
+        report.push(
+            "ovr train shared cache (K=4 rbf)",
+            (classes * rows) as f64,
+            "row-solve",
+            &stats_shared,
+        );
+        let stats_private =
+            bench_loop(0, iters.min(3), || train_ovr(&mc, &kernel, &params, &private_cfg).seconds);
+        report.push(
+            "ovr train per-class cache (K=4 rbf)",
+            (classes * rows) as f64,
+            "row-solve",
+            &stats_private,
+        );
+        let speedup = stats_private.min() / stats_shared.min().max(1e-12);
+        println!("ovr shared-cache speedup: {speedup:.2}x");
+        let one = sodm::util::TimingStats { samples: vec![1.0] };
+        report.push("ovr shared-cache speedup", speedup, "x", &one);
+    }
+
+    // 11-12. PJRT artifact paths (skipped without artifacts)
     match XlaEngine::load_default() {
         Some(engine) => {
             let m = engine.geometry.gram_m;

@@ -87,11 +87,19 @@ fn map_label(raw: f32) -> f32 {
     }
 }
 
-/// Streaming CSR parse of a LIBSVM file: each line `label idx:val ...`
-/// (1-based feature indices). `cols` can force a minimum dimension
-/// (0 = infer from the max index). One pass, one reused line buffer,
-/// O(nnz) memory.
-pub fn read_libsvm_sparse(path: impl AsRef<Path>, cols: usize) -> Result<SparseDataset> {
+/// Raw single-pass CSR parse of a LIBSVM file: CSR arrays plus the
+/// *unmapped* label of every kept row. [`read_libsvm_sparse`] binarizes the
+/// labels; the multiclass reader ([`crate::multiclass`]) keeps them raw.
+struct CsrParse {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    raw_y: Vec<f32>,
+    cols: usize,
+    name: String,
+}
+
+fn parse_libsvm_csr(path: impl AsRef<Path>, cols: usize) -> Result<CsrParse> {
     let f = File::open(path.as_ref())?;
     let mut reader = BufReader::new(f);
     let mut indptr: Vec<usize> = vec![0];
@@ -117,7 +125,10 @@ pub fn read_libsvm_sparse(path: impl AsRef<Path>, cols: usize) -> Result<SparseD
         let raw: f32 = label_tok
             .parse()
             .map_err(|e| crate::err!("line {lineno}: bad label {label_tok:?}: {e}"))?;
-        y.push(map_label(raw));
+        // NaN/inf labels would silently binarize (NaN > 0 is false) or
+        // poison multiclass class discovery; reject them at the source.
+        crate::ensure!(raw.is_finite(), "line {lineno}: non-finite label {label_tok:?}");
+        y.push(raw);
         let row_start = indices.len();
         // `canonical` = sorted, unique, no explicit zeros — the CSR
         // invariant shared with `SparseDataset::from_dense`. Rows that
@@ -180,20 +191,51 @@ pub fn read_libsvm_sparse(path: impl AsRef<Path>, cols: usize) -> Result<SparseD
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "libsvm".into());
-    Ok(SparseDataset::new(name, indptr, indices, values, y, max_col))
+    Ok(CsrParse { indptr, indices, values, raw_y: y, cols: max_col, name })
 }
 
-/// Parse a LIBSVM file, auto-detecting the backing store: density >=
-/// [`DENSE_DENSITY_THRESHOLD`] (and at most [`DENSE_MAX_CELLS`] cells)
-/// densifies, everything else stays CSR.
-pub fn read_libsvm_auto(path: impl AsRef<Path>, cols: usize) -> Result<LoadedDataset> {
-    let sp = read_libsvm_sparse(path, cols)?;
+/// Streaming CSR parse of a LIBSVM file: each line `label idx:val ...`
+/// (1-based feature indices). `cols` can force a minimum dimension
+/// (0 = infer from the max index). One pass, one reused line buffer,
+/// O(nnz) memory. Labels are binarized by the ±1 convention
+/// ([`read_libsvm_sparse_raw`] keeps them raw for multiclass).
+pub fn read_libsvm_sparse(path: impl AsRef<Path>, cols: usize) -> Result<SparseDataset> {
+    let p = parse_libsvm_csr(path, cols)?;
+    let y: Vec<f32> = p.raw_y.iter().map(|r| map_label(*r)).collect();
+    Ok(SparseDataset::new(p.name, p.indptr, p.indices, p.values, y, p.cols))
+}
+
+/// [`read_libsvm_sparse`] without the binary label mapping: the returned
+/// dataset carries a `+1` placeholder in `y` (the `SparseDataset` label
+/// contract is ±1) and the second value is the raw label of every row —
+/// the multiclass loader turns those into class ids.
+pub fn read_libsvm_sparse_raw(
+    path: impl AsRef<Path>,
+    cols: usize,
+) -> Result<(SparseDataset, Vec<f32>)> {
+    let p = parse_libsvm_csr(path, cols)?;
+    let placeholder = vec![1.0f32; p.raw_y.len()];
+    let ds = SparseDataset::new(p.name, p.indptr, p.indices, p.values, placeholder, p.cols);
+    Ok((ds, p.raw_y))
+}
+
+/// The auto-densification policy: density >= [`DENSE_DENSITY_THRESHOLD`]
+/// (and at most [`DENSE_MAX_CELLS`] cells) densifies, everything else stays
+/// CSR. Single source shared by [`read_libsvm_auto`] and the multiclass
+/// loader so binary and multiclass loads of one file pick the same backing.
+pub fn auto_backing(sp: SparseDataset) -> LoadedDataset {
     let cells = sp.rows.saturating_mul(sp.cols);
     if sp.density() >= DENSE_DENSITY_THRESHOLD && cells <= DENSE_MAX_CELLS {
-        Ok(LoadedDataset::Dense(sp.to_dense()))
+        LoadedDataset::Dense(sp.to_dense())
     } else {
-        Ok(LoadedDataset::Sparse(sp))
+        LoadedDataset::Sparse(sp)
     }
+}
+
+/// Parse a LIBSVM file, auto-detecting the backing store (see
+/// [`auto_backing`]).
+pub fn read_libsvm_auto(path: impl AsRef<Path>, cols: usize) -> Result<LoadedDataset> {
+    Ok(auto_backing(read_libsvm_sparse(path, cols)?))
 }
 
 /// Parse a LIBSVM format file into a dense [`Dataset`] unconditionally

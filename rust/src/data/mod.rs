@@ -336,6 +336,10 @@ pub struct DataView<'a> {
     pub data: Rows<'a>,
     /// Global row indices selected by this view.
     pub idx: &'a [usize],
+    /// Optional ±1 label override, parallel to `idx`. One-vs-rest multiclass
+    /// training binarizes each class by overriding labels on the shared
+    /// backing rows — K class views, zero feature copies.
+    labels: Option<&'a [f32]>,
 }
 
 impl<'a> DataView<'a> {
@@ -352,7 +356,16 @@ impl<'a> DataView<'a> {
     /// View over either backing.
     pub fn from_rows(data: Rows<'a>, idx: &'a [usize]) -> Self {
         debug_assert!(idx.iter().all(|&i| i < data.rows()), "index out of range");
-        Self { data, idx }
+        Self { data, idx, labels: None }
+    }
+
+    /// View over either backing with a ±1 label override parallel to `idx`
+    /// (the one-vs-rest binarized class views of [`crate::multiclass`]).
+    pub fn with_labels(data: Rows<'a>, idx: &'a [usize], labels: &'a [f32]) -> Self {
+        assert_eq!(labels.len(), idx.len(), "label override must be parallel to idx");
+        debug_assert!(idx.iter().all(|&i| i < data.rows()), "index out of range");
+        debug_assert!(labels.iter().all(|v| *v == 1.0 || *v == -1.0), "labels must be ±1");
+        Self { data, idx, labels: Some(labels) }
     }
 
     /// Full-dataset view.
@@ -389,10 +402,14 @@ impl<'a> DataView<'a> {
         self.data.row_ref(self.idx[i])
     }
 
-    /// Label of the view-local `i`-th instance.
+    /// Label of the view-local `i`-th instance: the binarized override when
+    /// this is a one-vs-rest class view, else the backing label.
     #[inline]
     pub fn label(&self, i: usize) -> f32 {
-        self.data.label(self.idx[i])
+        match self.labels {
+            Some(l) => l[i],
+            None => self.data.label(self.idx[i]),
+        }
     }
 }
 
@@ -474,6 +491,21 @@ mod tests {
         assert_eq!(v.row(0), &[2.0, 6.0]);
         assert_eq!(v.label(1), 1.0);
         assert_eq!(v.cols(), 2);
+    }
+
+    #[test]
+    fn label_override_binarizes_without_copying_rows() {
+        let d = toy();
+        let idx = vec![0usize, 1, 2, 3];
+        let flipped = vec![-1.0f32, 1.0, -1.0, 1.0];
+        let v = DataView::with_labels(Rows::Dense(&d), &idx, &flipped);
+        for i in 0..4 {
+            assert_eq!(v.label(i), flipped[i], "override label wins");
+            assert_eq!(v.row(i), d.row(i), "feature rows stay the backing's");
+        }
+        // the plain view still reads the backing labels
+        let plain = DataView::new(&d, &idx);
+        assert_eq!(plain.label(0), d.y[0]);
     }
 
     #[test]

@@ -543,6 +543,86 @@ fn serve_case(
     Ok((json, line))
 }
 
+/// Multiclass OVR benchmark — trains the K one-vs-rest classes twice on the
+/// same fixture (one shared unsigned Gram cache vs a private signed cache
+/// per class; the models are bit-identical, only wall-clock differs),
+/// reports the measured shared-cache speedup, and smoke-checks
+/// `serve_multiclass` argmax agreement against the offline plan. Shared by
+/// `experiment --multiclass` (writes `multiclass_bench.json`) and the CI
+/// bench job.
+pub fn run_multiclass_benchmark(
+    classes: usize,
+    workers: usize,
+    quick: bool,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::multiclass::{train_ovr, MulticlassSynthSpec, OvrConfig};
+    use crate::util::json::{jstr, Json};
+
+    crate::ensure!(classes >= 2, "multiclass benchmark needs >= 2 classes");
+    let rows = if quick { 400 } else { 1200 };
+    let cols = classes.max(6);
+    let ds = MulticlassSynthSpec::new(classes, rows, cols, 29).generate();
+    let (train, test) = ds.split(0.8, 31);
+    let kernel = KernelKind::Rbf { gamma: 1.0 / (2.0 * cols as f32) };
+    let params = OdmParams::default();
+    let sweeps = if quick { 30 } else { 60 };
+    let budget = SolveBudget { max_sweeps: sweeps, ..SolveBudget::default() };
+
+    let shared =
+        train_ovr(&train, &kernel, &params, &OvrConfig { budget, workers, ..Default::default() });
+    let private = train_ovr(
+        &train,
+        &kernel,
+        &params,
+        &OvrConfig { budget, workers, share_cache: false, ..Default::default() },
+    );
+    let shared_acc = shared.model.accuracy(&test, workers);
+    let private_acc = private.model.accuracy(&test, workers);
+    let speedup = private.seconds / shared.seconds.max(1e-9);
+
+    // Serving smoke: argmax through the sharded runtime must match offline.
+    let plan = shared.model.compile();
+    let offline = plan.predict_rows(test.as_rows(), workers);
+    let serve_cfg = crate::serve::ServeConfig { workers, ..Default::default() };
+    let h = crate::serve::serve_multiclass(shared.model.clone(), serve_cfg)?;
+    let mut agree = true;
+    for (i, want) in offline.iter().enumerate().take(test.rows().min(64)) {
+        let got = h.score_multiclass(test.as_rows().row(i))?;
+        agree &= got.argmax == *want;
+    }
+    h.stop();
+    // This smoke is a CI gate: a serve/offline argmax divergence must fail
+    // the run, not just flip a JSON field.
+    crate::ensure!(agree, "serve_multiclass argmax diverged from the offline plan");
+
+    let json = Json::obj(vec![
+        ("name", jstr("multiclass-ovr")),
+        ("classes", Json::Num(classes as f64)),
+        ("train_rows", Json::Num(train.rows() as f64)),
+        ("cols", Json::Num(cols as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("shared_cache_secs", Json::Num(shared.seconds)),
+        ("per_class_cache_secs", Json::Num(private.seconds)),
+        ("shared_cache_speedup", Json::Num(speedup)),
+        ("shared_cache_hit_rate", Json::Num(shared.cache_hit_rate)),
+        ("accuracy", Json::Num(shared_acc)),
+        ("per_class_cache_accuracy", Json::Num(private_acc)),
+        ("support_vectors", Json::Num(shared.model.support_size() as f64)),
+        ("serve_agrees", Json::Bool(agree)),
+    ]);
+    let summary = format!(
+        "multiclass OVR benchmark ({classes} classes, {} train rows, {workers} workers)\n\
+         shared Gram cache    : {:.2}s  acc {shared_acc:.4}  hit-rate {:.2}\n\
+         per-class caches     : {:.2}s  acc {private_acc:.4}\n\
+         shared-cache speedup : {speedup:.2}x  (serve argmax agrees: {agree})",
+        train.rows(),
+        shared.seconds,
+        shared.cache_hit_rate,
+        private.seconds,
+    );
+    Ok((json, summary))
+}
+
 /// Gradient-based comparators for Fig. 4.
 pub fn run_gradient_method(
     method: &str,
@@ -650,6 +730,16 @@ mod tests {
         assert!(text.contains("dense-rbf") && text.contains("sparse-rbf"), "{text}");
         assert!(text.contains("p99_ms"), "{text}");
         assert!(summary.contains("req/s"), "{summary}");
+    }
+
+    #[test]
+    fn multiclass_benchmark_reports_speedup_and_serve_agreement() {
+        let (json, summary) = run_multiclass_benchmark(3, 2, true).unwrap();
+        let text = json.to_string();
+        assert!(text.contains("shared_cache_speedup"), "{text}");
+        assert!(text.contains("per_class_cache_secs"), "{text}");
+        assert!(text.contains("\"serve_agrees\":true"), "{text}");
+        assert!(summary.contains("speedup"), "{summary}");
     }
 
     #[test]

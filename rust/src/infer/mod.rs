@@ -348,6 +348,110 @@ fn rbf_tiled<'a>(
     }
 }
 
+/// Argmax over a class-major score matrix (`classes * rows` values, class
+/// `c`'s scores at `scores[c*rows..(c+1)*rows]`) for row `i`; ties take the
+/// lowest class index. Single source of the one-vs-rest decision rule —
+/// offline prediction and the serving shard-reduce both call this, so they
+/// cannot drift.
+#[inline]
+pub fn argmax_class(scores: &[f64], rows: usize, i: usize) -> usize {
+    debug_assert!(rows > 0 && scores.len() % rows == 0, "scores must be class-major");
+    let classes = scores.len() / rows;
+    let mut best = 0usize;
+    for c in 1..classes {
+        if scores[c * rows + i] > scores[best * rows + i] {
+            best = c;
+        }
+    }
+    best
+}
+
+/// K one-vs-rest scoring plans compiled together — the batch inference side
+/// of [`crate::multiclass`]: one strategy selection / SV pack / norm
+/// precompute per class at compile time, then block APIs that fill a
+/// class-major score matrix and reduce it to argmax predictions.
+pub struct MulticlassPlan {
+    plans: Vec<ScoringPlan>,
+    cols: usize,
+}
+
+impl MulticlassPlan {
+    /// Compile one plan per class model (all must score the same feature
+    /// dimensionality).
+    pub fn compile(models: &[OdmModel]) -> Self {
+        assert!(!models.is_empty(), "multiclass plan needs at least one class");
+        let cols = models[0].input_cols();
+        for m in models {
+            assert_eq!(m.input_cols(), cols, "class models must share input dims");
+        }
+        MulticlassPlan { plans: models.iter().map(ScoringPlan::compile).collect(), cols }
+    }
+
+    /// Number of classes.
+    #[inline]
+    pub fn n_classes(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Feature dimensionality the plans score.
+    #[inline]
+    pub fn input_cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The class-`c` binary plan (its scores are one-vs-rest margins).
+    #[inline]
+    pub fn plan(&self, c: usize) -> &ScoringPlan {
+        &self.plans[c]
+    }
+
+    /// Score a block into the class-major matrix `out`
+    /// (`out.len() == n_classes * rows.len()`).
+    pub fn score_block(&self, rows: &[RowRef], out: &mut [f64]) {
+        assert_eq!(out.len(), self.plans.len() * rows.len(), "out must be classes x rows");
+        if rows.is_empty() {
+            return;
+        }
+        for (p, chunk) in self.plans.iter().zip(out.chunks_mut(rows.len())) {
+            p.score_block(rows, chunk);
+        }
+    }
+
+    /// [`Self::score_block`] with each class's block fanned out over at most
+    /// `workers` pool threads.
+    pub fn score_block_parallel(&self, rows: &[RowRef], workers: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.plans.len() * rows.len(), "out must be classes x rows");
+        if rows.is_empty() {
+            return;
+        }
+        for (p, chunk) in self.plans.iter().zip(out.chunks_mut(rows.len())) {
+            p.score_block_parallel(rows, workers, chunk);
+        }
+    }
+
+    /// Class-major score matrix for every row of a dataset of either
+    /// backing.
+    pub fn score_rows(&self, data: Rows<'_>, workers: usize) -> Vec<f64> {
+        let refs: Vec<RowRef> = (0..data.rows()).map(|i| data.row_ref(i)).collect();
+        let mut out = vec![0.0f64; self.plans.len() * refs.len()];
+        self.score_block_parallel(&refs, workers, &mut out);
+        out
+    }
+
+    /// Predicted class index per block row (ties to the lowest class).
+    pub fn predict_argmax(&self, rows: &[RowRef], workers: usize) -> Vec<usize> {
+        let mut scores = vec![0.0f64; self.plans.len() * rows.len()];
+        self.score_block_parallel(rows, workers, &mut scores);
+        (0..rows.len()).map(|i| argmax_class(&scores, rows.len(), i)).collect()
+    }
+
+    /// Predicted class index for every row of a dataset of either backing.
+    pub fn predict_rows(&self, data: Rows<'_>, workers: usize) -> Vec<usize> {
+        let refs: Vec<RowRef> = (0..data.rows()).map(|i| data.row_ref(i)).collect();
+        self.predict_argmax(&refs, workers)
+    }
+}
+
 /// A plan split into support-vector shards: `shard(s)` scores the s-th
 /// slice of the expansion, and the full decision is the sum of the shard
 /// partials. Linear plans (no expansion to split) always compile to one
@@ -622,5 +726,62 @@ mod tests {
         plan.score_block(&[], &mut out);
         assert!(out.is_empty());
         assert_eq!(plan.accuracy(Rows::Dense(&crate::data::Dataset::default()), 2), 0.0);
+    }
+
+    #[test]
+    fn argmax_class_ties_take_lowest_index() {
+        // class-major, 2 rows x 3 classes
+        let scores = [1.0, 0.5, 1.0, 0.5, 0.25, 0.5];
+        assert_eq!(argmax_class(&scores, 2, 0), 0, "tie between class 0 and 1");
+        assert_eq!(argmax_class(&scores, 2, 1), 0, "tie between class 0 and 2");
+        let scores = [0.0, -1.0, 2.0, 3.0];
+        assert_eq!(argmax_class(&scores, 2, 0), 1);
+        assert_eq!(argmax_class(&scores, 2, 1), 1);
+    }
+
+    #[test]
+    fn multiclass_plan_matches_per_class_plans() {
+        let linear_class = |w: Vec<f64>| OdmModel::Linear { w };
+        let models = [
+            linear_class(vec![1.0, 0.0]),
+            linear_class(vec![0.0, 1.0]),
+            linear_class(vec![-1.0, -1.0]),
+        ];
+        let mc = MulticlassPlan::compile(&models);
+        assert_eq!(mc.n_classes(), 3);
+        assert_eq!(mc.input_cols(), 2);
+        let xs = [[2.0f32, 0.1], [0.1, 2.0], [-3.0, -3.0], [0.0, 0.0]];
+        let refs: Vec<RowRef> = xs.iter().map(|x| RowRef::Dense(&x[..])).collect();
+        let mut scores = vec![0.0; 3 * refs.len()];
+        mc.score_block(&refs, &mut scores);
+        for (c, m) in models.iter().enumerate() {
+            for (i, r) in refs.iter().enumerate() {
+                let want = decision_reference(m, *r);
+                assert!((scores[c * refs.len() + i] - want).abs() < 1e-12, "class {c} row {i}");
+            }
+        }
+        let pred = mc.predict_argmax(&refs, 2);
+        assert_eq!(pred, vec![0, 1, 2, 0], "argmax picks the winning class, ties to lowest");
+    }
+
+    #[test]
+    fn multiclass_plan_parallel_matches_serial_on_kernel_models() {
+        let (m0, ds) = dense_rbf_model();
+        let m1 = {
+            // second class: the same expansion negated (distinct decisions)
+            let OdmModel::Kernel { kernel, sv_x, coef, cols } = m0.clone() else { unreachable!() };
+            OdmModel::Kernel { kernel, sv_x, coef: coef.iter().map(|c| -c).collect(), cols }
+        };
+        let mc = MulticlassPlan::compile(&[m0, m1]);
+        let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let mut serial = vec![0.0; 2 * refs.len()];
+        let mut par = vec![0.0; 2 * refs.len()];
+        mc.score_block(&refs, &mut serial);
+        mc.score_block_parallel(&refs, 4, &mut par);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a, b, "parallel class scoring must be bitwise identical");
+        }
+        let from_rows = mc.score_rows(Rows::Dense(&ds), 4);
+        assert_eq!(from_rows, par);
     }
 }

@@ -1,8 +1,12 @@
 //! LRU cache of signed Gram rows — the classic kernel-solver cache
 //! (LIBSVM's `Cache`): DCD revisits the same coordinates across sweeps, so
-//! row reuse is what makes kernel DCD tractable.
+//! row reuse is what makes kernel DCD tractable. [`SharedGramCache`] is its
+//! thread-safe sibling storing *unsigned* rows, shared across the K
+//! one-vs-rest class solves of multiclass training.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::data::DataView;
 use crate::kernel::{dot_rr, signed_row, sq_norm_rr, KernelKind};
@@ -186,6 +190,146 @@ impl RowCache {
     }
 }
 
+/// Thread-safe LRU cache of *unsigned* Gram rows `k(x_i, ·)` over one view.
+///
+/// The kernel matrix is label-independent, so the K one-vs-rest class
+/// solves of [`crate::multiclass::train_ovr`] can share every row and apply
+/// their own binarized ±1 signs at use time — an exact transformation
+/// (multiplying an f32/f64 by ±1.0 is lossless), so shared-cache solves are
+/// bit-identical to per-class-cache solves at equal sweep order.
+///
+/// Rows are handed out as `Arc<[f32]>` clones, so readers never hold the
+/// map lock while scoring; row computation happens outside the lock (a
+/// concurrent duplicate compute keeps the incumbent entry, so the map never
+/// holds two copies of one row).
+pub struct SharedGramCache {
+    state: Mutex<SharedState>,
+    /// ‖x_j‖² per view row (RBF fast path), computed at construction.
+    sq_norms: Vec<f32>,
+    row_len: usize,
+    capacity_rows: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+struct SharedState {
+    rows: HashMap<usize, SharedEntry>,
+    stamp: u64,
+}
+
+struct SharedEntry {
+    last_used: u64,
+    data: Arc<[f32]>,
+}
+
+impl SharedGramCache {
+    /// Cache sized for `budget_bytes` of f32 rows over `view` (min 2 rows).
+    /// The view fixes the row set and (for RBF) the precomputed norms; every
+    /// later [`SharedGramCache::get`] must pass a view over the same rows
+    /// (label overrides may differ — rows here are unsigned).
+    pub fn new(view: &DataView, kernel: &KernelKind, budget_bytes: usize) -> Self {
+        let row_len = view.len();
+        let capacity_rows = (budget_bytes / (row_len.max(1) * 4)).max(2);
+        let sq_norms = if matches!(kernel, KernelKind::Rbf { .. }) {
+            (0..row_len).map(|j| sq_norm_rr(view.row_ref(j))).collect()
+        } else {
+            Vec::new()
+        };
+        Self {
+            state: Mutex::new(SharedState { rows: HashMap::new(), stamp: 0 }),
+            sq_norms,
+            row_len,
+            capacity_rows,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Unsigned row `i` (`out[j] = k(x_i, x_j)`), computing it on a miss.
+    pub fn get(&self, view: &DataView, kernel: &KernelKind, i: usize) -> Arc<[f32]> {
+        debug_assert_eq!(view.len(), self.row_len);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.stamp += 1;
+            let stamp = st.stamp;
+            if let Some(e) = st.rows.get_mut(&i) {
+                e.last_used = stamp;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&e.data);
+            }
+        }
+        // Compute outside the lock so concurrent class solves overlap their
+        // kernel evaluations instead of serializing on the map.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut row = vec![0.0f32; self.row_len];
+        self.compute_unsigned_row(view, kernel, i, &mut row);
+        let data: Arc<[f32]> = row.into();
+        let mut st = self.state.lock().unwrap();
+        st.stamp += 1;
+        let stamp = st.stamp;
+        if let Some(e) = st.rows.get_mut(&i) {
+            // Lost a compute race: keep the incumbent (identical bytes).
+            e.last_used = stamp;
+            return Arc::clone(&e.data);
+        }
+        if st.rows.len() >= self.capacity_rows {
+            if let Some((&victim, _)) = st.rows.iter().min_by_key(|(_, e)| e.last_used) {
+                st.rows.remove(&victim);
+            }
+        }
+        st.rows.insert(i, SharedEntry { last_used: stamp, data: Arc::clone(&data) });
+        data
+    }
+
+    /// Same per-entry kernel math as [`RowCache`]'s norms fast path, minus
+    /// the `y_i y_j` signs (labels are per-class; rows here are shared).
+    fn compute_unsigned_row(
+        &self,
+        view: &DataView,
+        kernel: &KernelKind,
+        i: usize,
+        out: &mut [f32],
+    ) {
+        let xi = view.row_ref(i);
+        match kernel {
+            KernelKind::Rbf { gamma } if !self.sq_norms.is_empty() => {
+                let ni = self.sq_norms[i];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let d = (ni + self.sq_norms[j] - 2.0 * dot_rr(xi, view.row_ref(j))).max(0.0);
+                    *o = (-gamma * d).exp();
+                }
+            }
+            _ => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = kernel.eval_rr(xi, view.row_ref(j));
+                }
+            }
+        }
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Cache hit rate in [0,1]; 0 when unused.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        let t = h + m;
+        if t == 0 { 0.0 } else { h as f64 / t as f64 }
+    }
+
+    /// Rows currently cached.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().rows.len()
+    }
+
+    /// True when no rows are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,5 +474,58 @@ mod tests {
         let n = c.prefetch(&v, &k, &[0, 1, 2, 3, 4], 2);
         assert_eq!(n, 2, "bulk compute capped at capacity");
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn shared_cache_rows_are_unsigned_signed_rows() {
+        // signed row = y_i * y_j * unsigned row, exactly (±1 products are
+        // lossless) — the invariant one-vs-rest class solves rely on.
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 0.6 };
+        let shared = SharedGramCache::new(&v, &k, 1 << 20);
+        let mut signed = RowCache::new(1 << 20, v.len());
+        for i in [0usize, 3, 5] {
+            let unsigned = shared.get(&v, &k, i);
+            let want = signed.get(&v, &k, i);
+            for (j, (u, w)) in unsigned.iter().zip(want.iter()).enumerate() {
+                assert_eq!(v.label(i) * v.label(j) * u, *w, "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_cache_accounting_and_eviction() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Linear;
+        let shared = SharedGramCache::new(&v, &k, 2 * v.len() * 4); // 2 rows
+        assert!(shared.is_empty());
+        shared.get(&v, &k, 0);
+        shared.get(&v, &k, 0);
+        assert_eq!(shared.stats(), (1, 1));
+        shared.get(&v, &k, 1);
+        shared.get(&v, &k, 2); // evicts the LRU (row 0)
+        assert_eq!(shared.len(), 2);
+        shared.get(&v, &k, 2);
+        assert_eq!(shared.stats().0, 2);
+    }
+
+    #[test]
+    fn shared_cache_concurrent_readers_agree() {
+        let (d, idx) = fixture();
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.1 };
+        let shared = SharedGramCache::new(&v, &k, 1 << 20);
+        let rows: Vec<Vec<f32>> = crate::util::pool::parallel_map(4, 4, |t| {
+            // every thread requests the same row; racing computes must all
+            // observe identical bytes
+            let _ = t;
+            shared.get(&v, &k, 4).to_vec()
+        });
+        for r in &rows[1..] {
+            assert_eq!(r, &rows[0]);
+        }
+        assert_eq!(shared.len(), 1, "racing computes keep one incumbent entry");
     }
 }

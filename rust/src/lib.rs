@@ -76,6 +76,18 @@
 //! Every solver reads rows through [`data::RowRef`]/[`data::Rows`], so the
 //! kernel evaluations, the DCD solvers, the SVRG family (with lazy O(nnz)
 //! steps), and the serving path run on either backing without copies.
+//!
+//! ## Multiclass (one-vs-rest)
+//!
+//! K-class problems train through [`multiclass::train_ovr`]: K binarized
+//! label-override views over the *shared* feature rows (zero copies),
+//! solved in parallel on the pool workers against one unsigned
+//! [`kernel::cache::SharedGramCache`] — the kernel matrix is
+//! label-independent, so all classes amortize every Gram row. The
+//! resulting [`multiclass::MulticlassModel`] compiles K scoring plans
+//! ([`infer::MulticlassPlan`]), round-trips through JSON, and serves via
+//! [`serve::serve_multiclass`] (`score_multiclass` requests return argmax
+//! plus per-class margins, sharded across the scorer workers).
 
 pub mod baselines;
 pub mod cluster;
@@ -83,6 +95,7 @@ pub mod data;
 pub mod exp;
 pub mod infer;
 pub mod kernel;
+pub mod multiclass;
 pub mod odm;
 pub mod partition;
 pub mod qp;

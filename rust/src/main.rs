@@ -84,13 +84,21 @@ USAGE: sodm <command> [--flag value]...
              (--no-shrink disables DCD active-set shrinking — the reference
               solver; --ordered-every k makes every k-th sweep visit
               coordinates in descending violation order)
+             [--multiclass]: one-vs-rest over a multiclass libsvm file (one
+              label per row; distinct labels become classes) or
+              mc-synth:classes:rows:cols; K class solves in parallel with a
+              shared Gram cache (--no-shared-cache for private caches)
   predict    --model m.json --data <...> [--backend native|xla]
-  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse | --serve)
+  experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse | --serve
+              | --multiclass)
              [--scale 0.05] [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
              (--sparse: CSR scaling benchmark, [--rows 10000] [--cols 100000]
               [--density 0.001]; writes results/sparse_bench.json)
              (--serve: sharded serving benchmark, [--shards N]; writes
               results/serve_bench.json)
+             (--multiclass: OVR shared-vs-private Gram-cache benchmark,
+              [--classes 4] [--quick] [--json copy.json]; writes
+              results/multiclass_bench.json)
   serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
              [--workers N] [--shards N] [--json out.json]
              (--quick: self-contained dense + sparse RBF smoke, no --model/--data)
@@ -227,10 +235,84 @@ fn parse_params(flags: &HashMap<String, String>) -> Result<OdmParams> {
     .validated())
 }
 
+/// `--data` for `train --multiclass`: `mc-synth:classes:rows:cols` or a
+/// multiclass libsvm file (one label per row; distinct raw labels become
+/// classes). Shape errors come back as CLI errors, not library panics.
+fn load_multiclass_data(spec: &str, seed: u64) -> Result<sodm::multiclass::MulticlassDataset> {
+    if let Some(rest) = spec.strip_prefix("mc-synth:") {
+        let mut parts = rest.split(':');
+        let classes: usize = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(4);
+        let rows: usize = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(2_000);
+        let cols: usize = parts.next().map(|s| s.parse()).transpose()?.unwrap_or(classes.max(8));
+        sodm::ensure!(classes >= 2, "mc-synth needs >= 2 classes, got {classes}");
+        sodm::ensure!(rows >= 2, "mc-synth needs >= 2 rows, got {rows}");
+        sodm::ensure!(
+            cols >= classes,
+            "mc-synth needs cols >= classes ({cols} cols for {classes} classes)"
+        );
+        Ok(sodm::multiclass::MulticlassSynthSpec::new(classes, rows, cols, seed).generate())
+    } else {
+        sodm::multiclass::read_libsvm_multiclass(spec, 0)
+    }
+}
+
+/// `train --multiclass`: one-vs-rest over K classes, class solves fanned
+/// out on the pool workers against a shared Gram-row cache.
+fn cmd_train_multiclass(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::multiclass::{train_ovr, OvrConfig};
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
+    let ds = load_multiclass_data(data_spec, seed)?;
+    let (train, test) = ds.split(0.8, seed);
+    let kernel = parse_kernel(flags, train.cols())?;
+    let params = parse_params(flags)?;
+    let workers = flag_usize(flags, "workers", num_cpus())?;
+    let budget = SolveBudget {
+        shrink: !flags.contains_key("no-shrink"),
+        ordered_every: flag_usize(flags, "ordered-every", 0)?,
+        ..SolveBudget::default()
+    };
+    let cfg = OvrConfig {
+        budget,
+        workers,
+        share_cache: !flags.contains_key("no-shared-cache"),
+        ..OvrConfig::default()
+    };
+    let run = train_ovr(&train, &kernel, &params, &cfg);
+    let acc_train = run.model.accuracy(&train, workers);
+    let acc_test = run.model.accuracy(&test, workers);
+    println!(
+        "multiclass ovr kernel={kernel:?} classes={} rows={} time={:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} cache_hit_rate={:.2}",
+        train.n_classes(),
+        train.rows(),
+        run.seconds,
+        run.model.support_size(),
+        run.cache_hit_rate,
+    );
+    for (k, s) in run.stats.iter().enumerate() {
+        println!(
+            "  class {k} (label {}): sweeps={} updates={} converged={} sv={}",
+            run.model.class_labels[k],
+            s.sweeps,
+            s.updates,
+            s.converged,
+            run.model.models[k].support_size(),
+        );
+    }
+    if let Some(out) = flag(flags, "model-out") {
+        run.model.save(out)?;
+        println!("model saved to {out}");
+    }
+    Ok(())
+}
+
 /// One training path for both backings: the solvers are `Rows`-generic, so
 /// only the dense-only baselines branch on the backing (and bail with a
 /// clear message on CSR data).
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("multiclass") {
+        return cmd_train_multiclass(flags);
+    }
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let loaded = load_data(data_spec, seed)?;
@@ -489,6 +571,21 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("wrote {}", path.display());
         return Ok(());
     }
+    if flags.contains_key("multiclass") {
+        let classes = flag_usize(flags, "classes", 4)?;
+        let quick = flags.contains_key("quick");
+        let (json, out) = sodm::exp::run_multiclass_benchmark(classes, cfg.workers, quick)?;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("multiclass_bench.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("{out}");
+        println!("wrote {}", path.display());
+        if let Some(extra) = flag(flags, "json") {
+            std::fs::write(extra, json.to_string())?;
+            println!("wrote JSON summary to {extra}");
+        }
+        return Ok(());
+    }
     if let Some(f) = flag(flags, "figure") {
         let out = match f {
             "1" => figure1(&cfg)?,
@@ -508,7 +605,9 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("{out}");
         return Ok(());
     }
-    sodm::bail!("experiment needs --table N, --figure N, --ablation, --sparse, or --serve")
+    sodm::bail!(
+        "experiment needs --table N, --figure N, --ablation, --sparse, --serve, or --multiclass"
+    )
 }
 
 /// Serve a model under synthetic concurrent load and report latency/

@@ -1,0 +1,558 @@
+//! Multiclass ODM — one-vs-rest (OVR) training, models, and data on top of
+//! the binary stack.
+//!
+//! The paper's formulation is binary, but its largest corpora (rcv1,
+//! news20) are natively multiclass and every serving workload the ROADMAP
+//! targets is dominated by multiclass problems. This module decomposes a
+//! K-class problem into K binary class-vs-rest ODMs and reuses every
+//! existing subsystem:
+//!
+//! * **Data** — [`MulticlassDataset`] wraps either backing
+//!   ([`crate::data::Dataset`] dense / [`crate::data::sparse::SparseDataset`]
+//!   CSR) plus per-row class ids. Binarization is *free*: each class trains
+//!   on a [`DataView::with_labels`] view that overrides labels on the shared
+//!   rows — K class views, zero feature copies.
+//! * **Training** — [`train_ovr`] fans the K class solves out on the
+//!   [`crate::util::pool`] workers. The kernel matrix is label-independent,
+//!   so all classes read one [`SharedGramCache`] of unsigned Gram rows and
+//!   apply their own ±1 signs at use time (exact, so shared-cache solves are
+//!   bit-identical to per-class-cache solves — see `rust/tests/multiclass.rs`
+//!   and the OVR section of the hotpath bench for the measured speedup).
+//! * **Inference** — [`MulticlassModel`] compiles one
+//!   [`crate::infer::ScoringPlan`] per class into a
+//!   [`crate::infer::MulticlassPlan`] (block class-major scores, argmax
+//!   predictions), serializes through [`crate::util::json`], and serves
+//!   through [`crate::serve::serve_multiclass`] (`score_multiclass`
+//!   requests, one shard job per class-shard on the scorer workers).
+
+use std::time::Instant;
+
+use crate::data::libsvm::{auto_backing, LoadedDataset};
+use crate::data::sparse::SparseDataset;
+use crate::data::{identity_indices, DataView, Dataset, Rows};
+use crate::kernel::cache::SharedGramCache;
+use crate::kernel::KernelKind;
+use crate::odm::{OdmModel, OdmParams};
+use crate::qp::{solve_odm_dual, solve_odm_dual_shared, SolveBudget, SolveStats};
+use crate::util::json::{jarr_f64, jstr, Json};
+use crate::util::rng::Pcg32;
+
+/// A K-class labelled dataset over either feature backing. The backing's
+/// binary `y` is a `+1` placeholder — class identity lives in `class_ids`,
+/// and training reads labels through per-class binarized views.
+pub struct MulticlassDataset {
+    /// Feature backing (dense or CSR), `y` = `+1` placeholder.
+    pub data: LoadedDataset,
+    /// Per-row class index into `class_labels`.
+    pub class_ids: Vec<usize>,
+    /// Distinct raw labels in ascending order; `class_labels[k]` is the raw
+    /// label predictions for class `k` map back to.
+    pub class_labels: Vec<f64>,
+}
+
+impl MulticlassDataset {
+    /// Assemble from parts, validating the class-id invariants.
+    pub fn new(data: LoadedDataset, class_ids: Vec<usize>, class_labels: Vec<f64>) -> Self {
+        assert_eq!(class_ids.len(), data.rows(), "one class id per row");
+        let k = class_labels.len();
+        assert!(class_ids.iter().all(|&c| c < k), "class id out of range");
+        Self { data, class_ids, class_labels }
+    }
+
+    /// Dense constructor (row-major `x`, one class id per row).
+    pub fn from_dense(
+        name: impl Into<String>,
+        x: Vec<f32>,
+        cols: usize,
+        class_ids: Vec<usize>,
+        class_labels: Vec<f64>,
+    ) -> Self {
+        let y = vec![1.0f32; class_ids.len()];
+        Self::new(LoadedDataset::Dense(Dataset::new(name, x, y, cols)), class_ids, class_labels)
+    }
+
+    /// Number of instances.
+    pub fn rows(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// Feature dimensionality.
+    pub fn cols(&self) -> usize {
+        self.data.cols()
+    }
+
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.class_labels.len()
+    }
+
+    /// Dataset name.
+    pub fn name(&self) -> &str {
+        self.data.name()
+    }
+
+    /// Borrow the feature rows (either backing).
+    pub fn as_rows(&self) -> Rows<'_> {
+        self.data.as_rows()
+    }
+
+    /// ±1 labels of the class-`k`-vs-rest binarization. One small vector per
+    /// class — the feature rows themselves are shared through
+    /// [`DataView::with_labels`] views, never copied.
+    pub fn binary_labels(&self, k: usize) -> Vec<f32> {
+        assert!(k < self.n_classes(), "class {k} out of range");
+        self.class_ids.iter().map(|&c| if c == k { 1.0 } else { -1.0 }).collect()
+    }
+
+    /// Instances per class.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes()];
+        for &c in &self.class_ids {
+            counts[c] += 1;
+        }
+        counts
+    }
+
+    /// Copy out the subset of rows given by `idx` (both backing and ids).
+    pub fn subset(&self, idx: &[usize]) -> Self {
+        let data = match &self.data {
+            LoadedDataset::Dense(d) => LoadedDataset::Dense(d.subset(idx)),
+            LoadedDataset::Sparse(s) => LoadedDataset::Sparse(s.subset(idx)),
+        };
+        let class_ids = idx.iter().map(|&i| self.class_ids[i]).collect();
+        Self { data, class_ids, class_labels: self.class_labels.clone() }
+    }
+
+    /// Deterministic shuffled train/test split; `train_frac` in (0,1].
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Self, Self) {
+        assert!(self.rows() > 1, "cannot split dataset with <2 rows");
+        let mut idx: Vec<usize> = (0..self.rows()).collect();
+        let mut rng = Pcg32::seeded(seed);
+        rng.shuffle(&mut idx);
+        let ntr = ((self.rows() as f64 * train_frac).round() as usize).clamp(1, self.rows() - 1);
+        (self.subset(&idx[..ntr]), self.subset(&idx[ntr..]))
+    }
+
+    /// CSR twin of this dataset (dense/CSR agreement fixtures).
+    pub fn to_sparse(&self) -> Self {
+        let data = match &self.data {
+            LoadedDataset::Dense(d) => LoadedDataset::Sparse(SparseDataset::from_dense(d)),
+            LoadedDataset::Sparse(s) => LoadedDataset::Sparse(s.clone()),
+        };
+        Self { data, class_ids: self.class_ids.clone(), class_labels: self.class_labels.clone() }
+    }
+}
+
+/// Parse a multiclass LIBSVM file (one raw label per row — not the
+/// comma-separated multilabel convention): distinct labels (ascending)
+/// become classes 0..K. The backing store follows the same density
+/// auto-detection as [`crate::data::libsvm::read_libsvm_auto`].
+pub fn read_libsvm_multiclass(
+    path: impl AsRef<std::path::Path>,
+    cols: usize,
+) -> crate::Result<MulticlassDataset> {
+    let (sp, raw) = crate::data::libsvm::read_libsvm_sparse_raw(path, cols)?;
+    let mut labels: Vec<f64> = raw.iter().map(|v| *v as f64).collect();
+    labels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    labels.dedup();
+    crate::ensure!(labels.len() >= 2, "multiclass data needs >= 2 distinct labels");
+    let class_ids: Vec<usize> = raw
+        .iter()
+        .map(|v| labels.binary_search_by(|l| l.partial_cmp(&(*v as f64)).unwrap()).unwrap())
+        .collect();
+    Ok(MulticlassDataset::new(auto_backing(sp), class_ids, labels))
+}
+
+/// K-class Gaussian-blob generator: class `k`'s center sits at `sep·noise`
+/// along coordinate `k` (pairwise center distance `sep·noise·√2`), so the
+/// data is cleanly learnable by both linear and RBF OVR at any `cols ≥
+/// classes`. Deterministic in `seed`.
+#[derive(Clone, Debug)]
+pub struct MulticlassSynthSpec {
+    pub name: String,
+    pub classes: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Center separation along each class's signature coordinate, in units
+    /// of `noise`.
+    pub sep: f32,
+    /// Per-coordinate Gaussian noise std.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl MulticlassSynthSpec {
+    /// Spec with well-separated defaults (`sep` 8σ).
+    pub fn new(classes: usize, rows: usize, cols: usize, seed: u64) -> Self {
+        assert!(classes >= 2, "multiclass needs >= 2 classes");
+        assert!(cols >= classes, "need cols >= classes for the signature coordinates");
+        Self {
+            name: format!("mc-synth-{classes}x{rows}x{cols}"),
+            classes,
+            rows,
+            cols,
+            sep: 8.0,
+            noise: 1.0,
+            seed,
+        }
+    }
+
+    /// Draw the dataset (dense backing).
+    pub fn generate(&self) -> MulticlassDataset {
+        assert!(self.rows > 0, "empty multiclass spec");
+        let mut rng = Pcg32::seeded(self.seed ^ 0x3C1A55);
+        let mut x = Vec::with_capacity(self.rows * self.cols);
+        let mut ids = Vec::with_capacity(self.rows);
+        for _ in 0..self.rows {
+            let c = rng.gen_range(self.classes);
+            for j in 0..self.cols {
+                let center = if j == c { self.sep * self.noise } else { 0.0 };
+                x.push(center + rng.standard_normal() * self.noise);
+            }
+            ids.push(c);
+        }
+        let class_labels: Vec<f64> = (0..self.classes).map(|k| k as f64).collect();
+        MulticlassDataset::from_dense(self.name.clone(), x, self.cols, ids, class_labels)
+    }
+}
+
+/// One-vs-rest training configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct OvrConfig {
+    /// Budget per class solve (the seed is XORed with the class index so
+    /// class sweeps decorrelate, mirroring the SODM partition solves).
+    pub budget: SolveBudget,
+    /// Pool workers the class solves fan out on.
+    pub workers: usize,
+    /// Share one unsigned Gram-row cache across the class solves (kernel
+    /// path; the measured-faster default). `false` gives every class its own
+    /// signed-row cache — the baseline the hotpath bench compares against.
+    pub share_cache: bool,
+    /// Shared-cache budget in bytes.
+    pub cache_bytes: usize,
+}
+
+impl Default for OvrConfig {
+    fn default() -> Self {
+        Self {
+            budget: SolveBudget::default(),
+            workers: crate::util::pool::num_cpus(),
+            share_cache: true,
+            cache_bytes: 256 << 20,
+        }
+    }
+}
+
+/// Result of a one-vs-rest training run.
+pub struct OvrRun {
+    pub model: MulticlassModel,
+    /// Per-class solver telemetry, parallel to the model's classes.
+    pub stats: Vec<SolveStats>,
+    /// Wall-clock seconds of the parallel class solves.
+    pub seconds: f64,
+    /// Shared Gram-cache hit rate across the class solves (0 when each
+    /// class owns its cache or the kernel is linear).
+    pub cache_hit_rate: f64,
+}
+
+/// Train K one-vs-rest binary ODMs in parallel on the pool workers.
+///
+/// Each class solves the exact ODM dual on a binarized label-override view
+/// of the *shared* feature rows. Kernel solves read unsigned Gram rows from
+/// one [`SharedGramCache`] (label-independent, so K problems amortize every
+/// row — a real speedup over per-class caches, not just a parallel loop);
+/// linear solves maintain `w` directly and need no cache.
+pub fn train_ovr(
+    ds: &MulticlassDataset,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    cfg: &OvrConfig,
+) -> OvrRun {
+    let rows = ds.as_rows();
+    let k = ds.n_classes();
+    assert!(k >= 2, "one-vs-rest needs >= 2 classes");
+    assert!(rows.rows() > 0, "cannot train on an empty dataset");
+    let idx = identity_indices(rows.rows());
+    let label_sets: Vec<Vec<f32>> = (0..k).map(|c| ds.binary_labels(c)).collect();
+    // Timing starts before the shared cache is built so `seconds` charges
+    // each arm its own norm precompute — the shared-vs-private speedup the
+    // benchmarks report compares equal windows.
+    let t0 = Instant::now();
+    let shared = if cfg.share_cache && !matches!(kernel, KernelKind::Linear) {
+        let base = DataView::from_rows(rows, &idx);
+        Some(SharedGramCache::new(&base, kernel, cfg.cache_bytes))
+    } else {
+        None
+    };
+    let per_class: Vec<(OdmModel, SolveStats)> =
+        crate::util::pool::parallel_map(k, cfg.workers, |c| {
+            let view = DataView::with_labels(rows, &idx, &label_sets[c]);
+            let budget = SolveBudget { seed: cfg.budget.seed ^ ((c as u64) << 3), ..cfg.budget };
+            let sol = match &shared {
+                Some(cache) => solve_odm_dual_shared(&view, kernel, params, None, &budget, cache),
+                None => solve_odm_dual(&view, kernel, params, None, &budget),
+            };
+            (OdmModel::from_dual(&view, kernel, &sol.gamma()), sol.stats)
+        });
+    let seconds = t0.elapsed().as_secs_f64();
+    let cache_hit_rate = shared.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0);
+    let mut models = Vec::with_capacity(k);
+    let mut stats = Vec::with_capacity(k);
+    for (m, s) in per_class {
+        models.push(m);
+        stats.push(s);
+    }
+    OvrRun {
+        model: MulticlassModel { class_labels: ds.class_labels.clone(), models },
+        stats,
+        seconds,
+        cache_hit_rate,
+    }
+}
+
+/// A trained one-vs-rest multiclass classifier: one binary [`OdmModel`] per
+/// class plus the raw label each class maps back to.
+#[derive(Clone, Debug)]
+pub struct MulticlassModel {
+    /// Raw label of each class (ascending, from the training data).
+    pub class_labels: Vec<f64>,
+    /// One binary class-vs-rest model per class, parallel to `class_labels`.
+    pub models: Vec<OdmModel>,
+}
+
+impl MulticlassModel {
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Feature dimensionality the model scores.
+    pub fn input_cols(&self) -> usize {
+        self.models[0].input_cols()
+    }
+
+    /// Total support vectors across classes.
+    pub fn support_size(&self) -> usize {
+        self.models.iter().map(|m| m.support_size()).sum()
+    }
+
+    /// Compile the K per-class scoring plans once (hold the plan for
+    /// repeated scoring — every method below compiles a fresh one).
+    pub fn compile(&self) -> crate::infer::MulticlassPlan {
+        crate::infer::MulticlassPlan::compile(&self.models)
+    }
+
+    /// Predicted class index per row of a dataset of either backing.
+    pub fn predict_argmax<'a>(&self, data: impl Into<Rows<'a>>, workers: usize) -> Vec<usize> {
+        self.compile().predict_rows(data.into(), workers)
+    }
+
+    /// Class-major decision matrix (`n_classes * rows` values) of a dataset
+    /// of either backing.
+    pub fn scores<'a>(&self, data: impl Into<Rows<'a>>, workers: usize) -> Vec<f64> {
+        self.compile().score_rows(data.into(), workers)
+    }
+
+    /// Multiclass accuracy against the dataset's class ids.
+    pub fn accuracy(&self, ds: &MulticlassDataset, workers: usize) -> f64 {
+        if ds.rows() == 0 {
+            return 0.0;
+        }
+        let pred = self.predict_argmax(ds.as_rows(), workers);
+        let right = pred.iter().zip(&ds.class_ids).filter(|(p, c)| p == c).count();
+        right as f64 / ds.rows() as f64
+    }
+
+    /// Serialize to JSON (nested per-class [`OdmModel::to_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", jstr("multiclass_ovr")),
+            ("class_labels", jarr_f64(&self.class_labels)),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+
+    /// Parse from the JSON produced by [`MulticlassModel::to_json`].
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let kind = j.req("kind")?.as_str()?;
+        crate::ensure!(kind == "multiclass_ovr", "unknown multiclass model kind {kind:?}");
+        let class_labels = j.req("class_labels")?.as_f64_vec()?;
+        let models = j
+            .req("models")?
+            .as_arr()?
+            .iter()
+            .map(OdmModel::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        crate::ensure!(!models.is_empty(), "multiclass model needs >= 1 class");
+        crate::ensure!(models.len() == class_labels.len(), "class_labels/models mismatch");
+        let cols = models[0].input_cols();
+        for (c, m) in models.iter().enumerate() {
+            crate::ensure!(
+                m.input_cols() == cols,
+                "class {c} scores {} features but class 0 scores {cols}",
+                m.input_cols()
+            );
+        }
+        Ok(Self { class_labels, models })
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn four_class(rows: usize, seed: u64) -> MulticlassDataset {
+        MulticlassSynthSpec::new(4, rows, 6, seed).generate()
+    }
+
+    #[test]
+    fn synth_shapes_labels_and_determinism() {
+        let a = four_class(200, 3);
+        assert_eq!(a.rows(), 200);
+        assert_eq!(a.cols(), 6);
+        assert_eq!(a.n_classes(), 4);
+        assert_eq!(a.class_counts().iter().sum::<usize>(), 200);
+        assert!(a.class_counts().iter().all(|&c| c > 0), "all classes present");
+        let b = four_class(200, 3);
+        let (LoadedDataset::Dense(da), LoadedDataset::Dense(db)) = (&a.data, &b.data) else {
+            panic!("synth backing is dense")
+        };
+        assert_eq!(da.x, db.x);
+        assert_eq!(a.class_ids, b.class_ids);
+    }
+
+    #[test]
+    fn binary_labels_binarize_one_class() {
+        let ds = four_class(60, 5);
+        for k in 0..4 {
+            let y = ds.binary_labels(k);
+            for (yi, &c) in y.iter().zip(&ds.class_ids) {
+                assert_eq!(*yi, if c == k { 1.0 } else { -1.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn subset_and_split_keep_ids_aligned() {
+        let ds = four_class(120, 7);
+        let (tr, te) = ds.split(0.75, 9);
+        assert_eq!(tr.rows() + te.rows(), 120);
+        assert_eq!(tr.class_ids.len(), tr.rows());
+        let sub = ds.subset(&[5, 0, 17]);
+        assert_eq!(sub.class_ids, vec![ds.class_ids[5], ds.class_ids[0], ds.class_ids[17]]);
+    }
+
+    #[test]
+    fn ovr_shared_and_private_caches_produce_identical_models() {
+        let ds = four_class(150, 11);
+        let kernel = KernelKind::Rbf { gamma: 1.0 / 12.0 };
+        let params = OdmParams::default();
+        let budget = SolveBudget { max_sweeps: 40, ..SolveBudget::default() };
+        let shared =
+            train_ovr(&ds, &kernel, &params, &OvrConfig { budget, ..OvrConfig::default() });
+        let private = train_ovr(
+            &ds,
+            &kernel,
+            &params,
+            &OvrConfig { budget, share_cache: false, ..OvrConfig::default() },
+        );
+        // ±1 sign application on unsigned rows is exact: same models, bitwise
+        assert_eq!(shared.model.to_json().to_string(), private.model.to_json().to_string());
+        assert!(shared.cache_hit_rate > 0.0, "class solves must reuse shared rows");
+        assert_eq!(private.cache_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn ovr_learns_separable_four_class_data() {
+        let ds = four_class(240, 13);
+        let (train, test) = ds.split(0.8, 13);
+        let kernel = KernelKind::Rbf { gamma: 1.0 / 12.0 };
+        let run = train_ovr(&train, &kernel, &OdmParams::default(), &OvrConfig::default());
+        assert_eq!(run.model.n_classes(), 4);
+        assert_eq!(run.stats.len(), 4);
+        let acc = run.model.accuracy(&test, 2);
+        assert!(acc > 0.95, "well-separated blobs should classify cleanly: {acc}");
+    }
+
+    #[test]
+    fn ovr_linear_kernel_trains_without_cache() {
+        let ds = four_class(200, 17);
+        let run = train_ovr(&ds, &KernelKind::Linear, &OdmParams::default(), &OvrConfig::default());
+        assert!(run.model.models.iter().all(|m| matches!(m, OdmModel::Linear { .. })));
+        assert_eq!(run.cache_hit_rate, 0.0, "linear path never touches the Gram cache");
+        assert!(run.model.accuracy(&ds, 2) > 0.95);
+    }
+
+    #[test]
+    fn model_json_round_trips_bit_exact() {
+        let ds = four_class(100, 19);
+        let budget = SolveBudget { max_sweeps: 10, ..Default::default() };
+        let run = train_ovr(
+            &ds,
+            &KernelKind::Rbf { gamma: 0.1 },
+            &OdmParams::default(),
+            &OvrConfig { budget, ..Default::default() },
+        );
+        let dir = crate::util::temp_dir("mc-model");
+        let path = dir.join("mc.json");
+        run.model.save(&path).unwrap();
+        let back = MulticlassModel::load(&path).unwrap();
+        assert_eq!(run.model.to_json().to_string(), back.to_json().to_string());
+        // decisions are bitwise equal, not merely close
+        let a = run.model.scores(ds.as_rows(), 2);
+        let b = back.scores(ds.as_rows(), 2);
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn libsvm_multiclass_reader_maps_distinct_labels() {
+        let dir = crate::util::temp_dir("mc-libsvm");
+        let p = dir.join("mc.txt");
+        std::fs::write(&p, "3 1:1.0\n1 2:1.0\n2 3:1.0\n1 1:0.5 3:0.5\n").unwrap();
+        let ds = read_libsvm_multiclass(&p, 0).unwrap();
+        assert_eq!(ds.n_classes(), 3);
+        assert_eq!(ds.class_labels, vec![1.0, 2.0, 3.0]);
+        assert_eq!(ds.class_ids, vec![2, 0, 1, 0]);
+        assert_eq!(ds.rows(), 4);
+        assert_eq!(ds.cols(), 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn libsvm_multiclass_rejects_single_class_files() {
+        let dir = crate::util::temp_dir("mc-libsvm1");
+        let p = dir.join("one.txt");
+        std::fs::write(&p, "1 1:1.0\n1 2:1.0\n").unwrap();
+        assert!(read_libsvm_multiclass(&p, 0).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn to_sparse_preserves_predictions() {
+        let ds = four_class(120, 23);
+        let budget = SolveBudget { max_sweeps: 15, ..Default::default() };
+        let run = train_ovr(
+            &ds,
+            &KernelKind::Rbf { gamma: 1.0 / 12.0 },
+            &OdmParams::default(),
+            &OvrConfig { budget, ..Default::default() },
+        );
+        let sp = ds.to_sparse();
+        let dense_pred = run.model.predict_argmax(ds.as_rows(), 2);
+        let sparse_pred = run.model.predict_argmax(sp.as_rows(), 2);
+        assert_eq!(dense_pred, sparse_pred);
+    }
+}

@@ -217,12 +217,18 @@ pub fn partitions_valid(view: &DataView, parts: &[Vec<usize>]) -> bool {
 /// difference between the partition's positive-label fraction and the global
 /// one. The paper's strategy should keep this small; DC's clusters will not.
 pub fn label_balance_gap(view: &DataView, parts: &[Vec<usize>]) -> f64 {
+    // Parts hold *global* indices; resolve their labels through the view so
+    // one-vs-rest label-override views report their binarized balance (the
+    // partition strategies themselves are label-free, so override views
+    // compose safely — this diagnostic must not silently read the backing).
+    let labels: std::collections::HashMap<usize, f32> =
+        (0..view.len()).map(|i| (view.idx[i], view.label(i))).collect();
     let global =
         (0..view.len()).filter(|&i| view.label(i) > 0.0).count() as f64 / view.len() as f64;
     parts
         .iter()
         .map(|p| {
-            let pos = p.iter().filter(|&&g| view.data.label(g) > 0.0).count() as f64;
+            let pos = p.iter().filter(|&&g| labels[&g] > 0.0).count() as f64;
             (pos / p.len() as f64 - global).abs()
         })
         .fold(0.0, f64::max)

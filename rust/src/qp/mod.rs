@@ -47,10 +47,28 @@
 //! merges.
 
 use crate::data::{DataView, RowRef};
-use crate::kernel::cache::RowCache;
+use crate::kernel::cache::{RowCache, SharedGramCache};
 use crate::kernel::{dot_rr, KernelKind};
 use crate::odm::OdmParams;
 use crate::util::rng::Pcg32;
+
+/// Where the kernel-path solver reads its Gram rows from: an owned
+/// signed-row LRU (the historical per-solve cache) or a shared unsigned-row
+/// cache reused across one-vs-rest class solves, with the view's binarized
+/// ±1 labels applied at use time (exact — see [`SharedGramCache`]).
+enum GramSource<'a> {
+    Owned(RowCache),
+    Shared(&'a SharedGramCache),
+}
+
+impl GramSource<'_> {
+    fn hit_rate(&self) -> f64 {
+        match self {
+            GramSource::Owned(c) => c.hit_rate(),
+            GramSource::Shared(c) => c.hit_rate(),
+        }
+    }
+}
 
 /// Stopping/budget knobs shared by all DCD solvers.
 #[derive(Clone, Copy, Debug)]
@@ -237,15 +255,52 @@ pub fn solve_odm_dual(
     }
 }
 
-/// Kernel-path ODM DCD v2: maintains `u = Q(ζ-β)` (length m), shrinks the
-/// active set, and batch-prefetches the predicted movers' signed Gram rows
-/// through the LRU cache in parallel before each sweep's serial updates.
+/// [`solve_odm_dual`] reading unsigned Gram rows from a cache shared across
+/// solves over the same feature rows — the one-vs-rest multiclass trainer
+/// runs its K class solves concurrently against one [`SharedGramCache`].
+/// Per-class ±1 labels come from the view (binarized overrides) and are
+/// applied at row-use time, which is exact, so a shared-cache solve is
+/// bit-identical to the same solve with a private cache. Linear kernels
+/// never materialize Q and ignore the cache.
+pub fn solve_odm_dual_shared(
+    view: &DataView,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    warm: Option<&[f64]>,
+    budget: &SolveBudget,
+    shared: &SharedGramCache,
+) -> OdmDualSolution {
+    match kernel {
+        KernelKind::Linear => solve_odm_linear(view, params, warm, budget),
+        _ => solve_odm_kernel_src(view, kernel, params, warm, budget, GramSource::Shared(shared)),
+    }
+}
+
+/// Kernel-path ODM DCD v2 with the historical per-solve signed-row cache.
 fn solve_odm_kernel(
     view: &DataView,
     kernel: &KernelKind,
     params: &OdmParams,
     warm: Option<&[f64]>,
     budget: &SolveBudget,
+) -> OdmDualSolution {
+    let cache = RowCache::new(budget.cache_bytes, view.len());
+    solve_odm_kernel_src(view, kernel, params, warm, budget, GramSource::Owned(cache))
+}
+
+/// Kernel-path ODM DCD v2: maintains `u = Q(ζ-β)` (length m), shrinks the
+/// active set, and batch-prefetches the predicted movers' signed Gram rows
+/// through the LRU cache in parallel before each sweep's serial updates.
+/// With a shared source the rows arrive unsigned and the view's labels are
+/// applied per update (mover prefetch is skipped — the class solves
+/// themselves already run in parallel and fill the shared cache).
+fn solve_odm_kernel_src(
+    view: &DataView,
+    kernel: &KernelKind,
+    params: &OdmParams,
+    warm: Option<&[f64]>,
+    budget: &SolveBudget,
+    mut source: GramSource,
 ) -> OdmDualSolution {
     let m = view.len();
     let (mut zeta, mut beta) = match warm {
@@ -260,7 +315,9 @@ fn solve_odm_kernel(
         .map(|i| kernel.eval_rr(view.row_ref(i), view.row_ref(i)) as f64)
         .collect();
 
-    let mut cache = RowCache::new(budget.cache_bytes, m);
+    // View labels snapshot — the shared-source update applies the signs the
+    // unsigned rows omit (±1 multiplies, exact).
+    let yv: Vec<f32> = (0..m).map(|i| view.label(i)).collect();
     let workers = crate::util::pool::num_cpus();
 
     // u = Q γ. Warm start: one parallel pass over the support of γ.
@@ -297,18 +354,20 @@ fn solve_odm_kernel(
         // parallel. Mispredictions fall back to the serial path in `get`;
         // once the cache is full prefetch can no longer insert, so the
         // prediction pass is skipped entirely.
-        if !cache.is_full() {
-            let mut seen = vec![false; m];
-            let mut wanted: Vec<usize> = Vec::new();
-            for &c in &active {
-                let i = c % m;
-                let (g, _h, a) = odm_coord(c, m, u[i], &zeta, &beta, &qdiag, mc, ups, theta);
-                if pg_violation(g, a) >= skip && !seen[i] {
-                    seen[i] = true;
-                    wanted.push(i);
+        if let GramSource::Owned(cache) = &mut source {
+            if !cache.is_full() {
+                let mut seen = vec![false; m];
+                let mut wanted: Vec<usize> = Vec::new();
+                for &c in &active {
+                    let i = c % m;
+                    let (g, _h, a) = odm_coord(c, m, u[i], &zeta, &beta, &qdiag, mc, ups, theta);
+                    if pg_violation(g, a) >= skip && !seen[i] {
+                        seen[i] = true;
+                        wanted.push(i);
+                    }
                 }
+                cache.prefetch(view, kernel, &wanted, workers);
             }
-            cache.prefetch(view, kernel, &wanted, workers);
         }
 
         let thresh = if budget.shrink { mbar.max(budget.eps) } else { f64::INFINITY };
@@ -338,9 +397,20 @@ fn solve_odm_kernel(
             } else {
                 beta[i] = new_a;
             }
-            let row = cache.get(view, kernel, i);
-            for (uj, qj) in u.iter_mut().zip(row.iter()) {
-                *uj += dgamma * *qj as f64;
+            match &mut source {
+                GramSource::Owned(cache) => {
+                    let row = cache.get(view, kernel, i);
+                    for (uj, qj) in u.iter_mut().zip(row.iter()) {
+                        *uj += dgamma * *qj as f64;
+                    }
+                }
+                GramSource::Shared(shared) => {
+                    let row = shared.get(view, kernel, i);
+                    let s = dgamma * yv[i] as f64;
+                    for ((uj, qj), yj) in u.iter_mut().zip(row.iter()).zip(yv.iter()) {
+                        *uj += s * (*yj * *qj) as f64;
+                    }
+                }
             }
         }
         stats.sweeps = sweep + 1;
@@ -374,7 +444,7 @@ fn solve_odm_kernel(
         stats.max_violation =
             odm_full_violation(m, |i| u[i], &zeta, &beta, &qdiag, mc, ups, theta);
     }
-    stats.cache_hit_rate = cache.hit_rate();
+    stats.cache_hit_rate = source.hit_rate();
     stats.shrink_ratio =
         if budget.shrink { shrink_ratio(visited, stats.sweeps, 2 * m) } else { 0.0 };
     stats.objective = objective_from_u(&zeta, &beta, &u, mc, ups, theta);
@@ -945,6 +1015,50 @@ mod tests {
         let obj = 0.5 * a.gamma.iter().zip(&u).map(|(g, ui)| g * ui).sum::<f64>()
             - a.gamma.iter().sum::<f64>();
         assert!((obj - a.stats.objective).abs() < 1e-6 * (1.0 + obj.abs()));
+    }
+
+    #[test]
+    fn shared_cache_solve_is_bit_identical_to_private_cache_solve() {
+        // Unsigned shared rows + per-use ±1 signs are an exact refactoring
+        // of the signed private rows, so the whole DCD trajectory must
+        // match bitwise at equal seeds.
+        let d = small();
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let p = params();
+        let budget = SolveBudget::default();
+        let own = solve_odm_dual(&v, &k, &p, None, &budget);
+        let shared = SharedGramCache::new(&v, &k, budget.cache_bytes);
+        let sh = solve_odm_dual_shared(&v, &k, &p, None, &budget, &shared);
+        assert_eq!(own.zeta, sh.zeta);
+        assert_eq!(own.beta, sh.beta);
+        assert_eq!(own.stats.sweeps, sh.stats.sweeps);
+        assert_eq!(own.stats.updates, sh.stats.updates);
+        assert!(shared.stats().1 > 0, "shared cache must have computed rows");
+    }
+
+    #[test]
+    fn shared_cache_solve_respects_label_overrides() {
+        // Two binarizations of the same rows share one cache; each solve
+        // must match its own from-scratch reference exactly.
+        let d = small();
+        let idx = all_indices(&d);
+        let k = KernelKind::Rbf { gamma: 0.9 };
+        let p = params();
+        let budget = SolveBudget::default();
+        let flipped: Vec<f32> = d.y.iter().map(|y| -y).collect();
+        let base = DataView::new(&d, &idx);
+        let shared = SharedGramCache::new(&base, &k, budget.cache_bytes);
+        for labels in [d.y.clone(), flipped] {
+            let view = DataView::with_labels(crate::data::Rows::Dense(&d), &idx, &labels);
+            let sh = solve_odm_dual_shared(&view, &k, &p, None, &budget, &shared);
+            let own = solve_odm_dual(&view, &k, &p, None, &budget);
+            assert_eq!(own.zeta, sh.zeta);
+            assert_eq!(own.beta, sh.beta);
+        }
+        let (hits, _) = shared.stats();
+        assert!(hits > 0, "the second class solve must reuse cached rows");
     }
 
     #[test]

@@ -32,6 +32,14 @@
 //! batch against a large expansion dominates latency; replication wins for
 //! small models under high request concurrency.
 //!
+//! Multiclass serving ([`serve_multiclass`]) runs the same runtime over one
+//! sharded plan per one-vs-rest class: each batch fans out as one shard job
+//! per `(class, shard)` pair, partial sums land in a class-major
+//! accumulator, and the last worker reduces it to argmax + per-class
+//! margins ([`MultiScore`]) via the shared [`crate::infer::argmax_class`]
+//! rule — so serving agrees with offline
+//! [`crate::infer::MulticlassPlan`] predictions by construction.
+//!
 //! Shutdown is sender-driven: [`ServerHandle::stop`] drops the request
 //! sender, the batcher drains the queue and exits on `Disconnected` (no
 //! poll timeout), closes the scorer job queue, joins its workers, and
@@ -45,6 +53,7 @@ use std::time::{Duration, Instant};
 use crate::data::RowRef;
 use crate::infer::ShardedPlan;
 use crate::kernel::KernelKind;
+use crate::multiclass::MulticlassModel;
 use crate::odm::OdmModel;
 use crate::runtime::XlaEngine;
 use crate::util::pool::WorkQueue;
@@ -137,10 +146,28 @@ impl ServeConfig {
     }
 }
 
-/// One scoring request: feature row in, decision value out.
+/// One multiclass decision: the winning class index plus every class's
+/// one-vs-rest margin. Ties take the lowest class index, matching
+/// [`crate::infer::argmax_class`].
+#[derive(Clone, Debug)]
+pub struct MultiScore {
+    /// Predicted class index (into the model's `class_labels`).
+    pub argmax: usize,
+    /// Per-class one-vs-rest decision values, length `n_classes`.
+    pub scores: Vec<f64>,
+}
+
+/// What a server sends back: a binary decision value or a multiclass
+/// argmax + margins.
+enum Reply {
+    Score(f64),
+    Multi(MultiScore),
+}
+
+/// One scoring request: feature row in, reply out.
 struct Request {
     x: RowOwned,
-    reply: SyncSender<f64>,
+    reply: SyncSender<Reply>,
     enqueued: Instant,
 }
 
@@ -175,7 +202,9 @@ pub struct LatencyHistogram {
 }
 
 impl LatencyHistogram {
-    fn new() -> Self {
+    /// Fresh, empty histogram (metrics embed one; tests and benches build
+    /// their own).
+    pub fn new() -> Self {
         LatencyHistogram { buckets: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect() }
     }
 
@@ -191,8 +220,9 @@ impl LatencyHistogram {
     }
 
     /// The `p`-th percentile (`0 < p <= 100`) in milliseconds: the upper
-    /// bound of the bucket where the cumulative count crosses `p`%. Returns
-    /// 0 with no samples.
+    /// bound of the bucket where the cumulative count crosses `p`%.
+    /// Bucketing contract: the reported value is always >= the exact sample
+    /// percentile and <= 2x it (log2 buckets). Returns 0 with no samples.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -207,6 +237,12 @@ impl LatencyHistogram {
             }
         }
         (1u64 << LAT_BUCKETS) as f64 / 1e3
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -268,30 +304,71 @@ impl ServeMetrics {
     }
 }
 
+/// The compiled plans the scorer workers execute: one sharded binary plan,
+/// or one sharded plan per one-vs-rest class.
+enum PlanSet {
+    Binary(ShardedPlan),
+    Multi(Vec<ShardedPlan>),
+}
+
+impl PlanSet {
+    /// Accumulator classes (binary servers reduce one class).
+    fn classes(&self) -> usize {
+        match self {
+            PlanSet::Binary(_) => 1,
+            PlanSet::Multi(ps) => ps.len(),
+        }
+    }
+
+    /// Shard jobs one batch fans out into.
+    fn total_jobs(&self) -> usize {
+        match self {
+            PlanSet::Binary(p) => p.num_shards(),
+            PlanSet::Multi(ps) => ps.iter().map(|p| p.num_shards()).sum(),
+        }
+    }
+}
+
 /// One batch shared between the shard scorer workers: request rows, reply
-/// channels, and the partial-sum accumulator. The last worker to reduce its
-/// shard finalizes (metrics + replies).
+/// channels, and the class-major partial-sum accumulator
+/// (`classes * rows.len()`; binary servers have one class). The last worker
+/// to reduce its shard finalizes (metrics + replies).
 struct BatchShared {
     rows: Vec<RowOwned>,
-    replies: Vec<SyncSender<f64>>,
+    replies: Vec<SyncSender<Reply>>,
     enqueued: Vec<Instant>,
     acc: Mutex<Vec<f64>>,
     pending: AtomicUsize,
+    /// True when replies carry argmax + per-class margins.
+    multiclass: bool,
     started: Instant,
     metrics: Arc<ServeMetrics>,
 }
 
 impl BatchShared {
     fn finalize(&self) {
-        let decisions = std::mem::take(&mut *self.acc.lock().unwrap());
-        deliver(&decisions, &self.replies, &self.enqueued, self.started, &self.metrics);
+        let scores = std::mem::take(&mut *self.acc.lock().unwrap());
+        let n = self.rows.len();
+        let payload: Vec<Reply> = if self.multiclass {
+            let classes = scores.len() / n.max(1);
+            (0..n)
+                .map(|i| {
+                    let argmax = crate::infer::argmax_class(&scores, n, i);
+                    let per_class = (0..classes).map(|c| scores[c * n + i]).collect();
+                    Reply::Multi(MultiScore { argmax, scores: per_class })
+                })
+                .collect()
+        } else {
+            scores.into_iter().map(Reply::Score).collect()
+        };
+        deliver(payload, &self.replies, &self.enqueued, self.started, &self.metrics);
     }
 }
 
 /// Record batch metrics + per-request latency, then send the replies.
 fn deliver(
-    decisions: &[f64],
-    replies: &[SyncSender<f64>],
+    payload: Vec<Reply>,
+    replies: &[SyncSender<Reply>],
     enqueued: &[Instant],
     started: Instant,
     metrics: &ServeMetrics,
@@ -299,15 +376,17 @@ fn deliver(
     metrics.requests.fetch_add(replies.len() as u64, Ordering::Relaxed);
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.score_us.fetch_add(started.elapsed().as_micros() as u64, Ordering::Relaxed);
-    for ((r, d), t) in replies.iter().zip(decisions).zip(enqueued) {
+    for ((r, d), t) in replies.iter().zip(payload).zip(enqueued) {
         metrics.latency.record_us(t.elapsed().as_micros() as u64);
-        let _ = r.send(*d);
+        let _ = r.send(d);
     }
 }
 
-/// One unit of scorer work: reduce `shard` of the plan over a whole batch.
+/// One unit of scorer work: reduce shard `shard` of class `class`'s plan
+/// over a whole batch (binary servers always dispatch class 0).
 struct ShardJob {
     batch: Arc<BatchShared>,
+    class: usize,
     shard: usize,
 }
 
@@ -319,13 +398,21 @@ pub struct ServerHandle {
     metrics: Arc<ServeMetrics>,
     batcher: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
     cols: usize,
+    /// `Some(K)` on multiclass servers, `None` on binary servers.
+    classes: Option<usize>,
 }
 
 impl ServerHandle {
     /// Submit one dense feature row; blocks for the decision value.
+    /// Binary servers only — multiclass servers answer
+    /// [`ServerHandle::score_multiclass`].
     pub fn score(&self, x: &[f32]) -> Result<f64> {
+        crate::ensure!(self.classes.is_none(), "multiclass server: use score_multiclass");
         crate::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
-        self.submit(RowOwned::Dense(x.to_vec()))
+        match self.submit(RowOwned::Dense(x.to_vec()))? {
+            Reply::Score(d) => Ok(d),
+            Reply::Multi(_) => Err(crate::err!("unexpected multiclass reply")),
+        }
     }
 
     /// Submit one CSR feature row (`indices` sorted strictly ascending,
@@ -333,6 +420,43 @@ impl ServerHandle {
     /// Requests are external input: the full CSR contract is validated here
     /// so a malformed request errors instead of panicking the runtime.
     pub fn score_sparse(&self, indices: &[u32], values: &[f32]) -> Result<f64> {
+        crate::ensure!(self.classes.is_none(), "multiclass server: use score_multiclass");
+        self.validate_csr(indices, values)?;
+        match self.submit(self.owned_csr(indices, values))? {
+            Reply::Score(d) => Ok(d),
+            Reply::Multi(_) => Err(crate::err!("unexpected multiclass reply")),
+        }
+    }
+
+    /// Submit one dense feature row to a multiclass server; blocks for the
+    /// argmax class index plus every class's one-vs-rest margin.
+    pub fn score_multiclass(&self, x: &[f32]) -> Result<MultiScore> {
+        crate::ensure!(self.classes.is_some(), "binary server: use score/score_sparse");
+        crate::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
+        match self.submit(RowOwned::Dense(x.to_vec()))? {
+            Reply::Multi(m) => Ok(m),
+            Reply::Score(_) => Err(crate::err!("unexpected binary reply")),
+        }
+    }
+
+    /// [`ServerHandle::score_multiclass`] for a CSR request row (same
+    /// validated CSR contract as [`ServerHandle::score_sparse`]).
+    pub fn score_multiclass_sparse(&self, indices: &[u32], values: &[f32]) -> Result<MultiScore> {
+        crate::ensure!(self.classes.is_some(), "binary server: use score/score_sparse");
+        self.validate_csr(indices, values)?;
+        match self.submit(self.owned_csr(indices, values))? {
+            Reply::Multi(m) => Ok(m),
+            Reply::Score(_) => Err(crate::err!("unexpected binary reply")),
+        }
+    }
+
+    /// Number of classes served (`None` for binary servers).
+    pub fn n_classes(&self) -> Option<usize> {
+        self.classes
+    }
+
+    /// Validate the external CSR request contract (lengths, range, order).
+    fn validate_csr(&self, indices: &[u32], values: &[f32]) -> Result<()> {
         crate::ensure!(indices.len() == values.len(), "indices/values length mismatch");
         let mut prev: Option<u32> = None;
         for &i in indices {
@@ -346,14 +470,14 @@ impl ServerHandle {
             }
             prev = Some(i);
         }
-        self.submit(RowOwned::Sparse {
-            indices: indices.to_vec(),
-            values: values.to_vec(),
-            cols: self.cols,
-        })
+        Ok(())
     }
 
-    fn submit(&self, x: RowOwned) -> Result<f64> {
+    fn owned_csr(&self, indices: &[u32], values: &[f32]) -> RowOwned {
+        RowOwned::Sparse { indices: indices.to_vec(), values: values.to_vec(), cols: self.cols }
+    }
+
+    fn submit(&self, x: RowOwned) -> Result<Reply> {
         let tx = match self.tx.lock().unwrap().as_ref() {
             Some(tx) => tx.clone(),
             None => return Err(crate::err!("server stopped")),
@@ -365,7 +489,7 @@ impl ServerHandle {
         rrx.recv().map_err(|_| crate::err!("server dropped request"))
     }
 
-    /// Submit one row, returning the predicted label.
+    /// Submit one row, returning the predicted label (binary servers).
     pub fn predict(&self, x: &[f32]) -> Result<f32> {
         Ok(if self.score(x)? >= 0.0 { 1.0 } else { -1.0 })
     }
@@ -394,7 +518,47 @@ impl ServerHandle {
 pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
     let cols = model.input_cols();
-    let plan = Arc::new(ShardedPlan::compile(&model, cfg.shards));
+    let plan = Arc::new(PlanSet::Binary(ShardedPlan::compile(&model, cfg.shards)));
+    // The model itself is only needed for the PJRT tile dispatch; native
+    // servers score exclusively through the compiled plan, so don't keep a
+    // second copy of the support vectors alive.
+    let model = match &backend {
+        Backend::Xla(_) => Some(model),
+        Backend::Native => None,
+    };
+    spawn_runtime(model, backend, plan, cfg, cols, None)
+}
+
+/// Start a multiclass server: one sharded plan per one-vs-rest class, each
+/// batch fanned out as one shard job per `(class, shard)` pair across the
+/// same scorer worker pool. Requests go through
+/// [`ServerHandle::score_multiclass`] / `score_multiclass_sparse` and come
+/// back as argmax + per-class margins. Native scoring only (per-class
+/// kernel expansions have no PJRT tile layout).
+pub fn serve_multiclass(model: MulticlassModel, cfg: ServeConfig) -> Result<ServerHandle> {
+    cfg.validate()?;
+    crate::ensure!(model.n_classes() >= 2, "multiclass serving needs >= 2 classes");
+    let cols = model.input_cols();
+    let classes = model.n_classes();
+    let plans: Vec<ShardedPlan> =
+        model.models.iter().map(|m| ShardedPlan::compile(m, cfg.shards)).collect();
+    for p in &plans {
+        crate::ensure!(p.input_cols() == cols, "class models must share input dims");
+    }
+    let plan = Arc::new(PlanSet::Multi(plans));
+    spawn_runtime(None, Backend::Native, plan, cfg, cols, Some(classes))
+}
+
+/// Spawn the shared runtime: `cfg.workers` scorer threads draining the
+/// shard-job queue plus the batcher (which owns shutdown of both).
+fn spawn_runtime(
+    model: Option<OdmModel>,
+    backend: Backend,
+    plan: Arc<PlanSet>,
+    cfg: ServeConfig,
+    cols: usize,
+    classes: Option<usize>,
+) -> Result<ServerHandle> {
     let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
     let metrics = Arc::new(ServeMetrics::default());
     let queue: Arc<WorkQueue<ShardJob>> = Arc::new(WorkQueue::new());
@@ -409,13 +573,6 @@ pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> Result<Serv
                 .expect("spawn scorer"),
         );
     }
-    // The model itself is only needed for the PJRT tile dispatch; native
-    // servers score exclusively through the compiled plan, so don't keep a
-    // second copy of the support vectors alive.
-    let model = match &backend {
-        Backend::Xla(_) => Some(model),
-        Backend::Native => None,
-    };
     let batcher = {
         let metrics = Arc::clone(&metrics);
         std::thread::Builder::new()
@@ -428,20 +585,28 @@ pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> Result<Serv
         metrics,
         batcher: Arc::new(Mutex::new(Some(batcher))),
         cols,
+        classes,
     })
 }
 
 /// Scorer worker: drain shard jobs until the queue closes. Each job scores
-/// one SV shard over a whole batch and adds the partial sums into the
-/// batch accumulator; the worker that retires the last shard finalizes.
-fn scorer_loop(plan: Arc<ShardedPlan>, queue: Arc<WorkQueue<ShardJob>>) {
+/// one SV shard of one class's plan over a whole batch and adds the partial
+/// sums into the batch's class-major accumulator; the worker that retires
+/// the last shard finalizes.
+fn scorer_loop(plan: Arc<PlanSet>, queue: Arc<WorkQueue<ShardJob>>) {
     while let Some(job) = queue.pop() {
         let rows: Vec<RowRef> = job.batch.rows.iter().map(|r| r.as_row_ref()).collect();
-        let mut partial = vec![0.0f64; rows.len()];
-        plan.shard(job.shard).score_block(&rows, &mut partial);
+        let n = rows.len();
+        let shard_plan = match &*plan {
+            PlanSet::Binary(p) => p.shard(job.shard),
+            PlanSet::Multi(ps) => ps[job.class].shard(job.shard),
+        };
+        let mut partial = vec![0.0f64; n];
+        shard_plan.score_block(&rows, &mut partial);
         {
             let mut acc = job.batch.acc.lock().unwrap();
-            for (a, p) in acc.iter_mut().zip(&partial) {
+            let base = job.class * n;
+            for (a, p) in acc[base..base + n].iter_mut().zip(&partial) {
                 *a += p;
             }
         }
@@ -454,7 +619,7 @@ fn scorer_loop(plan: Arc<ShardedPlan>, queue: Arc<WorkQueue<ShardJob>>) {
 fn batcher_loop(
     model: Option<OdmModel>,
     backend: Backend,
-    plan: Arc<ShardedPlan>,
+    plan: Arc<PlanSet>,
     cfg: ServeConfig,
     rx: Receiver<Request>,
     queue: Arc<WorkQueue<ShardJob>>,
@@ -490,12 +655,13 @@ fn batcher_loop(
 }
 
 /// Route one assembled batch: PJRT tile path when available, otherwise one
-/// shard job per plan shard onto the scorer queue (the batcher moves on to
-/// the next batch immediately — batches pipeline through the workers).
+/// shard job per (class, shard) pair onto the scorer queue (the batcher
+/// moves on to the next batch immediately — batches pipeline through the
+/// workers).
 fn dispatch_batch(
     model: Option<&OdmModel>,
     backend: &Backend,
-    plan: &Arc<ShardedPlan>,
+    plan: &Arc<PlanSet>,
     batch: &mut Vec<Request>,
     queue: &Arc<WorkQueue<ShardJob>>,
     metrics: &Arc<ServeMetrics>,
@@ -512,29 +678,43 @@ fn dispatch_batch(
     if let (Backend::Xla(engine), Some(model)) = (backend, model) {
         if let Some(decisions) = xla_batch_decisions(model, engine, batch, metrics) {
             let (_, replies, enqueued) = split_requests(batch);
-            deliver(&decisions, &replies, &enqueued, started, metrics);
+            let payload: Vec<Reply> = decisions.into_iter().map(Reply::Score).collect();
+            deliver(payload, &replies, &enqueued, started, metrics);
             return;
         }
     }
     let (rows, replies, enqueued) = split_requests(batch);
-    let shards = plan.num_shards();
     let shared = Arc::new(BatchShared {
         rows,
         replies,
         enqueued,
-        acc: Mutex::new(vec![0.0; n]),
-        pending: AtomicUsize::new(shards),
+        acc: Mutex::new(vec![0.0; plan.classes() * n]),
+        pending: AtomicUsize::new(plan.total_jobs()),
+        multiclass: matches!(&**plan, PlanSet::Multi(_)),
         started,
         metrics: Arc::clone(metrics),
     });
-    for s in 0..shards {
-        queue.push(ShardJob { batch: Arc::clone(&shared), shard: s });
+    match &**plan {
+        PlanSet::Binary(p) => {
+            for s in 0..p.num_shards() {
+                queue.push(ShardJob { batch: Arc::clone(&shared), class: 0, shard: s });
+            }
+        }
+        PlanSet::Multi(ps) => {
+            for (c, p) in ps.iter().enumerate() {
+                for s in 0..p.num_shards() {
+                    queue.push(ShardJob { batch: Arc::clone(&shared), class: c, shard: s });
+                }
+            }
+        }
     }
 }
 
 /// Drain the batch into parallel row/reply/enqueue vectors, keeping the
 /// batcher's reusable `Vec<Request>` allocation alive across batches.
-fn split_requests(batch: &mut Vec<Request>) -> (Vec<RowOwned>, Vec<SyncSender<f64>>, Vec<Instant>) {
+fn split_requests(
+    batch: &mut Vec<Request>,
+) -> (Vec<RowOwned>, Vec<SyncSender<Reply>>, Vec<Instant>) {
     let mut rows = Vec::with_capacity(batch.len());
     let mut replies = Vec::with_capacity(batch.len());
     let mut enqueued = Vec::with_capacity(batch.len());
@@ -767,6 +947,81 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(2), "stop took {:?}", t0.elapsed());
         assert!(h.score(ds.row(0)).is_err(), "requests after stop must error");
         h.stop(); // idempotent
+    }
+
+    use crate::multiclass::{train_ovr, MulticlassDataset, MulticlassModel, MulticlassSynthSpec};
+
+    fn multiclass_model() -> (MulticlassModel, MulticlassDataset) {
+        let ds = MulticlassSynthSpec::new(3, 90, 5, 21).generate();
+        let run = train_ovr(
+            &ds,
+            &KernelKind::Rbf { gamma: 0.1 },
+            &OdmParams::default(),
+            &crate::multiclass::OvrConfig {
+                budget: SolveBudget { max_sweeps: 15, ..SolveBudget::default() },
+                ..Default::default()
+            },
+        );
+        (run.model, ds)
+    }
+
+    #[test]
+    fn multiclass_serving_matches_offline_plan() {
+        let (m, ds) = multiclass_model();
+        let plan = m.compile();
+        let cfg = ServeConfig { workers: 3, shards: 2, ..ServeConfig::default() };
+        let h = serve_multiclass(m, cfg).unwrap();
+        assert_eq!(h.n_classes(), Some(3));
+        let rows = ds.as_rows();
+        let want_pred = plan.predict_rows(rows, 2);
+        let want_scores = plan.score_rows(rows, 2);
+        let n = ds.rows();
+        for i in 0..12 {
+            let got = h.score_multiclass(rows.row(i)).unwrap();
+            assert_eq!(got.argmax, want_pred[i], "row {i}");
+            for (c, s) in got.scores.iter().enumerate() {
+                let w = want_scores[c * n + i];
+                assert!((s - w).abs() < 1e-9 * (1.0 + w.abs()), "row {i} class {c}");
+            }
+        }
+        h.stop();
+    }
+
+    #[test]
+    fn multiclass_and_binary_servers_reject_each_others_requests() {
+        let (mm, ds) = multiclass_model();
+        let h = serve_multiclass(mm, ServeConfig::default()).unwrap();
+        assert!(h.score(ds.as_rows().row(0)).is_err(), "binary request on multiclass server");
+        assert!(h.score_sparse(&[0], &[1.0]).is_err());
+        h.stop();
+        let (bm, bds) = model();
+        let hb = serve(bm, Backend::Native, ServeConfig::default()).unwrap();
+        assert_eq!(hb.n_classes(), None);
+        assert!(hb.score_multiclass(bds.row(0)).is_err(), "multiclass request on binary server");
+        assert!(hb.score_multiclass_sparse(&[0], &[1.0]).is_err());
+        hb.stop();
+    }
+
+    #[test]
+    fn multiclass_sparse_requests_match_dense() {
+        let (m, ds) = multiclass_model();
+        let sp = ds.to_sparse();
+        let cfg = ServeConfig { workers: 2, shards: 3, ..ServeConfig::default() };
+        let h = serve_multiclass(m, cfg).unwrap();
+        let crate::data::libsvm::LoadedDataset::Sparse(csr) = &sp.data else { unreachable!() };
+        for i in 0..10 {
+            let dense = h.score_multiclass(ds.as_rows().row(i)).unwrap();
+            let (lo, hi) = (csr.indptr[i], csr.indptr[i + 1]);
+            let sparse =
+                h.score_multiclass_sparse(&csr.indices[lo..hi], &csr.values[lo..hi]).unwrap();
+            assert_eq!(dense.argmax, sparse.argmax, "row {i}");
+            // cross-backing (dense dot vs CSR gather) agreement is bounded
+            // by f32 summation-order roundoff: the 1e-6 contract, not 1e-9
+            for (a, b) in dense.scores.iter().zip(&sparse.scores) {
+                assert!((a - b).abs() < 1e-6 * (1.0 + b.abs()), "row {i}");
+            }
+        }
+        h.stop();
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Concurrency/serialization test blitz (ISSUE 4 satellites):
+//! `util::pool::WorkQueue` close/drain/multi-producer semantics under
+//! schedule-shaking loops (loom-style repetition with plain threads,
+//! deterministic job sets), and `serve::LatencyHistogram` percentile
+//! correctness against exact sorted references on adversarial
+//! distributions.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use sodm::serve::LatencyHistogram;
+use sodm::util::pool::WorkQueue;
+
+#[test]
+fn close_while_workers_blocked_wakes_all_poppers() {
+    // Repeat the race with varying pre-close delays so the close lands
+    // both before and after the poppers park on the condvar.
+    for round in 0..50u64 {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        let registered = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let (q, registered) = (&q, &registered);
+                    s.spawn(move || {
+                        registered.fetch_add(1, Ordering::SeqCst);
+                        q.pop()
+                    })
+                })
+                .collect();
+            while registered.load(Ordering::SeqCst) < 4 {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(std::time::Duration::from_micros(50 * (round % 5)));
+            q.close();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), None, "round {round}: popper must wake with None");
+            }
+        });
+        assert_eq!(q.pop(), None, "closed queue stays closed");
+    }
+}
+
+#[test]
+fn close_then_drain_delivers_every_queued_job_exactly_once() {
+    for round in 0..20usize {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        let jobs = 500 + round * 13;
+        for j in 0..jobs {
+            assert!(q.push(j));
+        }
+        q.close();
+        assert!(!q.push(usize::MAX), "push after close must be refused");
+        let mut got = std::thread::scope(|s| {
+            let consumers: Vec<_> = (0..5)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut mine = Vec::new();
+                        while let Some(j) = q.pop() {
+                            mine.push(j);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            consumers.into_iter().flat_map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        got.sort_unstable();
+        assert_eq!(got, (0..jobs).collect::<Vec<_>>(), "round {round}: jobs lost or duplicated");
+        assert!(q.is_empty());
+    }
+}
+
+#[test]
+fn multi_producer_push_is_lossless_under_concurrent_drain() {
+    for round in 0..10u64 {
+        let q: WorkQueue<u64> = WorkQueue::new();
+        let (producers, per) = (4u64, 300u64);
+        let mut got = std::thread::scope(|s| {
+            let pushers: Vec<_> = (0..producers)
+                .map(|p| {
+                    let q = &q;
+                    s.spawn(move || {
+                        for j in 0..per {
+                            assert!(q.push(p * per + j), "queue closed under producers");
+                        }
+                    })
+                })
+                .collect();
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut mine = Vec::new();
+                        while let Some(j) = q.pop() {
+                            mine.push(j);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            for h in pushers {
+                h.join().unwrap();
+            }
+            q.close();
+            consumers.into_iter().flat_map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        got.sort_unstable();
+        assert_eq!(
+            got,
+            (0..producers * per).collect::<Vec<_>>(),
+            "round {round}: concurrent production must be lossless"
+        );
+    }
+}
+
+#[test]
+fn single_consumer_preserves_per_producer_fifo_order() {
+    let q: WorkQueue<(u64, u64)> = WorkQueue::new();
+    std::thread::scope(|s| {
+        let pushers: Vec<_> = (0..3u64)
+            .map(|p| {
+                let q = &q;
+                s.spawn(move || {
+                    for j in 0..200u64 {
+                        assert!(q.push((p, j)));
+                    }
+                })
+            })
+            .collect();
+        let consumer = s.spawn(|| {
+            let mut seen: Vec<Vec<u64>> = vec![Vec::new(); 3];
+            while let Some((p, j)) = q.pop() {
+                seen[p as usize].push(j);
+            }
+            seen
+        });
+        for h in pushers {
+            h.join().unwrap();
+        }
+        q.close();
+        let seen = consumer.join().unwrap();
+        for (p, js) in seen.iter().enumerate() {
+            assert_eq!(js.len(), 200, "producer {p}: all jobs delivered");
+            assert!(js.windows(2).all(|w| w[0] < w[1]), "producer {p}: FIFO order broken");
+        }
+    });
+}
+
+// --- LatencyHistogram percentile correctness -------------------------------
+
+/// Exact nearest-rank percentile of an (unsorted) sample set, microseconds.
+fn exact_percentile_us(samples: &mut Vec<u64>, p: f64) -> u64 {
+    samples.sort_unstable();
+    let rank = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize;
+    samples[rank - 1]
+}
+
+/// The log2-bucket contract: the reported percentile is the closing
+/// bucket's upper bound, so it is always above the exact sample percentile
+/// and at most 2x it (for samples >= 1 us).
+fn assert_bucket_contract(hist: &LatencyHistogram, samples: &mut Vec<u64>, p: f64) {
+    let exact_us = exact_percentile_us(samples, p).max(1);
+    let exact_ms = exact_us as f64 / 1e3;
+    let got_ms = hist.percentile_ms(p);
+    assert!(got_ms > exact_ms * 0.999_999, "p{p}: reported {got_ms} ms below exact {exact_ms} ms");
+    assert!(
+        got_ms <= exact_ms * 2.0 + 1e-9,
+        "p{p}: reported {got_ms} ms beyond 2x exact {exact_ms} ms"
+    );
+}
+
+#[test]
+fn histogram_all_equal_distribution() {
+    let hist = LatencyHistogram::new();
+    let mut samples = Vec::new();
+    for _ in 0..1000 {
+        hist.record_us(700);
+        samples.push(700u64);
+    }
+    assert_eq!(hist.count(), 1000);
+    for p in [50.0, 95.0, 99.0, 100.0] {
+        assert_bucket_contract(&hist, &mut samples, p);
+    }
+    // one bucket means every percentile reports the same bound
+    assert_eq!(hist.percentile_ms(50.0), hist.percentile_ms(99.0));
+    assert_eq!(hist.percentile_ms(50.0), 1.024, "700 us lands in [512, 1024) -> 1024 us");
+}
+
+#[test]
+fn histogram_bimodal_distribution() {
+    let hist = LatencyHistogram::new();
+    let mut samples = Vec::new();
+    for i in 0..1000u64 {
+        let us = if i % 10 == 9 { 1 << 20 } else { 100 };
+        hist.record_us(us);
+        samples.push(us);
+    }
+    for p in [50.0, 90.0, 95.0, 99.0] {
+        assert_bucket_contract(&hist, &mut samples, p);
+    }
+    // p50 sits in the fast mode, p95/p99 in the slow mode
+    assert!(hist.percentile_ms(50.0) < 1.0);
+    assert!(hist.percentile_ms(95.0) > 1000.0);
+}
+
+#[test]
+fn histogram_single_sample() {
+    let hist = LatencyHistogram::new();
+    hist.record_us(5);
+    assert_eq!(hist.count(), 1);
+    let mut samples = vec![5u64];
+    for p in [50.0, 99.0, 100.0] {
+        assert_bucket_contract(&hist, &mut samples, p);
+    }
+    assert_eq!(hist.percentile_ms(50.0), 0.008, "5 us lands in [4, 8) -> 8 us");
+}
+
+#[test]
+fn histogram_zero_and_empty_edges() {
+    let hist = LatencyHistogram::new();
+    assert_eq!(hist.percentile_ms(99.0), 0.0, "no samples reports 0");
+    hist.record_us(0); // clamped to the first bucket
+    assert_eq!(hist.percentile_ms(50.0), 0.002, "[1, 2) -> 2 us");
+}
+
+#[test]
+fn histogram_saturates_at_top_bucket() {
+    let hist = LatencyHistogram::new();
+    hist.record_us(u64::MAX);
+    hist.record_us(1 << 40);
+    assert_eq!(hist.count(), 2);
+    // both clamp into the top bucket (>= ~9 minutes)
+    let top_ms = (1u64 << 30) as f64 / 1e3;
+    assert_eq!(hist.percentile_ms(50.0), top_ms);
+    assert_eq!(hist.percentile_ms(100.0), top_ms);
+}

@@ -148,6 +148,79 @@ fn concurrent_mixed_serving_matches_plan_and_metrics_reconcile() {
     h.stop();
 }
 
+/// Satellite (ISSUE 4): degenerate shard shapes — more shards than support
+/// vectors, exactly one SV, and shards == 1 — must all reduce to the
+/// unsharded plan's decision at 1e-12.
+#[test]
+fn sharded_degenerate_shapes_match_unsharded_plan() {
+    let (model, ds) = dense_fixture();
+    let plan = ScoringPlan::compile(&model);
+    let sv = plan.support_size();
+    assert!(sv > 1, "fixture must have a real expansion");
+    let refs: Vec<RowRef> = (0..24).map(|i| RowRef::Dense(ds.row(i))).collect();
+    let mut want = vec![0.0; refs.len()];
+    plan.score_block(&refs, &mut want);
+    for shards in [1usize, sv, sv + 7, 10 * sv] {
+        let sharded = ShardedPlan::compile(&model, shards);
+        let compiled = sharded.num_shards();
+        assert!(compiled <= sv, "{shards} shards requested, {compiled} compiled for {sv} SVs");
+        assert_eq!(sharded.support_size(), sv);
+        for s in 0..sharded.num_shards() {
+            assert!(sharded.shard(s).support_size() >= 1, "no empty shards");
+        }
+        let mut got = vec![0.0; refs.len()];
+        sharded.score_block(&refs, &mut got);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12 * (1.0 + b.abs()),
+                "{shards} shards, row {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_csr_degenerate_shapes_match_unsharded_plan() {
+    let (model, sp) = sparse_fixture();
+    let plan = ScoringPlan::compile(&model);
+    let sv = plan.support_size();
+    let refs: Vec<RowRef> = (0..16).map(|i| sp.row_ref(i)).collect();
+    let mut want = vec![0.0; refs.len()];
+    plan.score_block(&refs, &mut want);
+    for shards in [1usize, sv, sv + 3] {
+        let sharded = ShardedPlan::compile(&model, shards);
+        assert!(sharded.num_shards() <= sv);
+        let mut got = vec![0.0; refs.len()];
+        sharded.score_block(&refs, &mut got);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12 * (1.0 + b.abs()),
+                "{shards} shards, row {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_support_vector_model_always_compiles_one_shard() {
+    let m = OdmModel::Kernel {
+        kernel: KernelKind::Rbf { gamma: 0.5 },
+        sv_x: vec![0.25, -0.5],
+        coef: vec![1.25],
+        cols: 2,
+    };
+    let plan = ScoringPlan::compile(&m);
+    let x = [0.1f32, 0.2];
+    let want = plan.score_rr(RowRef::Dense(&x));
+    for shards in [1usize, 2, 8] {
+        let sharded = ShardedPlan::compile(&m, shards);
+        assert_eq!(sharded.num_shards(), 1, "one SV cannot split");
+        let mut got = [0.0f64];
+        sharded.score_block(&[RowRef::Dense(&x)], &mut got);
+        assert!((got[0] - want).abs() < 1e-12 * (1.0 + want.abs()));
+    }
+}
+
 #[test]
 fn csr_model_server_accepts_both_request_backings() {
     let (model, sp) = sparse_fixture();

@@ -1,0 +1,108 @@
+//! LIBSVM parser edge-case fixtures (ISSUE 4 satellite): trailing
+//! whitespace, CRLF endings, comment/blank lines, out-of-order and
+//! duplicate feature indices, explicit zeros, empty rows, missing trailing
+//! newlines, and non-finite label rejection — pinned for the CSR reader,
+//! the densifying reader, and the raw multiclass reader.
+
+use sodm::data::libsvm::{read_libsvm, read_libsvm_sparse, read_libsvm_sparse_raw};
+use sodm::util::temp_dir;
+
+struct Cleanup(std::path::PathBuf);
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+fn write_fixture(name: &str, contents: &str) -> (Cleanup, std::path::PathBuf) {
+    let dir = Cleanup(temp_dir("libsvm-edge"));
+    let p = dir.0.join(name);
+    std::fs::write(&p, contents).unwrap();
+    (dir, p)
+}
+
+#[test]
+fn trailing_whitespace_and_crlf_lines_parse() {
+    let (_d, p) = write_fixture("ws.txt", "+1 1:0.5 2:1.0   \r\n-1 2:2.0\t\n+1 1:1.5 \n");
+    let s = read_libsvm_sparse(&p, 0).unwrap();
+    assert_eq!(s.rows, 3);
+    assert_eq!(s.indptr, vec![0, 2, 3, 4]);
+    assert_eq!(s.indices, vec![0, 1, 1, 0]);
+    assert_eq!(s.values, vec![0.5, 1.0, 2.0, 1.5]);
+    assert_eq!(s.y, vec![1.0, -1.0, 1.0]);
+}
+
+#[test]
+fn comment_and_blank_lines_are_skipped_anywhere() {
+    let text = "# header\n\n+1 1:1.0\n   \n  # indented comment\n-1 2:1.0\n#tail";
+    let (_d, p) = write_fixture("c.txt", text);
+    let s = read_libsvm_sparse(&p, 0).unwrap();
+    assert_eq!(s.rows, 2);
+    assert_eq!(s.y, vec![1.0, -1.0]);
+    assert_eq!(s.nnz(), 2);
+}
+
+#[test]
+fn out_of_order_duplicate_and_zero_features_normalize() {
+    let (_d, p) = write_fixture("o.txt", "+1 5:5.0 1:1.0 5:0 3:3.0\n-1 2:0 2:2.0\n");
+    let s = read_libsvm_sparse(&p, 0).unwrap();
+    // row 0: sorted; duplicate column 5 resolved by its last occurrence
+    // (an explicit 0, so the entry is dropped entirely)
+    assert_eq!(s.indptr, vec![0, 2, 3]);
+    assert_eq!(s.indices, vec![0, 2, 1]);
+    assert_eq!(s.values, vec![1.0, 3.0, 2.0]);
+    // the dense reader agrees with scatter semantics
+    let d = read_libsvm(&p, 0).unwrap();
+    assert_eq!(d.row(0), &[1.0, 0.0, 3.0, 0.0, 0.0]);
+    assert_eq!(d.row(1), &[0.0, 2.0, 0.0, 0.0, 0.0]);
+}
+
+#[test]
+fn empty_rows_keep_their_labels() {
+    // label-only lines are instances with zero stored features
+    let (_d, p) = write_fixture("e.txt", "+1\n-1 1:1.0\n+1\n");
+    let s = read_libsvm_sparse(&p, 0).unwrap();
+    assert_eq!(s.rows, 3);
+    assert_eq!(s.indptr, vec![0, 0, 1, 1]);
+    assert_eq!(s.y, vec![1.0, -1.0, 1.0]);
+    let d = read_libsvm(&p, 0).unwrap();
+    assert_eq!(d.row(0), &[0.0]);
+    assert_eq!(d.row(2), &[0.0]);
+}
+
+#[test]
+fn missing_trailing_newline_parses_last_row() {
+    let (_d, p) = write_fixture("n.txt", "+1 1:1.0\n-1 2:2.0");
+    let s = read_libsvm_sparse(&p, 0).unwrap();
+    assert_eq!(s.rows, 2);
+    assert_eq!(s.y, vec![1.0, -1.0]);
+    assert_eq!(s.cols, 2);
+}
+
+#[test]
+fn non_finite_labels_are_rejected() {
+    for bad in ["nan 1:1.0\n", "inf 1:1.0\n", "-inf 1:1.0\n", "NaN 1:1.0\n"] {
+        let (_d, p) = write_fixture("bad.txt", bad);
+        let err = read_libsvm_sparse(&p, 0);
+        assert!(err.is_err(), "{bad:?} must be rejected, not silently binarized");
+    }
+}
+
+#[test]
+fn malformed_pairs_report_the_line() {
+    let (_d, p) = write_fixture("m.txt", "+1 1:1.0\n-1 oops\n");
+    let err = read_libsvm_sparse(&p, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("line 2"), "error should name the offending line");
+}
+
+#[test]
+fn raw_reader_preserves_multiclass_labels_with_placeholder_binary_y() {
+    let (_d, p) = write_fixture("raw.txt", "3 1:1.0\n0.5 2:1.0\n-2 1:2.0\n");
+    let (ds, raw) = read_libsvm_sparse_raw(&p, 0).unwrap();
+    assert_eq!(raw, vec![3.0, 0.5, -2.0]);
+    assert!(ds.y.iter().all(|y| *y == 1.0), "raw reader carries a +1 placeholder in y");
+    assert_eq!(ds.rows, 3);
+    // the binarizing reader maps the same file by the ±1 convention
+    let mapped = read_libsvm_sparse(&p, 0).unwrap();
+    assert_eq!(mapped.y, vec![1.0, 1.0, -1.0]);
+}
