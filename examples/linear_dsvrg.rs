@@ -1,36 +1,36 @@
-//! DSVRG at scale — paper Algorithm 2 on the SUSY-like emulated dataset.
+//! DSVRG at scale — paper Algorithm 2 on the SUSY-like emulated dataset,
+//! through the `sodm::api` facade.
 //!
 //! Shows the communication-efficiency story: per-epoch traffic of the
 //! center-broadcast / parallel-gradient / round-robin-update schedule, the
 //! objective trajectory, and the comparison against single-machine SVRG and
-//! coreset SVRG (the Fig. 4 trio).
+//! coreset SVRG (the Fig. 4 trio — three specs, one `api::train` entry
+//! point).
 //!
 //! Run with: `cargo run --release --example linear_dsvrg`
 
+use sodm::api::{self, Method, TrainSpec};
 use sodm::cluster::SimCluster;
 use sodm::data::{all_indices, synth::SynthSpec, DataView};
 use sodm::odm::OdmParams;
-use sodm::svrg::{
-    primal_objective, train_csvrg, train_dsvrg, train_svrg, NativeGrad, SvrgConfig,
-};
+use sodm::svrg::primal_objective;
 
-fn main() {
+fn main() -> sodm::Result<()> {
     // SUSY geometry (18 features) at a workstation-friendly size.
     let ds = SynthSpec::named("SUSY", 0.04, 3).generate(); // 20k rows
     let (train, test) = ds.split(0.8, 3);
-    println!(
-        "dataset {} ({} train rows, {} features)\n",
-        train.name, train.rows, train.cols
-    );
-    let params = OdmParams::default();
-    let cfg = SvrgConfig { epochs: 4, partitions: 8, ..Default::default() };
-    let grad = NativeGrad { workers: 1 };
+    println!("dataset {} ({} train rows, {} features)\n", train.name, train.rows, train.cols);
+    let spec = |m: Method| TrainSpec::new(m).epochs(4).partitions(8).workers(1).build();
 
     // DSVRG (Algorithm 2) with communication accounting.
     let cluster = SimCluster::new(8);
-    let run = train_dsvrg(&train, &params, &cfg, Some(&cluster), &grad);
+    let run = api::train_run(&spec(Method::Dsvrg)?, &train, Some(&cluster))?;
     let comm = cluster.comm();
-    println!("DSVRG: {:.2}s, test acc {:.4}", run.total_seconds, run.model.accuracy(&test));
+    println!(
+        "DSVRG: {:.2}s, test acc {:.4}",
+        run.artifact.meta.seconds,
+        run.artifact.accuracy(&test)?
+    );
     println!(
         "  communication: {} rounds, {} messages, {:.2} MiB total, {:.1} ms simulated network time",
         comm.rounds,
@@ -39,36 +39,28 @@ fn main() {
         comm.simulated_seconds(&cluster.model) * 1e3,
     );
     println!("  objective trajectory (per 1/3 epoch):");
-    for c in run.checkpoints.iter().take(9) {
-        println!(
-            "    epoch {} +{:.2}: objective {:.5} ({:.2}s)",
-            c.epoch, c.fraction, c.objective, c.elapsed
-        );
+    for s in run.snapshots.iter().take(9) {
+        println!("    +{:.2}s: objective {:.5}", s.elapsed, s.objective);
     }
 
     // The Fig. 4 trio on the same data.
     println!("\ngradient-method comparison (same epochs):");
     let idx = all_indices(&train);
     let view = DataView::new(&train, &idx);
-    let t0 = std::time::Instant::now();
-    let svrg = train_svrg(&train, &params, &cfg, &grad);
-    let svrg_secs = t0.elapsed().as_secs_f64();
-    let t1 = std::time::Instant::now();
-    let csvrg = train_csvrg(&train, &params, &cfg, &grad);
-    let csvrg_secs = t1.elapsed().as_secs_f64();
+    let svrg = api::train(&spec(Method::Svrg)?, &train)?;
+    let csvrg = api::train(&spec(Method::Csvrg)?, &train)?;
     println!("{:<12}{:>10}{:>12}{:>14}", "method", "time(s)", "test acc", "objective");
-    for (name, secs, model) in [
-        ("DSVRG", run.total_seconds, &run.model),
-        ("SVRG", svrg_secs, &svrg.model),
-        ("CSVRG", csvrg_secs, &csvrg.model),
-    ] {
-        let sodm::odm::OdmModel::Linear { w } = model else { unreachable!() };
+    for artifact in [&run.artifact, &svrg, &csvrg] {
+        let sodm::odm::OdmModel::Linear { w } = artifact.as_binary().expect("linear model") else {
+            unreachable!("gradient methods train linear models")
+        };
         println!(
             "{:<12}{:>10.2}{:>12.4}{:>14.5}",
-            name,
-            secs,
-            model.accuracy(&test),
-            primal_objective(w, &view, &params, 1)
+            artifact.meta.method,
+            artifact.meta.seconds,
+            artifact.accuracy(&test)?,
+            primal_objective(w, &view, &OdmParams::default(), 1)
         );
     }
+    Ok(())
 }

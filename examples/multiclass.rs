@@ -1,15 +1,15 @@
 //! Multiclass quickstart: generate a 4-class dataset, train one-vs-rest
-//! ODMs with the shared Gram-row cache, round-trip the model through JSON,
-//! and serve `score_multiclass` requests.
+//! ODMs through the `sodm::api` facade (shared Gram-row cache), round-trip
+//! the versioned artifact, and serve `score_multiclass` requests.
 //!
 //! Run with: `cargo run --release --example multiclass`
 
+use sodm::api::{self, Artifact, Method, OvrOptions, TrainSpec};
 use sodm::kernel::KernelKind;
-use sodm::multiclass::{train_ovr, MulticlassModel, MulticlassSynthSpec, OvrConfig};
-use sodm::odm::OdmParams;
-use sodm::serve::{serve_multiclass, ServeConfig};
+use sodm::multiclass::MulticlassSynthSpec;
+use sodm::serve::ServeConfig;
 
-fn main() {
+fn main() -> sodm::Result<()> {
     // 1. A 4-class Gaussian-blob dataset (8 features, well separated).
     let ds = MulticlassSynthSpec::new(4, 1200, 8, 7).generate();
     let (train, test) = ds.split(0.8, 7);
@@ -22,38 +22,45 @@ fn main() {
         train.cols()
     );
 
-    // 2. One-vs-rest training: the K class solves run in parallel on the
-    // pool workers, all reading one shared unsigned Gram-row cache (the
-    // kernel matrix is label-independent, so every class reuses each row).
-    let kernel = KernelKind::Rbf { gamma: 1.0 / 16.0 };
-    let run = train_ovr(&train, &kernel, &OdmParams::default(), &OvrConfig::default());
+    // 2. One-vs-rest training through the facade: the K class solves run in
+    // parallel on the pool workers, all reading one shared unsigned
+    // Gram-row cache (the kernel matrix is label-independent, so every
+    // class reuses each row).
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 1.0 / 16.0 })
+        .multiclass(OvrOptions::default())
+        .build()?;
+    let run = api::train_run(&spec, &train, None)?;
     println!(
         "trained {} classes in {:.2}s (shared-cache hit rate {:.2}, {} SVs total)",
-        run.model.n_classes(),
-        run.seconds,
+        run.artifact.n_classes().unwrap_or(0),
+        run.artifact.meta.seconds,
         run.cache_hit_rate,
-        run.model.support_size()
+        run.artifact.support_size()
     );
-    println!("test accuracy: {:.4}", run.model.accuracy(&test, 4));
+    println!("test accuracy: {:.4}", run.artifact.accuracy_multiclass(&test, 4)?);
 
-    // 3. Save / load round-trip (bit-exact: decisions are identical).
+    // 3. Save / load round-trip through the versioned artifact format
+    // (bit-exact: decisions are identical).
     let dir = sodm::util::temp_dir("multiclass-example");
     let path = dir.join("multiclass.json");
-    run.model.save(&path).expect("save model");
-    let model = MulticlassModel::load(&path).expect("load model");
+    run.artifact.save(&path)?;
+    let artifact = Artifact::load(&path)?;
 
     // 4. Serve it: score_multiclass returns the argmax class plus every
     // class's one-vs-rest margin, sharded across the scorer workers.
-    let handle = serve_multiclass(model, ServeConfig::default()).expect("serve");
+    let handle = artifact.serve(ServeConfig::default())?;
+    let model = artifact.as_multiclass().expect("multiclass artifact");
     let rows = test.as_rows();
     for i in 0..4 {
-        let reply = handle.score_multiclass(rows.row(i)).expect("score");
+        let reply = handle.score_multiclass(rows.row(i))?;
         let rounded: Vec<f64> = reply.scores.iter().map(|s| (s * 10.0).round() / 10.0).collect();
         println!(
             "row {i}: predicted class {} (label {}), margins {rounded:?}",
-            reply.argmax, run.model.class_labels[reply.argmax]
+            reply.argmax, model.class_labels[reply.argmax]
         );
     }
     handle.stop();
     std::fs::remove_dir_all(dir).ok();
+    Ok(())
 }

@@ -1,65 +1,64 @@
-//! Quickstart: train SODM on an emulated benchmark, compare against the
-//! exact single-machine ODM, and look at the margin distribution the method
-//! is named after.
+//! Quickstart: train SODM through the `sodm::api` facade, compare against
+//! the exact single-machine ODM, and look at the margin distribution the
+//! method is named after.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use sodm::api::{self, Method, TrainSpec};
 use sodm::data::synth::SynthSpec;
 use sodm::kernel::KernelKind;
-use sodm::odm::{margin_stats, train_exact_odm, OdmParams};
-use sodm::qp::SolveBudget;
-use sodm::sodm::{train_sodm_traced, SodmConfig};
+use sodm::odm::margin_stats;
 
-fn main() {
+fn main() -> sodm::Result<()> {
     // 1. An emulated benchmark: svmguide1 geometry (7089 x 4) at 30% size.
     let ds = SynthSpec::named("svmguide1", 0.3, 42).generate();
     let (train, test) = ds.split(0.8, 42);
-    println!("dataset: {} ({} train / {} test rows, {} features)",
-        train.name, train.rows, test.rows, train.cols);
+    println!(
+        "dataset: {} ({} train / {} test rows, {} features)",
+        train.name, train.rows, test.rows, train.cols
+    );
 
     let kernel = KernelKind::Rbf { gamma: 1.0 };
-    let params = OdmParams::default();
 
     // 2. Exact ODM — the reference the paper calls "ODM".
-    let t0 = std::time::Instant::now();
-    let exact = train_exact_odm(&train, &kernel, &params, &SolveBudget::default());
-    let exact_secs = t0.elapsed().as_secs_f64();
+    let exact_spec = TrainSpec::new(Method::ExactOdm).kernel(kernel).build()?;
+    let exact = api::train(&exact_spec, &train)?;
 
-    // 3. SODM — Algorithm 1 with the distribution-aware partitioner.
-    let run = train_sodm_traced(
-        &train,
-        &kernel,
-        &params,
-        &SodmConfig::with_tree(4, 2, 16),
-        None,
-    );
+    // 3. SODM — Algorithm 1 with the distribution-aware partitioner,
+    // through the same facade: only the spec changes.
+    let sodm_spec = TrainSpec::new(Method::Sodm).kernel(kernel).tree(4, 2, 16).build()?;
+    let run = api::train_run(&sodm_spec, &train, None)?;
 
     println!("\n{:<12}{:>10}{:>12}{:>14}", "method", "time(s)", "test acc", "support size");
-    println!(
-        "{:<12}{:>10.2}{:>12.4}{:>14}",
-        "ODM", exact_secs, exact.accuracy(&test), exact.support_size()
-    );
-    println!(
-        "{:<12}{:>10.2}{:>12.4}{:>14}",
-        "SODM", run.total_seconds, run.model.accuracy(&test), run.model.support_size()
-    );
-
-    // 4. The hierarchical merge trace: each level is a usable model.
-    println!("\nSODM level trace (Algorithm 1):");
-    for level in &run.trace {
+    for artifact in [&exact, &run.artifact] {
         println!(
-            "  level {:>2}: {:>3} partitions, {:.2}s elapsed, block-diag objective {:.4}, acc {:.4}",
-            level.level,
-            level.n_partitions,
-            level.elapsed,
-            level.objective,
-            level.model.accuracy(&test)
+            "{:<12}{:>10.2}{:>12.4}{:>14}",
+            artifact.meta.method,
+            artifact.meta.seconds,
+            artifact.accuracy(&test)?,
+            artifact.support_size()
+        );
+    }
+
+    // 4. The per-level trace: every snapshot along the hierarchical merge
+    // is a usable model.
+    println!("\nSODM level trace (Algorithm 1):");
+    for snap in &run.snapshots {
+        println!(
+            "  {:>3} partitions, {:.2}s elapsed, block-diag objective {:.4}, acc {:.4}",
+            snap.partitions,
+            snap.elapsed,
+            snap.objective,
+            snap.model.accuracy(&test)
         );
     }
 
     // 5. The margin distribution (what ODM optimizes): mean ~1, small variance.
-    let (mean, var) = margin_stats(&run.model, &train);
+    let sodm_model = run.artifact.as_binary().expect("binary spec trains a binary model");
+    let exact_model = exact.as_binary().expect("binary spec trains a binary model");
+    let (mean, var) = margin_stats(sodm_model, &train);
     println!("\nmargin distribution on train: mean {mean:.3}, variance {var:.3}");
-    let (emean, evar) = margin_stats(&exact, &train);
+    let (emean, evar) = margin_stats(exact_model, &train);
     println!("exact ODM reference:          mean {emean:.3}, variance {evar:.3}");
+    Ok(())
 }

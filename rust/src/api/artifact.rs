@@ -1,0 +1,457 @@
+//! Versioned, self-describing model artifacts — the facade's output type.
+//!
+//! An [`Artifact`] wraps the trained model (binary [`OdmModel`] or
+//! one-vs-rest [`MulticlassModel`]) together with its training metadata
+//! ([`TrainMeta`]: method, kernel, hyperparameters, wall clock, solver
+//! telemetry) and owns the downstream surface: [`Artifact::compile_plan`],
+//! [`Artifact::serve`], [`Artifact::accuracy`], [`Artifact::save`] /
+//! [`Artifact::load`].
+//!
+//! # On-disk format
+//!
+//! [`Artifact::save`] writes version-[`FORMAT_VERSION`] JSON:
+//!
+//! ```json
+//! {"format_version": 1,
+//!  "model": { ...the model payload... },
+//!  "meta":  {"method": "sodm", "kernel": "rbf", "gamma": 0.5, ...}}
+//! ```
+//!
+//! The `model` payload is exactly the JSON [`OdmModel::to_json`] /
+//! [`MulticlassModel::to_json`] have always produced (discriminated by its
+//! `kind` field), so the model sub-object is independently readable by the
+//! per-model loaders.
+//!
+//! **Legacy (v0) compatibility.** Before the artifact format existed, the
+//! CLI saved bare model JSON (the payload with no `format_version` /
+//! `meta` envelope). [`Artifact::load`] detects the missing envelope and
+//! migrates: the model parses through the unchanged per-model loaders
+//! (bit-exact — the migration adds metadata, it never rewrites model
+//! numbers) and the metadata is marked `method: "unknown"`. Files with a
+//! `format_version` newer than this build are rejected with a clear error
+//! instead of being misread.
+
+use crate::data::Rows;
+use crate::infer::{MulticlassPlan, ScoringPlan};
+use crate::kernel::KernelKind;
+use crate::multiclass::{MulticlassDataset, MulticlassModel};
+use crate::odm::{OdmModel, OdmParams};
+use crate::serve::{serve, serve_multiclass, Backend, ServeConfig, ServerHandle};
+use crate::util::json::{jstr, Json};
+
+/// Current artifact JSON format version ([`Artifact::save`] writes it;
+/// [`Artifact::load`] accepts `1..=FORMAT_VERSION` plus envelope-less v0).
+pub const FORMAT_VERSION: usize = 1;
+
+/// The model payload of an [`Artifact`]: one binary classifier or K
+/// one-vs-rest classifiers.
+#[derive(Clone, Debug)]
+pub enum ArtifactModel {
+    /// A binary ±1 classifier.
+    Binary(OdmModel),
+    /// A K-class one-vs-rest classifier.
+    Multiclass(MulticlassModel),
+}
+
+impl ArtifactModel {
+    /// The kernel the model scores with (class 0's kernel for multiclass
+    /// models — OVR classes always share one kernel).
+    pub fn kernel(&self) -> KernelKind {
+        fn of(m: &OdmModel) -> KernelKind {
+            match m {
+                OdmModel::Linear { .. } => KernelKind::Linear,
+                OdmModel::Kernel { kernel, .. } => *kernel,
+                OdmModel::SparseKernel { kernel, .. } => *kernel,
+            }
+        }
+        match self {
+            ArtifactModel::Binary(m) => of(m),
+            ArtifactModel::Multiclass(m) => of(&m.models[0]),
+        }
+    }
+}
+
+/// Training metadata carried by every artifact. Legacy (v0) artifacts load
+/// with `method: "unknown"` and zeroed telemetry — the model payload is the
+/// only thing a v0 file records.
+#[derive(Clone, Debug)]
+pub struct TrainMeta {
+    /// Method name ([`crate::api::Method::name`]); `"unknown"` for migrated
+    /// v0 artifacts.
+    pub method: String,
+    /// Kernel the model was trained with.
+    pub kernel: KernelKind,
+    /// ODM hyperparameters (λ, θ, υ) of the training run.
+    pub params: OdmParams,
+    /// Training wall-clock seconds.
+    pub seconds: f64,
+    /// Total DCD sweeps across every local solve (0 for gradient methods).
+    pub sweeps: usize,
+    /// Total DCD coordinate updates (0 for gradient methods).
+    pub updates: u64,
+    /// Whether every local solve converged within its budget.
+    pub converged: bool,
+    /// Mean shrink ratio across local solves (0 where not reported).
+    pub shrink_ratio: f64,
+}
+
+impl TrainMeta {
+    /// Metadata for a migrated v0 (envelope-less) model file: kernel comes
+    /// from the model itself, everything else is unknown.
+    pub fn legacy(model: &ArtifactModel) -> Self {
+        TrainMeta {
+            method: "unknown".to_string(),
+            kernel: model.kernel(),
+            params: OdmParams::default(),
+            seconds: 0.0,
+            sweeps: 0,
+            updates: 0,
+            converged: false,
+            shrink_ratio: 0.0,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let (kname, gamma) = match self.kernel {
+            KernelKind::Linear => ("linear", 0.0),
+            KernelKind::Rbf { gamma } => ("rbf", gamma as f64),
+        };
+        Json::obj(vec![
+            ("method", jstr(self.method.clone())),
+            ("kernel", jstr(kname)),
+            ("gamma", Json::Num(gamma)),
+            ("lambda", Json::Num(self.params.lambda as f64)),
+            ("theta", Json::Num(self.params.theta as f64)),
+            ("upsilon", Json::Num(self.params.upsilon as f64)),
+            ("seconds", Json::Num(self.seconds)),
+            ("sweeps", Json::Num(self.sweeps as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("shrink_ratio", Json::Num(self.shrink_ratio)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let kernel = match j.req("kernel")?.as_str()? {
+            "linear" => KernelKind::Linear,
+            "rbf" => KernelKind::Rbf { gamma: j.req("gamma")?.as_f64()? as f32 },
+            other => crate::bail!("unknown meta kernel {other:?}"),
+        };
+        Ok(TrainMeta {
+            method: j.req("method")?.as_str()?.to_string(),
+            kernel,
+            params: OdmParams {
+                lambda: j.req("lambda")?.as_f64()? as f32,
+                theta: j.req("theta")?.as_f64()? as f32,
+                upsilon: j.req("upsilon")?.as_f64()? as f32,
+            },
+            seconds: j.req("seconds")?.as_f64()?,
+            sweeps: j.req("sweeps")?.as_usize()?,
+            updates: j.req("updates")?.as_f64()? as u64,
+            converged: j.req("converged")?.as_bool()?,
+            shrink_ratio: j.req("shrink_ratio")?.as_f64()?,
+        })
+    }
+}
+
+/// A compiled scoring plan for either artifact shape (see
+/// [`Artifact::compile_plan`]): hold one for repeated batch scoring instead
+/// of recompiling per call.
+pub enum ArtifactPlan {
+    /// One compiled binary plan.
+    Binary(ScoringPlan),
+    /// K per-class plans with argmax prediction.
+    Multiclass(MulticlassPlan),
+}
+
+impl ArtifactPlan {
+    /// The binary plan, if this artifact is binary.
+    pub fn as_binary(&self) -> Option<&ScoringPlan> {
+        match self {
+            ArtifactPlan::Binary(p) => Some(p),
+            ArtifactPlan::Multiclass(_) => None,
+        }
+    }
+
+    /// The multiclass plan, if this artifact is multiclass.
+    pub fn as_multiclass(&self) -> Option<&MulticlassPlan> {
+        match self {
+            ArtifactPlan::Binary(_) => None,
+            ArtifactPlan::Multiclass(p) => Some(p),
+        }
+    }
+
+    /// Feature dimensionality the plan scores.
+    pub fn input_cols(&self) -> usize {
+        match self {
+            ArtifactPlan::Binary(p) => p.input_cols(),
+            ArtifactPlan::Multiclass(p) => p.input_cols(),
+        }
+    }
+}
+
+/// A trained model plus its training metadata, behind the versioned JSON
+/// format described in the [module docs](self).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    /// The trained model.
+    pub model: ArtifactModel,
+    /// Training metadata.
+    pub meta: TrainMeta,
+}
+
+impl Artifact {
+    /// True for one-vs-rest multiclass artifacts.
+    pub fn is_multiclass(&self) -> bool {
+        matches!(self.model, ArtifactModel::Multiclass(_))
+    }
+
+    /// The binary model, if this artifact is binary.
+    pub fn as_binary(&self) -> Option<&OdmModel> {
+        match &self.model {
+            ArtifactModel::Binary(m) => Some(m),
+            ArtifactModel::Multiclass(_) => None,
+        }
+    }
+
+    /// The multiclass model, if this artifact is multiclass.
+    pub fn as_multiclass(&self) -> Option<&MulticlassModel> {
+        match &self.model {
+            ArtifactModel::Binary(_) => None,
+            ArtifactModel::Multiclass(m) => Some(m),
+        }
+    }
+
+    /// Feature dimensionality the model scores.
+    pub fn input_cols(&self) -> usize {
+        match &self.model {
+            ArtifactModel::Binary(m) => m.input_cols(),
+            ArtifactModel::Multiclass(m) => m.input_cols(),
+        }
+    }
+
+    /// Support vectors (total across classes for multiclass artifacts;
+    /// feature dimension for linear models).
+    pub fn support_size(&self) -> usize {
+        match &self.model {
+            ArtifactModel::Binary(m) => m.support_size(),
+            ArtifactModel::Multiclass(m) => m.support_size(),
+        }
+    }
+
+    /// `Some(K)` for multiclass artifacts, `None` for binary ones.
+    pub fn n_classes(&self) -> Option<usize> {
+        match &self.model {
+            ArtifactModel::Binary(_) => None,
+            ArtifactModel::Multiclass(m) => Some(m.n_classes()),
+        }
+    }
+
+    /// Compile the scoring plan(s) once for repeated batch scoring.
+    pub fn compile_plan(&self) -> ArtifactPlan {
+        match &self.model {
+            ArtifactModel::Binary(m) => ArtifactPlan::Binary(ScoringPlan::compile(m)),
+            ArtifactModel::Multiclass(m) => ArtifactPlan::Multiclass(m.compile()),
+        }
+    }
+
+    /// Binary test accuracy on rows of either backing. Errors on multiclass
+    /// artifacts — use [`Artifact::accuracy_multiclass`].
+    pub fn accuracy<'a>(&self, data: impl Into<Rows<'a>>) -> crate::Result<f64> {
+        match &self.model {
+            ArtifactModel::Binary(m) => Ok(m.accuracy(data.into())),
+            ArtifactModel::Multiclass(_) => {
+                Err(crate::err!("multiclass artifact: use accuracy_multiclass"))
+            }
+        }
+    }
+
+    /// Multiclass accuracy against a dataset's class ids. Errors on binary
+    /// artifacts — use [`Artifact::accuracy`].
+    pub fn accuracy_multiclass(
+        &self,
+        ds: &MulticlassDataset,
+        workers: usize,
+    ) -> crate::Result<f64> {
+        match &self.model {
+            ArtifactModel::Binary(_) => Err(crate::err!("binary artifact: use accuracy")),
+            ArtifactModel::Multiclass(m) => Ok(m.accuracy(ds, workers)),
+        }
+    }
+
+    /// Binary decision values for every row of either backing (compiled
+    /// plan, block-scored). Errors on multiclass artifacts.
+    pub fn decisions<'a>(&self, data: impl Into<Rows<'a>>) -> crate::Result<Vec<f64>> {
+        match &self.model {
+            ArtifactModel::Binary(m) => Ok(m.decisions(data.into())),
+            ArtifactModel::Multiclass(_) => {
+                Err(crate::err!("multiclass artifact: compile_plan() and score per class"))
+            }
+        }
+    }
+
+    /// Start a native model server for this artifact (binary servers answer
+    /// [`ServerHandle::score`](crate::serve::ServerHandle::score), multiclass
+    /// servers [`ServerHandle::score_multiclass`]). Clones the model into
+    /// the server; callers done with the artifact use [`Artifact::into_serve`]
+    /// to move the support vectors instead.
+    pub fn serve(&self, cfg: ServeConfig) -> crate::Result<ServerHandle> {
+        self.serve_with_backend(Backend::Native, cfg)
+    }
+
+    /// [`Artifact::serve`] with an explicit scoring backend. Multiclass
+    /// artifacts serve natively only (per-class expansions have no PJRT
+    /// tile layout).
+    pub fn serve_with_backend(
+        &self,
+        backend: Backend,
+        cfg: ServeConfig,
+    ) -> crate::Result<ServerHandle> {
+        self.clone().into_serve_with_backend(backend, cfg)
+    }
+
+    /// Consuming [`Artifact::serve`]: moves the model into the server, so
+    /// large support-vector sets are never duplicated at startup.
+    pub fn into_serve(self, cfg: ServeConfig) -> crate::Result<ServerHandle> {
+        self.into_serve_with_backend(Backend::Native, cfg)
+    }
+
+    /// Consuming [`Artifact::serve_with_backend`].
+    pub fn into_serve_with_backend(
+        self,
+        backend: Backend,
+        cfg: ServeConfig,
+    ) -> crate::Result<ServerHandle> {
+        match self.model {
+            ArtifactModel::Binary(m) => serve(m, backend, cfg),
+            ArtifactModel::Multiclass(m) => {
+                crate::ensure!(
+                    matches!(backend, Backend::Native),
+                    "multiclass artifacts serve natively only"
+                );
+                serve_multiclass(m, cfg)
+            }
+        }
+    }
+
+    /// Serialize as version-[`FORMAT_VERSION`] artifact JSON.
+    pub fn to_json(&self) -> Json {
+        let model = match &self.model {
+            ArtifactModel::Binary(m) => m.to_json(),
+            ArtifactModel::Multiclass(m) => m.to_json(),
+        };
+        Json::obj(vec![
+            ("format_version", Json::Num(FORMAT_VERSION as f64)),
+            ("model", model),
+            ("meta", self.meta.to_json()),
+        ])
+    }
+
+    /// Parse artifact JSON: the versioned envelope, or a legacy (v0) bare
+    /// model payload (see the [module docs](self) for the migration shim).
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        match j.get("format_version") {
+            None => {
+                let model = model_from_json(j)?;
+                let meta = TrainMeta::legacy(&model);
+                Ok(Artifact { model, meta })
+            }
+            Some(v) => {
+                let v = v.as_usize()?;
+                crate::ensure!(
+                    v >= 1,
+                    "artifact format_version {v} is invalid — legacy (v0) files are bare \
+                     model payloads without a format_version field"
+                );
+                crate::ensure!(
+                    v <= FORMAT_VERSION,
+                    "artifact format_version {v} is newer than this build supports \
+                     (<= {FORMAT_VERSION})"
+                );
+                let model = model_from_json(j.req("model")?)?;
+                let meta = TrainMeta::from_json(j.req("meta")?)?;
+                Ok(Artifact { model, meta })
+            }
+        }
+    }
+
+    /// Save as versioned artifact JSON.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load an artifact (current format or legacy v0 model JSON).
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Parse a model payload, dispatching on its `kind` discriminator (the
+/// multiclass kind, else the three binary kinds via [`OdmModel::from_json`]).
+fn model_from_json(j: &Json) -> crate::Result<ArtifactModel> {
+    match j.req("kind")?.as_str()? {
+        "multiclass_ovr" => Ok(ArtifactModel::Multiclass(MulticlassModel::from_json(j)?)),
+        _ => Ok(ArtifactModel::Binary(OdmModel::from_json(j)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_artifact() -> Artifact {
+        let model = ArtifactModel::Binary(OdmModel::Linear { w: vec![1.0, -2.0, 0.5] });
+        let meta = TrainMeta::legacy(&model);
+        Artifact { model, meta }
+    }
+
+    #[test]
+    fn v1_envelope_round_trips() {
+        let a = linear_artifact();
+        let j = a.to_json();
+        assert_eq!(j.req("format_version").unwrap().as_usize().unwrap(), FORMAT_VERSION);
+        let b = Artifact::from_json(&j).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(b.meta.method, "unknown");
+    }
+
+    #[test]
+    fn v0_bare_model_json_migrates() {
+        let m = OdmModel::Linear { w: vec![0.25, -0.5] };
+        let a = Artifact::from_json(&m.to_json()).unwrap();
+        let ArtifactModel::Binary(back) = &a.model else { panic!("binary payload") };
+        assert_eq!(back.to_json().to_string(), m.to_json().to_string());
+        assert_eq!(a.meta.method, "unknown");
+        assert_eq!(a.meta.kernel, KernelKind::Linear);
+    }
+
+    #[test]
+    fn future_versions_are_rejected() {
+        let j = Json::obj(vec![
+            ("format_version", Json::Num(FORMAT_VERSION as f64 + 1.0)),
+            ("model", OdmModel::Linear { w: vec![1.0] }.to_json()),
+            ("meta", linear_artifact().meta.to_json()),
+        ]);
+        let err = Artifact::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("format_version"), "{err}");
+    }
+
+    #[test]
+    fn typed_accessors_disagree_by_shape() {
+        let a = linear_artifact();
+        assert!(!a.is_multiclass());
+        assert!(a.as_binary().is_some() && a.as_multiclass().is_none());
+        assert_eq!(a.n_classes(), None);
+        assert_eq!(a.input_cols(), 3);
+        assert!(a.accuracy_multiclass(&mc_fixture(), 1).is_err());
+        let plan = a.compile_plan();
+        assert!(plan.as_binary().is_some() && plan.as_multiclass().is_none());
+        assert_eq!(plan.input_cols(), 3);
+    }
+
+    fn mc_fixture() -> MulticlassDataset {
+        crate::multiclass::MulticlassSynthSpec::new(2, 10, 3, 1).generate()
+    }
+}

@@ -1,0 +1,1015 @@
+//! Unified estimator facade: one typed [`TrainSpec`] in, one [`Artifact`]
+//! out, for every training regime in the paper.
+//!
+//! The paper presents SODM as *one* method family with interchangeable
+//! regimes — the exact ODM reference, the distribution-aware-partition
+//! hierarchical merge for nonlinear kernels (Algorithm 1), the
+//! communication-efficient DSVRG accelerator for linear kernels
+//! (Algorithm 2), and the scalable-QP baselines it compares against. The
+//! crate historically exposed those as nine unrelated entry points
+//! (`train_exact_odm`, `train_sodm`, `train_dsvrg`, …), each with its own
+//! config struct and return type. This module is the single typed front
+//! door:
+//!
+//! * [`TrainSpec`] — a builder over `method × kernel × OdmParams ×
+//!   SolveBudget × PartitionStrategy × multiclass`, validated into typed
+//!   [`SpecError`]s at [`TrainSpec::build`] time (bad method/kernel combos
+//!   like `dsvrg + rbf`, zero workers, negative gamma, …).
+//! * [`train`] — dispatches a validated spec over [`TrainData`] (dense,
+//!   CSR, or multiclass) to the right trainer and returns an [`Artifact`]:
+//!   the model plus training metadata behind a versioned, self-describing
+//!   JSON format (see [`artifact`]).
+//! * [`train_run`] — the harness variant: also returns per-level /
+//!   per-checkpoint model [`TrainSnapshot`]s (the "stop at different
+//!   levels" curves of the paper's figures), per-class solver stats for
+//!   one-vs-rest runs, and accepts a [`SimCluster`] for communication
+//!   accounting.
+//!
+//! The CLI (`main.rs`), the experiment harness ([`crate::exp`]), and the
+//! examples all train through this facade; the per-method modules
+//! ([`crate::sodm`], [`crate::svrg`], [`crate::baselines`], …) remain the
+//! implementation layer.
+//!
+//! ```no_run
+//! use sodm::api::{self, Method, TrainSpec};
+//! use sodm::data::synth::SynthSpec;
+//! use sodm::kernel::KernelKind;
+//!
+//! # fn main() -> sodm::Result<()> {
+//! let ds = SynthSpec::named("svmguide1", 0.2, 7).generate();
+//! let (train, test) = ds.split(0.8, 42);
+//! let spec = TrainSpec::new(Method::Sodm)
+//!     .kernel(KernelKind::Rbf { gamma: 0.5 })
+//!     .tree(4, 2, 16)
+//!     .build()?;
+//! let artifact = api::train(&spec, &train)?;
+//! println!("test accuracy {:.3}", artifact.accuracy(&test)?);
+//! artifact.save("model.json")?;
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod artifact;
+
+pub use artifact::{Artifact, ArtifactModel, ArtifactPlan, TrainMeta, FORMAT_VERSION};
+
+use std::time::Instant;
+
+use crate::baselines::cascade::{train_cascade, CascadeConfig};
+use crate::baselines::dip::{train_dip, DipConfig};
+use crate::baselines::hierarchical::{train_hierarchical, HierConfig};
+use crate::baselines::{LocalSolverKind, MetaRun};
+use crate::cluster::SimCluster;
+use crate::data::libsvm::LoadedDataset;
+use crate::data::sparse::SparseDataset;
+use crate::data::{Dataset, Rows};
+use crate::kernel::KernelKind;
+use crate::multiclass::{train_ovr, MulticlassDataset, OvrConfig};
+use crate::odm::{train_exact_odm_stats, OdmModel, OdmParams};
+use crate::partition::PartitionStrategy;
+use crate::qp::{SolveBudget, SolveStats};
+use crate::sodm::{train_sodm_traced, SodmConfig, SodmRun};
+use crate::svrg::{train_csvrg, train_dsvrg, train_svrg, NativeGrad, SvrgConfig};
+
+/// The training regime a [`TrainSpec`] dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Single-machine exact ODM dual by DCD — the paper's "ODM" reference.
+    ExactOdm,
+    /// SODM proper: the hierarchical merge of Algorithm 1 for nonlinear
+    /// kernels. Linear-kernel specs route to the DSVRG accelerator of
+    /// Algorithm 2 (paper §3.3), exactly like the CLI and tables do.
+    Sodm,
+    /// Distributed SVRG (Algorithm 2). Linear kernel only.
+    Dsvrg,
+    /// Single-machine SVRG comparator (Fig. 4). Linear kernel only.
+    Svrg,
+    /// Coreset-SVRG comparator (Fig. 4). Linear kernel only.
+    Csvrg,
+    /// Cascade baseline (Graf et al. 2004): random partitions, pairwise
+    /// support-vector merge tree. Dense data only.
+    Cascade,
+    /// DiP baseline (Singh et al. 2017): input-space distribution-preserving
+    /// partitions, one parallel level. Dense data only.
+    Dip,
+    /// Divide-and-Conquer baseline (Hsieh et al. 2014): kernel-k-means
+    /// clusters as partitions, hierarchical merge. Dense data only.
+    Dc,
+    /// SSVM: the SODM pipeline (stratified partitions, hierarchical merge)
+    /// with the hinge-loss SVM local solver. Dense data only.
+    Ssvm,
+}
+
+impl Method {
+    /// Every method, in CLI-name order.
+    pub const ALL: [Method; 9] = [
+        Method::ExactOdm,
+        Method::Sodm,
+        Method::Dsvrg,
+        Method::Svrg,
+        Method::Csvrg,
+        Method::Cascade,
+        Method::Dip,
+        Method::Dc,
+        Method::Ssvm,
+    ];
+
+    /// Parse a CLI method name (`odm`, `sodm`, `dsvrg`, `svrg`, `csvrg`,
+    /// `cascade`, `dip`, `dc`, `ssvm`).
+    pub fn parse(name: &str) -> Result<Method, SpecError> {
+        Method::ALL
+            .into_iter()
+            .find(|m| m.name() == name)
+            .ok_or_else(|| SpecError::UnknownMethod { given: name.to_string() })
+    }
+
+    /// The CLI / artifact-metadata name of this method.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::ExactOdm => "odm",
+            Method::Sodm => "sodm",
+            Method::Dsvrg => "dsvrg",
+            Method::Svrg => "svrg",
+            Method::Csvrg => "csvrg",
+            Method::Cascade => "cascade",
+            Method::Dip => "dip",
+            Method::Dc => "dc",
+            Method::Ssvm => "ssvm",
+        }
+    }
+
+    /// Gradient-family methods that only optimize the linear-kernel primal
+    /// (frontends use this to default the kernel; pairing them with an RBF
+    /// spec is the typed [`SpecError::LinearOnly`]).
+    pub fn linear_only(&self) -> bool {
+        matches!(self, Method::Dsvrg | Method::Svrg | Method::Csvrg)
+    }
+
+    /// Baseline meta-solvers that require the dense backing.
+    fn dense_only(&self) -> bool {
+        matches!(self, Method::Cascade | Method::Dip | Method::Dc | Method::Ssvm)
+    }
+
+    /// Methods whose partition schedule is the `p^levels` merge tree.
+    fn uses_tree(&self) -> bool {
+        matches!(self, Method::Sodm | Method::Cascade | Method::Dip | Method::Dc | Method::Ssvm)
+    }
+}
+
+/// The local dual solver the baseline meta-methods (`cascade`/`dip`/`dc`/
+/// `ssvm`) run on each partition. [`Method::Ssvm`] always solves the SVM
+/// dual; the others default to the ODM dual with the spec's [`OdmParams`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LocalSolver {
+    /// ODM dual (paper Eqn. 2) — the default.
+    Odm,
+    /// Hinge-loss C-SVM dual (the paper's Table-4 `*-SVM` variants).
+    Svm {
+        /// SVM box constraint C.
+        c: f64,
+    },
+}
+
+/// One-vs-rest multiclass options (see [`crate::multiclass::train_ovr`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OvrOptions {
+    /// Share one unsigned Gram-row cache across the K class solves (the
+    /// measured-faster default; the kernel matrix is label-independent).
+    pub share_cache: bool,
+    /// Shared Gram-cache budget in bytes.
+    pub cache_bytes: usize,
+}
+
+impl Default for OvrOptions {
+    fn default() -> Self {
+        Self { share_cache: true, cache_bytes: 256 << 20 }
+    }
+}
+
+/// A structurally invalid [`TrainSpec`] — returned by [`TrainSpec::build`] /
+/// [`TrainSpec::validate`] instead of panicking inside a trainer, mirroring
+/// [`crate::serve::ServeConfig::validate`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// The method name is not one of [`Method::ALL`].
+    UnknownMethod {
+        /// The unrecognized name as given.
+        given: String,
+    },
+    /// A gradient-family method (`dsvrg`/`svrg`/`csvrg`) was paired with a
+    /// nonlinear kernel; they optimize the linear-kernel primal only.
+    LinearOnly {
+        /// The offending method's name.
+        method: &'static str,
+    },
+    /// RBF bandwidth must be finite and positive.
+    BadGamma {
+        /// The rejected bandwidth.
+        gamma: f64,
+    },
+    /// λ must be finite and positive.
+    BadLambda {
+        /// The rejected λ.
+        lambda: f64,
+    },
+    /// θ must lie in `[0, 1)`.
+    BadTheta {
+        /// The rejected θ.
+        theta: f64,
+    },
+    /// υ must lie in `(0, 1]`.
+    BadUpsilon {
+        /// The rejected υ.
+        upsilon: f64,
+    },
+    /// The solver convergence tolerance must be finite and positive.
+    BadEps {
+        /// The rejected tolerance.
+        eps: f64,
+    },
+    /// `budget.max_sweeps == 0`: the DCD solver would never move.
+    ZeroSweeps,
+    /// `workers == 0`: no worker would ever run a solve.
+    ZeroWorkers,
+    /// Tree methods need merge arity `p >= 2`.
+    MergeArity {
+        /// The rejected arity.
+        p: usize,
+    },
+    /// Stratified partitioning needs at least one stratum.
+    ZeroStratums,
+    /// Gradient methods need at least one epoch.
+    ZeroEpochs,
+    /// DSVRG needs at least one partition.
+    ZeroPartitions,
+    /// CSVRG needs a non-empty coreset.
+    ZeroCoreset,
+    /// SVM box constraint C must be finite and positive.
+    BadSvmC {
+        /// The rejected C.
+        c: f64,
+    },
+    /// The SVM local solver only applies to the baseline meta-methods
+    /// (`cascade`/`dip`/`dc`/`ssvm`).
+    SvmSolverUnsupported {
+        /// The offending method's name.
+        method: &'static str,
+    },
+    /// One-vs-rest multiclass training wraps the exact ODM dual per class;
+    /// other methods cannot train multiclass specs.
+    MulticlassUnsupported {
+        /// The offending method's name.
+        method: &'static str,
+    },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::UnknownMethod { given } => {
+                let names: Vec<&str> = Method::ALL.iter().map(|m| m.name()).collect();
+                write!(f, "unknown method {given:?}; valid methods: {}", names.join("|"))
+            }
+            SpecError::LinearOnly { method } => {
+                write!(f, "method {method:?} optimizes the linear primal; use --kernel linear")
+            }
+            SpecError::BadGamma { gamma } => {
+                write!(f, "rbf gamma must be finite and > 0, got {gamma}")
+            }
+            SpecError::BadLambda { lambda } => {
+                write!(f, "lambda must be finite and > 0, got {lambda}")
+            }
+            SpecError::BadTheta { theta } => write!(f, "theta must be in [0,1), got {theta}"),
+            SpecError::BadUpsilon { upsilon } => {
+                write!(f, "upsilon must be in (0,1], got {upsilon}")
+            }
+            SpecError::BadEps { eps } => {
+                write!(f, "solver eps must be finite and > 0, got {eps}")
+            }
+            SpecError::ZeroSweeps => write!(f, "budget.max_sweeps must be >= 1"),
+            SpecError::ZeroWorkers => write!(f, "workers must be >= 1"),
+            SpecError::MergeArity { p } => write!(f, "merge arity p must be >= 2, got {p}"),
+            SpecError::ZeroStratums => write!(f, "stratums must be >= 1"),
+            SpecError::ZeroEpochs => write!(f, "epochs must be >= 1"),
+            SpecError::ZeroPartitions => write!(f, "partitions must be >= 1"),
+            SpecError::ZeroCoreset => write!(f, "coreset must be >= 1"),
+            SpecError::BadSvmC { c } => write!(f, "svm C must be finite and > 0, got {c}"),
+            SpecError::SvmSolverUnsupported { method } => {
+                write!(f, "the SVM local solver applies to cascade|dip|dc|ssvm, not {method:?}")
+            }
+            SpecError::MulticlassUnsupported { method } => {
+                write!(f, "one-vs-rest multiclass requires method \"odm\", got {method:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Typed, validated description of one training run — the facade's input.
+///
+/// Construct with [`TrainSpec::new`], chain the builder setters, finish
+/// with [`TrainSpec::build`] (which runs [`TrainSpec::validate`] and
+/// returns typed [`SpecError`]s). Fields are public for inspection;
+/// [`train`] re-validates, so a hand-mutated spec cannot bypass the checks.
+///
+/// Knobs that a method does not use are simply ignored by it (the `p^levels`
+/// tree for gradient methods, epochs for QP methods, …). Method-defining
+/// conventions are fixed in dispatch, matching the paper's setup: `dip`
+/// always uses 8 input-space clusters, `dc` always partitions by
+/// kernel-k-means (`embed_dim` 16), `ssvm` always solves the SVM dual.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    /// Training regime (see [`Method`]).
+    pub method: Method,
+    /// Kernel. Defaults to [`KernelKind::Linear`].
+    pub kernel: KernelKind,
+    /// ODM hyperparameters (λ, θ, υ).
+    pub params: OdmParams,
+    /// Per-solve DCD budget (tolerance, sweep cap, shrinking, …).
+    pub budget: SolveBudget,
+    /// Local dual solver for the baseline meta-methods.
+    pub solver: LocalSolver,
+    /// Worker threads for parallel phases (and the simulated cluster width
+    /// when [`train`] creates one internally).
+    pub workers: usize,
+    /// Merge arity `p` of the partition tree (tree methods).
+    pub p: usize,
+    /// Tree depth `L`; the initial partition count is `p^levels`.
+    pub levels: usize,
+    /// Stratum count for the distribution-aware partitioner (SODM, DSVRG,
+    /// SSVM).
+    pub stratums: usize,
+    /// Partition strategy for SODM's merge tree. [`TrainSpec::tree`] keeps
+    /// it in sync with `stratums`; baselines use their defining strategies.
+    pub strategy: PartitionStrategy,
+    /// Relative objective improvement between tree levels below which the
+    /// run is declared converged (Algorithm 1 early exit).
+    pub level_tol: f64,
+    /// Whether SODM solves the final fully-merged problem (level 0).
+    pub final_exact: bool,
+    /// Epochs for the gradient family.
+    pub epochs: usize,
+    /// Gradient step size η; `0.0` auto-scales to ~0.5/L.
+    pub eta: f64,
+    /// Node count K for DSVRG.
+    pub partitions: usize,
+    /// Coreset size for CSVRG.
+    pub coreset: usize,
+    /// Gradient-method checkpoints per epoch (the figure curves).
+    pub checkpoints_per_epoch: usize,
+    /// DSVRG: consume auxiliary arrays in violation order instead of a
+    /// random shuffle.
+    pub ordered: bool,
+    /// `Some` trains one-vs-rest multiclass over a
+    /// [`MulticlassDataset`] (method must be [`Method::ExactOdm`]).
+    pub multiclass: Option<OvrOptions>,
+    /// Seed for partitioning, sweep permutations, and shuffles.
+    pub seed: u64,
+}
+
+impl TrainSpec {
+    /// A spec for `method` with the crate-default knobs (linear kernel,
+    /// default [`OdmParams`]/[`SolveBudget`], `4^2` tree, 8 stratums,
+    /// 6 epochs, 8 partitions, pool-width workers).
+    pub fn new(method: Method) -> Self {
+        Self {
+            method,
+            kernel: KernelKind::Linear,
+            params: OdmParams::default(),
+            budget: SolveBudget::default(),
+            solver: LocalSolver::Odm,
+            workers: crate::util::pool::num_cpus(),
+            p: 4,
+            levels: 2,
+            stratums: 8,
+            strategy: PartitionStrategy::StratifiedRkhs { stratums: 8 },
+            level_tol: 1e-3,
+            final_exact: true,
+            epochs: 6,
+            eta: 0.0,
+            partitions: 8,
+            coreset: 256,
+            checkpoints_per_epoch: 3,
+            ordered: false,
+            multiclass: None,
+            seed: 0x50D,
+        }
+    }
+
+    /// Set the kernel.
+    pub fn kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Set the ODM hyperparameters.
+    pub fn params(mut self, params: OdmParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Set the per-solve DCD budget.
+    pub fn budget(mut self, budget: SolveBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Set the baseline local solver (see [`LocalSolver`]).
+    pub fn solver(mut self, solver: LocalSolver) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    /// Set the worker-thread count.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Configure the `p^levels` merge tree and the matching stratified
+    /// partitioner (`stratums` strata).
+    pub fn tree(mut self, p: usize, levels: usize, stratums: usize) -> Self {
+        self.p = p;
+        self.levels = levels;
+        self.stratums = stratums;
+        self.strategy = PartitionStrategy::StratifiedRkhs { stratums };
+        self
+    }
+
+    /// Override the SODM partition strategy.
+    pub fn strategy(mut self, strategy: PartitionStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Set the between-level convergence tolerance (Algorithm 1 early exit).
+    pub fn level_tol(mut self, tol: f64) -> Self {
+        self.level_tol = tol;
+        self
+    }
+
+    /// Set whether SODM solves the final fully-merged problem.
+    pub fn final_exact(mut self, final_exact: bool) -> Self {
+        self.final_exact = final_exact;
+        self
+    }
+
+    /// Set the gradient-family epoch count.
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Set the gradient step size (0.0 auto-scales).
+    pub fn eta(mut self, eta: f64) -> Self {
+        self.eta = eta;
+        self
+    }
+
+    /// Set the DSVRG node count.
+    pub fn partitions(mut self, partitions: usize) -> Self {
+        self.partitions = partitions;
+        self
+    }
+
+    /// Set the stratified-partitioner stratum count without touching the
+    /// tree shape (the gradient path shares this knob).
+    pub fn stratums(mut self, stratums: usize) -> Self {
+        self.stratums = stratums;
+        self
+    }
+
+    /// Set the CSVRG coreset size.
+    pub fn coreset(mut self, coreset: usize) -> Self {
+        self.coreset = coreset;
+        self
+    }
+
+    /// Set the gradient-method checkpoint density.
+    pub fn checkpoints_per_epoch(mut self, n: usize) -> Self {
+        self.checkpoints_per_epoch = n;
+        self
+    }
+
+    /// Enable DSVRG violation-ordered consumption.
+    pub fn ordered(mut self, ordered: bool) -> Self {
+        self.ordered = ordered;
+        self
+    }
+
+    /// Train one-vs-rest multiclass with the given options (requires
+    /// [`Method::ExactOdm`] and [`TrainData::Multiclass`] data).
+    pub fn multiclass(mut self, opts: OvrOptions) -> Self {
+        self.multiclass = Some(opts);
+        self
+    }
+
+    /// Set the seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// True when this spec runs the linear-kernel gradient path (explicit
+    /// gradient methods, or SODM routed to DSVRG by a linear kernel).
+    fn runs_gradient(&self) -> bool {
+        self.method.linear_only()
+            || (self.method == Method::Sodm && matches!(self.kernel, KernelKind::Linear))
+    }
+
+    /// Check every structural invariant, returning the first violation as a
+    /// typed [`SpecError`].
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if let KernelKind::Rbf { gamma } = self.kernel {
+            if !(gamma.is_finite() && gamma > 0.0) {
+                return Err(SpecError::BadGamma { gamma: gamma as f64 });
+            }
+        }
+        let p = &self.params;
+        if !(p.lambda.is_finite() && p.lambda > 0.0) {
+            return Err(SpecError::BadLambda { lambda: p.lambda as f64 });
+        }
+        if !(p.theta.is_finite() && (0.0..1.0).contains(&p.theta)) {
+            return Err(SpecError::BadTheta { theta: p.theta as f64 });
+        }
+        if !(p.upsilon.is_finite() && p.upsilon > 0.0 && p.upsilon <= 1.0) {
+            return Err(SpecError::BadUpsilon { upsilon: p.upsilon as f64 });
+        }
+        if !(self.budget.eps.is_finite() && self.budget.eps > 0.0) {
+            return Err(SpecError::BadEps { eps: self.budget.eps });
+        }
+        if self.budget.max_sweeps == 0 {
+            return Err(SpecError::ZeroSweeps);
+        }
+        if self.workers == 0 {
+            return Err(SpecError::ZeroWorkers);
+        }
+        if self.method.linear_only() && !matches!(self.kernel, KernelKind::Linear) {
+            return Err(SpecError::LinearOnly { method: self.method.name() });
+        }
+        if self.method.uses_tree() && self.p < 2 {
+            return Err(SpecError::MergeArity { p: self.p });
+        }
+        let stratified = matches!(self.method, Method::Sodm | Method::Dsvrg | Method::Ssvm);
+        if stratified && self.stratums == 0 {
+            return Err(SpecError::ZeroStratums);
+        }
+        if self.runs_gradient() && self.epochs == 0 {
+            return Err(SpecError::ZeroEpochs);
+        }
+        let runs_dsvrg = self.method == Method::Dsvrg
+            || (self.method == Method::Sodm && matches!(self.kernel, KernelKind::Linear));
+        if runs_dsvrg && self.partitions == 0 {
+            return Err(SpecError::ZeroPartitions);
+        }
+        if self.method == Method::Csvrg && self.coreset == 0 {
+            return Err(SpecError::ZeroCoreset);
+        }
+        if let LocalSolver::Svm { c } = self.solver {
+            if !self.method.dense_only() {
+                return Err(SpecError::SvmSolverUnsupported { method: self.method.name() });
+            }
+            if !(c.is_finite() && c > 0.0) {
+                return Err(SpecError::BadSvmC { c });
+            }
+        }
+        if self.multiclass.is_some() && self.method != Method::ExactOdm {
+            return Err(SpecError::MulticlassUnsupported { method: self.method.name() });
+        }
+        Ok(())
+    }
+
+    /// Finish the builder: validate and return the spec (or the first typed
+    /// [`SpecError`]).
+    pub fn build(self) -> Result<TrainSpec, SpecError> {
+        self.validate()?;
+        Ok(self)
+    }
+}
+
+/// What [`train`] trains on: binary ±1-labelled rows of either backing, or
+/// a K-class dataset for one-vs-rest specs. `From` impls cover every data
+/// type in the crate, so call sites pass `&dataset` directly.
+pub enum TrainData<'a> {
+    /// Binary-labelled feature rows (dense or CSR).
+    Binary(Rows<'a>),
+    /// K-class dataset for one-vs-rest multiclass training.
+    Multiclass(&'a MulticlassDataset),
+}
+
+impl<'a> From<Rows<'a>> for TrainData<'a> {
+    fn from(rows: Rows<'a>) -> Self {
+        TrainData::Binary(rows)
+    }
+}
+
+impl<'a> From<&'a Dataset> for TrainData<'a> {
+    fn from(ds: &'a Dataset) -> Self {
+        TrainData::Binary(Rows::Dense(ds))
+    }
+}
+
+impl<'a> From<&'a SparseDataset> for TrainData<'a> {
+    fn from(ds: &'a SparseDataset) -> Self {
+        TrainData::Binary(Rows::Sparse(ds))
+    }
+}
+
+impl<'a> From<&'a LoadedDataset> for TrainData<'a> {
+    fn from(ds: &'a LoadedDataset) -> Self {
+        TrainData::Binary(ds.as_rows())
+    }
+}
+
+impl<'a> From<&'a MulticlassDataset> for TrainData<'a> {
+    fn from(ds: &'a MulticlassDataset) -> Self {
+        TrainData::Multiclass(ds)
+    }
+}
+
+/// One intermediate model along a training run — a tree level of the merge
+/// trainers or a gradient-method checkpoint. The harness turns these into
+/// the paper's time/accuracy curves.
+pub struct TrainSnapshot {
+    /// Seconds since training started, inclusive of this snapshot.
+    pub elapsed: f64,
+    /// Objective at this snapshot (block-diagonal dual for QP methods,
+    /// primal for gradient methods).
+    pub objective: f64,
+    /// Partition count at this snapshot (1 once fully merged).
+    pub partitions: usize,
+    /// Usable model assembled at this snapshot.
+    pub model: OdmModel,
+}
+
+/// Everything [`train_run`] returns beyond the artifact.
+pub struct TrainRun {
+    /// The trained model plus metadata (what [`train`] returns).
+    pub artifact: Artifact,
+    /// Per-level / per-checkpoint snapshots (empty for one-vs-rest runs).
+    pub snapshots: Vec<TrainSnapshot>,
+    /// Per-class solver telemetry of one-vs-rest runs (empty otherwise).
+    pub class_stats: Vec<SolveStats>,
+    /// Shared Gram-cache hit rate of one-vs-rest runs (0 otherwise).
+    pub cache_hit_rate: f64,
+}
+
+/// Train `spec` on `data` and return the [`Artifact`]. This is the single
+/// entry point every frontend dispatches through; see [`train_run`] for the
+/// harness variant with snapshots and cluster accounting. Snapshot models
+/// are not collected here, so no intermediate model is cloned beyond the
+/// artifact itself.
+pub fn train<'a>(spec: &TrainSpec, data: impl Into<TrainData<'a>>) -> crate::Result<Artifact> {
+    Ok(train_inner(spec, data.into(), None, false)?.artifact)
+}
+
+/// [`train`] plus per-level snapshots, per-class stats, and an optional
+/// [`SimCluster`] for communication accounting (a local single-node cluster
+/// is used when `None`).
+pub fn train_run<'a>(
+    spec: &TrainSpec,
+    data: impl Into<TrainData<'a>>,
+    cluster: Option<&SimCluster>,
+) -> crate::Result<TrainRun> {
+    train_inner(spec, data.into(), cluster, true)
+}
+
+fn train_inner(
+    spec: &TrainSpec,
+    data: TrainData<'_>,
+    cluster: Option<&SimCluster>,
+    collect_snapshots: bool,
+) -> crate::Result<TrainRun> {
+    spec.validate()?;
+    match data {
+        TrainData::Binary(rows) => {
+            crate::ensure!(
+                spec.multiclass.is_none(),
+                "spec is multiclass (one-vs-rest) but the data is binary rows — \
+                 pass a MulticlassDataset or drop .multiclass(...)"
+            );
+            crate::ensure!(rows.rows() > 0, "cannot train on an empty dataset");
+            train_binary(spec, rows, cluster, collect_snapshots)
+        }
+        TrainData::Multiclass(ds) => {
+            crate::ensure!(
+                spec.multiclass.is_some(),
+                "data is multiclass but the spec is binary — add .multiclass(...)"
+            );
+            train_multiclass(spec, ds)
+        }
+    }
+}
+
+/// Assemble the artifact metadata from the dispatch telemetry.
+struct MetaAcc {
+    sweeps: usize,
+    updates: u64,
+    converged: bool,
+    shrink_ratio: f64,
+}
+
+impl MetaAcc {
+    fn gradient() -> Self {
+        // Gradient methods run a fixed epoch schedule; there is no
+        // convergence flag or DCD telemetry to report.
+        MetaAcc { sweeps: 0, updates: 0, converged: true, shrink_ratio: 0.0 }
+    }
+}
+
+fn finish_meta(spec: &TrainSpec, seconds: f64, acc: MetaAcc) -> TrainMeta {
+    TrainMeta {
+        method: spec.method.name().to_string(),
+        kernel: spec.kernel,
+        params: spec.params,
+        seconds,
+        sweeps: acc.sweeps,
+        updates: acc.updates,
+        converged: acc.converged,
+        shrink_ratio: acc.shrink_ratio,
+    }
+}
+
+fn train_binary(
+    spec: &TrainSpec,
+    rows: Rows<'_>,
+    cluster: Option<&SimCluster>,
+    collect_snapshots: bool,
+) -> crate::Result<TrainRun> {
+    let t0 = Instant::now();
+    let mut snapshots: Vec<TrainSnapshot> = Vec::new();
+    let (model, seconds, acc): (OdmModel, f64, MetaAcc) = match spec.method {
+        Method::ExactOdm => {
+            let (m, stats) = train_exact_odm_stats(rows, &spec.kernel, &spec.params, &spec.budget);
+            let secs = t0.elapsed().as_secs_f64();
+            if collect_snapshots {
+                snapshots.push(TrainSnapshot {
+                    elapsed: secs,
+                    objective: stats.objective,
+                    partitions: 1,
+                    model: m.clone(),
+                });
+            }
+            let acc = MetaAcc {
+                sweeps: stats.sweeps,
+                updates: stats.updates,
+                converged: stats.converged,
+                shrink_ratio: stats.shrink_ratio,
+            };
+            (m, secs, acc)
+        }
+        Method::Sodm if !matches!(spec.kernel, KernelKind::Linear) => {
+            let cfg = SodmConfig {
+                p: spec.p,
+                levels: spec.levels,
+                stratums: spec.stratums,
+                strategy: spec.strategy,
+                budget: spec.budget,
+                level_tol: spec.level_tol,
+                final_exact: spec.final_exact,
+                seed: spec.seed,
+            };
+            let run = train_sodm_traced(rows, &spec.kernel, &spec.params, &cfg, cluster);
+            let SodmRun { model, trace, total_seconds, .. } = run;
+            let acc = MetaAcc {
+                sweeps: trace.iter().map(|l| l.sweeps).sum(),
+                updates: trace.iter().map(|l| l.updates).sum(),
+                converged: trace.iter().all(|l| l.all_converged),
+                shrink_ratio: trace.iter().map(|l| l.shrink_ratio).sum::<f64>()
+                    / trace.len().max(1) as f64,
+            };
+            if collect_snapshots {
+                for l in trace {
+                    snapshots.push(TrainSnapshot {
+                        elapsed: l.elapsed,
+                        objective: l.objective,
+                        partitions: l.n_partitions,
+                        model: l.model,
+                    });
+                }
+            }
+            (model, total_seconds, acc)
+        }
+        // Sodm + linear kernel routes to DSVRG (paper §3.3), and the
+        // explicit gradient methods land here directly.
+        Method::Sodm | Method::Dsvrg | Method::Svrg | Method::Csvrg => {
+            let cfg = SvrgConfig {
+                epochs: spec.epochs,
+                eta: spec.eta,
+                partitions: spec.partitions,
+                stratums: spec.stratums,
+                coreset: spec.coreset,
+                checkpoints_per_epoch: spec.checkpoints_per_epoch,
+                ordered: spec.ordered,
+                seed: spec.seed,
+            };
+            let grad = NativeGrad { workers: spec.workers };
+            let (run, partitions) = match spec.method {
+                Method::Svrg => (train_svrg(rows, &spec.params, &cfg, &grad), 1),
+                Method::Csvrg => (train_csvrg(rows, &spec.params, &cfg, &grad), 1),
+                _ => (train_dsvrg(rows, &spec.params, &cfg, cluster, &grad), spec.partitions),
+            };
+            if collect_snapshots {
+                for c in &run.checkpoints {
+                    snapshots.push(TrainSnapshot {
+                        elapsed: c.elapsed,
+                        objective: c.objective,
+                        partitions,
+                        model: OdmModel::Linear { w: c.w.clone() },
+                    });
+                }
+            }
+            (run.model, run.total_seconds, MetaAcc::gradient())
+        }
+        Method::Cascade | Method::Dip | Method::Dc | Method::Ssvm => {
+            let Rows::Dense(dense) = rows else {
+                crate::bail!(
+                    "method {:?} is dense-only; sparse data supports odm|sodm|dsvrg",
+                    spec.method.name()
+                )
+            };
+            let solver = match (spec.method, spec.solver) {
+                (Method::Ssvm, LocalSolver::Odm) => LocalSolverKind::Svm { c: 1.0 },
+                (_, LocalSolver::Svm { c }) => LocalSolverKind::Svm { c },
+                (_, LocalSolver::Odm) => LocalSolverKind::Odm(spec.params),
+            };
+            let run: MetaRun = match spec.method {
+                Method::Cascade => train_cascade(
+                    dense,
+                    &spec.kernel,
+                    solver,
+                    &CascadeConfig {
+                        leaves: spec.p.pow(spec.levels as u32),
+                        budget: spec.budget,
+                        seed: spec.seed,
+                    },
+                    cluster,
+                ),
+                Method::Dip => train_dip(
+                    dense,
+                    &spec.kernel,
+                    solver,
+                    &DipConfig {
+                        partitions: spec.p.pow(spec.levels as u32),
+                        clusters: 8,
+                        budget: spec.budget,
+                        seed: spec.seed,
+                    },
+                    cluster,
+                ),
+                Method::Dc => train_hierarchical(
+                    dense,
+                    &spec.kernel,
+                    solver,
+                    &HierConfig {
+                        p: spec.p,
+                        levels: spec.levels,
+                        strategy: PartitionStrategy::KernelKmeansClusters { embed_dim: 16 },
+                        budget: spec.budget,
+                        level_tol: spec.level_tol,
+                        seed: spec.seed,
+                    },
+                    cluster,
+                ),
+                _ => train_hierarchical(
+                    dense,
+                    &spec.kernel,
+                    solver,
+                    &HierConfig {
+                        p: spec.p,
+                        levels: spec.levels,
+                        strategy: PartitionStrategy::StratifiedRkhs { stratums: spec.stratums },
+                        budget: spec.budget,
+                        level_tol: spec.level_tol,
+                        seed: spec.seed,
+                    },
+                    cluster,
+                ),
+            };
+            let MetaRun { model, trace, total_seconds } = run;
+            let acc = MetaAcc {
+                sweeps: trace.iter().map(|l| l.sweeps).sum(),
+                updates: trace.iter().map(|l| l.updates).sum(),
+                // The meta-solvers run a fixed merge schedule and do not
+                // report a convergence flag.
+                converged: true,
+                shrink_ratio: 0.0,
+            };
+            if collect_snapshots {
+                for l in trace {
+                    snapshots.push(TrainSnapshot {
+                        elapsed: l.elapsed,
+                        objective: l.objective,
+                        partitions: l.n_partitions,
+                        model: l.model,
+                    });
+                }
+            }
+            (model, total_seconds, acc)
+        }
+    };
+    Ok(TrainRun {
+        artifact: Artifact {
+            model: ArtifactModel::Binary(model),
+            meta: finish_meta(spec, seconds, acc),
+        },
+        snapshots,
+        class_stats: Vec::new(),
+        cache_hit_rate: 0.0,
+    })
+}
+
+fn train_multiclass(spec: &TrainSpec, ds: &MulticlassDataset) -> crate::Result<TrainRun> {
+    let opts = spec.multiclass.unwrap_or_default();
+    crate::ensure!(ds.rows() > 0, "cannot train on an empty dataset");
+    crate::ensure!(ds.n_classes() >= 2, "one-vs-rest needs >= 2 classes");
+    let cfg = OvrConfig {
+        budget: spec.budget,
+        workers: spec.workers,
+        share_cache: opts.share_cache,
+        cache_bytes: opts.cache_bytes,
+    };
+    let run = train_ovr(ds, &spec.kernel, &spec.params, &cfg);
+    let acc = MetaAcc {
+        sweeps: run.stats.iter().map(|s| s.sweeps).sum(),
+        updates: run.stats.iter().map(|s| s.updates).sum(),
+        converged: run.stats.iter().all(|s| s.converged),
+        shrink_ratio: run.stats.iter().map(|s| s.shrink_ratio).sum::<f64>()
+            / run.stats.len().max(1) as f64,
+    };
+    Ok(TrainRun {
+        artifact: Artifact {
+            model: ArtifactModel::Multiclass(run.model),
+            meta: finish_meta(spec, run.seconds, acc),
+        },
+        snapshots: Vec::new(),
+        class_stats: run.stats,
+        cache_hit_rate: run.cache_hit_rate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn rbf_spec(method: Method) -> TrainSpec {
+        TrainSpec::new(method).kernel(KernelKind::Rbf { gamma: 0.5 })
+    }
+
+    #[test]
+    fn method_names_round_trip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(
+            Method::parse("nope").unwrap_err(),
+            SpecError::UnknownMethod { given: "nope".into() }
+        );
+    }
+
+    #[test]
+    fn build_rejects_bad_combinations() {
+        assert_eq!(
+            rbf_spec(Method::Dsvrg).build().unwrap_err(),
+            SpecError::LinearOnly { method: "dsvrg" }
+        );
+        assert_eq!(rbf_spec(Method::Sodm).workers(0).build().unwrap_err(), SpecError::ZeroWorkers);
+        assert_eq!(
+            rbf_spec(Method::Sodm).tree(1, 2, 8).build().unwrap_err(),
+            SpecError::MergeArity { p: 1 }
+        );
+        assert_eq!(
+            TrainSpec::new(Method::Sodm)
+                .kernel(KernelKind::Rbf { gamma: -2.0 })
+                .build()
+                .unwrap_err(),
+            SpecError::BadGamma { gamma: -2.0 }
+        );
+        assert_eq!(
+            rbf_spec(Method::Sodm).multiclass(OvrOptions::default()).build().unwrap_err(),
+            SpecError::MulticlassUnsupported { method: "sodm" }
+        );
+        assert!(rbf_spec(Method::Sodm).build().is_ok());
+        assert!(rbf_spec(Method::ExactOdm).multiclass(OvrOptions::default()).build().is_ok());
+    }
+
+    #[test]
+    fn train_checks_data_spec_agreement() {
+        let ds = SynthSpec { rows: 40, ..SynthSpec::named("svmguide1", 0.01, 3) }.generate();
+        let spec = rbf_spec(Method::ExactOdm).multiclass(OvrOptions::default()).build().unwrap();
+        assert!(train(&spec, &ds).is_err(), "multiclass spec must reject binary rows");
+    }
+
+    #[test]
+    fn exact_odm_trains_and_snapshots() {
+        let ds = SynthSpec { rows: 80, ..SynthSpec::named("svmguide1", 0.01, 5) }.generate();
+        let spec = rbf_spec(Method::ExactOdm).build().unwrap();
+        let run = train_run(&spec, &ds, None).unwrap();
+        assert_eq!(run.snapshots.len(), 1);
+        assert!(run.artifact.meta.sweeps > 0);
+        assert_eq!(run.artifact.meta.method, "odm");
+        assert!(run.artifact.accuracy(&ds).unwrap() > 0.8);
+    }
+}

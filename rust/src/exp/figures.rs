@@ -1,18 +1,13 @@
 //! Figure drivers: Fig. 1 (RBF accuracy-vs-time curves), Fig. 2 (core-count
 //! speedup), Fig. 3 (linear curves), Fig. 4 (gradient-method comparison).
 
-use std::time::Instant;
-
+use crate::api::{self, Method, TrainSpec};
 use crate::cluster::SimCluster;
 use crate::exp::report::{render_curves, write_results};
 use crate::exp::{
     prepare_dataset, rbf_for, run_gradient_method, run_qp_method, run_sodm_linear, table_budget,
     ExpConfig, MethodResult,
 };
-use crate::odm::OdmParams;
-use crate::partition::PartitionStrategy;
-use crate::sodm::{train_sodm, SodmConfig};
-use crate::svrg::{train_dsvrg, NativeGrad, SvrgConfig};
 use crate::Result;
 
 /// Fig. 1: accuracy-vs-time trade-off curves per dataset with RBF kernel —
@@ -53,42 +48,29 @@ pub fn figure2(
     dataset: &str,
 ) -> Result<(String, Vec<SpeedupPoint>)> {
     let (train, _test) = prepare_dataset(dataset, cfg);
-    let params = OdmParams::default();
     let kernel = rbf_for(&train);
 
     // Instrumented RBF run (Algorithm 1): task log + measured total.
     let rbf_cluster = SimCluster::new(1);
-    let t0 = Instant::now();
-    let _ = train_sodm(
-        &train,
-        &kernel,
-        &params,
-        &SodmConfig {
-            p: 4,
-            levels: 2,
-            stratums: 16,
-            strategy: PartitionStrategy::StratifiedRkhs { stratums: 16 },
-            budget: table_budget(),
-            level_tol: 1e-3,
-            final_exact: false, // the parallel portion is what scales
-            seed: cfg.seed,
-        },
-        Some(&rbf_cluster),
-    );
-    let rbf_total = t0.elapsed().as_secs_f64();
+    let rbf_spec = TrainSpec::new(Method::Sodm)
+        .kernel(kernel)
+        .budget(table_budget())
+        .tree(4, 2, 16)
+        .final_exact(false) // the parallel portion is what scales
+        .workers(1)
+        .seed(cfg.seed)
+        .build()?;
+    let rbf_total = api::train_run(&rbf_spec, &train, Some(&rbf_cluster))?.artifact.meta.seconds;
 
     // Instrumented linear run (Algorithm 2).
     let lin_cluster = SimCluster::new(1);
-    let t1 = Instant::now();
-    let grad = NativeGrad { workers: 1 };
-    let _ = train_dsvrg(
-        &train,
-        &params,
-        &SvrgConfig { epochs: 2, partitions: 16, seed: cfg.seed, ..Default::default() },
-        Some(&lin_cluster),
-        &grad,
-    );
-    let lin_total = t1.elapsed().as_secs_f64();
+    let lin_spec = TrainSpec::new(Method::Dsvrg)
+        .epochs(2)
+        .partitions(16)
+        .workers(1)
+        .seed(cfg.seed)
+        .build()?;
+    let lin_total = api::train_run(&lin_spec, &train, Some(&lin_cluster))?.artifact.meta.seconds;
 
     let mut points = Vec::new();
     for &c in cores {

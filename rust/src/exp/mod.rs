@@ -1,6 +1,13 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation section on the emulated datasets (DESIGN.md §4 maps each
 //! experiment id to the modules exercised here).
+//!
+//! All training dispatch goes through the [`crate::api`] facade: each
+//! method string maps to a typed [`TrainSpec`] and every arm consumes the
+//! same [`api::train_run`] output (artifact metadata for telemetry,
+//! snapshots for the accuracy-vs-time curves). Only the strategy-ablation
+//! driver ([`ablation`]) reaches below the facade, because it varies
+//! partition strategies the method conventions pin down.
 
 pub mod ablation;
 pub mod figures;
@@ -9,19 +16,12 @@ pub mod tables;
 
 use std::time::Instant;
 
-use crate::baselines::cascade::{train_cascade, CascadeConfig};
-use crate::baselines::dip::{train_dip, DipConfig};
-use crate::baselines::hierarchical::{train_hierarchical, HierConfig};
-use crate::baselines::LocalSolverKind;
+use crate::api::{self, LocalSolver, Method, OvrOptions, TrainSpec};
 use crate::cluster::SimCluster;
 use crate::data::synth::SynthSpec;
 use crate::data::Dataset;
 use crate::kernel::KernelKind;
-use crate::odm::{OdmModel, OdmParams};
-use crate::partition::PartitionStrategy;
 use crate::qp::SolveBudget;
-use crate::sodm::{train_sodm, train_sodm_traced, SodmConfig};
-use crate::svrg::{train_csvrg, train_dsvrg, train_svrg, NativeGrad, SvrgConfig};
 
 /// Harness configuration (CLI `experiment` flags).
 #[derive(Clone, Debug)]
@@ -141,16 +141,52 @@ fn sodm_tree(train_rows: usize) -> (usize, usize) {
     (4, levels)
 }
 
-/// Sum sweeps/updates across a meta-solver trace (single source of the
-/// aggregation all Table-2/3/4 arms share).
-fn meta_totals(trace: &[crate::baselines::MetaLevel]) -> (usize, u64) {
-    (trace.iter().map(|l| l.sweeps).sum(), trace.iter().map(|l| l.updates).sum())
-}
-
 /// The method names of Tables 2/3 in paper order.
 pub const QP_METHODS: [&str; 5] = ["ODM", "Ca-ODM", "DiP-ODM", "DC-ODM", "SODM"];
 
-/// Run one QP meta-method (Tables 2-3, Figs 1/3) on a prepared split.
+/// Map a table/figure method string to its facade dispatch (method plus
+/// baseline local solver — the `*-SVM` variants of Table 4).
+fn qp_spec_for(method: &str) -> (Method, LocalSolver) {
+    match method {
+        "ODM" => (Method::ExactOdm, LocalSolver::Odm),
+        "Ca-ODM" => (Method::Cascade, LocalSolver::Odm),
+        "Ca-SVM" => (Method::Cascade, LocalSolver::Svm { c: 1.0 }),
+        "DiP-ODM" => (Method::Dip, LocalSolver::Odm),
+        "DiP-SVM" => (Method::Dip, LocalSolver::Svm { c: 1.0 }),
+        "DC-ODM" => (Method::Dc, LocalSolver::Odm),
+        "DC-SVM" => (Method::Dc, LocalSolver::Svm { c: 1.0 }),
+        "SSVM" => (Method::Ssvm, LocalSolver::Svm { c: 1.0 }),
+        "SODM" => (Method::Sodm, LocalSolver::Odm),
+        other => panic!("unknown QP method {other:?}"),
+    }
+}
+
+/// Turn a facade run into the harness row: accuracy from the artifact,
+/// curves from the snapshots, telemetry from the metadata.
+fn method_result(
+    method: &str,
+    dataset: &str,
+    test: &Dataset,
+    run: &api::TrainRun,
+    modeled: f64,
+) -> MethodResult {
+    let meta = &run.artifact.meta;
+    let curve = run.snapshots.iter().map(|s| (s.elapsed, s.model.accuracy(test))).collect();
+    MethodResult {
+        method: method.into(),
+        dataset: dataset.into(),
+        accuracy: run.artifact.accuracy(test).unwrap_or(f64::NAN),
+        seconds: meta.seconds,
+        modeled_seconds: modeled,
+        curve,
+        sweeps: meta.sweeps,
+        updates: meta.updates,
+        shrink_ratio: meta.shrink_ratio,
+    }
+}
+
+/// Run one QP meta-method (Tables 2-3, Figs 1/3) on a prepared split. Every
+/// arm dispatches through [`api::train_run`] with a typed [`TrainSpec`].
 pub fn run_qp_method(
     method: &str,
     train: &Dataset,
@@ -158,191 +194,55 @@ pub fn run_qp_method(
     kernel: &KernelKind,
     cfg: &ExpConfig,
 ) -> MethodResult {
-    let cluster = SimCluster::new(cfg.workers);
-    let params = OdmParams::default();
-    let budget = table_budget();
+    let (m, solver) = qp_spec_for(method);
+    if m == Method::ExactOdm && train.rows > cfg.odm_cap {
+        return MethodResult::not_run(method, &train.name);
+    }
+    let budget = if m == Method::ExactOdm {
+        SolveBudget { max_sweeps: 300, ..table_budget() }
+    } else {
+        table_budget()
+    };
     let (p, levels) = sodm_tree(train.rows);
-    let t0 = Instant::now();
-    let mut total_sweeps = 0usize;
-    let mut total_updates = 0u64;
-    let mut total_shrink = 0.0f64;
-    let (model, curve): (OdmModel, Vec<(f64, f64)>) = match method {
-        "ODM" => {
-            if train.rows > cfg.odm_cap {
-                return MethodResult::not_run(method, &train.name);
-            }
-            let exact_budget = SolveBudget { max_sweeps: 300, ..budget };
-            let (m, stats) =
-                crate::odm::train_exact_odm_stats(train, kernel, &params, &exact_budget);
-            total_sweeps = stats.sweeps;
-            total_updates = stats.updates;
-            total_shrink = stats.shrink_ratio;
-            let acc = m.accuracy(test);
-            (m, vec![(t0.elapsed().as_secs_f64(), acc)])
-        }
-        "Ca-ODM" | "Ca-SVM" => {
-            let solver = pick_solver(method, params);
-            let run = train_cascade(
-                train,
-                kernel,
-                solver,
-                &CascadeConfig { leaves: p.pow(levels as u32), budget, seed: cfg.seed },
-                Some(&cluster),
-            );
-            (total_sweeps, total_updates) = meta_totals(&run.trace);
-            let curve =
-                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
-            (run.model, curve)
-        }
-        "DiP-ODM" | "DiP-SVM" => {
-            let solver = pick_solver(method, params);
-            let run = train_dip(
-                train,
-                kernel,
-                solver,
-                &DipConfig {
-                    partitions: p.pow(levels as u32),
-                    clusters: 8,
-                    budget,
-                    seed: cfg.seed,
-                },
-                Some(&cluster),
-            );
-            (total_sweeps, total_updates) = meta_totals(&run.trace);
-            let curve =
-                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
-            (run.model, curve)
-        }
-        "DC-ODM" | "DC-SVM" => {
-            let solver = pick_solver(method, params);
-            let run = train_hierarchical(
-                train,
-                kernel,
-                solver,
-                &HierConfig {
-                    p,
-                    levels,
-                    strategy: PartitionStrategy::KernelKmeansClusters { embed_dim: 16 },
-                    budget,
-                    level_tol: 1e-3,
-                    seed: cfg.seed,
-                },
-                Some(&cluster),
-            );
-            (total_sweeps, total_updates) = meta_totals(&run.trace);
-            let curve =
-                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
-            (run.model, curve)
-        }
-        "SSVM" => {
-            let run = train_hierarchical(
-                train,
-                kernel,
-                LocalSolverKind::Svm { c: 1.0 },
-                &HierConfig {
-                    p,
-                    levels,
-                    strategy: PartitionStrategy::StratifiedRkhs { stratums: 16 },
-                    budget,
-                    level_tol: 1e-3,
-                    seed: cfg.seed,
-                },
-                Some(&cluster),
-            );
-            (total_sweeps, total_updates) = meta_totals(&run.trace);
-            let curve =
-                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
-            (run.model, curve)
-        }
-        "SODM" => {
-            let run = train_sodm_traced(
-                train,
-                kernel,
-                &params,
-                &SodmConfig {
-                    p,
-                    levels,
-                    stratums: 16,
-                    strategy: PartitionStrategy::StratifiedRkhs { stratums: 16 },
-                    budget,
-                    level_tol: 1e-3,
-                    // Algorithm 1 returns the concatenated level-1 solutions
-                    // WITHOUT solving the fully merged problem (the paper's
-                    // early exit; Theorem 1 bounds the gap) — this is where
-                    // SODM's wall-clock advantage comes from.
-                    final_exact: false,
-                    seed: cfg.seed,
-                },
-                Some(&cluster),
-            );
-            total_sweeps = run.trace.iter().map(|l| l.sweeps).sum();
-            total_updates = run.trace.iter().map(|l| l.updates).sum();
-            total_shrink = run.trace.iter().map(|l| l.shrink_ratio).sum::<f64>()
-                / run.trace.len().max(1) as f64;
-            let curve =
-                run.trace.iter().map(|l| (l.elapsed, l.model.accuracy(test))).collect();
-            (run.model, curve)
-        }
-        other => panic!("unknown QP method {other:?}"),
-    };
-    let seconds = t0.elapsed().as_secs_f64();
-    let modeled_seconds = if method == "ODM" {
-        seconds // single solve, no parallel phase
-    } else {
-        cluster.modeled_time(MODEL_CORES, seconds)
-    };
-    MethodResult {
-        method: method.into(),
-        dataset: train.name.clone(),
-        accuracy: model.accuracy(test),
-        seconds,
-        modeled_seconds,
-        curve,
-        sweeps: total_sweeps,
-        updates: total_updates,
-        shrink_ratio: total_shrink,
+    let mut spec = TrainSpec::new(m)
+        .kernel(*kernel)
+        .solver(solver)
+        .budget(budget)
+        .workers(cfg.workers)
+        .tree(p, levels, 16)
+        .seed(cfg.seed);
+    if m == Method::Sodm {
+        // Algorithm 1 returns the concatenated level-1 solutions WITHOUT
+        // solving the fully merged problem (the paper's early exit;
+        // Theorem 1 bounds the gap) — this is where SODM's wall-clock
+        // advantage comes from.
+        spec = spec.final_exact(false);
     }
-}
-
-fn pick_solver(method: &str, params: OdmParams) -> LocalSolverKind {
-    if method.ends_with("SVM") {
-        LocalSolverKind::Svm { c: 1.0 }
-    } else {
-        LocalSolverKind::Odm(params)
-    }
-}
-
-/// Linear-kernel SODM = the DSVRG accelerator (paper §3.3 / Table 3 row).
-pub fn run_sodm_linear(train: &Dataset, test: &Dataset, cfg: &ExpConfig) -> MethodResult {
+    let spec = spec.build().expect("table spec is structurally valid");
     let cluster = SimCluster::new(cfg.workers);
-    let params = OdmParams::default();
-    let svrg_cfg = SvrgConfig {
-        epochs: 5,
-        partitions: cfg.workers.clamp(2, 16),
-        seed: cfg.seed,
-        ..Default::default()
+    let run = api::train_run(&spec, train, Some(&cluster)).expect("table training");
+    let modeled = if m == Method::ExactOdm {
+        run.artifact.meta.seconds // single solve, no parallel phase
+    } else {
+        cluster.modeled_time(MODEL_CORES, run.artifact.meta.seconds)
     };
-    let grad = NativeGrad { workers: cfg.workers };
-    let t0 = Instant::now();
-    let run = train_dsvrg(train, &params, &svrg_cfg, Some(&cluster), &grad);
-    let seconds = t0.elapsed().as_secs_f64();
-    let modeled_seconds = cluster.modeled_time(MODEL_CORES, seconds);
-    let curve = run
-        .checkpoints
-        .iter()
-        .map(|c| (c.elapsed, OdmModel::Linear { w: c.w.clone() }.accuracy(test)))
-        .collect();
-    MethodResult {
-        method: "SODM".into(),
-        dataset: train.name.clone(),
-        accuracy: run.model.accuracy(test),
-        seconds,
-        modeled_seconds,
-        curve,
-        sweeps: 0,
-        updates: 0,
-        shrink_ratio: 0.0,
-    }
+    method_result(method, &train.name, test, &run, modeled)
+}
+
+/// Linear-kernel SODM = the DSVRG accelerator (paper §3.3 / Table 3 row),
+/// through the facade's [`Method::Dsvrg`] dispatch.
+pub fn run_sodm_linear(train: &Dataset, test: &Dataset, cfg: &ExpConfig) -> MethodResult {
+    let spec = TrainSpec::new(Method::Dsvrg)
+        .workers(cfg.workers)
+        .epochs(5)
+        .partitions(cfg.workers.clamp(2, 16))
+        .seed(cfg.seed)
+        .build()
+        .expect("linear spec is structurally valid");
+    let cluster = SimCluster::new(cfg.workers);
+    let run = api::train_run(&spec, train, Some(&cluster)).expect("dsvrg training");
+    let modeled = cluster.modeled_time(MODEL_CORES, run.artifact.meta.seconds);
+    method_result("SODM", &train.name, test, &run, modeled)
 }
 
 /// Sparse-path benchmark — the rcv1/news20-shaped workload the dense
@@ -362,23 +262,16 @@ pub fn run_sparse_benchmark(
     let ds = SparseSynthSpec::new(rows, cols, density, cfg.seed).generate();
     let (train, test) = ds.split(0.8, cfg.seed ^ 0x7E57);
     let cluster = SimCluster::new(cfg.workers);
-    let params = OdmParams::default();
 
-    let t0 = Instant::now();
-    let lin = train_dsvrg(
-        &train,
-        &params,
-        &SvrgConfig {
-            epochs: 4,
-            partitions: cfg.workers.clamp(2, 16),
-            seed: cfg.seed,
-            ..Default::default()
-        },
-        Some(&cluster),
-        &NativeGrad { workers: cfg.workers },
-    );
-    let lin_secs = t0.elapsed().as_secs_f64();
-    let lin_acc = lin.model.accuracy(&test);
+    let lin_spec = TrainSpec::new(Method::Dsvrg)
+        .workers(cfg.workers)
+        .epochs(4)
+        .partitions(cfg.workers.clamp(2, 16))
+        .seed(cfg.seed)
+        .build()?;
+    let lin = api::train_run(&lin_spec, &train, Some(&cluster))?.artifact;
+    let lin_secs = lin.meta.seconds;
+    let lin_acc = lin.accuracy(&test)?;
 
     let smoke_rows = train.rows.min(2_000);
     let smoke_idx: Vec<usize> = (0..smoke_rows).collect();
@@ -386,20 +279,16 @@ pub fn run_sparse_benchmark(
     // Median-heuristic-shaped bandwidth for near-disjoint supports:
     // E[‖a-b‖²] ≈ 2 · nnz/row · E[v²], with E[v²] ≈ 0.37 for U(0.1, 1).
     let gamma = (1.0 / (0.74 * density * cols as f64).max(1e-6)) as f32;
-    let t1 = Instant::now();
-    let rbf = train_sodm(
-        &smoke,
-        &KernelKind::Rbf { gamma },
-        &params,
-        &SodmConfig {
-            budget: SolveBudget { max_sweeps: 30, ..SolveBudget::default() },
-            final_exact: false,
-            ..SodmConfig::with_tree(4, 2, 8)
-        },
-        Some(&cluster),
-    );
-    let rbf_secs = t1.elapsed().as_secs_f64();
-    let rbf_acc = rbf.accuracy(&test);
+    let rbf_spec = TrainSpec::new(Method::Sodm)
+        .kernel(KernelKind::Rbf { gamma })
+        .budget(SolveBudget { max_sweeps: 30, ..SolveBudget::default() })
+        .tree(4, 2, 8)
+        .final_exact(false)
+        .workers(cfg.workers)
+        .build()?;
+    let rbf = api::train_run(&rbf_spec, &smoke, Some(&cluster))?.artifact;
+    let rbf_secs = rbf.meta.seconds;
+    let rbf_acc = rbf.accuracy(&test)?;
 
     let json = Json::obj(vec![
         ("dataset", jstr(ds.name.clone())),
@@ -445,23 +334,23 @@ pub fn run_serve_benchmark(
 
     let (rows, clients, per_client) = if quick { (160, 4, 80) } else { (400, 8, 250) };
     let budget = SolveBudget { max_sweeps: 20, ..SolveBudget::default() };
-    let params = OdmParams::default();
+    let exact = |gamma: f32| {
+        TrainSpec::new(Method::ExactOdm).kernel(KernelKind::Rbf { gamma }).budget(budget).build()
+    };
 
     let mut spec = SynthSpec::named("svmguide1", 0.01, 7);
     spec.rows = rows;
     let ds = spec.generate();
-    let dense_model =
-        crate::odm::train_exact_odm(&ds, &KernelKind::Rbf { gamma: 1.0 }, &params, &budget);
+    let dense_artifact = api::train(&exact(1.0)?, &ds)?;
     let (dense_json, dense_line) =
-        serve_case("dense-rbf", dense_model, workers, shards, clients, per_client, |h, i| {
+        serve_case("dense-rbf", dense_artifact, workers, shards, clients, per_client, |h, i| {
             let _ = h.score(ds.row(i % ds.rows));
         })?;
 
     let sp = SparseSynthSpec::new(rows, 2000, 0.02, 5).generate();
-    let sparse_model =
-        crate::odm::train_exact_odm(&sp, &KernelKind::Rbf { gamma: 0.5 }, &params, &budget);
+    let sparse_artifact = api::train(&exact(0.5)?, &sp)?;
     let (sparse_json, sparse_line) =
-        serve_case("sparse-rbf", sparse_model, workers, shards, clients, per_client, |h, i| {
+        serve_case("sparse-rbf", sparse_artifact, workers, shards, clients, per_client, |h, i| {
             let j = i % sp.rows;
             let (lo, hi) = (sp.indptr[j], sp.indptr[j + 1]);
             let _ = h.score_sparse(&sp.indices[lo..hi], &sp.values[lo..hi]);
@@ -478,18 +367,18 @@ pub fn run_serve_benchmark(
     Ok((json, summary))
 }
 
-/// One serving load case: spin a server, hammer it from `clients` threads,
-/// report one JSON object + one human line.
+/// One serving load case: spin a server from an artifact, hammer it from
+/// `clients` threads, report one JSON object + one human line.
 fn serve_case(
     name: &str,
-    model: OdmModel,
+    artifact: crate::api::Artifact,
     workers: usize,
     shards: usize,
     clients: usize,
     per_client: usize,
     score_one: impl Fn(&crate::serve::ServerHandle, usize) + Sync,
 ) -> crate::Result<(crate::util::json::Json, String)> {
-    use crate::serve::{serve, Backend, ServeConfig};
+    use crate::serve::ServeConfig;
     use crate::util::json::{jstr, Json};
     use std::sync::atomic::Ordering;
 
@@ -499,8 +388,8 @@ fn serve_case(
         max_wait: std::time::Duration::from_millis(1),
         ..ServeConfig::default()
     };
-    let sv = model.support_size();
-    let handle = serve(model, Backend::Native, cfg)?;
+    let sv = artifact.support_size();
+    let handle = artifact.into_serve(cfg)?;
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
@@ -555,7 +444,7 @@ pub fn run_multiclass_benchmark(
     workers: usize,
     quick: bool,
 ) -> crate::Result<(crate::util::json::Json, String)> {
-    use crate::multiclass::{train_ovr, MulticlassSynthSpec, OvrConfig};
+    use crate::multiclass::MulticlassSynthSpec;
     use crate::util::json::{jstr, Json};
 
     crate::ensure!(classes >= 2, "multiclass benchmark needs >= 2 classes");
@@ -564,27 +453,31 @@ pub fn run_multiclass_benchmark(
     let ds = MulticlassSynthSpec::new(classes, rows, cols, 29).generate();
     let (train, test) = ds.split(0.8, 31);
     let kernel = KernelKind::Rbf { gamma: 1.0 / (2.0 * cols as f32) };
-    let params = OdmParams::default();
     let sweeps = if quick { 30 } else { 60 };
     let budget = SolveBudget { max_sweeps: sweeps, ..SolveBudget::default() };
+    let ovr_spec = |share_cache: bool| {
+        TrainSpec::new(Method::ExactOdm)
+            .kernel(kernel)
+            .budget(budget)
+            .workers(workers)
+            .multiclass(OvrOptions { share_cache, ..OvrOptions::default() })
+            .build()
+    };
 
-    let shared =
-        train_ovr(&train, &kernel, &params, &OvrConfig { budget, workers, ..Default::default() });
-    let private = train_ovr(
-        &train,
-        &kernel,
-        &params,
-        &OvrConfig { budget, workers, share_cache: false, ..Default::default() },
-    );
-    let shared_acc = shared.model.accuracy(&test, workers);
-    let private_acc = private.model.accuracy(&test, workers);
-    let speedup = private.seconds / shared.seconds.max(1e-9);
+    let shared = api::train_run(&ovr_spec(true)?, &train, None)?;
+    let private = api::train_run(&ovr_spec(false)?, &train, None)?;
+    let shared_acc = shared.artifact.accuracy_multiclass(&test, workers)?;
+    let private_acc = private.artifact.accuracy_multiclass(&test, workers)?;
+    let (shared_secs, private_secs) =
+        (shared.artifact.meta.seconds, private.artifact.meta.seconds);
+    let speedup = private_secs / shared_secs.max(1e-9);
 
     // Serving smoke: argmax through the sharded runtime must match offline.
-    let plan = shared.model.compile();
+    let model = shared.artifact.as_multiclass().expect("ovr spec yields a multiclass artifact");
+    let plan = model.compile();
     let offline = plan.predict_rows(test.as_rows(), workers);
     let serve_cfg = crate::serve::ServeConfig { workers, ..Default::default() };
-    let h = crate::serve::serve_multiclass(shared.model.clone(), serve_cfg)?;
+    let h = shared.artifact.serve(serve_cfg)?;
     let mut agree = true;
     for (i, want) in offline.iter().enumerate().take(test.rows().min(64)) {
         let got = h.score_multiclass(test.as_rows().row(i))?;
@@ -601,73 +494,52 @@ pub fn run_multiclass_benchmark(
         ("train_rows", Json::Num(train.rows() as f64)),
         ("cols", Json::Num(cols as f64)),
         ("workers", Json::Num(workers as f64)),
-        ("shared_cache_secs", Json::Num(shared.seconds)),
-        ("per_class_cache_secs", Json::Num(private.seconds)),
+        ("shared_cache_secs", Json::Num(shared_secs)),
+        ("per_class_cache_secs", Json::Num(private_secs)),
         ("shared_cache_speedup", Json::Num(speedup)),
         ("shared_cache_hit_rate", Json::Num(shared.cache_hit_rate)),
         ("accuracy", Json::Num(shared_acc)),
         ("per_class_cache_accuracy", Json::Num(private_acc)),
-        ("support_vectors", Json::Num(shared.model.support_size() as f64)),
+        ("support_vectors", Json::Num(shared.artifact.support_size() as f64)),
         ("serve_agrees", Json::Bool(agree)),
     ]);
     let summary = format!(
         "multiclass OVR benchmark ({classes} classes, {} train rows, {workers} workers)\n\
-         shared Gram cache    : {:.2}s  acc {shared_acc:.4}  hit-rate {:.2}\n\
-         per-class caches     : {:.2}s  acc {private_acc:.4}\n\
+         shared Gram cache    : {shared_secs:.2}s  acc {shared_acc:.4}  hit-rate {:.2}\n\
+         per-class caches     : {private_secs:.2}s  acc {private_acc:.4}\n\
          shared-cache speedup : {speedup:.2}x  (serve argmax agrees: {agree})",
         train.rows(),
-        shared.seconds,
         shared.cache_hit_rate,
-        private.seconds,
     );
     Ok((json, summary))
 }
 
-/// Gradient-based comparators for Fig. 4.
+/// Gradient-based comparators for Fig. 4, through the facade's gradient
+/// dispatch ([`Method::Dsvrg`]/[`Method::Svrg`]/[`Method::Csvrg`]).
 pub fn run_gradient_method(
     method: &str,
     train: &Dataset,
     test: &Dataset,
     cfg: &ExpConfig,
 ) -> MethodResult {
-    let params = OdmParams::default();
-    let svrg_cfg = SvrgConfig {
-        epochs: 5,
-        partitions: cfg.workers.clamp(2, 16),
-        coreset: (train.rows / 20).clamp(32, 1024),
-        seed: cfg.seed,
-        ..Default::default()
-    };
-    let grad = NativeGrad { workers: cfg.workers };
-    let t0 = Instant::now();
-    let run = match method {
-        "SODM" => {
-            let cluster = SimCluster::new(cfg.workers);
-            train_dsvrg(train, &params, &svrg_cfg, Some(&cluster), &grad)
-        }
-        "ODM-SVRG" => train_svrg(train, &params, &svrg_cfg, &grad),
-        "ODM-CSVRG" => train_csvrg(train, &params, &svrg_cfg, &grad),
+    let m = match method {
+        "SODM" => Method::Dsvrg,
+        "ODM-SVRG" => Method::Svrg,
+        "ODM-CSVRG" => Method::Csvrg,
         other => panic!("unknown gradient method {other:?}"),
     };
-    let seconds = t0.elapsed().as_secs_f64();
+    let spec = TrainSpec::new(m)
+        .workers(cfg.workers)
+        .epochs(5)
+        .partitions(cfg.workers.clamp(2, 16))
+        .coreset((train.rows / 20).clamp(32, 1024))
+        .seed(cfg.seed)
+        .build()
+        .expect("gradient spec is structurally valid");
     // SVRG/CSVRG are single-machine methods; DSVRG models its parallel phase.
-    let modeled_seconds = seconds;
-    let curve = run
-        .checkpoints
-        .iter()
-        .map(|c| (c.elapsed, OdmModel::Linear { w: c.w.clone() }.accuracy(test)))
-        .collect();
-    MethodResult {
-        method: method.into(),
-        dataset: train.name.clone(),
-        accuracy: run.model.accuracy(test),
-        seconds,
-        modeled_seconds,
-        curve,
-        sweeps: 0,
-        updates: 0,
-        shrink_ratio: 0.0,
-    }
+    let cluster = (m == Method::Dsvrg).then(|| SimCluster::new(cfg.workers));
+    let run = api::train_run(&spec, train, cluster.as_ref()).expect("gradient training");
+    method_result(method, &train.name, test, &run, run.artifact.meta.seconds)
 }
 
 #[cfg(test)]

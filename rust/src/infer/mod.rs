@@ -34,6 +34,11 @@
 //! partial-sum regrouping (tiles, shards) is associativity noise;
 //! `rust/tests/infer_serve.rs` pins plan-vs-reference agreement at 1e-6 on
 //! dense and CSR fixtures.
+//!
+//! Typed artifacts compile their plans here:
+//! [`crate::api::Artifact::compile_plan`] wraps [`ScoringPlan`] (binary) or
+//! [`MulticlassPlan`] (one-vs-rest) without callers matching on the model
+//! representation.
 
 use crate::data::{RowRef, Rows};
 use crate::kernel::{dot, eval_with_norms, sq_norm_rr, KernelKind};

@@ -36,25 +36,32 @@
 //! telemetry (sweeps / updates / shrink ratio / cache hit rate) is reported
 //! in [`qp::SolveStats`].
 //!
-//! ## Quickstart
+//! ## Quickstart: the `api` facade
+//!
+//! Every training regime — exact ODM, the hierarchical SODM merge, the
+//! DSVRG linear accelerator, the baselines, one-vs-rest multiclass — is
+//! reachable through one typed entry point: build a validated
+//! [`api::TrainSpec`], call [`api::train`], get an [`api::Artifact`]
+//! (model + training metadata behind a versioned JSON format with
+//! `save`/`load`, `compile_plan`, `serve`, and `accuracy`).
 //!
 //! ```no_run
+//! use sodm::api::{self, Method, TrainSpec};
 //! use sodm::data::synth::SynthSpec;
 //! use sodm::kernel::KernelKind;
-//! use sodm::odm::OdmParams;
-//! use sodm::sodm::{SodmConfig, train_sodm};
 //!
+//! # fn main() -> sodm::Result<()> {
 //! let ds = SynthSpec::named("svmguide1", 0.2, 7).generate();
 //! let (train, test) = ds.split(0.8, 42);
-//! let model = train_sodm(
-//!     &train,
-//!     &KernelKind::Rbf { gamma: 0.5 },
-//!     &OdmParams::default(),
-//!     &SodmConfig::default(),
-//!     None,
-//! );
-//! let acc = model.accuracy(&test);
-//! println!("test accuracy {acc:.3}");
+//! let spec = TrainSpec::new(Method::Sodm)
+//!     .kernel(KernelKind::Rbf { gamma: 0.5 })
+//!     .tree(4, 2, 16)
+//!     .build()?; // typed SpecError on bad combos (e.g. dsvrg + rbf)
+//! let artifact = api::train(&spec, &train)?;
+//! println!("test accuracy {:.3}", artifact.accuracy(&test)?);
+//! artifact.save("model.json")?; // versioned artifact JSON (v0 still loads)
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! ## Inference & serving
@@ -89,6 +96,7 @@
 //! [`serve::serve_multiclass`] (`score_multiclass` requests return argmax
 //! plus per-class margins, sharded across the scorer workers).
 
+pub mod api;
 pub mod baselines;
 pub mod cluster;
 pub mod data;

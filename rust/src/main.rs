@@ -2,21 +2,26 @@
 //!
 //! Subcommands:
 //! * `gen-data`   — materialize an emulated dataset in LIBSVM format
-//! * `train`      — train a model (exact ODM / SODM / baselines) on a dataset
-//! * `predict`    — score a saved model on a dataset (native or `--backend xla`)
+//! * `train`      — train a model through the `sodm::api` facade
+//! * `predict`    — score a saved artifact on a dataset (native or `--backend xla`)
 //! * `experiment` — regenerate a paper table (`--table 1..4`) or figure
 //!                  (`--figure 1..4`)
 //! * `info`       — toolchain, artifact, and cluster info
 //!
 //! Argument parsing is in-crate (offline build; no clap): `--key value`
-//! flags after the subcommand.
+//! flags after the subcommand. Unknown or typo'd flags are an error that
+//! lists the subcommand's valid flag set.
+//!
+//! All training dispatch goes through [`sodm::api::train`]: flags assemble
+//! a typed [`TrainSpec`], validation errors come back as the facade's
+//! typed `SpecError`s, and trained models ship as versioned [`Artifact`]
+//! JSON (legacy pre-facade model JSON still loads everywhere a model is
+//! read).
 
 use std::collections::HashMap;
 
-use sodm::baselines::cascade::{train_cascade, CascadeConfig};
-use sodm::baselines::dip::{train_dip, DipConfig};
-use sodm::baselines::hierarchical::{train_hierarchical, HierConfig};
-use sodm::baselines::LocalSolverKind;
+use sodm::api::{self, Artifact, Method, OvrOptions, TrainSpec};
+use sodm::cluster::SimCluster;
 use sodm::data::libsvm;
 use sodm::data::libsvm::LoadedDataset;
 use sodm::data::sparse::SparseSynthSpec;
@@ -25,14 +30,22 @@ use sodm::exp::figures::{figure1, figure2, figure3, figure4};
 use sodm::exp::tables::{table1, table2, table3, table4};
 use sodm::exp::ExpConfig;
 use sodm::kernel::KernelKind;
-use sodm::odm::{train_exact_odm, OdmModel, OdmParams};
-use sodm::partition::PartitionStrategy;
+use sodm::odm::{OdmModel, OdmParams};
 use sodm::qp::SolveBudget;
 use sodm::runtime::XlaEngine;
-use sodm::sodm::{train_sodm, SodmConfig};
-use sodm::svrg::{train_dsvrg, NativeGrad, SvrgConfig};
 use sodm::util::pool::num_cpus;
 use sodm::Result;
+
+/// Valid flags per subcommand (space-separated; [`parse_flags`] rejects
+/// anything else with an error listing the set).
+const GEN_DATA_FLAGS: &str = "name seed out scale rows cols density";
+const TRAIN_FLAGS: &str = "data method kernel gamma lambda theta upsilon p levels stratums \
+     workers epochs model-out no-shrink ordered-every seed multiclass no-shared-cache";
+const PREDICT_FLAGS: &str = "model data backend seed";
+const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve multiclass scale seed \
+     datasets workers out-dir odm-cap rows cols density shards classes quick json cores dataset";
+const SERVE_BENCH_FLAGS: &str =
+    "model data backend seed clients requests workers shards json quick";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,14 +54,23 @@ fn main() {
         std::process::exit(2);
     }
     let cmd = args[0].clone();
-    let flags = parse_flags(&args[1..]);
-    let result = match cmd.as_str() {
-        "gen-data" => cmd_gen_data(&flags),
-        "train" => cmd_train(&flags),
-        "predict" => cmd_predict(&flags),
-        "experiment" => cmd_experiment(&flags),
-        "serve-bench" => cmd_serve_bench(&flags),
-        "info" => cmd_info(),
+    if let Err(e) = run(&cmd, &args[1..]) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, args: &[String]) -> Result<()> {
+    match cmd {
+        "gen-data" => cmd_gen_data(&parse_flags(cmd, args, GEN_DATA_FLAGS)?),
+        "train" => cmd_train(&parse_flags(cmd, args, TRAIN_FLAGS)?),
+        "predict" => cmd_predict(&parse_flags(cmd, args, PREDICT_FLAGS)?),
+        "experiment" => cmd_experiment(&parse_flags(cmd, args, EXPERIMENT_FLAGS)?),
+        "serve-bench" => cmd_serve_bench(&parse_flags(cmd, args, SERVE_BENCH_FLAGS)?),
+        "info" => {
+            parse_flags(cmd, args, "")?;
+            cmd_info()
+        }
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -58,10 +80,6 @@ fn main() {
             usage();
             std::process::exit(2);
         }
-    };
-    if let Err(e) = result {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
     }
 }
 
@@ -70,17 +88,20 @@ fn usage() {
         "sodm — Scalable Optimal margin Distribution Machine (IJCAI 2023 reproduction)
 
 USAGE: sodm <command> [--flag value]...
+(unknown flags are an error listing the subcommand's valid set)
 
   gen-data   --name <dataset|sparse> [--scale 0.05] [--seed 7] --out <file.libsvm>
              (--name sparse: [--rows 10000] [--cols 100000] [--density 0.001],
               written in CSR/libsvm without densification)
   train      --data <file.libsvm | synth:name[:scale] | sparse-synth:rows:cols:density>
-             [--method sodm|odm|cascade|dip|dc|ssvm|dsvrg]
+             [--method sodm|odm|dsvrg|svrg|csvrg|cascade|dip|dc|ssvm]
              (libsvm files auto-detect density and load dense or CSR;
-              CSR data trains odm|sodm|dsvrg without densification)
+              CSR data trains odm|sodm|dsvrg without densification;
+              dsvrg|svrg|csvrg are linear-kernel only — typed spec errors
+              reject invalid method x kernel combinations up front)
              [--kernel rbf|linear] [--gamma g] [--lambda l] [--theta t] [--upsilon u]
-             [--p 4] [--levels 2] [--stratums 16] [--workers N] [--model-out m.json]
-             [--no-shrink] [--ordered-every k]
+             [--p 4] [--levels 2] [--stratums 16] [--workers N] [--epochs 6]
+             [--model-out m.json] [--no-shrink] [--ordered-every k]
              (--no-shrink disables DCD active-set shrinking — the reference
               solver; --ordered-every k makes every k-th sweep visit
               coordinates in descending violation order)
@@ -88,7 +109,10 @@ USAGE: sodm <command> [--flag value]...
               label per row; distinct labels become classes) or
               mc-synth:classes:rows:cols; K class solves in parallel with a
               shared Gram cache (--no-shared-cache for private caches)
+             models save as versioned artifact JSON (model + training
+             metadata); predict/serve-bench also load legacy model JSON
   predict    --model m.json --data <...> [--backend native|xla]
+             (multiclass artifacts score multiclass data natively)
   experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse | --serve
               | --multiclass)
              [--scale 0.05] [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
@@ -107,25 +131,33 @@ USAGE: sodm <command> [--flag value]...
     );
 }
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Parse `--key value` / bare `--switch` flags. Unknown flags and stray
+/// positional arguments are errors (typos used to be silently ignored);
+/// the error lists the subcommand's valid flag set.
+fn parse_flags(cmd: &str, args: &[String], valid: &str) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(key.to_string(), "true".to_string());
-                i += 1;
+        let Some(key) = a.strip_prefix("--") else {
+            sodm::bail!("unexpected argument {a:?} for `{cmd}` (flags are --key [value])");
+        };
+        if !valid.split_whitespace().any(|f| f == key) {
+            if valid.is_empty() {
+                sodm::bail!("`{cmd}` takes no flags, got --{key}");
             }
+            let list: Vec<String> = valid.split_whitespace().map(|f| format!("--{f}")).collect();
+            sodm::bail!("unknown flag --{key} for `{cmd}`; valid flags: {}", list.join(", "));
+        }
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            flags.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
         } else {
-            eprintln!("ignoring stray argument {a:?}");
+            flags.insert(key.to_string(), "true".to_string());
             i += 1;
         }
     }
-    flags
+    Ok(flags)
 }
 
 fn flag<'a>(flags: &'a HashMap<String, String>, key: &str) -> Option<&'a str> {
@@ -226,18 +258,110 @@ fn parse_kernel(flags: &HashMap<String, String>, cols: usize) -> Result<KernelKi
     }
 }
 
+/// ODM hyperparameters from flags. Range validation happens in
+/// [`TrainSpec::build`] (typed `SpecError`s), not here.
 fn parse_params(flags: &HashMap<String, String>) -> Result<OdmParams> {
     Ok(OdmParams {
         lambda: flag_f64(flags, "lambda", 8.0)? as f32,
         theta: flag_f64(flags, "theta", 0.2)? as f32,
         upsilon: flag_f64(flags, "upsilon", 0.5)? as f32,
-    }
-    .validated())
+    })
 }
 
-/// `--data` for `train --multiclass`: `mc-synth:classes:rows:cols` or a
-/// multiclass libsvm file (one label per row; distinct raw labels become
-/// classes). Shape errors come back as CLI errors, not library panics.
+/// Assemble the typed [`TrainSpec`] from CLI flags — the single flag-to-spec
+/// path for binary and `--multiclass` training. Bad combinations surface as
+/// the facade's typed `SpecError`s.
+fn build_train_spec(
+    flags: &HashMap<String, String>,
+    cols: usize,
+    multiclass: bool,
+) -> Result<TrainSpec> {
+    let method = match flag(flags, "method") {
+        // An explicit method always reaches the facade — `--multiclass
+        // --method sodm` must surface the typed MulticlassUnsupported
+        // error, not be silently overridden.
+        Some(name) => Method::parse(name)?,
+        None if multiclass => Method::ExactOdm,
+        None => Method::Sodm,
+    };
+    // Linear-only methods default to the linear kernel when --kernel is
+    // absent (the pre-facade CLI never required it); an explicit
+    // `--kernel rbf` still reaches the typed LinearOnly error.
+    let kernel = if flag(flags, "kernel").is_none() && method.linear_only() {
+        KernelKind::Linear
+    } else {
+        parse_kernel(flags, cols)?
+    };
+    let workers = flag_usize(flags, "workers", num_cpus())?;
+    let budget = SolveBudget {
+        shrink: !flags.contains_key("no-shrink"),
+        ordered_every: flag_usize(flags, "ordered-every", 0)?,
+        ..SolveBudget::default()
+    };
+    let mut spec = TrainSpec::new(method)
+        .kernel(kernel)
+        .params(parse_params(flags)?)
+        .budget(budget)
+        .workers(workers)
+        .tree(
+            flag_usize(flags, "p", 4)?,
+            flag_usize(flags, "levels", 2)?,
+            flag_usize(flags, "stratums", 16)?,
+        )
+        .epochs(flag_usize(flags, "epochs", 6)?)
+        .partitions(workers.clamp(2, 16))
+        .seed(flag_usize(flags, "seed", 7)? as u64);
+    if multiclass {
+        spec = spec.multiclass(OvrOptions {
+            share_cache: !flags.contains_key("no-shared-cache"),
+            ..OvrOptions::default()
+        });
+    }
+    Ok(spec.build()?)
+}
+
+/// `train --multiclass`: the same facade path with a one-vs-rest spec.
+fn cmd_train_multiclass(flags: &HashMap<String, String>) -> Result<()> {
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
+    let ds = load_multiclass_data(data_spec, seed)?;
+    let (train, test) = ds.split(0.8, seed);
+    let spec = build_train_spec(flags, train.cols(), true)?;
+    let run = api::train_run(&spec, &train, None)?;
+    let artifact = run.artifact;
+    let model = artifact.as_multiclass().expect("multiclass spec yields a multiclass artifact");
+    let acc_train = artifact.accuracy_multiclass(&train, spec.workers)?;
+    let acc_test = artifact.accuracy_multiclass(&test, spec.workers)?;
+    println!(
+        "multiclass ovr kernel={:?} classes={} rows={} time={:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} cache_hit_rate={:.2}",
+        artifact.meta.kernel,
+        train.n_classes(),
+        train.rows(),
+        artifact.meta.seconds,
+        artifact.support_size(),
+        run.cache_hit_rate,
+    );
+    for (k, s) in run.class_stats.iter().enumerate() {
+        println!(
+            "  class {k} (label {}): sweeps={} updates={} converged={} sv={}",
+            model.class_labels[k],
+            s.sweeps,
+            s.updates,
+            s.converged,
+            model.models[k].support_size(),
+        );
+    }
+    if let Some(out) = flag(flags, "model-out") {
+        artifact.save(out)?;
+        println!("model saved to {out}");
+    }
+    Ok(())
+}
+
+/// `--data` for `train --multiclass` and multiclass `predict`:
+/// `mc-synth:classes:rows:cols` or a multiclass libsvm file (one label per
+/// row; distinct raw labels become classes). Shape errors come back as CLI
+/// errors, not library panics.
 fn load_multiclass_data(spec: &str, seed: u64) -> Result<sodm::multiclass::MulticlassDataset> {
     if let Some(rest) = spec.strip_prefix("mc-synth:") {
         let mut parts = rest.split(':');
@@ -256,59 +380,9 @@ fn load_multiclass_data(spec: &str, seed: u64) -> Result<sodm::multiclass::Multi
     }
 }
 
-/// `train --multiclass`: one-vs-rest over K classes, class solves fanned
-/// out on the pool workers against a shared Gram-row cache.
-fn cmd_train_multiclass(flags: &HashMap<String, String>) -> Result<()> {
-    use sodm::multiclass::{train_ovr, OvrConfig};
-    let seed = flag_usize(flags, "seed", 7)? as u64;
-    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
-    let ds = load_multiclass_data(data_spec, seed)?;
-    let (train, test) = ds.split(0.8, seed);
-    let kernel = parse_kernel(flags, train.cols())?;
-    let params = parse_params(flags)?;
-    let workers = flag_usize(flags, "workers", num_cpus())?;
-    let budget = SolveBudget {
-        shrink: !flags.contains_key("no-shrink"),
-        ordered_every: flag_usize(flags, "ordered-every", 0)?,
-        ..SolveBudget::default()
-    };
-    let cfg = OvrConfig {
-        budget,
-        workers,
-        share_cache: !flags.contains_key("no-shared-cache"),
-        ..OvrConfig::default()
-    };
-    let run = train_ovr(&train, &kernel, &params, &cfg);
-    let acc_train = run.model.accuracy(&train, workers);
-    let acc_test = run.model.accuracy(&test, workers);
-    println!(
-        "multiclass ovr kernel={kernel:?} classes={} rows={} time={:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} cache_hit_rate={:.2}",
-        train.n_classes(),
-        train.rows(),
-        run.seconds,
-        run.model.support_size(),
-        run.cache_hit_rate,
-    );
-    for (k, s) in run.stats.iter().enumerate() {
-        println!(
-            "  class {k} (label {}): sweeps={} updates={} converged={} sv={}",
-            run.model.class_labels[k],
-            s.sweeps,
-            s.updates,
-            s.converged,
-            run.model.models[k].support_size(),
-        );
-    }
-    if let Some(out) = flag(flags, "model-out") {
-        run.model.save(out)?;
-        println!("model saved to {out}");
-    }
-    Ok(())
-}
-
-/// One training path for both backings: the solvers are `Rows`-generic, so
-/// only the dense-only baselines branch on the backing (and bail with a
-/// clear message on CSR data).
+/// Train through the `api` facade: flags build one [`TrainSpec`], dispatch
+/// lives entirely inside [`api::train_run`] (no per-method wiring here),
+/// and the model ships as a versioned [`Artifact`].
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("multiclass") {
         return cmd_train_multiclass(flags);
@@ -318,162 +392,68 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let loaded = load_data(data_spec, seed)?;
     let (train, test) = loaded.split(0.8, seed);
     let (train_rows, test_rows) = (train.as_rows(), test.as_rows());
-    let kernel = parse_kernel(flags, train_rows.cols())?;
-    let params = parse_params(flags)?;
-    let workers = flag_usize(flags, "workers", num_cpus())?;
-    let p = flag_usize(flags, "p", 4)?;
-    let levels = flag_usize(flags, "levels", 2)?;
-    let stratums = flag_usize(flags, "stratums", 16)?;
-    let method = flag(flags, "method").unwrap_or("sodm");
-    let cluster = sodm::cluster::SimCluster::new(workers);
-    let budget = SolveBudget {
-        shrink: !flags.contains_key("no-shrink"),
-        ordered_every: flag_usize(flags, "ordered-every", 0)?,
-        ..SolveBudget::default()
-    };
-
-    let t0 = std::time::Instant::now();
-    // linear SODM = the DSVRG accelerator (paper §3.3); shared with the
-    // explicit dsvrg method so the two arms cannot drift.
-    let run_dsvrg = || {
-        train_dsvrg(
-            train_rows,
-            &params,
-            &SvrgConfig {
-                epochs: 6,
-                partitions: workers.clamp(2, 16),
-                stratums,
-                seed,
-                ..Default::default()
-            },
-            Some(&cluster),
-            &NativeGrad { workers },
-        )
-        .model
-    };
-    let model: OdmModel = match method {
-        "odm" => train_exact_odm(train_rows, &kernel, &params, &budget),
-        "sodm" if matches!(kernel, KernelKind::Linear) => run_dsvrg(),
-        "dsvrg" => run_dsvrg(),
-        "sodm" => train_sodm(
-            train_rows,
-            &kernel,
-            &params,
-            &SodmConfig {
-                p,
-                levels,
-                stratums,
-                strategy: PartitionStrategy::StratifiedRkhs { stratums },
-                budget,
-                level_tol: 1e-3,
-                final_exact: true,
-                seed,
-            },
-            Some(&cluster),
-        ),
-        "cascade" | "dip" | "dc" | "ssvm" => {
-            let LoadedDataset::Dense(dense_train) = &train else {
-                sodm::bail!(
-                    "method {method:?} is dense-only; sparse data supports odm|sodm|dsvrg"
-                )
-            };
-            match method {
-                "cascade" => {
-                    train_cascade(
-                        dense_train,
-                        &kernel,
-                        LocalSolverKind::Odm(params),
-                        &CascadeConfig { leaves: p.pow(levels as u32), budget, seed },
-                        Some(&cluster),
-                    )
-                    .model
-                }
-                "dip" => {
-                    train_dip(
-                        dense_train,
-                        &kernel,
-                        LocalSolverKind::Odm(params),
-                        &DipConfig {
-                            partitions: p.pow(levels as u32),
-                            clusters: 8,
-                            budget,
-                            seed,
-                        },
-                        Some(&cluster),
-                    )
-                    .model
-                }
-                "dc" => {
-                    train_hierarchical(
-                        dense_train,
-                        &kernel,
-                        LocalSolverKind::Odm(params),
-                        &HierConfig {
-                            p,
-                            levels,
-                            strategy: PartitionStrategy::KernelKmeansClusters {
-                                embed_dim: 16,
-                            },
-                            budget,
-                            level_tol: 1e-3,
-                            seed,
-                        },
-                        Some(&cluster),
-                    )
-                    .model
-                }
-                _ => {
-                    train_hierarchical(
-                        dense_train,
-                        &kernel,
-                        LocalSolverKind::Svm { c: 1.0 },
-                        &HierConfig {
-                            p,
-                            levels,
-                            strategy: PartitionStrategy::StratifiedRkhs { stratums },
-                            budget,
-                            level_tol: 1e-3,
-                            seed,
-                        },
-                        Some(&cluster),
-                    )
-                    .model
-                }
-            }
-        }
-        other => sodm::bail!("unknown method {other:?}"),
-    };
-    let secs = t0.elapsed().as_secs_f64();
-    let acc_train = model.accuracy(train_rows);
-    let acc_test = model.accuracy(test_rows);
+    let spec = build_train_spec(flags, train_rows.cols(), false)?;
+    let cluster = SimCluster::new(spec.workers);
+    let run = api::train_run(&spec, train_rows, Some(&cluster))?;
+    let artifact = run.artifact;
+    let acc_train = artifact.accuracy(train_rows)?;
+    let acc_test = artifact.accuracy(test_rows)?;
     let comm = cluster.comm();
     let sparse_info = match &train {
         LoadedDataset::Sparse(s) => format!(" nnz={} density={:.5}", s.nnz(), s.density()),
         LoadedDataset::Dense(_) => String::new(),
     };
     println!(
-        "method={method} kernel={kernel:?} rows={}{sparse_info} time={secs:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} comm_bytes={} comm_rounds={}",
+        "method={} kernel={:?} rows={}{sparse_info} time={:.2}s train_acc={acc_train:.4} test_acc={acc_test:.4} sv={} comm_bytes={} comm_rounds={}",
+        artifact.meta.method,
+        artifact.meta.kernel,
         train.rows(),
-        model.support_size(),
+        artifact.meta.seconds,
+        artifact.support_size(),
         comm.bytes,
         comm.rounds
     );
     if let Some(out) = flag(flags, "model-out") {
-        model.save(out)?;
+        artifact.save(out)?;
         println!("model saved to {out}");
     }
     Ok(())
 }
 
+/// Score a saved artifact (current envelope or legacy v0 model JSON) on a
+/// dataset. Multiclass artifacts score multiclass data natively; binary
+/// artifacts keep the `--backend xla` PJRT path.
 fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
-    let model_path =
-        flag(flags, "model").ok_or_else(|| sodm::err!("--model is required"))?;
+    let model_path = flag(flags, "model").ok_or_else(|| sodm::err!("--model is required"))?;
     let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let seed = flag_usize(flags, "seed", 7)? as u64;
-    let model = OdmModel::load(model_path)?;
-    let loaded = load_data(data_spec, seed)?;
+    let artifact = Artifact::load(model_path)?;
     let backend = flag(flags, "backend").unwrap_or("native");
     let t0 = std::time::Instant::now();
+    if let Some(mc) = artifact.as_multiclass() {
+        sodm::ensure!(
+            backend != "xla",
+            "--backend xla scores binary dense models; multiclass artifacts score natively"
+        );
+        let ds = load_multiclass_data(data_spec, seed)?;
+        sodm::ensure!(
+            mc.input_cols() == ds.cols(),
+            "model expects {} features but {} has {} — mismatched train/predict pipelines",
+            mc.input_cols(),
+            ds.name(),
+            ds.cols()
+        );
+        let acc = artifact.accuracy_multiclass(&ds, num_cpus())?;
+        println!(
+            "backend=native rows={} classes={} accuracy={acc:.4} elapsed={:.3}s",
+            ds.rows(),
+            mc.n_classes(),
+            t0.elapsed().as_secs_f64()
+        );
+        return Ok(());
+    }
+    let model = artifact.as_binary().expect("not multiclass, so binary");
+    let loaded = load_data(data_spec, seed)?;
     let rows = loaded.rows();
     sodm::ensure!(
         model.input_cols() == loaded.cols(),
@@ -489,7 +469,7 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
             };
             let engine = XlaEngine::load_default()
                 .ok_or_else(|| sodm::err!("artifacts not found — run `make artifacts`"))?;
-            let decisions: Vec<f64> = match &model {
+            let decisions: Vec<f64> = match model {
                 OdmModel::Linear { w } => engine.linear_decisions(w, &ds.x, ds.cols)?,
                 OdmModel::Kernel { kernel, sv_x, coef, cols } => match kernel {
                     KernelKind::Rbf { gamma } => {
@@ -508,13 +488,7 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
                 .count();
             (correct as f64 / ds.rows as f64, "xla/pjrt")
         }
-        _ => {
-            let acc = match &loaded {
-                LoadedDataset::Dense(d) => model.accuracy(d),
-                LoadedDataset::Sparse(s) => model.accuracy(s),
-            };
-            (acc, "native")
-        }
+        _ => (artifact.accuracy(loaded.as_rows())?, "native"),
     };
     println!(
         "backend={used} rows={rows} accuracy={acc:.4} elapsed={:.3}s",
@@ -531,6 +505,10 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         out_dir: flag(flags, "out-dir").unwrap_or("results").into(),
         ..Default::default()
     };
+    // The harness arms treat spec validity as an internal invariant
+    // (.expect), so reject the one user-controllable violation here with a
+    // typed error like every other subcommand.
+    sodm::ensure!(cfg.workers >= 1, "--workers must be >= 1");
     if let Some(ds) = flag(flags, "datasets") {
         cfg.datasets = ds.split(',').map(|s| s.trim().to_string()).collect();
     }
@@ -615,7 +593,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
 /// `--quick` is the self-contained CI smoke: trains small dense + sparse
 /// RBF models and benchmarks both, no `--model`/`--data` needed.
 fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
-    use sodm::serve::{serve, Backend, ServeConfig};
+    use sodm::serve::{Backend, ServeConfig};
     let workers = flag_usize(flags, "workers", num_cpus().clamp(1, 8))?;
     let shards = flag_usize(flags, "shards", workers)?;
     if flags.contains_key("quick") {
@@ -633,7 +611,11 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let clients = flag_usize(flags, "clients", 8)?;
     let per_client = flag_usize(flags, "requests", 200)?;
-    let model = OdmModel::load(model_path)?;
+    let artifact = Artifact::load(model_path)?;
+    sodm::ensure!(
+        !artifact.is_multiclass(),
+        "serve-bench --model drives binary models; use `experiment --multiclass` for OVR serving"
+    );
     let ds = load_data(data_spec, seed)?;
     let backend = match flag(flags, "backend").unwrap_or("native") {
         "xla" => Backend::Xla(
@@ -643,7 +625,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         _ => Backend::Native,
     };
     let cfg = ServeConfig { workers, shards, ..ServeConfig::default() };
-    let handle = serve(model, backend, cfg)?;
+    let handle = artifact.into_serve_with_backend(backend, cfg)?;
     // Sparse datasets submit CSR requests (O(nnz) per request end to end).
     let score_one = |h: &sodm::serve::ServerHandle, i: usize| match &ds {
         LoadedDataset::Dense(d) => {
@@ -721,4 +703,79 @@ fn cmd_info() -> Result<()> {
         None => println!("artifacts: not found (run `make artifacts`)"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_flags_error_and_list_the_valid_set() {
+        let args = ["--dta", "x.libsvm"].map(String::from);
+        let err = parse_flags("train", &args, TRAIN_FLAGS).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --dta"), "{err}");
+        assert!(err.contains("--data"), "listing must include the valid flags: {err}");
+        assert!(err.contains("`train`"), "{err}");
+    }
+
+    #[test]
+    fn stray_positional_arguments_error() {
+        let args = ["train.libsvm"].map(String::from);
+        assert!(parse_flags("train", &args, TRAIN_FLAGS).is_err());
+    }
+
+    #[test]
+    fn valid_flags_parse_values_and_switches() {
+        let args = ["--data", "a.libsvm", "--no-shrink", "--gamma", "0.5"].map(String::from);
+        let flags = parse_flags("train", &args, TRAIN_FLAGS).unwrap();
+        assert_eq!(flags.get("data").unwrap(), "a.libsvm");
+        assert_eq!(flags.get("no-shrink").unwrap(), "true");
+        assert_eq!(flags.get("gamma").unwrap(), "0.5");
+    }
+
+    #[test]
+    fn every_documented_train_flag_is_accepted() {
+        for f in TRAIN_FLAGS.split_whitespace() {
+            let args = [format!("--{f}"), "1".to_string()];
+            assert!(parse_flags("train", &args, TRAIN_FLAGS).is_ok(), "flag --{f}");
+        }
+    }
+
+    #[test]
+    fn info_accepts_no_flags() {
+        assert!(parse_flags("info", &[], "").is_ok());
+        let args = ["--verbose"].map(String::from);
+        assert!(parse_flags("info", &args, "").is_err());
+    }
+
+    #[test]
+    fn cli_flags_build_a_valid_default_spec() {
+        let spec = build_train_spec(&HashMap::new(), 10, false).unwrap();
+        assert_eq!(spec.method, Method::Sodm);
+        assert!(matches!(spec.kernel, KernelKind::Rbf { .. }));
+    }
+
+    #[test]
+    fn linear_only_methods_default_to_linear_kernel() {
+        let dsvrg: HashMap<String, String> =
+            [("method".to_string(), "dsvrg".to_string())].into_iter().collect();
+        let spec = build_train_spec(&dsvrg, 10, false).unwrap();
+        assert!(matches!(spec.kernel, KernelKind::Linear));
+        let mut explicit = dsvrg.clone();
+        explicit.insert("kernel".to_string(), "rbf".to_string());
+        // an explicit rbf + dsvrg still reaches the typed LinearOnly error
+        assert!(build_train_spec(&explicit, 10, false).is_err());
+    }
+
+    #[test]
+    fn multiclass_method_flag_reaches_the_facade() {
+        let mut f: HashMap<String, String> = HashMap::new();
+        assert!(build_train_spec(&f, 10, true).is_ok(), "default multiclass method is odm");
+        f.insert("method".to_string(), "sodm".to_string());
+        // an explicit non-odm method surfaces MulticlassUnsupported instead
+        // of being silently overridden
+        assert!(build_train_spec(&f, 10, true).is_err());
+        f.insert("method".to_string(), "odm".to_string());
+        assert!(build_train_spec(&f, 10, true).is_ok());
+    }
 }

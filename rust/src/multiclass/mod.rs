@@ -24,6 +24,11 @@
 //!   predictions), serializes through [`crate::util::json`], and serves
 //!   through [`crate::serve::serve_multiclass`] (`score_multiclass`
 //!   requests, one shard job per class-shard on the scorer workers).
+//!
+//! The typed facade trains one-vs-rest through
+//! [`crate::api::TrainSpec::multiclass`] ([`crate::api::train`] maps the
+//! options onto [`OvrConfig`] and wraps the result as a multiclass
+//! [`crate::api::Artifact`]).
 
 use std::time::Instant;
 

@@ -1,5 +1,11 @@
 //! The ODM model: hyperparameters, trained-model representation (linear `w`
 //! or kernel expansion), prediction, and (de)serialization.
+//!
+//! [`OdmModel::to_json`] is the *model payload* of the versioned artifact
+//! format: [`crate::api::Artifact::save`] nests it under `"model"`, and a
+//! bare payload file (the pre-facade v0 convention) still loads through
+//! [`crate::api::Artifact::load`]'s migration shim as well as
+//! [`OdmModel::load`] itself.
 
 use crate::data::{DataView, Dataset, RowRef, Rows};
 use crate::kernel::{dot, KernelKind};

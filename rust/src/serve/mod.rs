@@ -59,9 +59,13 @@ use crate::runtime::XlaEngine;
 use crate::util::pool::WorkQueue;
 use crate::Result;
 
-/// Scoring backend.
+/// Scoring backend. Servers usually start from a typed artifact
+/// ([`crate::api::Artifact::serve`] routes binary models through [`serve`]
+/// and multiclass models through [`serve_multiclass`]).
+#[derive(Default)]
 pub enum Backend {
     /// rust-native compiled scoring plan.
+    #[default]
     Native,
     /// PJRT artifacts (Pallas kernels); models without a PJRT tile layout
     /// fall back to the native plan per batch.

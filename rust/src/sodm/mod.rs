@@ -11,6 +11,11 @@
 //! `levels = L, p` give the paper's schedule; with `final_exact` (default)
 //! the last merge (the whole dataset, warm-started) is solved too, which is
 //! the "all partitions are merged together" endpoint of §3.
+//!
+//! The typed facade dispatches here for nonlinear-kernel
+//! [`crate::api::Method::Sodm`] specs ([`crate::api::train`] maps
+//! `TrainSpec` tree knobs onto [`SodmConfig`]); linear-kernel SODM specs
+//! route to the DSVRG accelerator instead.
 
 use std::time::Instant;
 

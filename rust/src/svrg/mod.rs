@@ -13,10 +13,12 @@
 //!
 //! # Sparse-aware lazy updates
 //!
-//! All trainers accept dense or CSR data ([`crate::data::Rows`]). The SVRG
+//! All trainers accept dense or CSR data ([`crate::data::Rows`]); the typed
+//! facade dispatches here for linear-kernel specs
+//! ([`crate::api::Method::Dsvrg`] and friends). The SVRG
 //! inner step on instance i is `w ← w − η((w − w_snap) + Δc·x_i + h)`; its
 //! dense part `(w − w_snap) + h` touches every coordinate even when `x_i`
-//! has a handful of nonzeros. [`LazyVr`] exploits that between touches of a
+//! has a handful of nonzeros. `LazyVr` exploits that between touches of a
 //! coordinate j every step applies the same affine map with fixed point
 //! `f_j = w_snap_j − h_j`, which composes in closed form over k skipped
 //! steps: `w_j ← f_j + (1−η)^k (w_j − f_j)`. A step on a sparse row is

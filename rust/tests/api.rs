@@ -1,0 +1,400 @@
+//! Facade acceptance tests: `TrainSpec` validation error paths, facade ==
+//! direct-trainer equivalence pinned at 1e-12, versioned artifact
+//! round-trips, and the committed v0 model-JSON fixtures proving the
+//! backward-compatibility migration shim is bit-exact.
+
+use std::path::PathBuf;
+
+use sodm::api::{self, Artifact, ArtifactModel, Method, OvrOptions, SpecError, TrainSpec};
+use sodm::data::synth::SynthSpec;
+use sodm::data::RowRef;
+use sodm::kernel::KernelKind;
+use sodm::multiclass::{MulticlassModel, MulticlassSynthSpec};
+use sodm::odm::{OdmModel, OdmParams};
+use sodm::qp::SolveBudget;
+use sodm::serve::ServeConfig;
+use sodm::sodm::{train_sodm, SodmConfig};
+use sodm::svrg::{train_dsvrg, NativeGrad, SvrgConfig};
+use sodm::util::json::Json;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures").join(name)
+}
+
+fn fixture_json(name: &str) -> Json {
+    let text = std::fs::read_to_string(fixture_path(name)).expect("fixture readable");
+    Json::parse(&text).expect("fixture parses")
+}
+
+fn dense_fixture(rows: usize, seed: u64) -> sodm::data::Dataset {
+    let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+    s.rows = rows;
+    s.generate()
+}
+
+fn assert_close_1e12(a: f64, b: f64, what: &str) {
+    assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()), "{what}: {a} vs {b}");
+}
+
+// --- TrainSpec validation error paths ------------------------------------
+
+#[test]
+fn spec_validation_reports_typed_errors() {
+    let rbf = KernelKind::Rbf { gamma: 0.5 };
+    // bad method x kernel combos: the whole gradient family is linear-only
+    for m in [Method::Dsvrg, Method::Svrg, Method::Csvrg] {
+        assert_eq!(
+            TrainSpec::new(m).kernel(rbf).build().unwrap_err(),
+            SpecError::LinearOnly { method: m.name() }
+        );
+    }
+    // zero workers
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(rbf).workers(0).build().unwrap_err(),
+        SpecError::ZeroWorkers
+    );
+    // negative / non-finite gamma
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(KernelKind::Rbf { gamma: -1.0 }).build().unwrap_err(),
+        SpecError::BadGamma { gamma: -1.0 }
+    );
+    assert!(matches!(
+        TrainSpec::new(Method::Sodm)
+            .kernel(KernelKind::Rbf { gamma: f32::NAN })
+            .build()
+            .unwrap_err(),
+        SpecError::BadGamma { .. }
+    ));
+    // hyperparameter ranges
+    let with_params = |p: OdmParams| TrainSpec::new(Method::ExactOdm).kernel(rbf).params(p);
+    assert_eq!(
+        with_params(OdmParams { lambda: 0.0, ..OdmParams::default() }).build().unwrap_err(),
+        SpecError::BadLambda { lambda: 0.0 }
+    );
+    assert_eq!(
+        with_params(OdmParams { theta: 1.0, ..OdmParams::default() }).build().unwrap_err(),
+        SpecError::BadTheta { theta: 1.0 }
+    );
+    assert_eq!(
+        with_params(OdmParams { upsilon: 0.0, ..OdmParams::default() }).build().unwrap_err(),
+        SpecError::BadUpsilon { upsilon: 0.0 }
+    );
+    // solver budget
+    let zero_sweeps = SolveBudget { max_sweeps: 0, ..SolveBudget::default() };
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(rbf).budget(zero_sweeps).build().unwrap_err(),
+        SpecError::ZeroSweeps
+    );
+    let bad_eps = SolveBudget { eps: 0.0, ..SolveBudget::default() };
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(rbf).budget(bad_eps).build().unwrap_err(),
+        SpecError::BadEps { eps: 0.0 }
+    );
+    // tree / gradient shape knobs
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(rbf).tree(1, 2, 8).build().unwrap_err(),
+        SpecError::MergeArity { p: 1 }
+    );
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(rbf).tree(4, 2, 0).build().unwrap_err(),
+        SpecError::ZeroStratums
+    );
+    assert_eq!(
+        TrainSpec::new(Method::Dsvrg).epochs(0).build().unwrap_err(),
+        SpecError::ZeroEpochs
+    );
+    assert_eq!(
+        TrainSpec::new(Method::Dsvrg).partitions(0).build().unwrap_err(),
+        SpecError::ZeroPartitions
+    );
+    assert_eq!(
+        TrainSpec::new(Method::Csvrg).coreset(0).build().unwrap_err(),
+        SpecError::ZeroCoreset
+    );
+    // SVM local solver only applies to the baseline meta-methods
+    assert_eq!(
+        TrainSpec::new(Method::Sodm)
+            .kernel(rbf)
+            .solver(api::LocalSolver::Svm { c: 1.0 })
+            .build()
+            .unwrap_err(),
+        SpecError::SvmSolverUnsupported { method: "sodm" }
+    );
+    assert_eq!(
+        TrainSpec::new(Method::Cascade)
+            .kernel(rbf)
+            .solver(api::LocalSolver::Svm { c: 0.0 })
+            .build()
+            .unwrap_err(),
+        SpecError::BadSvmC { c: 0.0 }
+    );
+    // multiclass requires the exact ODM per-class solver
+    assert_eq!(
+        TrainSpec::new(Method::Sodm).kernel(rbf).multiclass(OvrOptions::default()).build().err(),
+        Some(SpecError::MulticlassUnsupported { method: "sodm" })
+    );
+    // unknown method names are typed too
+    assert_eq!(
+        Method::parse("sodm2").unwrap_err(),
+        SpecError::UnknownMethod { given: "sodm2".into() }
+    );
+    // and the canonical good specs build
+    assert!(TrainSpec::new(Method::Sodm).kernel(rbf).build().is_ok());
+    assert!(TrainSpec::new(Method::Dsvrg).build().is_ok());
+    assert!(TrainSpec::new(Method::ExactOdm).multiclass(OvrOptions::default()).build().is_ok());
+}
+
+#[test]
+fn binary_spec_rejects_multiclass_data_and_vice_versa() {
+    let mc = MulticlassSynthSpec::new(3, 60, 4, 3).generate();
+    let bin = dense_fixture(60, 3);
+    let bin_spec = TrainSpec::new(Method::ExactOdm).kernel(KernelKind::Linear).build().unwrap();
+    assert!(api::train(&bin_spec, &mc).is_err(), "binary spec must reject multiclass data");
+    let mc_spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Linear)
+        .multiclass(OvrOptions::default())
+        .build()
+        .unwrap();
+    assert!(api::train(&mc_spec, &bin).is_err(), "multiclass spec must reject binary rows");
+}
+
+// --- facade == direct trainer equivalence at 1e-12 ------------------------
+
+#[test]
+fn facade_matches_direct_sodm_at_1e12() {
+    let ds = dense_fixture(240, 11);
+    let kernel = KernelKind::Rbf { gamma: 1.5 };
+    let params = OdmParams::default();
+    let spec = TrainSpec::new(Method::Sodm)
+        .kernel(kernel)
+        .params(params)
+        .tree(2, 2, 6)
+        .seed(17)
+        .build()
+        .unwrap();
+    let facade = api::train(&spec, &ds).unwrap();
+    let direct = train_sodm(
+        &ds,
+        &kernel,
+        &params,
+        &SodmConfig { seed: 17, ..SodmConfig::with_tree(2, 2, 6) },
+        None,
+    );
+    let got = facade.decisions(&ds).unwrap();
+    let want = direct.decisions(&ds);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_close_1e12(*a, *b, &format!("sodm decision row {i}"));
+    }
+    assert_eq!(facade.support_size(), direct.support_size());
+    assert_eq!(facade.meta.method, "sodm");
+    assert!(facade.meta.sweeps > 0, "sodm telemetry must aggregate into the artifact");
+}
+
+#[test]
+fn facade_matches_direct_dsvrg_at_1e12() {
+    let ds = dense_fixture(300, 19);
+    let params = OdmParams::default();
+    let workers = 2;
+    let spec = TrainSpec::new(Method::Dsvrg)
+        .params(params)
+        .workers(workers)
+        .epochs(3)
+        .partitions(4)
+        .stratums(8)
+        .seed(23)
+        .build()
+        .unwrap();
+    let facade = api::train(&spec, &ds).unwrap();
+    let direct = train_dsvrg(
+        &ds,
+        &params,
+        &SvrgConfig { epochs: 3, partitions: 4, seed: 23, ..SvrgConfig::default() },
+        None,
+        &NativeGrad { workers },
+    )
+    .model;
+    let got = facade.decisions(&ds).unwrap();
+    let want = direct.decisions(&ds);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_close_1e12(*a, *b, &format!("dsvrg decision row {i}"));
+    }
+}
+
+#[test]
+fn facade_routes_linear_sodm_to_dsvrg() {
+    // `sodm` + linear kernel is the paper's §3.3 routing: the facade must
+    // produce the DSVRG accelerator's model, not a hierarchical merge.
+    let ds = dense_fixture(300, 19);
+    let spec = TrainSpec::new(Method::Sodm)
+        .workers(2)
+        .epochs(3)
+        .partitions(4)
+        .seed(23)
+        .build()
+        .unwrap();
+    let via_sodm = api::train(&spec, &ds).unwrap();
+    let spec_dsvrg = TrainSpec::new(Method::Dsvrg)
+        .workers(2)
+        .epochs(3)
+        .partitions(4)
+        .seed(23)
+        .build()
+        .unwrap();
+    let via_dsvrg = api::train(&spec_dsvrg, &ds).unwrap();
+    let (a, b) = (via_sodm.decisions(&ds).unwrap(), via_dsvrg.decisions(&ds).unwrap());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_close_1e12(*x, *y, &format!("linear-sodm routing row {i}"));
+    }
+}
+
+#[test]
+fn facade_matches_direct_exact_odm_at_1e12() {
+    let ds = dense_fixture(150, 29);
+    let kernel = KernelKind::Rbf { gamma: 2.0 };
+    let spec = TrainSpec::new(Method::ExactOdm).kernel(kernel).build().unwrap();
+    let facade = api::train(&spec, &ds).unwrap();
+    let direct =
+        sodm::odm::train_exact_odm(&ds, &kernel, &OdmParams::default(), &SolveBudget::default());
+    let got = facade.decisions(&ds).unwrap();
+    let want = direct.decisions(&ds);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_close_1e12(*a, *b, &format!("exact odm decision row {i}"));
+    }
+}
+
+// --- committed v0 fixtures: migration shim is bit-exact -------------------
+
+#[test]
+fn v0_dense_rbf_fixture_loads_and_serves_identically() {
+    let art = Artifact::load(fixture_path("v0_dense_rbf.json")).unwrap();
+    let direct = OdmModel::from_json(&fixture_json("v0_dense_rbf.json")).unwrap();
+    let ArtifactModel::Binary(migrated) = &art.model else { panic!("binary fixture") };
+    assert_eq!(
+        migrated.to_json().to_string(),
+        direct.to_json().to_string(),
+        "v0 migration must be bit-exact"
+    );
+    assert_eq!(art.meta.method, "unknown", "v0 artifacts carry no training metadata");
+    assert_eq!(art.meta.kernel, KernelKind::Rbf { gamma: 0.5 });
+    let probes: [[f32; 3]; 3] = [[0.1, 0.5, -0.2], [0.0, 0.0, 0.0], [1.0, -1.0, 0.25]];
+    let h = art.serve(ServeConfig::default()).unwrap();
+    for x in &probes {
+        let want = direct.decision(x);
+        assert_eq!(migrated.decision(x), want, "migrated model must score bit-identically");
+        assert_close_1e12(h.score(x).unwrap(), want, "served v0 dense decision");
+    }
+    h.stop();
+}
+
+#[test]
+fn v0_sparse_rbf_fixture_loads_and_serves_identically() {
+    let art = Artifact::load(fixture_path("v0_sparse_rbf.json")).unwrap();
+    let direct = OdmModel::from_json(&fixture_json("v0_sparse_rbf.json")).unwrap();
+    let ArtifactModel::Binary(migrated) = &art.model else { panic!("binary fixture") };
+    assert!(matches!(migrated, OdmModel::SparseKernel { .. }), "CSR support vectors survive");
+    assert_eq!(migrated.to_json().to_string(), direct.to_json().to_string());
+    let h = art.serve(ServeConfig::default()).unwrap();
+    let check = |indices: &[u32], values: &[f32]| {
+        let rr = RowRef::Sparse { indices, values, cols: 6 };
+        let want = direct.decision_rr(rr);
+        assert_eq!(migrated.decision_rr(rr), want);
+        assert_close_1e12(h.score_sparse(indices, values).unwrap(), want, "served v0 CSR");
+    };
+    check(&[0, 3], &[1.0, -0.5]);
+    check(&[1, 2, 5], &[0.25, -1.0, 2.0]);
+    check(&[], &[]);
+    h.stop();
+}
+
+#[test]
+fn v0_multiclass_fixture_loads_and_serves_identically() {
+    let art = Artifact::load(fixture_path("v0_multiclass_ovr.json")).unwrap();
+    let direct = MulticlassModel::from_json(&fixture_json("v0_multiclass_ovr.json")).unwrap();
+    let migrated = art.as_multiclass().expect("multiclass fixture");
+    assert_eq!(migrated.to_json().to_string(), direct.to_json().to_string());
+    assert_eq!(art.n_classes(), Some(3));
+    let probes: [[f32; 3]; 3] = [[0.1, 0.2, 0.3], [0.0, 0.0, 0.0], [-0.5, 1.0, 0.25]];
+    let h = art.serve(ServeConfig::default()).unwrap();
+    for x in &probes {
+        let want: Vec<f64> = direct.models.iter().map(|m| m.decision(x)).collect();
+        let mut want_argmax = 0;
+        for (c, s) in want.iter().enumerate() {
+            if *s > want[want_argmax] {
+                want_argmax = c;
+            }
+        }
+        let got = h.score_multiclass(x).unwrap();
+        assert_eq!(got.argmax, want_argmax);
+        for (c, (a, b)) in got.scores.iter().zip(&want).enumerate() {
+            assert_close_1e12(*a, *b, &format!("served v0 multiclass class {c}"));
+        }
+    }
+    h.stop();
+}
+
+// --- versioned envelope round-trips ---------------------------------------
+
+#[test]
+fn trained_artifact_round_trips_through_v1_json() {
+    let ds = dense_fixture(120, 31);
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 1.0 })
+        .seed(5)
+        .build()
+        .unwrap();
+    let art = api::train(&spec, &ds).unwrap();
+    let dir = sodm::util::temp_dir("api-v1");
+    let path = dir.join("artifact.json");
+    art.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.req("format_version").unwrap().as_usize().unwrap(), api::FORMAT_VERSION);
+    let back = Artifact::load(&path).unwrap();
+    assert_eq!(art.to_json().to_string(), back.to_json().to_string(), "round trip is bit-exact");
+    assert_eq!(back.meta.method, "odm");
+    assert_eq!(back.meta.sweeps, art.meta.sweeps);
+    assert_eq!(back.meta.converged, art.meta.converged);
+    let (a, b) = (art.decisions(&ds).unwrap(), back.decisions(&ds).unwrap());
+    assert_eq!(a, b, "loaded artifact must score bit-identically");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn multiclass_artifact_round_trips_through_v1_json() {
+    let ds = MulticlassSynthSpec::new(3, 90, 5, 21).generate();
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 0.1 })
+        .budget(SolveBudget { max_sweeps: 15, ..SolveBudget::default() })
+        .multiclass(OvrOptions::default())
+        .build()
+        .unwrap();
+    let run = api::train_run(&spec, &ds, None).unwrap();
+    assert_eq!(run.class_stats.len(), 3, "per-class telemetry rides along");
+    assert!(run.cache_hit_rate > 0.0, "shared Gram cache is the default");
+    let dir = sodm::util::temp_dir("api-v1-mc");
+    let path = dir.join("mc.json");
+    run.artifact.save(&path).unwrap();
+    let back = Artifact::load(&path).unwrap();
+    assert_eq!(run.artifact.to_json().to_string(), back.to_json().to_string());
+    let a = run.artifact.as_multiclass().unwrap().scores(ds.as_rows(), 2);
+    let b = back.as_multiclass().unwrap().scores(ds.as_rows(), 2);
+    assert_eq!(a, b, "multiclass scores are bitwise equal after the round trip");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn newer_format_versions_are_rejected() {
+    let dir = sodm::util::temp_dir("api-future");
+    let path = dir.join("future.json");
+    std::fs::write(&path, r#"{"format_version":99,"model":{"kind":"linear","w":[1.0]}}"#).unwrap();
+    let err = Artifact::load(&path).unwrap_err().to_string();
+    assert!(err.contains("format_version 99"), "{err}");
+    // an explicit version-0 envelope never existed: rejected with an
+    // accurate message (v0 files are bare payloads without the field)
+    std::fs::write(&path, r#"{"format_version":0,"model":{"kind":"linear","w":[1.0]}}"#).unwrap();
+    let err = Artifact::load(&path).unwrap_err().to_string();
+    assert!(err.contains("format_version 0"), "{err}");
+    assert!(!err.contains("newer"), "v0 envelope must not claim to be newer: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
