@@ -1,0 +1,61 @@
+//! Remote serving: the full network stack in one process — train a model,
+//! put the TCP frontend in front of the batched scoring runtime, score
+//! over the wire, then hot-swap the artifact under live traffic and watch
+//! the version flip without dropping a request.
+//!
+//! Run with: `cargo run --release --example remote_serve`
+
+use std::sync::Arc;
+
+use sodm::api::{self, Method, TrainSpec};
+use sodm::data::synth::SynthSpec;
+use sodm::kernel::KernelKind;
+use sodm::net::{ModelRegistry, NetClient, NetServer};
+use sodm::serve::ServeConfig;
+
+fn main() -> sodm::Result<()> {
+    if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+        eprintln!("loopback sockets unavailable in this environment; nothing to demo");
+        return Ok(());
+    }
+
+    // 1. Train two generations of the model: v1 serves first, v2 waits on
+    // disk for the hot swap.
+    let spec = TrainSpec::new(Method::ExactOdm).kernel(KernelKind::Rbf { gamma: 1.0 }).build()?;
+    let mut sgen = SynthSpec::named("svmguide1", 0.02, 7);
+    sgen.rows = 240;
+    let ds = sgen.generate();
+    let v1 = api::train(&spec, &ds)?;
+    let mut sgen2 = SynthSpec::named("svmguide1", 0.02, 43);
+    sgen2.rows = 240;
+    let v2 = api::train(&spec, &sgen2.generate())?;
+    let swap_path = std::env::temp_dir().join("sodm_example_vnext.json");
+    v2.save(&swap_path)?;
+
+    // 2. Registry + TCP frontend on an ephemeral loopback port.
+    let cfg = ServeConfig { workers: 2, shards: 2, ..ServeConfig::default() };
+    let registry = Arc::new(ModelRegistry::start(v1, cfg)?);
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry))?;
+    let addr = server.local_addr();
+    println!("serving on {addr}");
+
+    // 3. Score over the wire; a second connection probes health.
+    let mut client = NetClient::connect(addr)?;
+    let x = ds.row(0);
+    println!("wire score of row 0: {:+.4}", client.score(x)?.value()?);
+    println!("health: {}", client.health()?);
+
+    // 4. Hot swap to v2 while the scoring connection stays open. In-flight
+    // batches drain on the old plan; new requests route to the new one.
+    let version = client.admin_swap(swap_path.to_str().expect("utf-8 temp path"))?;
+    println!("hot-swapped to version {version}");
+    println!("wire score of row 0 on v{version}: {:+.4}", client.score(x)?.value()?);
+    println!("health: {}", client.health()?);
+
+    // 5. Metrics come from the live generation's serving runtime.
+    println!("metrics: {}", client.metrics()?);
+
+    server.stop();
+    let _ = std::fs::remove_file(&swap_path);
+    Ok(())
+}

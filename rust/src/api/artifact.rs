@@ -190,6 +190,23 @@ impl ArtifactPlan {
     }
 }
 
+/// Compact structural description of an [`Artifact`] — what the network
+/// frontend ([`crate::net`]) reports in health frames and the model
+/// registry logs on hot-swaps.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// Training method name (`"unknown"` for migrated v0 files).
+    pub method: String,
+    /// Kernel the model scores with.
+    pub kernel: KernelKind,
+    /// `Some(K)` for multiclass artifacts, `None` for binary ones.
+    pub classes: Option<usize>,
+    /// Feature dimensionality the model scores.
+    pub cols: usize,
+    /// Support size (total across classes; feature dim for linear models).
+    pub support: usize,
+}
+
 /// A trained model plus its training metadata, behind the versioned JSON
 /// format described in the [module docs](self).
 #[derive(Clone, Debug)]
@@ -244,6 +261,17 @@ impl Artifact {
         match &self.model {
             ArtifactModel::Binary(_) => None,
             ArtifactModel::Multiclass(m) => Some(m.n_classes()),
+        }
+    }
+
+    /// Structural summary for health endpoints and registry logs.
+    pub fn info(&self) -> ArtifactInfo {
+        ArtifactInfo {
+            method: self.meta.method.clone(),
+            kernel: self.model.kernel(),
+            classes: self.n_classes(),
+            cols: self.input_cols(),
+            support: self.support_size(),
         }
     }
 
@@ -453,5 +481,15 @@ mod tests {
 
     fn mc_fixture() -> MulticlassDataset {
         crate::multiclass::MulticlassSynthSpec::new(2, 10, 3, 1).generate()
+    }
+
+    #[test]
+    fn info_summarizes_shape() {
+        let info = linear_artifact().info();
+        assert_eq!(info.method, "unknown");
+        assert_eq!(info.kernel, KernelKind::Linear);
+        assert_eq!(info.classes, None);
+        assert_eq!(info.cols, 3);
+        assert_eq!(info.support, 3);
     }
 }

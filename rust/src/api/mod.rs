@@ -51,7 +51,7 @@
 
 pub mod artifact;
 
-pub use artifact::{Artifact, ArtifactModel, ArtifactPlan, TrainMeta, FORMAT_VERSION};
+pub use artifact::{Artifact, ArtifactInfo, ArtifactModel, ArtifactPlan, TrainMeta, FORMAT_VERSION};
 
 use std::time::Instant;
 

@@ -432,6 +432,262 @@ fn serve_case(
     Ok((json, line))
 }
 
+/// Client-side aggregate of one remote (TCP) load run — what the *clients*
+/// observed, as opposed to the server-side [`crate::serve::ServeMetrics`].
+/// Every submitted request lands in exactly one bucket, so
+/// `ok + shed + rejected + errors == clients * per_client` is the
+/// zero-hung-clients invariant the remote benchmark asserts.
+#[derive(Clone, Debug, Default)]
+pub struct RemoteLoadStats {
+    /// Requests scored successfully.
+    pub ok: u64,
+    /// Requests shed by admission control (typed `Overloaded` reply).
+    pub shed: u64,
+    /// Requests rejected with any other typed wire error (validation,
+    /// failed batch, stopped runtime).
+    pub rejected: u64,
+    /// Transport failures (connect/read/write/timeout) — 0 in a healthy run.
+    pub errors: u64,
+    /// Wall-clock seconds of the whole run.
+    pub secs: f64,
+    /// Round-trip latencies (ms) of the `ok` requests.
+    latencies_ms: Vec<f64>,
+}
+
+impl RemoteLoadStats {
+    fn merge(&mut self, other: RemoteLoadStats) {
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.latencies_ms.extend(other.latencies_ms);
+    }
+
+    /// Total requests that resolved one way or another.
+    pub fn resolved(&self) -> u64 {
+        self.ok + self.shed + self.rejected + self.errors
+    }
+
+    /// Fraction of submitted requests shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.resolved() as f64;
+        if total == 0.0 { 0.0 } else { self.shed as f64 / total }
+    }
+
+    /// Client-observed round-trip latency percentile (`q` in `0..=100`).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((q / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+}
+
+/// Mid-run chaos for [`remote_load`]: client 0 doubles as the chaos monkey,
+/// arming one scorer panic at request `fault_at` of its own stream and
+/// hot-swapping the serving artifact at request `swap_at`.
+pub struct RemoteChaos {
+    /// Client-0 request index at which to inject one scorer panic.
+    pub fault_at: usize,
+    /// Client-0 request index at which to trigger the hot swap.
+    pub swap_at: usize,
+    /// Server-side path of the v-next artifact JSON.
+    pub swap_path: String,
+}
+
+/// One client's share of a [`remote_load`] run: a dedicated connection,
+/// `per_client` requests, every outcome counted. Transport errors
+/// reconnect once; a dead server turns the remainder of the stream into
+/// counted errors — never a hang (the client enforces socket timeouts).
+fn remote_client(
+    addr: &str,
+    c: usize,
+    per_client: usize,
+    make_req: &(impl Fn(usize) -> crate::net::Request + Sync),
+    chaos: Option<&RemoteChaos>,
+) -> RemoteLoadStats {
+    use crate::net::{ErrorCode, NetClient, Reply};
+
+    let mut part = RemoteLoadStats::default();
+    let mut conn = match NetClient::connect(addr) {
+        Ok(conn) => conn,
+        Err(_) => {
+            part.errors += per_client as u64;
+            return part;
+        }
+    };
+    for r in 0..per_client {
+        if let (0, Some(ch)) = (c, chaos) {
+            if r == ch.fault_at {
+                let _ = conn.admin_fault(1, 0);
+            }
+            if r == ch.swap_at {
+                let _ = conn.admin_swap(&ch.swap_path);
+            }
+        }
+        let req = make_req(c * per_client + r * 7919);
+        let q0 = Instant::now();
+        match conn.request(&req) {
+            Ok(Reply::Score(_)) | Ok(Reply::Multi { .. }) => {
+                part.ok += 1;
+                part.latencies_ms.push(q0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(Reply::Error { code: ErrorCode::Overloaded, .. }) => part.shed += 1,
+            Ok(_) => part.rejected += 1,
+            Err(_) => {
+                part.errors += 1;
+                match NetClient::connect(addr) {
+                    Ok(fresh) => conn = fresh,
+                    Err(_) => {
+                        part.errors += (per_client - r - 1) as u64;
+                        return part;
+                    }
+                }
+            }
+        }
+    }
+    part
+}
+
+/// Drive `clients` concurrent TCP connections against a wire-protocol
+/// server at `addr`, `per_client` requests each (`make_req` builds request
+/// `i`), and aggregate what the clients observed. With `chaos`, client 0
+/// injects a scorer panic and a hot swap mid-run — the acceptance drill
+/// for the hardening contract: every request resolves with a score or a
+/// typed error, none hang.
+pub fn remote_load(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    make_req: &(impl Fn(usize) -> crate::net::Request + Sync),
+    chaos: Option<&RemoteChaos>,
+) -> crate::Result<RemoteLoadStats> {
+    let t0 = Instant::now();
+    let parts: Vec<RemoteLoadStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| s.spawn(move || remote_client(addr, c, per_client, make_req, chaos)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    let mut stats = RemoteLoadStats::default();
+    for p in parts {
+        stats.merge(p);
+    }
+    stats.secs = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// Remote serving benchmark — the acceptance drill for ROADMAP item 1: a
+/// real TCP loopback server under concurrent client load while a scorer is
+/// killed (fault injection) *and* the artifact is hot-swapped mid-run.
+/// Every request must resolve with a score or a typed error — zero hung
+/// clients — and the report carries client-observed p50/p95/p99 plus the
+/// shed rate. Shared by `serve-bench --remote` (bare switch),
+/// `experiment --remote-serve` (writes `remote_serve_bench.json`), and the
+/// CI smoke. Skips gracefully (`"skipped": true`) where loopback sockets
+/// are unavailable (sandboxed runners).
+pub fn run_remote_serve_benchmark(
+    workers: usize,
+    shards: usize,
+    quick: bool,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::net::{ModelRegistry, NetServer, Request};
+    use crate::serve::ServeConfig;
+    use crate::util::json::{jstr, Json};
+    use std::sync::Arc;
+
+    if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+        let json = Json::obj(vec![("name", jstr("remote-serve")), ("skipped", Json::Bool(true))]);
+        let line = "remote serve benchmark skipped: loopback sockets unavailable".to_string();
+        return Ok((json, line));
+    }
+
+    let (rows, clients, per_client) = if quick { (140, 4, 80) } else { (300, 8, 200) };
+    let budget = SolveBudget { max_sweeps: 20, ..SolveBudget::default() };
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 1.0 })
+        .budget(budget)
+        .build()?;
+    let mut sgen = SynthSpec::named("svmguide1", 0.01, 7);
+    sgen.rows = rows;
+    let ds = sgen.generate();
+    let primary = api::train(&spec, &ds)?;
+    // v-next trains on a reshuffled draw: a genuinely different model, so
+    // post-swap scores demonstrably come from the new generation.
+    let mut sgen2 = SynthSpec::named("svmguide1", 0.01, 43);
+    sgen2.rows = rows;
+    let vnext = api::train(&spec, &sgen2.generate())?;
+    let dir = std::env::temp_dir().join("sodm_remote_bench");
+    std::fs::create_dir_all(&dir)?;
+    let swap_path = dir.join("vnext.json");
+    vnext.save(&swap_path)?;
+
+    let cfg = ServeConfig {
+        workers,
+        shards,
+        max_wait: std::time::Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::start(primary, cfg)?);
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry))?;
+    let addr = server.local_addr().to_string();
+
+    let chaos = RemoteChaos {
+        fault_at: per_client / 4,
+        swap_at: per_client / 2,
+        swap_path: swap_path.to_string_lossy().into_owned(),
+    };
+    let make_req = |i: usize| Request::ScoreDense(ds.row(i % ds.rows).to_vec());
+    let stats = remote_load(&addr, clients, per_client, &make_req, Some(&chaos))?;
+    let final_version = registry.version();
+    server.stop();
+    let _ = std::fs::remove_file(&swap_path);
+
+    let submitted = (clients * per_client) as u64;
+    let json = Json::obj(vec![
+        ("name", jstr("remote-serve")),
+        ("skipped", Json::Bool(false)),
+        ("workers", Json::Num(workers as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("per_client", Json::Num(per_client as f64)),
+        ("submitted", Json::Num(submitted as f64)),
+        ("resolved", Json::Num(stats.resolved() as f64)),
+        ("ok", Json::Num(stats.ok as f64)),
+        ("shed", Json::Num(stats.shed as f64)),
+        ("rejected", Json::Num(stats.rejected as f64)),
+        ("transport_errors", Json::Num(stats.errors as f64)),
+        ("shed_rate", Json::Num(stats.shed_rate())),
+        ("seconds", Json::Num(stats.secs)),
+        ("req_per_s", Json::Num(stats.ok as f64 / stats.secs.max(1e-9))),
+        ("p50_ms", Json::Num(stats.percentile_ms(50.0))),
+        ("p95_ms", Json::Num(stats.percentile_ms(95.0))),
+        ("p99_ms", Json::Num(stats.percentile_ms(99.0))),
+        ("final_version", Json::Num(final_version as f64)),
+    ]);
+    let line = format!(
+        "remote serve benchmark ({clients} clients x {per_client} reqs, {workers} workers, \
+         {shards} shards)\n\
+         resolved {}/{submitted}: ok {} shed {} rejected {} transport {} (shed rate {:.3})\n\
+         latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  ({:.0} req/s); \
+         artifact v{final_version} after mid-run scorer kill + hot swap",
+        stats.resolved(),
+        stats.ok,
+        stats.shed,
+        stats.rejected,
+        stats.errors,
+        stats.shed_rate(),
+        stats.percentile_ms(50.0),
+        stats.percentile_ms(95.0),
+        stats.percentile_ms(99.0),
+        stats.ok as f64 / stats.secs.max(1e-9),
+    );
+    Ok((json, line))
+}
+
 /// Multiclass OVR benchmark — trains the K one-vs-rest classes twice on the
 /// same fixture (one shared unsigned Gram cache vs a private signed cache
 /// per class; the models are bit-identical, only wall-clock differs),

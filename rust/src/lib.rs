@@ -73,7 +73,10 @@
 //! The server ([`serve`]) is a batcher + N scorer workers, each owning a
 //! support-vector shard of a [`infer::ShardedPlan`] whose partial kernel
 //! sums are reduced before reply; [`serve::ServeMetrics`] tracks
-//! p50/p95/p99 latency.
+//! p50/p95/p99 latency. The network layer ([`net`]) puts a zero-dependency
+//! TCP wire protocol in front of that runtime — typed overload shedding,
+//! health/metrics frames, and hot-swappable versioned artifacts through
+//! [`net::ModelRegistry`].
 //!
 //! ## Sparse data path
 //!
@@ -104,6 +107,7 @@ pub mod exp;
 pub mod infer;
 pub mod kernel;
 pub mod multiclass;
+pub mod net;
 pub mod odm;
 pub mod partition;
 pub mod qp;

@@ -6,6 +6,10 @@
 //! * `predict`    — score a saved artifact on a dataset (native or `--backend xla`)
 //! * `experiment` — regenerate a paper table (`--table 1..4`) or figure
 //!                  (`--figure 1..4`)
+//! * `serve`      — network-facing model server (TCP wire protocol over the
+//!                  batched scoring runtime; hot-swappable artifacts)
+//! * `admin`      — one-shot wire client: health/metrics probes, hot swap,
+//!                  fault injection against a running `serve`
 //! * `info`       — toolchain, artifact, and cluster info
 //!
 //! Argument parsing is in-crate (offline build; no clap): `--key value`
@@ -42,10 +46,13 @@ const GEN_DATA_FLAGS: &str = "name seed out scale rows cols density";
 const TRAIN_FLAGS: &str = "data method kernel gamma lambda theta upsilon p levels stratums \
      workers epochs model-out no-shrink ordered-every seed multiclass no-shared-cache";
 const PREDICT_FLAGS: &str = "model data backend seed";
-const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve multiclass scale seed \
-     datasets workers out-dir odm-cap rows cols density shards classes quick json cores dataset";
+const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve multiclass \
+     scale seed datasets workers out-dir odm-cap rows cols density shards classes quick json \
+     cores dataset";
 const SERVE_BENCH_FLAGS: &str =
-    "model data backend seed clients requests workers shards json quick";
+    "model data backend seed clients requests workers shards json quick remote";
+const SERVE_FLAGS: &str = "model addr workers shards";
+const ADMIN_FLAGS: &str = "addr swap panics stall-ms health metrics";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -67,6 +74,8 @@ fn run(cmd: &str, args: &[String]) -> Result<()> {
         "predict" => cmd_predict(&parse_flags(cmd, args, PREDICT_FLAGS)?),
         "experiment" => cmd_experiment(&parse_flags(cmd, args, EXPERIMENT_FLAGS)?),
         "serve-bench" => cmd_serve_bench(&parse_flags(cmd, args, SERVE_BENCH_FLAGS)?),
+        "serve" => cmd_serve(&parse_flags(cmd, args, SERVE_FLAGS)?),
+        "admin" => cmd_admin(&parse_flags(cmd, args, ADMIN_FLAGS)?),
         "info" => {
             parse_flags(cmd, args, "")?;
             cmd_info()
@@ -114,18 +123,30 @@ USAGE: sodm <command> [--flag value]...
   predict    --model m.json --data <...> [--backend native|xla]
              (multiclass artifacts score multiclass data natively)
   experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse | --serve
-              | --multiclass)
+              | --remote-serve | --multiclass)
              [--scale 0.05] [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
              (--sparse: CSR scaling benchmark, [--rows 10000] [--cols 100000]
               [--density 0.001]; writes results/sparse_bench.json)
              (--serve: sharded serving benchmark, [--shards N]; writes
               results/serve_bench.json)
+             (--remote-serve: TCP loopback drill — scorer kill + artifact
+              hot swap under client load, [--quick]; writes
+              results/remote_serve_bench.json)
              (--multiclass: OVR shared-vs-private Gram-cache benchmark,
               [--classes 4] [--quick] [--json copy.json]; writes
               results/multiclass_bench.json)
   serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
              [--workers N] [--shards N] [--json out.json]
              (--quick: self-contained dense + sparse RBF smoke, no --model/--data)
+             (--remote: self-contained TCP loopback drill, no --model/--data;
+              --remote <addr> --data <...>: load-generate against a running
+              `serve` and report client-observed p50/p95/p99 + shed rate)
+  serve      --model m.json [--addr 127.0.0.1:7878] [--workers N] [--shards N]
+             (TCP frontend over the batched scoring runtime; length-prefixed
+              binary frames, typed overload shedding, hot-swappable artifacts)
+  admin      --addr host:port [--swap m.json | --panics N | --stall-ms M |
+              --metrics | --health]
+             (one-shot wire client; default probe is --health)
   info
 "
     );
@@ -549,6 +570,17 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         println!("wrote {}", path.display());
         return Ok(());
     }
+    if flags.contains_key("remote-serve") {
+        let shards = flag_usize(flags, "shards", cfg.workers)?;
+        let quick = flags.contains_key("quick");
+        let (json, out) = sodm::exp::run_remote_serve_benchmark(cfg.workers, shards, quick)?;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("remote_serve_bench.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("{out}");
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
     if flags.contains_key("multiclass") {
         let classes = flag_usize(flags, "classes", 4)?;
         let quick = flags.contains_key("quick");
@@ -584,7 +616,8 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         return Ok(());
     }
     sodm::bail!(
-        "experiment needs --table N, --figure N, --ablation, --sparse, --serve, or --multiclass"
+        "experiment needs --table N, --figure N, --ablation, --sparse, --serve, \
+         --remote-serve, or --multiclass"
     )
 }
 
@@ -596,6 +629,9 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     use sodm::serve::{Backend, ServeConfig};
     let workers = flag_usize(flags, "workers", num_cpus().clamp(1, 8))?;
     let shards = flag_usize(flags, "shards", workers)?;
+    if let Some(remote) = flag(flags, "remote") {
+        return cmd_serve_bench_remote(flags, remote, workers, shards);
+    }
     if flags.contains_key("quick") {
         let (json, summary) = sodm::exp::run_serve_benchmark(workers, shards, true)?;
         println!("{summary}");
@@ -683,6 +719,145 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         std::fs::write(path, json.to_string())?;
         println!("wrote JSON summary to {path}");
     }
+    Ok(())
+}
+
+/// `serve-bench --remote`: the TCP load-generator face of the benchmark.
+/// Bare `--remote` runs the self-contained loopback drill (train, serve,
+/// kill a scorer, hot-swap the artifact mid-run — every request must
+/// resolve); `--remote <addr>` drives an external `sodm serve` with rows
+/// from `--data` and reports what the clients observed.
+fn cmd_serve_bench_remote(
+    flags: &HashMap<String, String>,
+    remote: &str,
+    workers: usize,
+    shards: usize,
+) -> Result<()> {
+    if remote == "true" {
+        let quick = flags.contains_key("quick");
+        let (json, summary) = sodm::exp::run_remote_serve_benchmark(workers, shards, quick)?;
+        println!("{summary}");
+        if let Some(path) = flag(flags, "json") {
+            std::fs::write(path, json.to_string())?;
+            println!("wrote JSON summary to {path}");
+        }
+        return Ok(());
+    }
+    let data_spec = flag(flags, "data")
+        .ok_or_else(|| sodm::err!("--data is required with --remote <addr>"))?;
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let clients = flag_usize(flags, "clients", 8)?;
+    let per_client = flag_usize(flags, "requests", 200)?;
+    let ds = load_data(data_spec, seed)?;
+    // Dense datasets send dense frames, CSR datasets CSR frames — same
+    // request mix the in-process benchmark drives.
+    let make_req = |i: usize| match &ds {
+        LoadedDataset::Dense(d) => sodm::net::Request::ScoreDense(d.row(i % d.rows).to_vec()),
+        LoadedDataset::Sparse(s) => {
+            let j = i % s.rows;
+            let (lo, hi) = (s.indptr[j], s.indptr[j + 1]);
+            sodm::net::Request::ScoreSparse {
+                indices: s.indices[lo..hi].to_vec(),
+                values: s.values[lo..hi].to_vec(),
+            }
+        }
+    };
+    let stats = sodm::exp::remote_load(remote, clients, per_client, &make_req, None)?;
+    println!(
+        "remote {remote}: resolved {}/{} — ok {} shed {} rejected {} transport {} \
+         (shed rate {:.3})\nlatency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  ({:.0} req/s)",
+        stats.resolved(),
+        clients * per_client,
+        stats.ok,
+        stats.shed,
+        stats.rejected,
+        stats.errors,
+        stats.shed_rate(),
+        stats.percentile_ms(50.0),
+        stats.percentile_ms(95.0),
+        stats.percentile_ms(99.0),
+        stats.ok as f64 / stats.secs.max(1e-9),
+    );
+    if let Some(path) = flag(flags, "json") {
+        use sodm::util::json::{jstr, Json};
+        let json = Json::obj(vec![
+            ("name", jstr("serve-bench-remote")),
+            ("addr", jstr(remote)),
+            ("clients", Json::Num(clients as f64)),
+            ("submitted", Json::Num((clients * per_client) as f64)),
+            ("ok", Json::Num(stats.ok as f64)),
+            ("shed", Json::Num(stats.shed as f64)),
+            ("rejected", Json::Num(stats.rejected as f64)),
+            ("transport_errors", Json::Num(stats.errors as f64)),
+            ("shed_rate", Json::Num(stats.shed_rate())),
+            ("seconds", Json::Num(stats.secs)),
+            ("req_per_s", Json::Num(stats.ok as f64 / stats.secs.max(1e-9))),
+            ("p50_ms", Json::Num(stats.percentile_ms(50.0))),
+            ("p95_ms", Json::Num(stats.percentile_ms(95.0))),
+            ("p99_ms", Json::Num(stats.percentile_ms(99.0))),
+        ]);
+        std::fs::write(path, json.to_string())?;
+        println!("wrote JSON summary to {path}");
+    }
+    Ok(())
+}
+
+/// `serve`: bind the TCP frontend on `--addr` and serve `--model` until the
+/// process is killed. Artifacts hot-swap over the wire (`admin --swap`); a
+/// full request queue sheds with typed Overloaded replies instead of
+/// buffering without bound.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::net::{ModelRegistry, NetServer};
+    use sodm::serve::ServeConfig;
+    use std::sync::Arc;
+    let model_path = flag(flags, "model").ok_or_else(|| sodm::err!("--model is required"))?;
+    let bind_addr = flag(flags, "addr").unwrap_or("127.0.0.1:7878");
+    let workers = flag_usize(flags, "workers", num_cpus().clamp(1, 8))?;
+    let shards = flag_usize(flags, "shards", workers)?;
+    let artifact = Artifact::load(model_path)?;
+    let info = artifact.info();
+    let cfg = ServeConfig { workers, shards, ..ServeConfig::default() };
+    let registry = Arc::new(ModelRegistry::start(artifact, cfg)?);
+    let server = NetServer::bind(bind_addr, registry)?;
+    let addr = server.local_addr();
+    println!(
+        "serving {model_path} on {addr} — {} {:?} ({} cols, {} SVs), \
+         {workers} workers, {shards} shards",
+        info.method,
+        info.kernel,
+        info.cols,
+        info.support,
+    );
+    println!("probe:    sodm admin --addr {addr} --health   (or --metrics)");
+    println!("hot swap: sodm admin --addr {addr} --swap vnext.json");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `admin`: one-shot wire-protocol client against a running `serve` —
+/// health/metrics probes, artifact hot swap, fault-injection arming.
+fn cmd_admin(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::net::NetClient;
+    let addr = flag(flags, "addr").ok_or_else(|| sodm::err!("--addr is required"))?;
+    let mut client = NetClient::connect(addr)?;
+    if let Some(path) = flag(flags, "swap") {
+        let v = client.admin_swap(path)?;
+        println!("swapped to {path}: serving artifact version {v}");
+        return Ok(());
+    }
+    if flags.contains_key("panics") || flags.contains_key("stall-ms") {
+        let panics = flag_usize(flags, "panics", 0)? as u32;
+        let stall = flag_usize(flags, "stall-ms", 0)? as u32;
+        let v = client.admin_fault(panics, stall)?;
+        println!("armed {panics} scorer panics, stall {stall} ms (serving v{v})");
+        return Ok(());
+    }
+    if flags.contains_key("metrics") {
+        println!("{}", client.metrics()?);
+        return Ok(());
+    }
+    println!("{}", client.health()?);
     Ok(())
 }
 

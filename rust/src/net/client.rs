@@ -1,0 +1,177 @@
+//! Blocking TCP client for the SODM wire protocol — the counterpart of
+//! [`NetServer`](crate::net::NetServer), used by `serve-bench --remote`,
+//! the examples, and the loopback integration tests.
+//!
+//! One client drives one connection, one request in flight at a time (the
+//! protocol replies strictly in order). Scoring calls return a typed
+//! [`Outcome`]: server-side rejections — shed under overload, validation
+//! failures, failed batches — are *data* to a load generator, not client
+//! errors, so they don't tangle with transport failures. Read/write
+//! timeouts (default 10 s) turn a wedged server into an error instead of
+//! a hung client.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::frame::{self, ErrorCode, ReadOutcome, Reply, Request};
+use crate::Result;
+
+/// Typed result of one remote scoring call: the value, or the server's
+/// typed rejection (transport problems surface as `Err` on the call).
+#[derive(Clone, Debug)]
+pub enum Outcome<T> {
+    /// The request was scored.
+    Value(T),
+    /// The server rejected the request with a typed wire error.
+    Rejected {
+        /// Wire error code.
+        code: ErrorCode,
+        /// Human-readable detail.
+        msg: String,
+    },
+}
+
+impl<T> Outcome<T> {
+    /// True when admission control shed the request (overload).
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Rejected { code: ErrorCode::Overloaded, .. })
+    }
+
+    /// The scored value, turning a rejection into a crate error.
+    pub fn value(self) -> Result<T> {
+        match self {
+            Outcome::Value(v) => Ok(v),
+            Outcome::Rejected { code, msg } => Err(crate::err!("server rejected {code:?}: {msg}")),
+        }
+    }
+}
+
+/// A connected wire-protocol client.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    /// Connect with the default 10 s read/write timeouts.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient> {
+        Self::connect_with_timeout(addr, Duration::from_secs(10))
+    }
+
+    /// Connect with explicit socket timeouts (a blocked read errors out
+    /// instead of hanging the caller forever).
+    pub fn connect_with_timeout<A: ToSocketAddrs>(
+        addr: A,
+        timeout: Duration,
+    ) -> Result<NetClient> {
+        let writer = TcpStream::connect(addr)?;
+        writer.set_read_timeout(Some(timeout))?;
+        writer.set_write_timeout(Some(timeout))?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(NetClient { reader, writer })
+    }
+
+    fn read_one_reply(&mut self) -> Result<Reply> {
+        match frame::read_reply(&mut self.reader)? {
+            ReadOutcome::Frame(rep) => Ok(rep),
+            ReadOutcome::Eof => Err(crate::err!("server closed the connection")),
+            ReadOutcome::Malformed(e) => Err(crate::err!("malformed reply frame: {e}")),
+        }
+    }
+
+    /// Send one request frame and read its reply.
+    pub fn request(&mut self, req: &Request) -> Result<Reply> {
+        req.write_to(&mut self.writer)?;
+        self.read_one_reply()
+    }
+
+    /// Send raw bytes as-is and read one reply — the malformed-frame tests
+    /// drive the server's error paths through this.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<Reply> {
+        self.writer.write_all(bytes)?;
+        self.read_one_reply()
+    }
+
+    fn score_outcome(&mut self, req: &Request) -> Result<Outcome<f64>> {
+        match self.request(req)? {
+            Reply::Score(d) => Ok(Outcome::Value(d)),
+            Reply::Error { code, msg } => Ok(Outcome::Rejected { code, msg }),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+
+    fn multi_outcome(&mut self, req: &Request) -> Result<Outcome<(usize, Vec<f64>)>> {
+        match self.request(req)? {
+            Reply::Multi { argmax, scores } => Ok(Outcome::Value((argmax as usize, scores))),
+            Reply::Error { code, msg } => Ok(Outcome::Rejected { code, msg }),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+
+    /// Score one dense row on a binary model server.
+    pub fn score(&mut self, x: &[f32]) -> Result<Outcome<f64>> {
+        self.score_outcome(&Request::ScoreDense(x.to_vec()))
+    }
+
+    /// Score one CSR row on a binary model server.
+    pub fn score_sparse(&mut self, indices: &[u32], values: &[f32]) -> Result<Outcome<f64>> {
+        let req = Request::ScoreSparse { indices: indices.to_vec(), values: values.to_vec() };
+        self.score_outcome(&req)
+    }
+
+    /// Score one dense row on a multiclass server: `(argmax, margins)`.
+    pub fn score_multiclass(&mut self, x: &[f32]) -> Result<Outcome<(usize, Vec<f64>)>> {
+        self.multi_outcome(&Request::MulticlassDense(x.to_vec()))
+    }
+
+    /// Score one CSR row on a multiclass server.
+    pub fn score_multiclass_sparse(
+        &mut self,
+        indices: &[u32],
+        values: &[f32],
+    ) -> Result<Outcome<(usize, Vec<f64>)>> {
+        let req = Request::MulticlassSparse { indices: indices.to_vec(), values: values.to_vec() };
+        self.multi_outcome(&req)
+    }
+
+    /// Health probe: the server's JSON summary (artifact version, model
+    /// shape, runtime state).
+    pub fn health(&mut self) -> Result<String> {
+        match self.request(&Request::Health)? {
+            Reply::Health(json) => Ok(json),
+            Reply::Error { code, msg } => Err(crate::err!("health failed ({code:?}): {msg}")),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+
+    /// Metrics snapshot: the server's JSON counters + latency percentiles.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.request(&Request::Metrics)? {
+            Reply::Metrics(json) => Ok(json),
+            Reply::Error { code, msg } => Err(crate::err!("metrics failed ({code:?}): {msg}")),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+
+    /// Hot-swap the serving artifact to the JSON file at `path` on the
+    /// *server's* filesystem; returns the new live version.
+    pub fn admin_swap(&mut self, path: &str) -> Result<u32> {
+        match self.request(&Request::AdminSwap { path: path.to_string() })? {
+            Reply::AdminOk { version } => Ok(version),
+            Reply::Error { code, msg } => Err(crate::err!("swap failed ({code:?}): {msg}")),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+
+    /// Arm the server's fault-injection hooks (next `panics` shard jobs
+    /// panic; every job stalls `stall_ms`, 0 clears). Returns the live
+    /// artifact version.
+    pub fn admin_fault(&mut self, panics: u32, stall_ms: u32) -> Result<u32> {
+        match self.request(&Request::AdminFault { panics, stall_ms })? {
+            Reply::AdminOk { version } => Ok(version),
+            Reply::Error { code, msg } => Err(crate::err!("fault-inject failed ({code:?}): {msg}")),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+}

@@ -1,0 +1,698 @@
+//! The SODM wire protocol: length-prefixed binary frames.
+//!
+//! Every frame — request or reply — is a 10-byte header followed by a
+//! payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"SODM"
+//! 4       1     protocol version (VERSION = 1)
+//! 5       1     frame kind (request 0x01..0x21, reply 0x81..0xE0)
+//! 6       4     payload length, u32 little-endian (<= MAX_PAYLOAD)
+//! 10      n     payload (kind-specific, all integers/floats little-endian)
+//! ```
+//!
+//! Request payloads:
+//!
+//! | kind | name             | payload                                  |
+//! |------|------------------|------------------------------------------|
+//! | 0x01 | ScoreDense       | `n: u32`, `n × f32` features             |
+//! | 0x02 | ScoreSparse      | `nnz: u32`, `nnz × u32` idx, `nnz × f32` |
+//! | 0x03 | MulticlassDense  | as ScoreDense                            |
+//! | 0x04 | MulticlassSparse | as ScoreSparse                           |
+//! | 0x10 | Health           | empty                                    |
+//! | 0x11 | Metrics          | empty                                    |
+//! | 0x20 | AdminSwap        | `len: u32`, UTF-8 artifact path          |
+//! | 0x21 | AdminFault       | `panics: u32`, `stall_ms: u32`           |
+//!
+//! Reply payloads:
+//!
+//! | kind | name      | payload                                     |
+//! |------|-----------|---------------------------------------------|
+//! | 0x81 | Score     | `f64` decision value                        |
+//! | 0x82 | Multi     | `argmax: u32`, `k: u32`, `k × f64` margins  |
+//! | 0x90 | HealthOk  | UTF-8 JSON                                  |
+//! | 0x91 | MetricsOk | UTF-8 JSON                                  |
+//! | 0xA0 | AdminOk   | `version: u32` (artifact version now live)  |
+//! | 0xE0 | Error     | `code: u8` ([`ErrorCode`]), UTF-8 message   |
+//!
+//! Decoding distinguishes *recoverable* malformations (valid framing, bad
+//! content — the connection stays usable) from *desyncing* ones (bad
+//! magic/version/length — the server replies typed and closes, since frame
+//! boundaries can no longer be trusted). See [`FrameError::recoverable`].
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Leading frame bytes; anything else means the peer is not speaking this
+/// protocol.
+pub const MAGIC: [u8; 4] = *b"SODM";
+
+/// Wire protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Header bytes ahead of every payload.
+pub const HEADER_LEN: usize = 10;
+
+/// Hard payload cap (64 MiB): a length prefix beyond this is rejected
+/// before any allocation, so a garbage header cannot OOM the server.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+
+/// Typed error codes carried by `Error` (0xE0) replies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request frame could not be decoded.
+    Malformed = 1,
+    /// Admission control shed the request (bounded queue full).
+    Overloaded = 2,
+    /// The request decoded but failed validation (dimensions, CSR
+    /// contract, non-finite features, binary/multiclass shape mismatch).
+    Invalid = 3,
+    /// The batch failed server-side (scorer panic); the request was not
+    /// scored.
+    Failed = 4,
+    /// The server (or the serving slot) is stopping.
+    Stopped = 5,
+    /// An admin operation (artifact swap) failed; the old model still
+    /// serves.
+    Admin = 6,
+    /// Unexpected server-side error.
+    Internal = 7,
+}
+
+impl ErrorCode {
+    /// Decode a wire error code.
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::Malformed),
+            2 => Some(ErrorCode::Overloaded),
+            3 => Some(ErrorCode::Invalid),
+            4 => Some(ErrorCode::Failed),
+            5 => Some(ErrorCode::Stopped),
+            6 => Some(ErrorCode::Admin),
+            7 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded request frame.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Binary dense score request.
+    ScoreDense(Vec<f32>),
+    /// Binary CSR score request (indices strictly ascending, 0-based).
+    ScoreSparse { indices: Vec<u32>, values: Vec<f32> },
+    /// Multiclass dense score request.
+    MulticlassDense(Vec<f32>),
+    /// Multiclass CSR score request.
+    MulticlassSparse { indices: Vec<u32>, values: Vec<f32> },
+    /// Liveness + model shape probe.
+    Health,
+    /// Serving metrics snapshot.
+    Metrics,
+    /// Hot-swap the serving artifact from a JSON file on the server host.
+    AdminSwap { path: String },
+    /// Arm the fault-injection hooks: the next `panics` shard jobs panic;
+    /// every job stalls `stall_ms` (0 clears).
+    AdminFault { panics: u32, stall_ms: u32 },
+}
+
+/// A decoded reply frame.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    /// Binary decision value.
+    Score(f64),
+    /// Multiclass argmax + per-class margins.
+    Multi { argmax: u32, scores: Vec<f64> },
+    /// Health JSON (artifact version, model shape, runtime state).
+    Health(String),
+    /// Metrics JSON (served/shed counts, latency percentiles, …).
+    Metrics(String),
+    /// Admin success; `version` is the artifact version now serving.
+    AdminOk { version: u32 },
+    /// Typed failure.
+    Error { code: ErrorCode, msg: String },
+}
+
+/// Why a frame failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first four bytes were not [`MAGIC`] — not this protocol.
+    BadMagic,
+    /// Unsupported protocol version byte.
+    BadVersion(u8),
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// The peer closed mid-frame.
+    Truncated,
+    /// Unknown frame kind byte (framing itself was valid).
+    UnknownKind(u8),
+    /// The payload does not match its kind's schema.
+    BadPayload(&'static str),
+}
+
+impl FrameError {
+    /// True when the stream is still frame-aligned after the error (the
+    /// whole payload was consumed), so the connection can keep serving.
+    /// Desyncing errors (bad magic/version/length, truncation) require
+    /// closing the connection after the typed error reply.
+    pub fn recoverable(&self) -> bool {
+        matches!(self, FrameError::UnknownKind(_) | FrameError::BadPayload(_))
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic => write!(f, "bad frame magic (expected \"SODM\")"),
+            FrameError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            FrameError::Oversized(n) => {
+                write!(f, "payload length {n} exceeds max {MAX_PAYLOAD}")
+            }
+            FrameError::Truncated => write!(f, "connection closed mid-frame"),
+            FrameError::UnknownKind(k) => write!(f, "unknown frame kind 0x{k:02x}"),
+            FrameError::BadPayload(why) => write!(f, "bad payload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Outcome of reading one frame off a stream: clean EOF between frames, a
+/// decoded value, or a typed malformation (I/O errors surface as `Err`).
+#[derive(Debug)]
+pub enum ReadOutcome<T> {
+    /// The peer closed cleanly on a frame boundary.
+    Eof,
+    /// One well-formed frame.
+    Frame(T),
+    /// The bytes read do not form a valid frame of this type.
+    Malformed(FrameError),
+}
+
+// ---- encoding ----------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize one frame (header + payload) into a byte buffer.
+fn frame_bytes(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+fn sparse_payload(indices: &[u32], values: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + 8 * indices.len());
+    put_u32(&mut p, indices.len() as u32);
+    put_u32s(&mut p, indices);
+    put_f32s(&mut p, values);
+    p
+}
+
+fn dense_payload(x: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + 4 * x.len());
+    put_u32(&mut p, x.len() as u32);
+    put_f32s(&mut p, x);
+    p
+}
+
+impl Request {
+    /// This request's frame kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Request::ScoreDense(_) => 0x01,
+            Request::ScoreSparse { .. } => 0x02,
+            Request::MulticlassDense(_) => 0x03,
+            Request::MulticlassSparse { .. } => 0x04,
+            Request::Health => 0x10,
+            Request::Metrics => 0x11,
+            Request::AdminSwap { .. } => 0x20,
+            Request::AdminFault { .. } => 0x21,
+        }
+    }
+
+    /// Serialize as one wire frame.
+    pub fn to_frame(&self) -> Vec<u8> {
+        let payload = match self {
+            Request::ScoreDense(x) | Request::MulticlassDense(x) => dense_payload(x),
+            Request::ScoreSparse { indices, values } => sparse_payload(indices, values),
+            Request::MulticlassSparse { indices, values } => sparse_payload(indices, values),
+            Request::Health | Request::Metrics => Vec::new(),
+            Request::AdminSwap { path } => {
+                let mut p = Vec::new();
+                put_u32(&mut p, path.len() as u32);
+                p.extend_from_slice(path.as_bytes());
+                p
+            }
+            Request::AdminFault { panics, stall_ms } => {
+                let mut p = Vec::new();
+                put_u32(&mut p, *panics);
+                put_u32(&mut p, *stall_ms);
+                p
+            }
+        };
+        frame_bytes(self.kind(), &payload)
+    }
+
+    /// Write this request as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.to_frame())
+    }
+}
+
+impl Reply {
+    /// This reply's frame kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Reply::Score(_) => 0x81,
+            Reply::Multi { .. } => 0x82,
+            Reply::Health(_) => 0x90,
+            Reply::Metrics(_) => 0x91,
+            Reply::AdminOk { .. } => 0xA0,
+            Reply::Error { .. } => 0xE0,
+        }
+    }
+
+    /// Serialize as one wire frame.
+    pub fn to_frame(&self) -> Vec<u8> {
+        let payload = match self {
+            Reply::Score(d) => d.to_le_bytes().to_vec(),
+            Reply::Multi { argmax, scores } => {
+                let mut p = Vec::with_capacity(8 + 8 * scores.len());
+                put_u32(&mut p, *argmax);
+                put_u32(&mut p, scores.len() as u32);
+                put_f64s(&mut p, scores);
+                p
+            }
+            Reply::Health(json) | Reply::Metrics(json) => json.as_bytes().to_vec(),
+            Reply::AdminOk { version } => version.to_le_bytes().to_vec(),
+            Reply::Error { code, msg } => {
+                let mut p = Vec::with_capacity(1 + msg.len());
+                p.push(*code as u8);
+                p.extend_from_slice(msg.as_bytes());
+                p
+            }
+        };
+        frame_bytes(self.kind(), &payload)
+    }
+
+    /// Write this reply as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.to_frame())
+    }
+}
+
+// ---- decoding ----------------------------------------------------------
+
+/// Bounds-checked little-endian payload cursor.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self.pos.checked_add(n).ok_or(FrameError::BadPayload("length overflow"))?;
+        if end > self.b.len() {
+            return Err(FrameError::BadPayload("payload shorter than its counts claim"));
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>, FrameError> {
+        let raw = self.take(n.checked_mul(4).ok_or(FrameError::BadPayload("count overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
+        let raw = self.take(n.checked_mul(4).ok_or(FrameError::BadPayload("count overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>, FrameError> {
+        let raw = self.take(n.checked_mul(8).ok_or(FrameError::BadPayload("count overflow"))?)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<(), FrameError> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(FrameError::BadPayload("trailing bytes after payload"))
+        }
+    }
+}
+
+/// Read one raw frame (kind + payload). `Eof` only on a clean boundary;
+/// closing mid-frame is `Malformed(Truncated)`. On a desyncing header
+/// error the payload is *not* consumed — the caller must close.
+fn read_raw(r: &mut impl Read) -> std::io::Result<ReadOutcome<(u8, Vec<u8>)>> {
+    // First byte read by hand so a clean close between frames is EOF, not
+    // an error.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(ReadOutcome::Eof),
+            Ok(_) => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut rest = [0u8; HEADER_LEN - 1];
+    if let Err(e) = r.read_exact(&mut rest) {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            return Ok(ReadOutcome::Malformed(FrameError::Truncated));
+        }
+        return Err(e);
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = first[0];
+    header[1..].copy_from_slice(&rest);
+    if header[..4] != MAGIC {
+        return Ok(ReadOutcome::Malformed(FrameError::BadMagic));
+    }
+    if header[4] != VERSION {
+        return Ok(ReadOutcome::Malformed(FrameError::BadVersion(header[4])));
+    }
+    let kind = header[5];
+    let len = u32::from_le_bytes(header[6..10].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Ok(ReadOutcome::Malformed(FrameError::Oversized(len)));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if let Err(e) = r.read_exact(&mut payload) {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            return Ok(ReadOutcome::Malformed(FrameError::Truncated));
+        }
+        return Err(e);
+    }
+    Ok(ReadOutcome::Frame((kind, payload)))
+}
+
+fn decode_dense(p: &[u8]) -> Result<Vec<f32>, FrameError> {
+    let mut c = Cur::new(p);
+    let n = c.u32()? as usize;
+    let x = c.f32s(n)?;
+    c.done()?;
+    Ok(x)
+}
+
+fn decode_sparse(p: &[u8]) -> Result<(Vec<u32>, Vec<f32>), FrameError> {
+    let mut c = Cur::new(p);
+    let nnz = c.u32()? as usize;
+    let indices = c.u32s(nnz)?;
+    let values = c.f32s(nnz)?;
+    c.done()?;
+    Ok((indices, values))
+}
+
+fn decode_request(kind: u8, p: &[u8]) -> Result<Request, FrameError> {
+    match kind {
+        0x01 => Ok(Request::ScoreDense(decode_dense(p)?)),
+        0x02 => {
+            let (indices, values) = decode_sparse(p)?;
+            Ok(Request::ScoreSparse { indices, values })
+        }
+        0x03 => Ok(Request::MulticlassDense(decode_dense(p)?)),
+        0x04 => {
+            let (indices, values) = decode_sparse(p)?;
+            Ok(Request::MulticlassSparse { indices, values })
+        }
+        0x10 | 0x11 => {
+            if !p.is_empty() {
+                return Err(FrameError::BadPayload("health/metrics take no payload"));
+            }
+            Ok(if kind == 0x10 { Request::Health } else { Request::Metrics })
+        }
+        0x20 => {
+            let mut c = Cur::new(p);
+            let len = c.u32()? as usize;
+            let raw = c.take(len)?;
+            c.done()?;
+            let path = std::str::from_utf8(raw)
+                .map_err(|_| FrameError::BadPayload("artifact path is not UTF-8"))?;
+            Ok(Request::AdminSwap { path: path.to_string() })
+        }
+        0x21 => {
+            let mut c = Cur::new(p);
+            let panics = c.u32()?;
+            let stall_ms = c.u32()?;
+            c.done()?;
+            Ok(Request::AdminFault { panics, stall_ms })
+        }
+        other => Err(FrameError::UnknownKind(other)),
+    }
+}
+
+fn decode_reply(kind: u8, p: &[u8]) -> Result<Reply, FrameError> {
+    let text = |p: &[u8]| {
+        std::str::from_utf8(p)
+            .map(str::to_string)
+            .map_err(|_| FrameError::BadPayload("reply text is not UTF-8"))
+    };
+    match kind {
+        0x81 => {
+            let mut c = Cur::new(p);
+            let d = c.f64()?;
+            c.done()?;
+            Ok(Reply::Score(d))
+        }
+        0x82 => {
+            let mut c = Cur::new(p);
+            let argmax = c.u32()?;
+            let k = c.u32()? as usize;
+            let scores = c.f64s(k)?;
+            c.done()?;
+            Ok(Reply::Multi { argmax, scores })
+        }
+        0x90 => Ok(Reply::Health(text(p)?)),
+        0x91 => Ok(Reply::Metrics(text(p)?)),
+        0xA0 => {
+            let mut c = Cur::new(p);
+            let version = c.u32()?;
+            c.done()?;
+            Ok(Reply::AdminOk { version })
+        }
+        0xE0 => {
+            let mut c = Cur::new(p);
+            let code = ErrorCode::from_u8(c.u8()?)
+                .ok_or(FrameError::BadPayload("unknown error code"))?;
+            let msg = text(&p[1..])?;
+            Ok(Reply::Error { code, msg })
+        }
+        other => Err(FrameError::UnknownKind(other)),
+    }
+}
+
+/// Read + decode one request frame (server side).
+pub fn read_request(r: &mut impl Read) -> std::io::Result<ReadOutcome<Request>> {
+    Ok(match read_raw(r)? {
+        ReadOutcome::Eof => ReadOutcome::Eof,
+        ReadOutcome::Malformed(e) => ReadOutcome::Malformed(e),
+        ReadOutcome::Frame((kind, payload)) => match decode_request(kind, &payload) {
+            Ok(req) => ReadOutcome::Frame(req),
+            Err(e) => ReadOutcome::Malformed(e),
+        },
+    })
+}
+
+/// Read + decode one reply frame (client side).
+pub fn read_reply(r: &mut impl Read) -> std::io::Result<ReadOutcome<Reply>> {
+    Ok(match read_raw(r)? {
+        ReadOutcome::Eof => ReadOutcome::Eof,
+        ReadOutcome::Malformed(e) => ReadOutcome::Malformed(e),
+        ReadOutcome::Frame((kind, payload)) => match decode_reply(kind, &payload) {
+            Ok(rep) => ReadOutcome::Frame(rep),
+            Err(e) => ReadOutcome::Malformed(e),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: Request) -> Request {
+        let bytes = req.to_frame();
+        let mut cur = &bytes[..];
+        match read_request(&mut cur).unwrap() {
+            ReadOutcome::Frame(r) => r,
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    fn round_trip_reply(rep: Reply) -> Reply {
+        let bytes = rep.to_frame();
+        let mut cur = &bytes[..];
+        match read_reply(&mut cur).unwrap() {
+            ReadOutcome::Frame(r) => r,
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        match round_trip_request(Request::ScoreDense(vec![1.5, -2.0])) {
+            Request::ScoreDense(x) => assert_eq!(x, vec![1.5, -2.0]),
+            other => panic!("{other:?}"),
+        }
+        let sp = Request::ScoreSparse { indices: vec![0, 7], values: vec![0.5, 1.0] };
+        match round_trip_request(sp) {
+            Request::ScoreSparse { indices, values } => {
+                assert_eq!(indices, vec![0, 7]);
+                assert_eq!(values, vec![0.5, 1.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip_request(Request::Health), Request::Health));
+        assert!(matches!(round_trip_request(Request::Metrics), Request::Metrics));
+        match round_trip_request(Request::AdminSwap { path: "m.json".into() }) {
+            Request::AdminSwap { path } => assert_eq!(path, "m.json"),
+            other => panic!("{other:?}"),
+        }
+        match round_trip_request(Request::AdminFault { panics: 3, stall_ms: 40 }) {
+            Request::AdminFault { panics, stall_ms } => {
+                assert_eq!((panics, stall_ms), (3, 40));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn replies_round_trip() {
+        match round_trip_reply(Reply::Score(-0.25)) {
+            Reply::Score(d) => assert_eq!(d, -0.25),
+            other => panic!("{other:?}"),
+        }
+        match round_trip_reply(Reply::Multi { argmax: 2, scores: vec![0.1, -0.2, 0.9] }) {
+            Reply::Multi { argmax, scores } => {
+                assert_eq!(argmax, 2);
+                assert_eq!(scores, vec![0.1, -0.2, 0.9]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip_reply(Reply::Error { code: ErrorCode::Overloaded, msg: "shed".into() }) {
+            Reply::Error { code, msg } => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert_eq!(msg, "shed");
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip_reply(Reply::Health("{\"v\":1}".into())) {
+            Reply::Health(j) => assert_eq!(j, "{\"v\":1}"),
+            other => panic!("{other:?}"),
+        }
+        match round_trip_reply(Reply::AdminOk { version: 7 }) {
+            Reply::AdminOk { version } => assert_eq!(version, 7),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_desyncing() {
+        let mut bytes = Request::Health.to_frame();
+        bytes[0] = b'X';
+        let mut cur = &bytes[..];
+        match read_request(&mut cur).unwrap() {
+            ReadOutcome::Malformed(e) => {
+                assert_eq!(e, FrameError::BadMagic);
+                assert!(!e.recoverable());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_version_and_oversized_are_desyncing() {
+        let mut bytes = Request::Health.to_frame();
+        bytes[4] = 9;
+        let mut cur = &bytes[..];
+        let ReadOutcome::Malformed(e) = read_request(&mut cur).unwrap() else { panic!() };
+        assert_eq!(e, FrameError::BadVersion(9));
+        assert!(!e.recoverable());
+
+        let mut bytes = Request::Health.to_frame();
+        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut cur = &bytes[..];
+        let ReadOutcome::Malformed(e) = read_request(&mut cur).unwrap() else { panic!() };
+        assert_eq!(e, FrameError::Oversized(u32::MAX));
+        assert!(!e.recoverable());
+    }
+
+    #[test]
+    fn unknown_kind_is_recoverable() {
+        let mut bytes = Request::Health.to_frame();
+        bytes[5] = 0x77;
+        let mut cur = &bytes[..];
+        let ReadOutcome::Malformed(e) = read_request(&mut cur).unwrap() else { panic!() };
+        assert_eq!(e, FrameError::UnknownKind(0x77));
+        assert!(e.recoverable());
+    }
+
+    #[test]
+    fn truncation_and_eof_are_distinguished() {
+        let bytes = Request::ScoreDense(vec![1.0, 2.0]).to_frame();
+        let mut cur = &bytes[..bytes.len() - 3];
+        let ReadOutcome::Malformed(e) = read_request(&mut cur).unwrap() else { panic!() };
+        assert_eq!(e, FrameError::Truncated);
+        assert!(!e.recoverable());
+
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_request(&mut empty).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn payload_count_mismatch_is_recoverable() {
+        // Claims 5 floats, carries 2: valid framing, bad schema.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 5);
+        put_f32s(&mut payload, &[1.0, 2.0]);
+        let bytes = frame_bytes(0x01, &payload);
+        let mut cur = &bytes[..];
+        let ReadOutcome::Malformed(e) = read_request(&mut cur).unwrap() else { panic!() };
+        assert!(matches!(e, FrameError::BadPayload(_)), "{e:?}");
+        assert!(e.recoverable());
+    }
+}

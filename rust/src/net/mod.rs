@@ -1,0 +1,40 @@
+//! Network serving: a zero-dependency TCP frontend over the batched
+//! scoring runtime ([`crate::serve`]), with hot-swappable versioned
+//! artifacts — ROADMAP item 1, the paper's "serve millions of requests"
+//! north star made reachable over a socket.
+//!
+//! ```text
+//!  TCP clients ──▶ acceptor ──▶ per-conn handler threads
+//!                      │            │  frame decode + validate
+//!                      │            ▼
+//!                      │     ModelRegistry::current() ── Arc<ServingSlot>
+//!                      │            │  try_score* (admission control:
+//!                      │            │  full queue → typed Overloaded)
+//!                      │            ▼
+//!                      │     serve::ServerHandle ──▶ batcher ──▶ scorers
+//!                      │
+//!  admin frame ──▶ registry.swap_from_path() — build new runtime,
+//!                  Arc-swap the slot, drain the old plan's in-flight
+//!                  batches, rollback (old keeps serving) on any failure
+//! ```
+//!
+//! The pieces:
+//!
+//! * [`frame`] — the length-prefixed binary wire protocol (magic +
+//!   version + kind + payload; dense/CSR binary and multiclass scoring,
+//!   health/metrics probes, admin swap + fault injection).
+//! * [`registry`] — [`ModelRegistry`], the versioned hot-swap slot.
+//! * [`server`] — [`NetServer`], acceptor + thread-per-connection
+//!   handlers with typed error replies and clean shutdown.
+//! * [`client`] — [`NetClient`], the blocking client the remote bench,
+//!   examples, and integration tests drive the server with.
+
+pub mod client;
+pub mod frame;
+pub mod registry;
+pub mod server;
+
+pub use client::{NetClient, Outcome};
+pub use frame::{ErrorCode, FrameError, Reply, Request};
+pub use registry::{ModelRegistry, ServingSlot};
+pub use server::NetServer;

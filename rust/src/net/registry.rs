@@ -1,0 +1,175 @@
+//! Hot-swappable model registry: the bridge between versioned on-disk
+//! [`Artifact`]s and the live serving runtime.
+//!
+//! The registry owns an atomically-swappable [`ServingSlot`] (an `Arc`
+//! behind an `RwLock` — readers clone the `Arc` and never block swaps for
+//! longer than the pointer exchange). [`ModelRegistry::swap_from_path`]
+//! implements the full hot-reload lifecycle:
+//!
+//! 1. Load + parse the artifact JSON (versioned envelope or legacy v0).
+//! 2. Compile its plan and spawn a **fresh** serving runtime — any failure
+//!    here returns an error and leaves the old slot serving untouched
+//!    (rollback is the default, not a recovery step).
+//! 3. Exchange the slot pointer: new requests route to the new runtime.
+//! 4. Stop the old runtime — its request sender drops, in-flight batches
+//!    drain **on the old plan**, workers join. Requests that raced the
+//!    teardown see [`SubmitError::Stopped`](crate::serve::SubmitError) and
+//!    the network layer retries them once against the new slot.
+//!
+//! Swaps are serialized by a mutex; scoring never takes it.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::api::{Artifact, ArtifactInfo};
+use crate::serve::{ServeConfig, ServerHandle};
+use crate::Result;
+
+/// One live serving generation: the runtime handle plus the metadata the
+/// health endpoint reports.
+pub struct ServingSlot {
+    /// Handle to this generation's serving runtime.
+    pub handle: ServerHandle,
+    /// Shape summary of the artifact behind the runtime.
+    pub info: ArtifactInfo,
+    /// Monotonic artifact version (1 = the artifact the registry started
+    /// with; each successful swap increments).
+    pub version: u32,
+    /// Where this generation came from (a path, or `"<initial>"`).
+    pub source: String,
+}
+
+/// Versioned, hot-swappable serving slot (see the [module docs](self)).
+pub struct ModelRegistry {
+    slot: RwLock<Arc<ServingSlot>>,
+    /// Serializes swap/stop; never touched on the scoring path.
+    admin: Mutex<()>,
+    cfg: ServeConfig,
+    next_version: AtomicU32,
+}
+
+impl ModelRegistry {
+    /// Start serving `artifact` as version 1.
+    pub fn start(artifact: Artifact, cfg: ServeConfig) -> Result<ModelRegistry> {
+        let info = artifact.info();
+        let handle = artifact.into_serve(cfg.clone())?;
+        let slot = ServingSlot { handle, info, version: 1, source: "<initial>".to_string() };
+        Ok(ModelRegistry {
+            slot: RwLock::new(Arc::new(slot)),
+            admin: Mutex::new(()),
+            cfg,
+            next_version: AtomicU32::new(2),
+        })
+    }
+
+    /// The current serving generation. Callers hold the `Arc` across one
+    /// request at most: a swap stops the old runtime, and long-held slots
+    /// would keep routing to it (they get typed
+    /// [`SubmitError::Stopped`](crate::serve::SubmitError) errors, not
+    /// wrong answers).
+    pub fn current(&self) -> Arc<ServingSlot> {
+        Arc::clone(&self.slot.read().unwrap())
+    }
+
+    /// The artifact version currently serving.
+    pub fn version(&self) -> u32 {
+        self.current().version
+    }
+
+    /// Hot-swap to the artifact at `path` (versioned JSON or legacy v0).
+    /// Returns the new live version. On any failure — unreadable file, bad
+    /// JSON, runtime spawn error — the old generation keeps serving.
+    pub fn swap_from_path(&self, path: &str) -> Result<u32> {
+        let artifact = Artifact::load(path)?;
+        self.swap(artifact, path)
+    }
+
+    /// Hot-swap to an in-memory artifact (see [`ModelRegistry::swap_from_path`]).
+    pub fn swap(&self, artifact: Artifact, source: &str) -> Result<u32> {
+        let _admin = self.admin.lock().unwrap();
+        let info = artifact.info();
+        // Build the replacement runtime *before* touching the slot: a
+        // failed compile/spawn leaves the old generation serving.
+        let handle = artifact.into_serve(self.cfg.clone())?;
+        let version = self.next_version.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(ServingSlot { handle, info, version, source: source.to_string() });
+        let old = std::mem::replace(&mut *self.slot.write().unwrap(), fresh);
+        // Drain the old generation: in-flight batches finish on the old
+        // plan, then its workers join. Connections that raced the swap get
+        // a typed Stopped and retry on the fresh slot.
+        old.handle.stop();
+        Ok(version)
+    }
+
+    /// Stop the current serving runtime (in-flight requests drain first).
+    /// The registry refuses scoring afterwards until a successful
+    /// [`ModelRegistry::swap`] installs a fresh generation.
+    pub fn stop(&self) {
+        let _admin = self.admin.lock().unwrap();
+        self.current().handle.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ArtifactModel, TrainMeta};
+    use crate::odm::OdmModel;
+    use crate::serve::SubmitError;
+
+    fn linear_artifact(w: Vec<f32>) -> Artifact {
+        let model = ArtifactModel::Binary(OdmModel::Linear { w });
+        let meta = TrainMeta::legacy(&model);
+        Artifact { model, meta }
+    }
+
+    #[test]
+    fn swap_routes_new_requests_and_drains_old_runtime() {
+        let reg =
+            ModelRegistry::start(linear_artifact(vec![1.0, 0.0]), ServeConfig::default()).unwrap();
+        assert_eq!(reg.version(), 1);
+        let old = reg.current();
+        assert_eq!(old.handle.score(&[1.0, 1.0]).unwrap(), 1.0);
+
+        let v = reg.swap(linear_artifact(vec![0.0, 2.0]), "unit-test").unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(reg.version(), 2);
+        let fresh = reg.current();
+        assert_eq!(fresh.handle.score(&[1.0, 1.0]).unwrap(), 2.0);
+        assert_eq!(fresh.source, "unit-test");
+        // The old generation drained and stopped: typed Stopped, no hang.
+        assert!(!old.handle.is_running());
+        assert!(matches!(old.handle.try_score(&[1.0, 1.0]), Err(SubmitError::Stopped)));
+        reg.stop();
+    }
+
+    #[test]
+    fn failed_swap_rolls_back_to_the_serving_generation() {
+        let reg = ModelRegistry::start(linear_artifact(vec![3.0]), ServeConfig::default()).unwrap();
+        let err = reg.swap_from_path("/nonexistent/artifact.json").unwrap_err();
+        let _ = err.to_string();
+        assert_eq!(reg.version(), 1, "failed swap must not bump the version");
+        let slot = reg.current();
+        assert!(slot.handle.is_running(), "old generation keeps serving");
+        assert_eq!(slot.handle.score(&[2.0]).unwrap(), 6.0);
+        reg.stop();
+    }
+
+    #[test]
+    fn swap_from_disk_round_trips_the_artifact() {
+        let dir = std::env::temp_dir().join("sodm_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vnext.json");
+        linear_artifact(vec![0.0, -1.0]).save(&path).unwrap();
+
+        let reg =
+            ModelRegistry::start(linear_artifact(vec![1.0, 0.0]), ServeConfig::default()).unwrap();
+        let v = reg.swap_from_path(path.to_str().unwrap()).unwrap();
+        assert_eq!(v, 2);
+        let slot = reg.current();
+        assert_eq!(slot.handle.score(&[5.0, 3.0]).unwrap(), -3.0);
+        assert_eq!(slot.source, path.to_str().unwrap());
+        reg.stop();
+        let _ = std::fs::remove_file(&path);
+    }
+}

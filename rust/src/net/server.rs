@@ -1,0 +1,334 @@
+//! The TCP frontend: acceptor + thread-per-connection frame handlers over
+//! a hot-swappable [`ModelRegistry`].
+//!
+//! Each connection handler reads [`frame`] requests in a loop, validates
+//! and scores them through the registry's current [`ServingSlot`] using
+//! the admission-controlled `try_score*` family — a full request queue
+//! answers a typed `Overloaded` wire error instead of blocking the
+//! connection — and writes one reply frame per request, in order.
+//!
+//! Failure semantics per connection:
+//!
+//! * Recoverable malformations (unknown kind, bad payload schema) get a
+//!   typed `Malformed` error reply and the connection keeps serving.
+//! * Desyncing malformations (bad magic/version, oversized length,
+//!   truncation) get the error reply and then the connection closes —
+//!   frame boundaries can no longer be trusted.
+//! * A request that races an artifact hot-swap (typed `Stopped` from the
+//!   draining runtime) is retried once against the fresh slot before an
+//!   error is returned.
+//!
+//! [`NetServer::stop`] shuts down in order: stop accepting, unblock and
+//! join the acceptor, shut down every live connection socket, join the
+//! handlers, then stop the registry's serving runtime (in-flight batches
+//! drain).
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::frame::{self, ErrorCode, ReadOutcome, Reply, Request};
+use super::registry::{ModelRegistry, ServingSlot};
+use crate::serve::{MultiScore, SubmitError};
+use crate::util::json::{jstr, Json};
+use crate::Result;
+
+/// Network-level counters (the serving runtime's own metrics live in
+/// [`crate::serve::ServeMetrics`], reachable via the metrics frame).
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    /// Connections accepted over the server's lifetime.
+    pub accepted: AtomicU64,
+    /// Malformed request frames answered with a typed error.
+    pub malformed: AtomicU64,
+}
+
+/// State shared between the acceptor and every connection handler.
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    stop: AtomicBool,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    metrics: NetMetrics,
+}
+
+/// A running TCP model server (see the [module docs](self)).
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
+    /// and start accepting connections against `registry`.
+    pub fn bind<A: ToSocketAddrs>(addr: A, registry: Arc<ModelRegistry>) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            registry,
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(Vec::new()),
+            metrics: NetMetrics::default(),
+        });
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("sodm-net-acceptor".into())
+                .spawn(move || accept_loop(listener, shared))
+                .expect("spawn acceptor")
+        };
+        Ok(NetServer { addr, shared, acceptor: Mutex::new(Some(acceptor)) })
+    }
+
+    /// The bound address (resolves the actual port for `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The registry this server routes through.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.shared.registry
+    }
+
+    /// Network-level counters.
+    pub fn net_metrics(&self) -> &NetMetrics {
+        &self.shared.metrics
+    }
+
+    /// Stop the frontend and the serving runtime behind it. Safe to call
+    /// more than once. On return every acceptor/handler thread has joined
+    /// and in-flight requests have been answered.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor with a throwaway connection, then join it.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // Shut down live sockets: blocked handler reads return, handlers
+        // finish their in-flight request (the runtime is still up) and
+        // exit.
+        for (_, s) in self.shared.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handlers: Vec<_> = self.shared.handlers.lock().unwrap().drain(..).collect();
+        for h in handlers {
+            let _ = h.join();
+        }
+        self.shared.registry.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut next_id: u64 = 0;
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            break; // the stop() self-connect (or a raced client) lands here
+        }
+        shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+        let id = next_id;
+        next_id += 1;
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap().insert(id, clone);
+        }
+        let conn_shared = Arc::clone(&shared);
+        let handler = std::thread::Builder::new()
+            .name(format!("sodm-net-conn-{id}"))
+            .spawn(move || {
+                handle_conn(stream, id, &conn_shared);
+                conn_shared.conns.lock().unwrap().remove(&id);
+            })
+            .expect("spawn connection handler");
+        shared.handlers.lock().unwrap().push(handler);
+    }
+}
+
+/// Serve one connection until EOF, a desyncing frame error, or socket
+/// shutdown. One reply frame per request frame, in order.
+fn handle_conn(stream: TcpStream, _id: u64, shared: &Shared) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    loop {
+        match frame::read_request(&mut reader) {
+            Err(_) | Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::Malformed(e)) => {
+                shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let reply = Reply::Error { code: ErrorCode::Malformed, msg: e.to_string() };
+                let _ = reply.write_to(&mut writer);
+                if !e.recoverable() {
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Frame(req)) => {
+                let reply = dispatch(&shared.registry, req);
+                if reply.write_to(&mut writer).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Route one decoded request to the registry's current serving slot.
+fn dispatch(registry: &ModelRegistry, req: Request) -> Reply {
+    match req {
+        Request::ScoreDense(x) => {
+            score_reply(with_swap_retry(registry, |s| s.handle.try_score(&x)))
+        }
+        Request::ScoreSparse { indices, values } => {
+            let f = |s: &ServingSlot| s.handle.try_score_sparse(&indices, &values);
+            score_reply(with_swap_retry(registry, f))
+        }
+        Request::MulticlassDense(x) => {
+            multi_reply(with_swap_retry(registry, |s| s.handle.try_score_multiclass(&x)))
+        }
+        Request::MulticlassSparse { indices, values } => {
+            let f = |s: &ServingSlot| s.handle.try_score_multiclass_sparse(&indices, &values);
+            multi_reply(with_swap_retry(registry, f))
+        }
+        Request::Health => Reply::Health(health_json(&registry.current()).to_string()),
+        Request::Metrics => Reply::Metrics(metrics_json(&registry.current()).to_string()),
+        Request::AdminSwap { path } => match registry.swap_from_path(&path) {
+            Ok(version) => Reply::AdminOk { version },
+            Err(e) => Reply::Error { code: ErrorCode::Admin, msg: e.to_string() },
+        },
+        Request::AdminFault { panics, stall_ms } => {
+            let slot = registry.current();
+            if panics > 0 {
+                slot.handle.inject_scorer_panics(panics as usize);
+            }
+            slot.handle.inject_scorer_stall_ms(stall_ms as u64);
+            Reply::AdminOk { version: slot.version }
+        }
+    }
+}
+
+/// Run one scoring closure against the current slot, retrying once if it
+/// raced a hot-swap (the draining runtime answers typed `Stopped`; the
+/// fresh slot serves the retry).
+fn with_swap_retry<T>(
+    registry: &ModelRegistry,
+    f: impl Fn(&ServingSlot) -> std::result::Result<T, SubmitError>,
+) -> std::result::Result<T, SubmitError> {
+    match f(&registry.current()) {
+        Err(SubmitError::Stopped) => f(&registry.current()),
+        other => other,
+    }
+}
+
+fn error_reply(e: SubmitError) -> Reply {
+    let code = match &e {
+        SubmitError::Overloaded => ErrorCode::Overloaded,
+        SubmitError::Invalid(_) => ErrorCode::Invalid,
+        SubmitError::Failed => ErrorCode::Failed,
+        SubmitError::Stopped => ErrorCode::Stopped,
+    };
+    Reply::Error { code, msg: e.to_string() }
+}
+
+fn score_reply(r: std::result::Result<f64, SubmitError>) -> Reply {
+    match r {
+        Ok(d) => Reply::Score(d),
+        Err(e) => error_reply(e),
+    }
+}
+
+fn multi_reply(r: std::result::Result<MultiScore, SubmitError>) -> Reply {
+    match r {
+        Ok(m) => Reply::Multi { argmax: m.argmax as u32, scores: m.scores },
+        Err(e) => error_reply(e),
+    }
+}
+
+/// Health frame payload: artifact version + model shape + runtime state.
+fn health_json(slot: &ServingSlot) -> Json {
+    let (kname, gamma) = match slot.info.kernel {
+        crate::kernel::KernelKind::Linear => ("linear", 0.0),
+        crate::kernel::KernelKind::Rbf { gamma } => ("rbf", gamma as f64),
+    };
+    Json::obj(vec![
+        ("version", Json::Num(slot.version as f64)),
+        ("source", jstr(slot.source.clone())),
+        ("running", Json::Bool(slot.handle.is_running())),
+        ("method", jstr(slot.info.method.clone())),
+        ("kernel", jstr(kname)),
+        ("gamma", Json::Num(gamma)),
+        ("classes", Json::Num(slot.info.classes.unwrap_or(0) as f64)),
+        ("cols", Json::Num(slot.info.cols as f64)),
+        ("support", Json::Num(slot.info.support as f64)),
+    ])
+}
+
+/// Metrics frame payload: the serving runtime's counters + percentiles.
+fn metrics_json(slot: &ServingSlot) -> Json {
+    let m = slot.handle.metrics();
+    Json::obj(vec![
+        ("version", Json::Num(slot.version as f64)),
+        ("requests", Json::Num(m.requests.load(Ordering::Relaxed) as f64)),
+        ("batches", Json::Num(m.batches.load(Ordering::Relaxed) as f64)),
+        ("shed", Json::Num(m.shed.load(Ordering::Relaxed) as f64)),
+        ("shed_rate", Json::Num(m.shed_rate())),
+        ("scorer_panics", Json::Num(m.scorer_panics.load(Ordering::Relaxed) as f64)),
+        ("failed_batches", Json::Num(m.failed_batches.load(Ordering::Relaxed) as f64)),
+        ("mean_batch_size", Json::Num(m.mean_batch_size())),
+        ("mean_queue_wait_ms", Json::Num(m.mean_queue_wait_ms())),
+        ("p50_ms", Json::Num(m.p50_ms())),
+        ("p95_ms", Json::Num(m.p95_ms())),
+        ("p99_ms", Json::Num(m.p99_ms())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Artifact, ArtifactModel, TrainMeta};
+    use crate::odm::OdmModel;
+    use crate::serve::ServeConfig;
+
+    fn linear_artifact(w: Vec<f32>) -> Artifact {
+        let model = ArtifactModel::Binary(OdmModel::Linear { w });
+        let meta = TrainMeta::legacy(&model);
+        Artifact { model, meta }
+    }
+
+    /// Sandboxes without socket permissions skip the network tests.
+    fn loopback_available() -> bool {
+        TcpListener::bind("127.0.0.1:0").is_ok()
+    }
+
+    #[test]
+    fn bind_score_health_stop() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback sockets unavailable");
+            return;
+        }
+        let reg =
+            ModelRegistry::start(linear_artifact(vec![2.0, -1.0]), ServeConfig::default()).unwrap();
+        let srv = NetServer::bind("127.0.0.1:0", Arc::new(reg)).unwrap();
+        let mut c = crate::net::client::NetClient::connect(srv.local_addr()).unwrap();
+        let got = c.score(&[1.0, 1.0]).unwrap().value().unwrap();
+        assert!((got - 1.0).abs() < 1e-12);
+        let health = c.health().unwrap();
+        assert!(health.contains("\"version\""), "{health}");
+        let metrics = c.metrics().unwrap();
+        assert!(metrics.contains("\"requests\""), "{metrics}");
+        srv.stop();
+        srv.stop(); // idempotent
+    }
+}

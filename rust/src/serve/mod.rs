@@ -44,8 +44,32 @@
 //! sender, the batcher drains the queue and exits on `Disconnected` (no
 //! poll timeout), closes the scorer job queue, joins its workers, and
 //! `stop()` joins the batcher.
+//!
+//! **Hardening contract** (what the network frontend in [`crate::net`]
+//! leans on):
+//!
+//! * Requests are validated before queueing — dimensions, the CSR
+//!   contract, *and finiteness*: one NaN/±inf feature would silently
+//!   poison the shared accumulator (and every argmax sharing its batch),
+//!   so non-finite values are rejected typed ([`SubmitError::Invalid`]),
+//!   matching the libsvm parser's non-finite-label contract.
+//! * A panicking scorer cannot hang clients or shrink the pool: every
+//!   shard job holds an RAII guard that decrements the batch's `pending`
+//!   count even during unwind (the last guard always finalizes), the
+//!   batch is marked failed so affected clients get
+//!   [`SubmitError::Failed`] instead of a hang, and `catch_unwind` keeps
+//!   the worker thread alive (panics are counted in
+//!   [`ServeMetrics::scorer_panics`], injectable via
+//!   [`ServerHandle::inject_scorer_panics`]).
+//! * Backpressure is bounded end to end: the request queue is
+//!   `queue_depth`-bounded, the shard-job queue is a bounded
+//!   [`WorkQueue`] (the batcher blocks instead of piling jobs ahead of
+//!   slow scorers), and [`ServerHandle::try_score`]-family submissions
+//!   shed with [`SubmitError::Overloaded`] when the request queue is full
+//!   instead of blocking — the admission-control path the TCP frontend
+//!   answers with a typed `Overloaded` wire reply.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -150,6 +174,40 @@ impl ServeConfig {
     }
 }
 
+/// Typed outcome of a request submission. The blocking `score*` methods
+/// convert these into crate errors; the admission-controlled `try_score*`
+/// methods (and the [`crate::net`] frontend, which maps them onto wire
+/// error codes) return them directly.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The bounded request queue was full at submit time — the request was
+    /// shed without blocking (admission control under overload).
+    Overloaded,
+    /// The server is stopped or stopping: the request was not queued, or
+    /// was dropped during shutdown before a reply was produced.
+    Stopped,
+    /// The request is invalid: dimension mismatch, CSR contract violation,
+    /// non-finite feature values, or the wrong request shape for the model
+    /// (binary vs multiclass).
+    Invalid(String),
+    /// The batch this request joined failed server-side (a scorer worker
+    /// panicked mid-batch) — the request was not scored.
+    Failed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "server overloaded: request shed"),
+            SubmitError::Stopped => write!(f, "server stopped"),
+            SubmitError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            SubmitError::Failed => write!(f, "batch failed: scorer worker panicked"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// One multiclass decision: the winning class index plus every class's
 /// one-vs-rest margin. Ties take the lowest class index, matching
 /// [`crate::infer::argmax_class`].
@@ -161,11 +219,13 @@ pub struct MultiScore {
     pub scores: Vec<f64>,
 }
 
-/// What a server sends back: a binary decision value or a multiclass
-/// argmax + margins.
+/// What a server sends back: a binary decision value, a multiclass
+/// argmax + margins, or a typed batch failure (scorer panic — the client
+/// gets an error instead of a hang).
 enum Reply {
     Score(f64),
     Multi(MultiScore),
+    Failed,
 }
 
 /// One scoring request: feature row in, reply out.
@@ -262,8 +322,23 @@ pub struct ServeMetrics {
     pub score_us: AtomicU64,
     /// Rows of padding wasted by fixed-tile execution.
     pub padded_rows: AtomicU64,
+    /// Requests shed by admission control (`try_score*` with the bounded
+    /// request queue full).
+    pub shed: AtomicU64,
+    /// Scorer panics caught (injected faults and real scoring bugs). The
+    /// worker survives every one — the pool never shrinks.
+    pub scorer_panics: AtomicU64,
+    /// Batches finalized as failed: every affected client received a typed
+    /// error reply instead of hanging.
+    pub failed_batches: AtomicU64,
     /// End-to-end request latency (enqueue → reply), log₂-bucketed µs.
     pub latency: LatencyHistogram,
+    /// Fault-injection hook: shard jobs remaining to panic deliberately
+    /// ([`ServerHandle::inject_scorer_panics`]).
+    inject_faults: AtomicUsize,
+    /// Fault-injection hook: artificial per-shard-job stall, microseconds
+    /// ([`ServerHandle::inject_scorer_stall_ms`]).
+    stall_us: AtomicU64,
 }
 
 impl Default for ServeMetrics {
@@ -274,12 +349,36 @@ impl Default for ServeMetrics {
             queue_wait_us: AtomicU64::new(0),
             score_us: AtomicU64::new(0),
             padded_rows: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            scorer_panics: AtomicU64::new(0),
+            failed_batches: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
+            inject_faults: AtomicUsize::new(0),
+            stall_us: AtomicU64::new(0),
         }
     }
 }
 
 impl ServeMetrics {
+    /// Fraction of submissions shed by admission control:
+    /// `shed / (served + shed)`. 0 with no traffic.
+    pub fn shed_rate(&self) -> f64 {
+        let shed = self.shed.load(Ordering::Relaxed) as f64;
+        let served = self.requests.load(Ordering::Relaxed) as f64;
+        if shed + served == 0.0 {
+            return 0.0;
+        }
+        shed / (shed + served)
+    }
+
+    /// Claim one injected fault, if any are pending (scorer workers call
+    /// this per shard job and panic deliberately when it returns true).
+    fn take_injected_fault(&self) -> bool {
+        self.inject_faults
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok()
+    }
+
     /// Mean queue wait per request, milliseconds.
     pub fn mean_queue_wait_ms(&self) -> f64 {
         let n = self.requests.load(Ordering::Relaxed).max(1);
@@ -345,14 +444,34 @@ struct BatchShared {
     pending: AtomicUsize,
     /// True when replies carry argmax + per-class margins.
     multiclass: bool,
+    /// Set when any shard job of this batch panicked (or was dropped at
+    /// shutdown): the partial sums are untrustworthy, so every client gets
+    /// a typed [`Reply::Failed`] instead of a silently-wrong score.
+    failed: AtomicBool,
     started: Instant,
     metrics: Arc<ServeMetrics>,
 }
 
+/// Lock a mutex even if a panicking scorer poisoned it. Only used where
+/// the guarded data is either discarded (failed batches) or written by
+/// panic-free code paths.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 impl BatchShared {
     fn finalize(&self) {
-        let scores = std::mem::take(&mut *self.acc.lock().unwrap());
         let n = self.rows.len();
+        if self.failed.load(Ordering::Acquire) {
+            self.metrics.failed_batches.fetch_add(1, Ordering::Relaxed);
+            let payload: Vec<Reply> = (0..n).map(|_| Reply::Failed).collect();
+            deliver(payload, &self.replies, &self.enqueued, self.started, &self.metrics);
+            return;
+        }
+        let scores = std::mem::take(&mut *lock_ignore_poison(&self.acc));
         let payload: Vec<Reply> = if self.multiclass {
             let classes = scores.len() / n.max(1);
             (0..n)
@@ -411,47 +530,95 @@ impl ServerHandle {
     /// Binary servers only — multiclass servers answer
     /// [`ServerHandle::score_multiclass`].
     pub fn score(&self, x: &[f32]) -> Result<f64> {
-        crate::ensure!(self.classes.is_none(), "multiclass server: use score_multiclass");
-        crate::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
-        match self.submit(RowOwned::Dense(x.to_vec()))? {
-            Reply::Score(d) => Ok(d),
-            Reply::Multi(_) => Err(crate::err!("unexpected multiclass reply")),
-        }
+        Ok(self.score_inner(x, false)?)
+    }
+
+    /// Admission-controlled [`ServerHandle::score`]: sheds with
+    /// [`SubmitError::Overloaded`] (counted in [`ServeMetrics::shed`]) when
+    /// the bounded request queue is full, instead of blocking the caller.
+    pub fn try_score(&self, x: &[f32]) -> std::result::Result<f64, SubmitError> {
+        self.score_inner(x, true)
     }
 
     /// Submit one CSR feature row (`indices` sorted strictly ascending,
     /// 0-based, parallel to `values`); blocks for the decision value.
-    /// Requests are external input: the full CSR contract is validated here
-    /// so a malformed request errors instead of panicking the runtime.
+    /// Requests are external input: the full CSR contract — including value
+    /// finiteness — is validated here so a malformed request errors instead
+    /// of panicking the runtime or poisoning the accumulator.
     pub fn score_sparse(&self, indices: &[u32], values: &[f32]) -> Result<f64> {
-        crate::ensure!(self.classes.is_none(), "multiclass server: use score_multiclass");
-        self.validate_csr(indices, values)?;
-        match self.submit(self.owned_csr(indices, values))? {
-            Reply::Score(d) => Ok(d),
-            Reply::Multi(_) => Err(crate::err!("unexpected multiclass reply")),
-        }
+        Ok(self.score_sparse_inner(indices, values, false)?)
+    }
+
+    /// Admission-controlled [`ServerHandle::score_sparse`] (sheds when the
+    /// request queue is full).
+    pub fn try_score_sparse(
+        &self,
+        indices: &[u32],
+        values: &[f32],
+    ) -> std::result::Result<f64, SubmitError> {
+        self.score_sparse_inner(indices, values, true)
     }
 
     /// Submit one dense feature row to a multiclass server; blocks for the
     /// argmax class index plus every class's one-vs-rest margin.
     pub fn score_multiclass(&self, x: &[f32]) -> Result<MultiScore> {
-        crate::ensure!(self.classes.is_some(), "binary server: use score/score_sparse");
-        crate::ensure!(x.len() == self.cols, "expected {} features, got {}", self.cols, x.len());
-        match self.submit(RowOwned::Dense(x.to_vec()))? {
-            Reply::Multi(m) => Ok(m),
-            Reply::Score(_) => Err(crate::err!("unexpected binary reply")),
-        }
+        Ok(self.score_multiclass_inner(x, false)?)
+    }
+
+    /// Admission-controlled [`ServerHandle::score_multiclass`] (sheds when
+    /// the request queue is full).
+    pub fn try_score_multiclass(&self, x: &[f32]) -> std::result::Result<MultiScore, SubmitError> {
+        self.score_multiclass_inner(x, true)
     }
 
     /// [`ServerHandle::score_multiclass`] for a CSR request row (same
     /// validated CSR contract as [`ServerHandle::score_sparse`]).
     pub fn score_multiclass_sparse(&self, indices: &[u32], values: &[f32]) -> Result<MultiScore> {
-        crate::ensure!(self.classes.is_some(), "binary server: use score/score_sparse");
-        self.validate_csr(indices, values)?;
-        match self.submit(self.owned_csr(indices, values))? {
-            Reply::Multi(m) => Ok(m),
-            Reply::Score(_) => Err(crate::err!("unexpected binary reply")),
-        }
+        Ok(self.score_multiclass_sparse_inner(indices, values, false)?)
+    }
+
+    /// Admission-controlled [`ServerHandle::score_multiclass_sparse`]
+    /// (sheds when the request queue is full).
+    pub fn try_score_multiclass_sparse(
+        &self,
+        indices: &[u32],
+        values: &[f32],
+    ) -> std::result::Result<MultiScore, SubmitError> {
+        self.score_multiclass_sparse_inner(indices, values, true)
+    }
+
+    fn score_inner(&self, x: &[f32], shed: bool) -> std::result::Result<f64, SubmitError> {
+        self.expect_binary()?;
+        binary_reply(self.submit(self.dense_row(x)?, shed)?)
+    }
+
+    fn score_sparse_inner(
+        &self,
+        indices: &[u32],
+        values: &[f32],
+        shed: bool,
+    ) -> std::result::Result<f64, SubmitError> {
+        self.expect_binary()?;
+        binary_reply(self.submit(self.csr_row(indices, values)?, shed)?)
+    }
+
+    fn score_multiclass_inner(
+        &self,
+        x: &[f32],
+        shed: bool,
+    ) -> std::result::Result<MultiScore, SubmitError> {
+        self.expect_multiclass()?;
+        multi_reply(self.submit(self.dense_row(x)?, shed)?)
+    }
+
+    fn score_multiclass_sparse_inner(
+        &self,
+        indices: &[u32],
+        values: &[f32],
+        shed: bool,
+    ) -> std::result::Result<MultiScore, SubmitError> {
+        self.expect_multiclass()?;
+        multi_reply(self.submit(self.csr_row(indices, values)?, shed)?)
     }
 
     /// Number of classes served (`None` for binary servers).
@@ -459,43 +626,125 @@ impl ServerHandle {
         self.classes
     }
 
-    /// Validate the external CSR request contract (lengths, range, order).
-    fn validate_csr(&self, indices: &[u32], values: &[f32]) -> Result<()> {
-        crate::ensure!(indices.len() == values.len(), "indices/values length mismatch");
+    /// Feature dimensionality this server scores.
+    pub fn input_cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Fault injection: arrange for the next `n` shard jobs executed by
+    /// this server's scorers to panic deliberately. Tests and the remote
+    /// serve bench use this to prove a dying scorer fails its batch typed
+    /// ([`SubmitError::Failed`]) instead of hanging clients, and that the
+    /// worker pool survives ([`ServeMetrics::scorer_panics`] counts).
+    pub fn inject_scorer_panics(&self, n: usize) {
+        self.metrics.inject_faults.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Fault injection: stall every shard job by `ms` milliseconds (0
+    /// clears). Makes overload and backpressure deterministic in tests —
+    /// a slow scorer fills the bounded queues on demand.
+    pub fn inject_scorer_stall_ms(&self, ms: u64) {
+        self.metrics.stall_us.store(ms.saturating_mul(1000), Ordering::SeqCst);
+    }
+
+    fn expect_binary(&self) -> std::result::Result<(), SubmitError> {
+        match self.classes {
+            None => Ok(()),
+            Some(_) => Err(SubmitError::Invalid("multiclass server: use score_multiclass".into())),
+        }
+    }
+
+    fn expect_multiclass(&self) -> std::result::Result<(), SubmitError> {
+        match self.classes {
+            Some(_) => Ok(()),
+            None => Err(SubmitError::Invalid("binary server: use score/score_sparse".into())),
+        }
+    }
+
+    /// Validate and own a dense request row (dimension + finiteness — one
+    /// NaN would silently poison the whole batch's shared accumulator).
+    fn dense_row(&self, x: &[f32]) -> std::result::Result<RowOwned, SubmitError> {
+        if x.len() != self.cols {
+            let msg = format!("expected {} features, got {}", self.cols, x.len());
+            return Err(SubmitError::Invalid(msg));
+        }
+        if let Some(i) = x.iter().position(|v| !v.is_finite()) {
+            let msg = format!("non-finite feature value at index {i}");
+            return Err(SubmitError::Invalid(msg));
+        }
+        Ok(RowOwned::Dense(x.to_vec()))
+    }
+
+    /// Validate the external CSR request contract (lengths, range, order,
+    /// finiteness) and own the row.
+    fn csr_row(
+        &self,
+        indices: &[u32],
+        values: &[f32],
+    ) -> std::result::Result<RowOwned, SubmitError> {
+        if indices.len() != values.len() {
+            return Err(SubmitError::Invalid("indices/values length mismatch".into()));
+        }
         let mut prev: Option<u32> = None;
-        for &i in indices {
-            crate::ensure!(
-                (i as usize) < self.cols,
-                "feature index {i} out of range ({} cols)",
-                self.cols
-            );
+        for (&i, &v) in indices.iter().zip(values) {
+            if (i as usize) >= self.cols {
+                let msg = format!("feature index {i} out of range ({} cols)", self.cols);
+                return Err(SubmitError::Invalid(msg));
+            }
             if let Some(p) = prev {
-                crate::ensure!(i > p, "indices must be sorted strictly ascending");
+                if i <= p {
+                    let msg = "indices must be sorted strictly ascending";
+                    return Err(SubmitError::Invalid(msg.into()));
+                }
             }
             prev = Some(i);
+            if !v.is_finite() {
+                let msg = format!("non-finite feature value at index {i}");
+                return Err(SubmitError::Invalid(msg));
+            }
         }
-        Ok(())
+        Ok(RowOwned::Sparse { indices: indices.to_vec(), values: values.to_vec(), cols: self.cols })
     }
 
-    fn owned_csr(&self, indices: &[u32], values: &[f32]) -> RowOwned {
-        RowOwned::Sparse { indices: indices.to_vec(), values: values.to_vec(), cols: self.cols }
-    }
-
-    fn submit(&self, x: RowOwned) -> Result<Reply> {
+    /// Queue one validated row and block for its reply. `shed: true` is the
+    /// admission-control mode: a full request queue returns
+    /// [`SubmitError::Overloaded`] immediately instead of blocking.
+    fn submit(&self, x: RowOwned, shed: bool) -> std::result::Result<Reply, SubmitError> {
         let tx = match self.tx.lock().unwrap().as_ref() {
             Some(tx) => tx.clone(),
-            None => return Err(crate::err!("server stopped")),
+            None => return Err(SubmitError::Stopped),
         };
         let (rtx, rrx) = sync_channel(1);
-        tx.send(Request { x, reply: rtx, enqueued: Instant::now() })
-            .map_err(|_| crate::err!("server stopped"))?;
+        let req = Request { x, reply: rtx, enqueued: Instant::now() };
+        if shed {
+            use std::sync::mpsc::TrySendError;
+            match tx.try_send(req) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(SubmitError::Overloaded);
+                }
+                Err(TrySendError::Disconnected(_)) => return Err(SubmitError::Stopped),
+            }
+        } else {
+            tx.send(req).map_err(|_| SubmitError::Stopped)?;
+        }
         drop(tx);
-        rrx.recv().map_err(|_| crate::err!("server dropped request"))
+        match rrx.recv() {
+            Ok(Reply::Failed) => Err(SubmitError::Failed),
+            Ok(reply) => Ok(reply),
+            Err(_) => Err(SubmitError::Stopped),
+        }
     }
 
     /// Submit one row, returning the predicted label (binary servers).
     pub fn predict(&self, x: &[f32]) -> Result<f32> {
         Ok(if self.score(x)? >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    /// True until [`ServerHandle::stop`] ran (on any clone of this handle).
+    pub fn is_running(&self) -> bool {
+        self.tx.lock().unwrap().is_some()
     }
 
     /// Serving metrics snapshot access.
@@ -514,6 +763,23 @@ impl ServerHandle {
         if let Some(h) = batcher {
             let _ = h.join();
         }
+    }
+}
+
+/// Unwrap a binary decision reply ([`Reply::Failed`] is already mapped by
+/// `submit`; a multiclass reply here is a runtime invariant violation).
+fn binary_reply(r: Reply) -> std::result::Result<f64, SubmitError> {
+    match r {
+        Reply::Score(d) => Ok(d),
+        _ => Err(SubmitError::Invalid("unexpected multiclass reply".into())),
+    }
+}
+
+/// Unwrap a multiclass reply.
+fn multi_reply(r: Reply) -> std::result::Result<MultiScore, SubmitError> {
+    match r {
+        Reply::Multi(m) => Ok(m),
+        _ => Err(SubmitError::Invalid("unexpected binary reply".into())),
     }
 }
 
@@ -565,7 +831,12 @@ fn spawn_runtime(
 ) -> Result<ServerHandle> {
     let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
     let metrics = Arc::new(ServeMetrics::default());
-    let queue: Arc<WorkQueue<ShardJob>> = Arc::new(WorkQueue::new());
+    // Bounded shard-job queue: the batcher pipelines at most ~4 batches of
+    // jobs ahead of the scorers, then blocks — which backs pressure up into
+    // the bounded request queue. Memory under overload is O(queue_depth +
+    // 4 batches), not O(however far the batcher outran the scorers).
+    let job_cap = plan.total_jobs().max(cfg.workers).saturating_mul(4);
+    let queue: Arc<WorkQueue<ShardJob>> = Arc::new(WorkQueue::bounded(job_cap));
     let mut scorers = Vec::with_capacity(cfg.workers);
     for w in 0..cfg.workers {
         let plan = Arc::clone(&plan);
@@ -593,30 +864,67 @@ fn spawn_runtime(
     })
 }
 
+/// RAII completion guard for one shard job: dropping it decrements the
+/// batch's `pending` count — *including during a panic unwind* — so the
+/// last shard always finalizes and clients always get a reply. A drop
+/// during unwind first marks the batch failed (typed error replies) and
+/// counts the panic.
+struct JobGuard {
+    batch: Arc<BatchShared>,
+}
+
+impl Drop for JobGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.batch.failed.store(true, Ordering::Release);
+            self.batch.metrics.scorer_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.batch.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.batch.finalize();
+        }
+    }
+}
+
 /// Scorer worker: drain shard jobs until the queue closes. Each job scores
 /// one SV shard of one class's plan over a whole batch and adds the partial
 /// sums into the batch's class-major accumulator; the worker that retires
-/// the last shard finalizes.
+/// the last shard finalizes. Jobs run under a [`JobGuard`] inside
+/// `catch_unwind`: a panicking `score_block` fails the batch typed and the
+/// worker thread survives (the pool never shrinks — with `workers: 1` a
+/// lost thread used to deadlock every future client).
 fn scorer_loop(plan: Arc<PlanSet>, queue: Arc<WorkQueue<ShardJob>>) {
     while let Some(job) = queue.pop() {
-        let rows: Vec<RowRef> = job.batch.rows.iter().map(|r| r.as_row_ref()).collect();
-        let n = rows.len();
-        let shard_plan = match &*plan {
-            PlanSet::Binary(p) => p.shard(job.shard),
-            PlanSet::Multi(ps) => ps[job.class].shard(job.shard),
-        };
-        let mut partial = vec![0.0f64; n];
-        shard_plan.score_block(&rows, &mut partial);
-        {
-            let mut acc = job.batch.acc.lock().unwrap();
-            let base = job.class * n;
-            for (a, p) in acc[base..base + n].iter_mut().zip(&partial) {
-                *a += p;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = JobGuard { batch: Arc::clone(&job.batch) };
+            let stall = job.batch.metrics.stall_us.load(Ordering::Relaxed);
+            if stall > 0 {
+                std::thread::sleep(Duration::from_micros(stall));
             }
-        }
-        if job.batch.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-            job.batch.finalize();
-        }
+            if job.batch.metrics.take_injected_fault() {
+                panic!("injected scorer fault");
+            }
+            run_shard_job(&plan, &job);
+        }));
+        // The guard already marked the batch failed and counted the panic;
+        // dropping the payload here is what keeps the worker alive.
+        drop(outcome);
+    }
+}
+
+/// The compute of one shard job (panic-isolated by [`scorer_loop`]).
+fn run_shard_job(plan: &PlanSet, job: &ShardJob) {
+    let rows: Vec<RowRef> = job.batch.rows.iter().map(|r| r.as_row_ref()).collect();
+    let n = rows.len();
+    let shard_plan = match plan {
+        PlanSet::Binary(p) => p.shard(job.shard),
+        PlanSet::Multi(ps) => ps[job.class].shard(job.shard),
+    };
+    let mut partial = vec![0.0f64; n];
+    shard_plan.score_block(&rows, &mut partial);
+    let mut acc = lock_ignore_poison(&job.batch.acc);
+    let base = job.class * n;
+    for (a, p) in acc[base..base + n].iter_mut().zip(&partial) {
+        *a += p;
     }
 }
 
@@ -695,19 +1003,32 @@ fn dispatch_batch(
         acc: Mutex::new(vec![0.0; plan.classes() * n]),
         pending: AtomicUsize::new(plan.total_jobs()),
         multiclass: matches!(&**plan, PlanSet::Multi(_)),
+        failed: AtomicBool::new(false),
         started,
         metrics: Arc::clone(metrics),
     });
+    // A refused push (queue closed mid-shutdown) still retires the job's
+    // pending slot, so the batch finalizes (failed) instead of leaking its
+    // reply channels.
+    let push_job = |job: ShardJob| {
+        let batch = Arc::clone(&job.batch);
+        if !queue.push(job) {
+            batch.failed.store(true, Ordering::Release);
+            if batch.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                batch.finalize();
+            }
+        }
+    };
     match &**plan {
         PlanSet::Binary(p) => {
             for s in 0..p.num_shards() {
-                queue.push(ShardJob { batch: Arc::clone(&shared), class: 0, shard: s });
+                push_job(ShardJob { batch: Arc::clone(&shared), class: 0, shard: s });
             }
         }
         PlanSet::Multi(ps) => {
             for (c, p) in ps.iter().enumerate() {
                 for s in 0..p.num_shards() {
-                    queue.push(ShardJob { batch: Arc::clone(&shared), class: c, shard: s });
+                    push_job(ShardJob { batch: Arc::clone(&shared), class: c, shard: s });
                 }
             }
         }
@@ -951,6 +1272,73 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(2), "stop took {:?}", t0.elapsed());
         assert!(h.score(ds.row(0)).is_err(), "requests after stop must error");
         h.stop(); // idempotent
+    }
+
+    #[test]
+    fn non_finite_request_features_rejected_typed() {
+        let h = serve(
+            OdmModel::Linear { w: vec![1.0, -1.0] },
+            Backend::Native,
+            ServeConfig::default(),
+        )
+        .unwrap();
+        assert!(h.score(&[f32::NAN, 0.0]).is_err());
+        assert!(h.score(&[0.0, f32::INFINITY]).is_err());
+        let e = h.try_score(&[f32::NEG_INFINITY, 0.0]).unwrap_err();
+        assert!(matches!(e, SubmitError::Invalid(_)), "typed invalid, got {e:?}");
+        let e = h.try_score_sparse(&[1], &[f32::NAN]).unwrap_err();
+        assert!(matches!(e, SubmitError::Invalid(_)), "typed invalid, got {e:?}");
+        // Finite requests around the rejects still score normally.
+        assert!((h.score(&[1.0, 0.0]).unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(h.metrics().requests.load(Ordering::Relaxed), 1);
+        h.stop();
+    }
+
+    #[test]
+    fn scorer_panic_fails_batch_typed_and_pool_survives() {
+        let cfg = ServeConfig { workers: 1, shards: 1, ..ServeConfig::default() };
+        let h = serve(OdmModel::Linear { w: vec![2.0, 0.0] }, Backend::Native, cfg).unwrap();
+        h.inject_scorer_panics(1);
+        let e = h.try_score(&[1.0, 1.0]).unwrap_err();
+        assert!(matches!(e, SubmitError::Failed), "typed batch failure, got {e:?}");
+        let m = h.metrics();
+        assert_eq!(m.scorer_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed_batches.load(Ordering::Relaxed), 1);
+        // The lone worker survived the panic — a dead thread here used to
+        // deadlock every future request.
+        assert!((h.score(&[1.0, 1.0]).unwrap() - 2.0).abs() < 1e-12);
+        h.stop();
+        assert!(matches!(h.try_score(&[1.0, 1.0]), Err(SubmitError::Stopped)));
+    }
+
+    #[test]
+    fn overload_sheds_typed_instead_of_blocking() {
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_depth: 1,
+            workers: 1,
+            shards: 1,
+        };
+        let h = serve(OdmModel::Linear { w: vec![1.0, 0.0] }, Backend::Native, cfg).unwrap();
+        h.inject_scorer_stall_ms(60);
+        std::thread::scope(|s| {
+            // Fill the whole pipeline: one stalled job executing, a full
+            // shard-job queue, the batcher's in-hand batch, and the bounded
+            // request queue; blocking submitters park behind all of it.
+            for _ in 0..8 {
+                let h = h.clone();
+                s.spawn(move || assert!((h.score(&[1.0, 0.0]).unwrap() - 1.0).abs() < 1e-12));
+            }
+            std::thread::sleep(Duration::from_millis(30));
+            let e = h.try_score(&[1.0, 0.0]).unwrap_err();
+            assert!(matches!(e, SubmitError::Overloaded), "typed shed, got {e:?}");
+            assert_eq!(h.metrics().shed.load(Ordering::Relaxed), 1);
+            h.inject_scorer_stall_ms(0); // drain the backlog fast
+        });
+        assert_eq!(h.metrics().requests.load(Ordering::Relaxed), 8);
+        assert!(h.metrics().shed_rate() > 0.0);
+        h.stop();
     }
 
     use crate::multiclass::{train_ovr, MulticlassDataset, MulticlassModel, MulticlassSynthSpec};

@@ -1,0 +1,349 @@
+//! Loopback integration tests for the network serving stack
+//! ([`sodm::net`]): wire round-trips against trained models must match the
+//! in-process serving runtime bit-for-bit (well, to 1e-9), malformed
+//! frames must draw typed error replies without killing the acceptor, and
+//! an artifact hot-swap under live traffic must leave zero hung clients.
+//!
+//! Every test skips (with an eprintln) where loopback sockets are
+//! unavailable — sandboxed CI runners without network namespaces.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use sodm::api::{self, Artifact, ArtifactModel, Method, OvrOptions, TrainMeta, TrainSpec};
+use sodm::data::sparse::SparseSynthSpec;
+use sodm::data::synth::SynthSpec;
+use sodm::kernel::KernelKind;
+use sodm::multiclass::MulticlassSynthSpec;
+use sodm::net::frame::{HEADER_LEN, MAGIC, VERSION};
+use sodm::net::{ErrorCode, ModelRegistry, NetClient, NetServer, Outcome, Reply, Request};
+use sodm::odm::OdmModel;
+use sodm::qp::SolveBudget;
+use sodm::serve::ServeConfig;
+
+fn loopback_available() -> bool {
+    TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn linear_artifact(w: Vec<f32>) -> Artifact {
+    let model = ArtifactModel::Binary(OdmModel::Linear { w });
+    let meta = TrainMeta::legacy(&model);
+    Artifact { model, meta }
+}
+
+fn rbf_spec(gamma: f32) -> TrainSpec {
+    let budget = SolveBudget { max_sweeps: 20, ..SolveBudget::default() };
+    TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma })
+        .budget(budget)
+        .build()
+        .unwrap()
+}
+
+fn serve_net(artifact: Artifact) -> (NetServer, NetClient) {
+    let cfg = ServeConfig { workers: 2, shards: 2, ..ServeConfig::default() };
+    let registry = Arc::new(ModelRegistry::start(artifact, cfg).unwrap());
+    let server = NetServer::bind("127.0.0.1:0", registry).unwrap();
+    let client = NetClient::connect(server.local_addr()).unwrap();
+    (server, client)
+}
+
+/// A raw frame with an arbitrary (possibly invalid) kind byte and payload.
+fn raw_frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(HEADER_LEN + payload.len());
+    f.extend_from_slice(&MAGIC);
+    f.push(VERSION);
+    f.push(kind);
+    f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    f.extend_from_slice(payload);
+    f
+}
+
+#[test]
+fn dense_remote_scores_match_in_process_serving() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let mut sgen = SynthSpec::named("svmguide1", 0.01, 7);
+    sgen.rows = 160;
+    let ds = sgen.generate();
+    let artifact = api::train(&rbf_spec(1.0), &ds).unwrap();
+    let reference = artifact.serve(ServeConfig::default()).unwrap();
+
+    let (server, mut client) = serve_net(artifact);
+    for i in 0..24 {
+        let x = ds.row(i * 5 % ds.rows);
+        let want = reference.score(x).unwrap();
+        let got = client.score(x).unwrap().value().unwrap();
+        assert!((got - want).abs() < 1e-9, "row {i}: remote {got} vs in-process {want}");
+    }
+    reference.stop();
+    server.stop();
+}
+
+#[test]
+fn sparse_remote_scores_match_in_process_serving() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let sp = SparseSynthSpec::new(160, 500, 0.03, 5).generate();
+    let artifact = api::train(&rbf_spec(0.5), &sp).unwrap();
+    let reference = artifact.serve(ServeConfig::default()).unwrap();
+
+    let (server, mut client) = serve_net(artifact);
+    for i in 0..24 {
+        let j = i * 7 % sp.rows;
+        let (lo, hi) = (sp.indptr[j], sp.indptr[j + 1]);
+        let (idx, val) = (&sp.indices[lo..hi], &sp.values[lo..hi]);
+        let want = reference.score_sparse(idx, val).unwrap();
+        let got = client.score_sparse(idx, val).unwrap().value().unwrap();
+        assert!((got - want).abs() < 1e-9, "row {j}: remote {got} vs in-process {want}");
+    }
+    reference.stop();
+    server.stop();
+}
+
+#[test]
+fn multiclass_remote_agrees_with_in_process_serving() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let mc = MulticlassSynthSpec::new(3, 150, 8, 11).generate();
+    let budget = SolveBudget { max_sweeps: 20, ..SolveBudget::default() };
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 0.5 })
+        .budget(budget)
+        .multiclass(OvrOptions::default())
+        .build()
+        .unwrap();
+    let artifact = api::train(&spec, &mc).unwrap();
+    let reference = artifact.serve(ServeConfig::default()).unwrap();
+
+    let (server, mut client) = serve_net(artifact);
+    let cols = reference.input_cols();
+    for i in 0..12 {
+        let x: Vec<f32> = (0..cols).map(|c| ((i * 31 + c * 7) % 13) as f32 / 13.0).collect();
+        let want = reference.score_multiclass(&x).unwrap();
+        let (argmax, scores) = client.score_multiclass(&x).unwrap().value().unwrap();
+        assert_eq!(argmax, want.argmax, "probe {i}");
+        assert_eq!(scores.len(), want.scores.len());
+        for (a, b) in scores.iter().zip(&want.scores) {
+            assert!((a - b).abs() < 1e-9, "probe {i}: {a} vs {b}");
+        }
+    }
+    reference.stop();
+    server.stop();
+}
+
+#[test]
+fn malformed_frames_draw_typed_errors_without_killing_the_acceptor() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let (server, mut client) = serve_net(linear_artifact(vec![2.0, -1.0]));
+
+    // Recoverable: unknown request kind — typed Malformed reply, and the
+    // *same* connection keeps serving.
+    let reply = client.send_raw(&raw_frame(0x7F, &[])).unwrap();
+    match reply {
+        Reply::Error { code, .. } => assert_eq!(code as u8, ErrorCode::Malformed as u8),
+        other => panic!("expected error reply, got kind 0x{:02x}", other.kind()),
+    }
+    // Recoverable: a dense-score payload whose declared length lies.
+    let mut bad = 3u32.to_le_bytes().to_vec();
+    bad.extend_from_slice(&1.0f32.to_le_bytes()); // promises 3 values, ships 1
+    let reply = client.send_raw(&raw_frame(0x01, &bad)).unwrap();
+    assert!(matches!(reply, Reply::Error { code: ErrorCode::Malformed, .. }));
+    let got = client.score(&[1.0, 1.0]).unwrap().value().unwrap();
+    assert!((got - 1.0).abs() < 1e-12, "connection must survive recoverable malformations");
+
+    // Desyncing: bad magic — typed reply, then the server closes this
+    // connection (frame boundaries are untrustworthy).
+    let reply = client.send_raw(b"XXXX\x01\x01\x00\x00\x00\x00").unwrap();
+    assert!(matches!(reply, Reply::Error { code: ErrorCode::Malformed, .. }));
+    assert!(client.score(&[1.0, 1.0]).is_err(), "desynced connection must be closed");
+
+    // The acceptor survived all of it: a fresh connection scores fine.
+    let mut fresh = NetClient::connect(server.local_addr()).unwrap();
+    let got = fresh.score(&[3.0, 1.0]).unwrap().value().unwrap();
+    assert!((got - 5.0).abs() < 1e-12);
+    assert!(server.net_metrics().malformed.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+    server.stop();
+}
+
+#[test]
+fn oversized_and_non_finite_requests_are_rejected_typed() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let (server, mut client) = serve_net(linear_artifact(vec![1.0, 1.0]));
+
+    // Validation failures come back as typed Invalid wire errors.
+    match client.score(&[f32::NAN, 1.0]).unwrap() {
+        Outcome::Rejected { code, .. } => assert!(matches!(code, ErrorCode::Invalid)),
+        Outcome::Value(v) => panic!("NaN request must be rejected, got {v}"),
+    }
+    match client.score(&[1.0]).unwrap() {
+        Outcome::Rejected { code, .. } => assert!(matches!(code, ErrorCode::Invalid)),
+        Outcome::Value(v) => panic!("shape-mismatched request must be rejected, got {v}"),
+    }
+    // An absurd declared payload length closes the stream after the reply.
+    let mut huge = raw_frame(0x01, &[]);
+    let len = huge.len();
+    huge[len - 4..].copy_from_slice(&(u32::MAX).to_le_bytes());
+    let reply = client.send_raw(&huge).unwrap();
+    assert!(matches!(reply, Reply::Error { code: ErrorCode::Malformed, .. }));
+    assert!(client.score(&[1.0, 1.0]).is_err());
+    server.stop();
+}
+
+#[test]
+fn hot_swap_under_live_traffic_leaves_no_hung_clients() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let cfg = ServeConfig { workers: 2, shards: 2, ..ServeConfig::default() };
+    let registry = Arc::new(ModelRegistry::start(linear_artifact(vec![1.0, 0.0]), cfg).unwrap());
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let addr = server.local_addr();
+
+    let dir = std::env::temp_dir().join("sodm_net_swap_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let vnext = dir.join("vnext.json");
+    linear_artifact(vec![0.0, 2.0]).save(&vnext).unwrap();
+
+    let clients = 4;
+    let per_client = 150;
+    let outcomes: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut conn = NetClient::connect(addr).unwrap();
+                    let (mut old_gen, mut new_gen, mut rejected) = (0u64, 0u64, 0u64);
+                    for _ in 0..per_client {
+                        match conn.score(&[1.0, 1.0]).unwrap() {
+                            Outcome::Value(v) if (v - 1.0).abs() < 1e-12 => old_gen += 1,
+                            Outcome::Value(v) if (v - 2.0).abs() < 1e-12 => new_gen += 1,
+                            Outcome::Value(v) => panic!("impossible score {v}"),
+                            Outcome::Rejected { .. } => rejected += 1,
+                        }
+                    }
+                    (old_gen, new_gen, rejected)
+                })
+            })
+            .collect();
+        // Swap mid-traffic, from a separate admin connection.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut admin = NetClient::connect(addr).unwrap();
+        let v = admin.admin_swap(vnext.to_str().unwrap()).unwrap();
+        assert_eq!(v, 2);
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let (mut old_gen, mut new_gen, mut rejected) = (0u64, 0u64, 0u64);
+    for (o, n, r) in outcomes {
+        old_gen += o;
+        new_gen += n;
+        rejected += r;
+    }
+    // Zero hangs: every single request resolved with a score or a typed
+    // rejection. Post-swap requests score on the new generation.
+    assert_eq!(old_gen + new_gen + rejected, (clients * per_client) as u64);
+    assert!(new_gen > 0, "swap must land mid-traffic (old {old_gen} / new {new_gen})");
+    assert_eq!(registry.version(), 2);
+    let mut probe = NetClient::connect(addr).unwrap();
+    let got = probe.score(&[1.0, 1.0]).unwrap().value().unwrap();
+    assert!((got - 2.0).abs() < 1e-12, "fresh connections score on v2");
+    server.stop();
+    let _ = std::fs::remove_file(&vnext);
+}
+
+#[test]
+fn admin_fault_frame_kills_a_scorer_and_the_server_recovers() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let cfg = ServeConfig { workers: 1, shards: 1, ..ServeConfig::default() };
+    let registry = Arc::new(ModelRegistry::start(linear_artifact(vec![1.0, 0.0]), cfg).unwrap());
+    let server = NetServer::bind("127.0.0.1:0", registry).unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+
+    assert_eq!(client.admin_fault(1, 0).unwrap(), 1);
+    // The poisoned batch resolves with a typed Failed error — not a hang —
+    // and the pool keeps serving afterwards.
+    match client.score(&[4.0, 0.0]).unwrap() {
+        Outcome::Rejected { code, .. } => assert!(matches!(code, ErrorCode::Failed)),
+        Outcome::Value(v) => panic!("poisoned batch must fail typed, got {v}"),
+    }
+    let got = client.score(&[4.0, 0.0]).unwrap().value().unwrap();
+    assert!((got - 4.0).abs() < 1e-12, "scorer pool survives the panic");
+    let metrics = client.metrics().unwrap();
+    let parsed = sodm::util::json::Json::parse(&metrics).unwrap();
+    assert_eq!(parsed.req("scorer_panics").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(parsed.req("failed_batches").unwrap().as_f64().unwrap(), 1.0);
+    server.stop();
+}
+
+#[test]
+fn health_frame_reports_version_and_shape() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let (server, mut client) = serve_net(linear_artifact(vec![1.0, 2.0, 3.0]));
+    let health = sodm::util::json::Json::parse(&client.health().unwrap()).unwrap();
+    assert_eq!(health.req("version").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(health.req("cols").unwrap().as_f64().unwrap(), 3.0);
+    assert!(health.req("running").unwrap().as_bool().unwrap());
+    assert_eq!(health.req("source").unwrap().as_str().unwrap(), "<initial>");
+    server.stop();
+}
+
+#[test]
+fn wire_protocol_round_trips_every_request_kind() {
+    // Pure codec test — no sockets needed, runs everywhere.
+    let reqs = vec![
+        Request::ScoreDense(vec![1.0, -2.5]),
+        Request::ScoreSparse { indices: vec![3, 9], values: vec![0.5, -0.5] },
+        Request::MulticlassDense(vec![0.25; 4]),
+        Request::MulticlassSparse { indices: vec![0], values: vec![1.0] },
+        Request::Health,
+        Request::Metrics,
+        Request::AdminSwap { path: "/tmp/vnext.json".into() },
+        Request::AdminFault { panics: 2, stall_ms: 50 },
+    ];
+    for req in reqs {
+        let bytes = req.to_frame();
+        let mut cur = &bytes[..];
+        match sodm::net::frame::read_request(&mut cur).unwrap() {
+            sodm::net::frame::ReadOutcome::Frame(back) => {
+                assert_eq!(back.kind(), req.kind());
+                assert_eq!(back.to_frame(), bytes);
+            }
+            other => panic!("kind 0x{:02x} failed to round-trip: {other:?}", req.kind()),
+        }
+    }
+}
+
+#[test]
+fn remote_benchmark_quick_drill_resolves_every_request() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let (json, summary) = sodm::exp::run_remote_serve_benchmark(2, 2, true).unwrap();
+    assert!(!json.req("skipped").unwrap().as_bool().unwrap(), "{summary}");
+    let submitted = json.req("submitted").unwrap().as_f64().unwrap();
+    let resolved = json.req("resolved").unwrap().as_f64().unwrap();
+    assert_eq!(resolved, submitted, "zero hung clients: {summary}");
+    assert_eq!(json.req("transport_errors").unwrap().as_f64().unwrap(), 0.0, "{summary}");
+    assert_eq!(json.req("final_version").unwrap().as_f64().unwrap(), 2.0, "{summary}");
+    assert!(json.req("p99_ms").unwrap().as_f64().unwrap() >= 0.0);
+}
