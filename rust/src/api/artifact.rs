@@ -55,13 +55,31 @@ pub enum ArtifactModel {
 
 impl ArtifactModel {
     /// The kernel the model scores with (class 0's kernel for multiclass
-    /// models — OVR classes always share one kernel).
+    /// models — OVR classes always share one kernel). Feature-mapped models
+    /// report the kernel their map *approximates*.
     pub fn kernel(&self) -> KernelKind {
         fn of(m: &OdmModel) -> KernelKind {
             match m {
                 OdmModel::Linear { .. } => KernelKind::Linear,
                 OdmModel::Kernel { kernel, .. } => *kernel,
                 OdmModel::SparseKernel { kernel, .. } => *kernel,
+                OdmModel::FeatureMapped { map, .. } => map.approximated_kernel(),
+            }
+        }
+        match self {
+            ArtifactModel::Binary(m) => of(m),
+            ArtifactModel::Multiclass(m) => of(&m.models[0]),
+        }
+    }
+
+    /// The feature map the model scores through, when it was trained in a
+    /// lifted space (class 0's map for multiclass models — OVR classes
+    /// share one map).
+    pub fn feature_map(&self) -> Option<&crate::featmap::FeatureMap> {
+        fn of(m: &OdmModel) -> Option<&crate::featmap::FeatureMap> {
+            match m {
+                OdmModel::FeatureMapped { map, .. } => Some(map),
+                _ => None,
             }
         }
         match self {
@@ -93,12 +111,21 @@ pub struct TrainMeta {
     pub converged: bool,
     /// Mean shrink ratio across local solves (0 where not reported).
     pub shrink_ratio: f64,
+    /// Feature-map kind (`"rff"` / `"nystrom"`) when the model was trained
+    /// in a lifted space; `None` for exact-kernel and linear training.
+    pub feature_map: Option<String>,
+    /// Lifted dimensionality D of the feature map, when one was used.
+    pub feature_dim: Option<usize>,
+    /// RFF sampling seed — recorded so artifacts are reproducible from the
+    /// spec alone (`None` for Nyström maps and unmapped training).
+    pub feature_seed: Option<u64>,
 }
 
 impl TrainMeta {
     /// Metadata for a migrated v0 (envelope-less) model file: kernel comes
     /// from the model itself, everything else is unknown.
     pub fn legacy(model: &ArtifactModel) -> Self {
+        let map = model.feature_map();
         TrainMeta {
             method: "unknown".to_string(),
             kernel: model.kernel(),
@@ -108,6 +135,9 @@ impl TrainMeta {
             updates: 0,
             converged: false,
             shrink_ratio: 0.0,
+            feature_map: map.map(|m| m.kind_name().to_string()),
+            feature_dim: map.map(|m| m.dim()),
+            feature_seed: map.and_then(|m| m.sampling_seed()),
         }
     }
 
@@ -116,7 +146,7 @@ impl TrainMeta {
             KernelKind::Linear => ("linear", 0.0),
             KernelKind::Rbf { gamma } => ("rbf", gamma as f64),
         };
-        Json::obj(vec![
+        let mut pairs = vec![
             ("method", jstr(self.method.clone())),
             ("kernel", jstr(kname)),
             ("gamma", Json::Num(gamma)),
@@ -128,7 +158,19 @@ impl TrainMeta {
             ("updates", Json::Num(self.updates as f64)),
             ("converged", Json::Bool(self.converged)),
             ("shrink_ratio", Json::Num(self.shrink_ratio)),
-        ])
+        ];
+        // Feature-map keys are present only for lifted training, so
+        // pre-featmap readers of v1 artifacts see an unchanged envelope.
+        if let Some(kind) = &self.feature_map {
+            pairs.push(("feature_map", jstr(kind.clone())));
+        }
+        if let Some(d) = self.feature_dim {
+            pairs.push(("feature_dim", Json::Num(d as f64)));
+        }
+        if let Some(s) = self.feature_seed {
+            pairs.push(("feature_seed", Json::Num(s as f64)));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(j: &Json) -> crate::Result<Self> {
@@ -150,6 +192,19 @@ impl TrainMeta {
             updates: j.req("updates")?.as_f64()? as u64,
             converged: j.req("converged")?.as_bool()?,
             shrink_ratio: j.req("shrink_ratio")?.as_f64()?,
+            // Optional — absent in artifacts written before feature maps.
+            feature_map: match j.get("feature_map") {
+                Some(v) => Some(v.as_str()?.to_string()),
+                None => None,
+            },
+            feature_dim: match j.get("feature_dim") {
+                Some(v) => Some(v.as_usize()?),
+                None => None,
+            },
+            feature_seed: match j.get("feature_seed") {
+                Some(v) => Some(v.as_f64()? as u64),
+                None => None,
+            },
         })
     }
 }

@@ -62,10 +62,12 @@ use crate::baselines::{LocalSolverKind, MetaRun};
 use crate::cluster::SimCluster;
 use crate::data::libsvm::LoadedDataset;
 use crate::data::sparse::SparseDataset;
-use crate::data::{Dataset, Rows};
+use crate::data::{identity_indices, DataView, Dataset, Rows};
+use crate::featmap::FeatureMap;
 use crate::kernel::KernelKind;
 use crate::multiclass::{train_ovr, MulticlassDataset, OvrConfig};
 use crate::odm::{train_exact_odm_stats, OdmModel, OdmParams};
+use crate::partition::landmarks::Nystrom;
 use crate::partition::PartitionStrategy;
 use crate::qp::{SolveBudget, SolveStats};
 use crate::sodm::{train_sodm_traced, SodmConfig, SodmRun};
@@ -186,6 +188,30 @@ impl Default for OvrOptions {
     }
 }
 
+/// A feature-map approximation request: lift every row into an explicit
+/// finite-dimensional embedding of the spec's RBF kernel and run the
+/// *linear* solvers in the lifted space (see [`crate::featmap`]). The
+/// trained model is an [`OdmModel::FeatureMapped`] whose compiled plan
+/// scores each query with one O(D) dense dot product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatMapSpec {
+    /// Random Fourier features with `dim` output features, sampled
+    /// deterministically from the spec's seed (recorded in
+    /// [`TrainMeta::feature_seed`] so artifacts re-sample bit-identically).
+    Rff {
+        /// Output dimensionality D of the lifted space.
+        dim: usize,
+    },
+    /// Nyström embedding over up to `landmarks` greedily selected training
+    /// rows (paper Eqn. 8 machinery; exact when the landmarks span the
+    /// training set).
+    Nystrom {
+        /// Landmark budget S; the realized embedding dimension may be lower
+        /// if the candidate pool becomes numerically dependent.
+        landmarks: usize,
+    },
+}
+
 /// A structurally invalid [`TrainSpec`] — returned by [`TrainSpec::build`] /
 /// [`TrainSpec::validate`] instead of panicking inside a trainer, mirroring
 /// [`crate::serve::ServeConfig::validate`].
@@ -261,6 +287,13 @@ pub enum SpecError {
         /// The offending method's name.
         method: &'static str,
     },
+    /// Feature maps approximate an RBF kernel; the spec must carry
+    /// [`KernelKind::Rbf`] so the map knows which bandwidth to target.
+    FeatureMapNeedsRbf,
+    /// A zero-dimensional RFF embedding cannot represent anything.
+    ZeroRffDim,
+    /// A Nyström embedding needs at least one landmark.
+    ZeroLandmarks,
 }
 
 impl std::fmt::Display for SpecError {
@@ -300,6 +333,11 @@ impl std::fmt::Display for SpecError {
             SpecError::MulticlassUnsupported { method } => {
                 write!(f, "one-vs-rest multiclass requires method \"odm\", got {method:?}")
             }
+            SpecError::FeatureMapNeedsRbf => {
+                write!(f, "feature maps approximate the rbf kernel; use --kernel rff|nystrom")
+            }
+            SpecError::ZeroRffDim => write!(f, "rff dimension must be >= 1"),
+            SpecError::ZeroLandmarks => write!(f, "nystrom landmark budget must be >= 1"),
         }
     }
 }
@@ -364,6 +402,11 @@ pub struct TrainSpec {
     /// `Some` trains one-vs-rest multiclass over a
     /// [`MulticlassDataset`] (method must be [`Method::ExactOdm`]).
     pub multiclass: Option<OvrOptions>,
+    /// `Some` lifts the data through a feature-map approximation of the
+    /// spec's RBF kernel and trains the linear solvers in the lifted space
+    /// (see [`FeatMapSpec`]; set via [`TrainSpec::rff`] /
+    /// [`TrainSpec::nystrom`]).
+    pub feature_map: Option<FeatMapSpec>,
     /// Seed for partitioning, sweep permutations, and shuffles.
     pub seed: u64,
 }
@@ -393,6 +436,7 @@ impl TrainSpec {
             checkpoints_per_epoch: 3,
             ordered: false,
             multiclass: None,
+            feature_map: None,
             seed: 0x50D,
         }
     }
@@ -505,17 +549,38 @@ impl TrainSpec {
         self
     }
 
+    /// Approximate the spec's RBF kernel with a `dim`-dimensional random
+    /// Fourier feature map and train the linear solvers in the lifted space
+    /// (sampling is deterministic in the spec's seed).
+    pub fn rff(mut self, dim: usize) -> Self {
+        self.feature_map = Some(FeatMapSpec::Rff { dim });
+        self
+    }
+
+    /// Approximate the spec's RBF kernel with a Nyström embedding over up
+    /// to `landmarks` greedily selected training rows.
+    pub fn nystrom(mut self, landmarks: usize) -> Self {
+        self.feature_map = Some(FeatMapSpec::Nystrom { landmarks });
+        self
+    }
+
     /// Set the seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// True when this spec trains in the linear primal after any feature-map
+    /// lift (a feature-mapped spec always does — lifted data is linear).
+    fn effectively_linear(&self) -> bool {
+        matches!(self.kernel, KernelKind::Linear) || self.feature_map.is_some()
+    }
+
     /// True when this spec runs the linear-kernel gradient path (explicit
-    /// gradient methods, or SODM routed to DSVRG by a linear kernel).
+    /// gradient methods, or SODM routed to DSVRG by an effectively linear
+    /// kernel).
     fn runs_gradient(&self) -> bool {
-        self.method.linear_only()
-            || (self.method == Method::Sodm && matches!(self.kernel, KernelKind::Linear))
+        self.method.linear_only() || (self.method == Method::Sodm && self.effectively_linear())
     }
 
     /// Check every structural invariant, returning the first violation as a
@@ -545,7 +610,20 @@ impl TrainSpec {
         if self.workers == 0 {
             return Err(SpecError::ZeroWorkers);
         }
-        if self.method.linear_only() && !matches!(self.kernel, KernelKind::Linear) {
+        match self.feature_map {
+            Some(FeatMapSpec::Rff { dim: 0 }) => return Err(SpecError::ZeroRffDim),
+            Some(FeatMapSpec::Nystrom { landmarks: 0 }) => return Err(SpecError::ZeroLandmarks),
+            Some(_) if !matches!(self.kernel, KernelKind::Rbf { .. }) => {
+                return Err(SpecError::FeatureMapNeedsRbf);
+            }
+            _ => {}
+        }
+        // A feature-mapped spec trains the linear solvers in the lifted
+        // space, so the gradient family accepts the (required) RBF kernel.
+        if self.method.linear_only()
+            && !matches!(self.kernel, KernelKind::Linear)
+            && self.feature_map.is_none()
+        {
             return Err(SpecError::LinearOnly { method: self.method.name() });
         }
         if self.method.uses_tree() && self.p < 2 {
@@ -559,7 +637,7 @@ impl TrainSpec {
             return Err(SpecError::ZeroEpochs);
         }
         let runs_dsvrg = self.method == Method::Dsvrg
-            || (self.method == Method::Sodm && matches!(self.kernel, KernelKind::Linear));
+            || (self.method == Method::Sodm && self.effectively_linear());
         if runs_dsvrg && self.partitions == 0 {
             return Err(SpecError::ZeroPartitions);
         }
@@ -728,7 +806,131 @@ fn finish_meta(spec: &TrainSpec, seconds: f64, acc: MetaAcc) -> TrainMeta {
         updates: acc.updates,
         converged: acc.converged,
         shrink_ratio: acc.shrink_ratio,
+        feature_map: None,
+        feature_dim: None,
+        feature_seed: None,
     }
+}
+
+/// Realize a spec's feature-map request against the training rows: sample
+/// an RFF map from the spec's seed, or select Nyström landmarks from the
+/// rows under the spec's RBF kernel.
+fn build_feature_map(
+    spec: &TrainSpec,
+    fm: FeatMapSpec,
+    rows: Rows<'_>,
+) -> crate::Result<FeatureMap> {
+    let KernelKind::Rbf { gamma } = spec.kernel else {
+        return Err(SpecError::FeatureMapNeedsRbf.into());
+    };
+    Ok(match fm {
+        FeatMapSpec::Rff { dim } => FeatureMap::rff(rows.cols(), dim, gamma, spec.seed),
+        FeatMapSpec::Nystrom { landmarks } => {
+            let idx = identity_indices(rows.rows());
+            let view = DataView::from_rows(rows, &idx);
+            let kernel = KernelKind::Rbf { gamma };
+            let pool_cap = landmarks.saturating_mul(8).max(2048);
+            FeatureMap::Nystrom(Nystrom::select(&view, &kernel, landmarks, pool_cap, spec.seed))
+        }
+    })
+}
+
+/// Collapse a model trained on lifted (linear) data to explicit primal
+/// weights over the `dim` lifted features.
+fn lifted_primal(model: &OdmModel, dim: usize) -> crate::Result<Vec<f64>> {
+    match model {
+        OdmModel::Linear { w } => {
+            crate::ensure!(w.len() == dim, "lifted primal has {} weights, want {dim}", w.len());
+            Ok(w.clone())
+        }
+        OdmModel::Kernel { kernel: KernelKind::Linear, sv_x, coef, cols } => {
+            crate::ensure!(*cols == dim, "lifted expansion has {cols} cols, want {dim}");
+            let mut w = vec![0.0f64; dim];
+            for (sv, c) in sv_x.chunks_exact(*cols).zip(coef) {
+                for (wj, xj) in w.iter_mut().zip(sv) {
+                    *wj += c * *xj as f64;
+                }
+            }
+            Ok(w)
+        }
+        _ => crate::bail!("feature-map training expected a linear model over the lifted data"),
+    }
+}
+
+/// Stamp the feature-map fields of a lifted run's metadata with the outer
+/// spec's kernel and the realized map (the inner run recorded the linear
+/// training kernel and excluded the lift time).
+fn restamp_mapped_meta(meta: &mut TrainMeta, spec: &TrainSpec, map: &FeatureMap, seconds: f64) {
+    meta.kernel = spec.kernel;
+    meta.seconds = seconds;
+    meta.feature_map = Some(map.kind_name().to_string());
+    meta.feature_dim = Some(map.dim());
+    meta.feature_seed = map.sampling_seed();
+}
+
+/// Feature-mapped binary training: lift the rows once, train the linear
+/// solvers on the lifted dense dataset through the normal dispatch, then
+/// collapse the fitted model to lifted-space primal weights and wrap them
+/// with the map as an [`OdmModel::FeatureMapped`].
+fn train_feature_mapped(
+    spec: &TrainSpec,
+    fm: FeatMapSpec,
+    rows: Rows<'_>,
+    cluster: Option<&SimCluster>,
+    collect_snapshots: bool,
+) -> crate::Result<TrainRun> {
+    let t0 = Instant::now();
+    let map = build_feature_map(spec, fm, rows)?;
+    let lifted = map.lift_dataset(rows);
+    let mut inner = spec.clone();
+    inner.kernel = KernelKind::Linear;
+    inner.feature_map = None;
+    let mut run = train_binary(&inner, Rows::Dense(&lifted), cluster, collect_snapshots)?;
+    let ArtifactModel::Binary(inner_model) = &run.artifact.model else {
+        crate::bail!("binary feature-map training produced a non-binary artifact")
+    };
+    let w = lifted_primal(inner_model, map.dim())?;
+    run.artifact.model = ArtifactModel::Binary(OdmModel::FeatureMapped { map: map.clone(), w });
+    for snap in &mut run.snapshots {
+        let w = lifted_primal(&snap.model, map.dim())?;
+        snap.model = OdmModel::FeatureMapped { map: map.clone(), w };
+    }
+    restamp_mapped_meta(&mut run.artifact.meta, spec, &map, t0.elapsed().as_secs_f64());
+    Ok(run)
+}
+
+/// Feature-mapped one-vs-rest training: lift the shared feature rows once,
+/// run the normal OVR dispatch on the lifted dataset, then wrap every
+/// per-class model with the (shared) map.
+fn train_multiclass_mapped(
+    spec: &TrainSpec,
+    fm: FeatMapSpec,
+    ds: &MulticlassDataset,
+) -> crate::Result<TrainRun> {
+    let t0 = Instant::now();
+    let map = build_feature_map(spec, fm, ds.as_rows())?;
+    let x = map.lift_rows_unchecked(ds.as_rows());
+    let name = format!("{}+{}", ds.name(), map.kind_name());
+    let lifted = MulticlassDataset::from_dense(
+        name,
+        x,
+        map.dim(),
+        ds.class_ids.clone(),
+        ds.class_labels.clone(),
+    );
+    let mut inner = spec.clone();
+    inner.kernel = KernelKind::Linear;
+    inner.feature_map = None;
+    let mut run = train_multiclass(&inner, &lifted)?;
+    let ArtifactModel::Multiclass(mc) = &mut run.artifact.model else {
+        crate::bail!("multiclass feature-map training produced a non-multiclass artifact")
+    };
+    for m in &mut mc.models {
+        let w = lifted_primal(m, map.dim())?;
+        *m = OdmModel::FeatureMapped { map: map.clone(), w };
+    }
+    restamp_mapped_meta(&mut run.artifact.meta, spec, &map, t0.elapsed().as_secs_f64());
+    Ok(run)
 }
 
 fn train_binary(
@@ -737,6 +939,9 @@ fn train_binary(
     cluster: Option<&SimCluster>,
     collect_snapshots: bool,
 ) -> crate::Result<TrainRun> {
+    if let Some(fm) = spec.feature_map {
+        return train_feature_mapped(spec, fm, rows, cluster, collect_snapshots);
+    }
     let t0 = Instant::now();
     let mut snapshots: Vec<TrainSnapshot> = Vec::new();
     let (model, seconds, acc): (OdmModel, f64, MetaAcc) = match spec.method {
@@ -924,6 +1129,9 @@ fn train_multiclass(spec: &TrainSpec, ds: &MulticlassDataset) -> crate::Result<T
     let opts = spec.multiclass.unwrap_or_default();
     crate::ensure!(ds.rows() > 0, "cannot train on an empty dataset");
     crate::ensure!(ds.n_classes() >= 2, "one-vs-rest needs >= 2 classes");
+    if let Some(fm) = spec.feature_map {
+        return train_multiclass_mapped(spec, fm, ds);
+    }
     let cfg = OvrConfig {
         budget: spec.budget,
         workers: spec.workers,
@@ -993,6 +1201,35 @@ mod tests {
         );
         assert!(rbf_spec(Method::Sodm).build().is_ok());
         assert!(rbf_spec(Method::ExactOdm).multiclass(OvrOptions::default()).build().is_ok());
+    }
+
+    #[test]
+    fn feature_map_specs_validate_and_unlock_gradient_rbf() {
+        assert_eq!(
+            TrainSpec::new(Method::ExactOdm).rff(64).build().unwrap_err(),
+            SpecError::FeatureMapNeedsRbf
+        );
+        assert_eq!(rbf_spec(Method::ExactOdm).rff(0).build().unwrap_err(), SpecError::ZeroRffDim);
+        assert_eq!(
+            rbf_spec(Method::ExactOdm).nystrom(0).build().unwrap_err(),
+            SpecError::ZeroLandmarks
+        );
+        // dsvrg + rbf is LinearOnly — unless a feature map makes training
+        // effectively linear (the flagship linear-speed RBF combination).
+        assert!(rbf_spec(Method::Dsvrg).build().is_err());
+        assert!(rbf_spec(Method::Dsvrg).rff(32).build().is_ok());
+    }
+
+    #[test]
+    fn rff_training_wraps_model_and_stamps_meta() {
+        let ds = SynthSpec { rows: 120, ..SynthSpec::named("svmguide1", 0.01, 5) }.generate();
+        let spec = rbf_spec(Method::ExactOdm).rff(128).build().unwrap();
+        let art = train(&spec, &ds).unwrap();
+        assert_eq!(art.meta.feature_map.as_deref(), Some("rff"));
+        assert_eq!(art.meta.feature_dim, Some(128));
+        assert_eq!(art.meta.feature_seed, Some(spec.seed));
+        assert_eq!(art.meta.kernel, spec.kernel);
+        assert!(art.accuracy(&ds).unwrap() > 0.7);
     }
 
     #[test]

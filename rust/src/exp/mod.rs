@@ -328,6 +328,7 @@ pub fn run_serve_benchmark(
     workers: usize,
     shards: usize,
     quick: bool,
+    seed: u64,
 ) -> crate::Result<(crate::util::json::Json, String)> {
     use crate::data::sparse::SparseSynthSpec;
     use crate::util::json::Json;
@@ -338,7 +339,7 @@ pub fn run_serve_benchmark(
         TrainSpec::new(Method::ExactOdm).kernel(KernelKind::Rbf { gamma }).budget(budget).build()
     };
 
-    let mut spec = SynthSpec::named("svmguide1", 0.01, 7);
+    let mut spec = SynthSpec::named("svmguide1", 0.01, seed);
     spec.rows = rows;
     let ds = spec.generate();
     let dense_artifact = api::train(&exact(1.0)?, &ds)?;
@@ -347,7 +348,7 @@ pub fn run_serve_benchmark(
             let _ = h.score(ds.row(i % ds.rows));
         })?;
 
-    let sp = SparseSynthSpec::new(rows, 2000, 0.02, 5).generate();
+    let sp = SparseSynthSpec::new(rows, 2000, 0.02, seed ^ 0x5EED).generate();
     let sparse_artifact = api::train(&exact(0.5)?, &sp)?;
     let (sparse_json, sparse_line) =
         serve_case("sparse-rbf", sparse_artifact, workers, shards, clients, per_client, |h, i| {
@@ -593,6 +594,7 @@ pub fn run_remote_serve_benchmark(
     workers: usize,
     shards: usize,
     quick: bool,
+    seed: u64,
 ) -> crate::Result<(crate::util::json::Json, String)> {
     use crate::net::{ModelRegistry, NetServer, Request};
     use crate::serve::ServeConfig;
@@ -611,13 +613,13 @@ pub fn run_remote_serve_benchmark(
         .kernel(KernelKind::Rbf { gamma: 1.0 })
         .budget(budget)
         .build()?;
-    let mut sgen = SynthSpec::named("svmguide1", 0.01, 7);
+    let mut sgen = SynthSpec::named("svmguide1", 0.01, seed);
     sgen.rows = rows;
     let ds = sgen.generate();
     let primary = api::train(&spec, &ds)?;
     // v-next trains on a reshuffled draw: a genuinely different model, so
     // post-swap scores demonstrably come from the new generation.
-    let mut sgen2 = SynthSpec::named("svmguide1", 0.01, 43);
+    let mut sgen2 = SynthSpec::named("svmguide1", 0.01, seed ^ 0x2A);
     sgen2.rows = rows;
     let vnext = api::train(&spec, &sgen2.generate())?;
     let dir = std::env::temp_dir().join("sodm_remote_bench");
@@ -699,6 +701,7 @@ pub fn run_multiclass_benchmark(
     classes: usize,
     workers: usize,
     quick: bool,
+    seed: u64,
 ) -> crate::Result<(crate::util::json::Json, String)> {
     use crate::multiclass::MulticlassSynthSpec;
     use crate::util::json::{jstr, Json};
@@ -706,8 +709,8 @@ pub fn run_multiclass_benchmark(
     crate::ensure!(classes >= 2, "multiclass benchmark needs >= 2 classes");
     let rows = if quick { 400 } else { 1200 };
     let cols = classes.max(6);
-    let ds = MulticlassSynthSpec::new(classes, rows, cols, 29).generate();
-    let (train, test) = ds.split(0.8, 31);
+    let ds = MulticlassSynthSpec::new(classes, rows, cols, seed).generate();
+    let (train, test) = ds.split(0.8, seed ^ 0x1F);
     let kernel = KernelKind::Rbf { gamma: 1.0 / (2.0 * cols as f32) };
     let sweeps = if quick { 30 } else { 60 };
     let budget = SolveBudget { max_sweeps: sweeps, ..SolveBudget::default() };
@@ -766,6 +769,133 @@ pub fn run_multiclass_benchmark(
          shared-cache speedup : {speedup:.2}x  (serve argmax agrees: {agree})",
         train.rows(),
         shared.cache_hit_rate,
+    );
+    Ok((json, summary))
+}
+
+/// Random-feature frontier benchmark (ROADMAP item 2): exact-RBF ODM vs
+/// random Fourier features at a grid of dimensions vs a Nyström embedding,
+/// on one seeded fixture. Each point reports test accuracy, training time,
+/// single-threaded per-query latency through the compiled plan, and
+/// decision-sign agreement with the exact model — the accuracy-vs-D-vs-
+/// latency frontier. The run *fails* with a typed error if the largest RFF
+/// dimension lands more than one accuracy point below exact; that `ensure!`
+/// is the CI contract behind `experiment --rff` (which writes
+/// `rff_bench.json` and the bench job's `rff-summary.json` copy).
+pub fn run_rff_benchmark(
+    workers: usize,
+    quick: bool,
+    seed: u64,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::data::Rows;
+    use crate::infer::ScoringPlan;
+    use crate::util::json::{jstr, Json};
+
+    let rows = if quick { 700 } else { 2_000 };
+    let mut sgen = SynthSpec::named("svmguide1", 0.01, seed);
+    sgen.rows = rows;
+    let ds = sgen.generate();
+    let (train, test) = ds.split(0.8, seed ^ 0x7E57);
+    let kernel = rbf_for(&train);
+    let budget = SolveBudget { max_sweeps: 120, ..SolveBudget::default() };
+    let base = || {
+        TrainSpec::new(Method::ExactOdm).kernel(kernel).budget(budget).workers(workers).seed(seed)
+    };
+
+    // Single-threaded scoring over several sweeps of the test split: the
+    // per-query number that makes O(D) vs O(#SV · d) visible.
+    let reps = if quick { 3 } else { 8 };
+    let measure = |artifact: &api::Artifact| -> crate::Result<(f64, f64, Vec<f64>)> {
+        let model = artifact.as_binary().expect("rff benchmark trains binary artifacts");
+        let plan = ScoringPlan::compile(model);
+        let t0 = Instant::now();
+        let mut dec = Vec::new();
+        for _ in 0..reps {
+            dec = plan.score_rows(Rows::Dense(&test), 1);
+        }
+        let us = t0.elapsed().as_secs_f64() / (reps * test.rows) as f64 * 1e6;
+        Ok((artifact.accuracy(&test)?, us, dec))
+    };
+
+    let exact_art = api::train(&base().build()?, &train)?;
+    let (exact_acc, exact_us, exact_dec) = measure(&exact_art)?;
+    let agreement = |dec: &[f64]| {
+        let same =
+            dec.iter().zip(&exact_dec).filter(|(a, b)| (**a >= 0.0) == (**b >= 0.0)).count();
+        same as f64 / dec.len().max(1) as f64
+    };
+    let point = |kind: &str, dim: usize, acc: f64, secs: f64, us: f64, agree: f64| {
+        Json::obj(vec![
+            ("kind", jstr(kind)),
+            ("dim", Json::Num(dim as f64)),
+            ("accuracy", Json::Num(acc)),
+            ("train_secs", Json::Num(secs)),
+            ("us_per_query", Json::Num(us)),
+            ("agreement", Json::Num(agree)),
+        ])
+    };
+    let sv = exact_art.support_size();
+    let mut points = vec![point("exact", sv, exact_acc, exact_art.meta.seconds, exact_us, 1.0)];
+    let mut lines =
+        vec![format!("exact rbf      : acc {exact_acc:.4}  {exact_us:.2} us/query  ({sv} SVs)")];
+
+    let rff_dims: &[usize] = if quick { &[32, 128, 512] } else { &[32, 64, 128, 256, 512, 1024] };
+    let mut last_rff_acc = 0.0f64;
+    for &dim in rff_dims {
+        let art = api::train(&base().rff(dim).build()?, &train)?;
+        let (acc, us, dec) = measure(&art)?;
+        let agree = agreement(&dec);
+        points.push(point("rff", dim, acc, art.meta.seconds, us, agree));
+        lines.push(format!(
+            "rff   D={dim:<5} : acc {acc:.4}  {us:.2} us/query  (agreement {agree:.3})"
+        ));
+        last_rff_acc = acc;
+    }
+
+    let ny_marks: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256] };
+    for &m in ny_marks {
+        let art = api::train(&base().nystrom(m).build()?, &train)?;
+        let (acc, us, dec) = measure(&art)?;
+        let agree = agreement(&dec);
+        let realized = art.meta.feature_dim.unwrap_or(m);
+        points.push(point("nystrom", realized, acc, art.meta.seconds, us, agree));
+        lines.push(format!(
+            "nystrom S={realized:<3} : acc {acc:.4}  {us:.2} us/query  (agreement {agree:.3})"
+        ));
+    }
+
+    let largest = *rff_dims.last().expect("non-empty dim grid");
+    // The acceptance gate: at the largest benchmarked D, random features
+    // must be within one accuracy point of the exact RBF model. The quick
+    // smoke's 140-row test split quantizes accuracy in ~0.7% steps, so it
+    // gets two points of headroom (one extra misclassified row must not
+    // fail CI); the full run holds the 1% contract.
+    let tol = if quick { 0.02 } else { 0.01 };
+    crate::ensure!(
+        last_rff_acc + tol >= exact_acc,
+        "rff at D={largest} lost more than {tol} accuracy vs exact rbf: \
+         {last_rff_acc:.4} vs {exact_acc:.4}"
+    );
+
+    let KernelKind::Rbf { gamma } = kernel else { unreachable!("rbf_for returns an rbf kernel") };
+    let json = Json::obj(vec![
+        ("name", jstr("rff-frontier")),
+        ("rows", Json::Num(train.rows as f64)),
+        ("cols", Json::Num(train.cols as f64)),
+        ("gamma", Json::Num(gamma as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("exact_accuracy", Json::Num(exact_acc)),
+        ("largest_rff_dim", Json::Num(largest as f64)),
+        ("largest_rff_accuracy", Json::Num(last_rff_acc)),
+        ("within_tolerance", Json::Bool(true)),
+        ("points", Json::Arr(points)),
+    ]);
+    let summary = format!(
+        "rff frontier benchmark ({} train rows, {} cols, gamma {gamma:.4})\n{}",
+        train.rows,
+        train.cols,
+        lines.join("\n")
     );
     Ok((json, summary))
 }
@@ -853,7 +983,7 @@ mod tests {
 
     #[test]
     fn serve_benchmark_quick_reports_both_cases() {
-        let (json, summary) = run_serve_benchmark(2, 2, true).unwrap();
+        let (json, summary) = run_serve_benchmark(2, 2, true, 7).unwrap();
         let text = json.to_string();
         assert!(text.contains("dense-rbf") && text.contains("sparse-rbf"), "{text}");
         assert!(text.contains("p99_ms"), "{text}");
@@ -862,12 +992,27 @@ mod tests {
 
     #[test]
     fn multiclass_benchmark_reports_speedup_and_serve_agreement() {
-        let (json, summary) = run_multiclass_benchmark(3, 2, true).unwrap();
+        let (json, summary) = run_multiclass_benchmark(3, 2, true, 29).unwrap();
         let text = json.to_string();
         assert!(text.contains("shared_cache_speedup"), "{text}");
         assert!(text.contains("per_class_cache_secs"), "{text}");
         assert!(text.contains("\"serve_agrees\":true"), "{text}");
         assert!(summary.contains("speedup"), "{summary}");
+    }
+
+    #[test]
+    fn rff_benchmark_emits_frontier_and_passes_gate() {
+        let (json, summary) = run_rff_benchmark(2, true, 7).unwrap();
+        let text = json.to_string();
+        assert!(text.contains("\"name\":\"rff-frontier\""), "{text}");
+        assert!(text.contains("\"within_tolerance\":true"), "{text}");
+        assert!(text.contains("\"kind\":\"exact\""), "{text}");
+        assert!(text.contains("\"kind\":\"rff\""), "{text}");
+        assert!(text.contains("\"kind\":\"nystrom\""), "{text}");
+        assert!(summary.contains("us/query"), "{summary}");
+        // The frontier carries exact + every rff dim + every nystrom mark.
+        let points = json.req("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 1 + 3 + 2);
     }
 
     #[test]

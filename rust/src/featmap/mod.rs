@@ -1,0 +1,416 @@
+//! Feature-map approximation: explicit finite-dimensional embeddings whose
+//! inner product approximates an RBF kernel, so kernel ODMs train with the
+//! *linear* solvers and serve as a single dense dot product — O(D) per query
+//! instead of O(#SV · d) kernel evaluations (ROADMAP item 2; Sindhwani &
+//! Avron, arXiv:1409.0940).
+//!
+//! Two maps are provided:
+//!
+//! * [`RffMap`] — random Fourier features (Rahimi & Recht). For
+//!   `k(x,z) = exp(-γ‖x−z‖²)`, draw `W` with rows ~ N(0, 2γI) and phases
+//!   `b ~ U[0, 2π)`; then `z(x) = sqrt(2/D) · cos(Wx + b)` satisfies
+//!   `E[⟨z(x), z(z)⟩] = k(x,z)` with O(1/√D) deviation. The map is fully
+//!   determined by `(cols, D, γ, seed)`, so artifacts persist only those
+//!   four numbers and re-sample bit-identically on load.
+//! * [`FeatureMap::Nystrom`] — the data-dependent Nyström embedding reusing
+//!   the greedy det-max landmark machinery of
+//!   [`crate::partition::landmarks::Nystrom`]. Exact on the landmarks
+//!   (and exact everywhere when the landmarks span the training set), and
+//!   usually tighter than RFF at equal dimension, at the cost of persisting
+//!   the landmark rows + Cholesky factor in the artifact.
+//!
+//! Training lifts every row once through [`FeatureMap::lift_dataset`] and
+//! runs the existing linear DCD/SVRG solvers on the lifted dense dataset;
+//! the fitted primal weights live in lifted space and are wrapped into
+//! [`crate::odm::OdmModel::FeatureMapped`], which every downstream surface
+//! (plans, artifacts, serving, multiclass OVR) consumes unchanged.
+
+use crate::data::{Dataset, RowRef, Rows};
+use crate::kernel::{dot_rr, KernelKind};
+use crate::partition::landmarks::Nystrom;
+use crate::util::json::{jarr_f64, jnum, jstr, Json};
+use crate::util::rng::Pcg32;
+
+/// Random Fourier feature map for the RBF kernel:
+/// `z(x) = sqrt(2/D) · cos(Wx + b)`, `W` rows ~ N(0, 2γI), `b ~ U[0, 2π)`.
+///
+/// Sampling is deterministic in `seed`: all of `W` is drawn row-major
+/// first, then all of `b`, from one [`Pcg32`] stream — the contract that
+/// lets artifacts persist only the seed and re-sample on load.
+#[derive(Clone, Debug)]
+pub struct RffMap {
+    /// Projection matrix, row-major `dim x cols`.
+    w: Vec<f32>,
+    /// Phase offsets, length `dim`.
+    b: Vec<f32>,
+    /// Output dimensionality D.
+    dim: usize,
+    /// Input feature count d.
+    cols: usize,
+    /// RBF bandwidth γ the map approximates.
+    gamma: f32,
+    /// The seed the map was drawn from (recorded in artifacts/TrainMeta).
+    seed: u64,
+}
+
+impl RffMap {
+    /// Draw a D-dimensional map for `exp(-gamma ‖x−z‖²)` on `cols`-feature
+    /// rows. Deterministic in `seed`.
+    pub fn sample(cols: usize, dim: usize, gamma: f32, seed: u64) -> RffMap {
+        assert!(cols > 0 && dim > 0, "rff map needs cols > 0 and dim > 0");
+        assert!(gamma > 0.0, "rff map needs gamma > 0");
+        let mut rng = Pcg32::seeded(seed);
+        let sd = (2.0 * gamma).sqrt();
+        let w: Vec<f32> = (0..dim * cols).map(|_| rng.standard_normal() * sd).collect();
+        let b: Vec<f32> =
+            (0..dim).map(|_| rng.gen_range_f32(0.0, std::f32::consts::TAU)).collect();
+        RffMap { w, b, dim, cols, gamma, seed }
+    }
+
+    /// Output dimensionality D.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Input feature count d.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The RBF bandwidth the map approximates.
+    pub fn gamma(&self) -> f32 {
+        self.gamma
+    }
+
+    /// The RNG seed the map was drawn from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Lift one row of either backing: `sqrt(2/D) · cos(Wx + b)`. Sparse
+    /// rows gather through [`dot_rr`] in O(nnz) per output feature.
+    pub fn lift(&self, x: RowRef) -> Vec<f32> {
+        let scale = (2.0 / self.dim as f32).sqrt();
+        let mut z = Vec::with_capacity(self.dim);
+        for (wr, br) in self.w.chunks_exact(self.cols).zip(&self.b) {
+            let t = dot_rr(x, RowRef::Dense(wr)) + br;
+            z.push(scale * t.cos());
+        }
+        z
+    }
+}
+
+/// A finite-dimensional embedding approximating an RBF kernel — the object
+/// a [`crate::odm::OdmModel::FeatureMapped`] model carries next to its
+/// lifted-space primal weights.
+#[derive(Clone, Debug)]
+pub enum FeatureMap {
+    /// Data-oblivious random Fourier features (persisted as a seed).
+    Rff(RffMap),
+    /// Data-dependent Nyström embedding over selected landmarks (persisted
+    /// as the landmark rows + Cholesky factor).
+    Nystrom(Nystrom),
+}
+
+impl FeatureMap {
+    /// Draw an RFF map (see [`RffMap::sample`]).
+    pub fn rff(cols: usize, dim: usize, gamma: f32, seed: u64) -> FeatureMap {
+        FeatureMap::Rff(RffMap::sample(cols, dim, gamma, seed))
+    }
+
+    /// Output dimensionality D of the lifted space.
+    pub fn dim(&self) -> usize {
+        match self {
+            FeatureMap::Rff(m) => m.dim(),
+            FeatureMap::Nystrom(ny) => ny.len(),
+        }
+    }
+
+    /// Input feature count the map consumes.
+    pub fn input_cols(&self) -> usize {
+        match self {
+            FeatureMap::Rff(m) => m.cols(),
+            FeatureMap::Nystrom(ny) => ny.landmark_x.first().map_or(0, |z| z.len()),
+        }
+    }
+
+    /// `"rff"` or `"nystrom"` — the tag used in JSON and `TrainMeta`.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            FeatureMap::Rff(_) => "rff",
+            FeatureMap::Nystrom(_) => "nystrom",
+        }
+    }
+
+    /// The kernel this map approximates (what [`crate::api::ArtifactInfo`]
+    /// reports for a feature-mapped model).
+    pub fn approximated_kernel(&self) -> KernelKind {
+        match self {
+            FeatureMap::Rff(m) => KernelKind::Rbf { gamma: m.gamma() },
+            FeatureMap::Nystrom(ny) => *ny.kernel(),
+        }
+    }
+
+    /// The RFF sampling seed, if this is an RFF map (recorded in TrainMeta).
+    pub fn sampling_seed(&self) -> Option<u64> {
+        match self {
+            FeatureMap::Rff(m) => Some(m.seed()),
+            FeatureMap::Nystrom(_) => None,
+        }
+    }
+
+    /// Lift one row of either backing into the D-dimensional space.
+    pub fn lift(&self, x: RowRef) -> Vec<f32> {
+        match self {
+            FeatureMap::Rff(m) => m.lift(x),
+            FeatureMap::Nystrom(ny) => ny.embed(x).iter().map(|v| *v as f32).collect(),
+        }
+    }
+
+    /// Lift a whole dataset (either backing) into a dense lifted dataset,
+    /// preserving labels — the one-time training-side cost.
+    pub fn lift_dataset(&self, rows: Rows) -> Dataset {
+        let d = self.dim();
+        let mut x = Vec::with_capacity(rows.rows() * d);
+        for i in 0..rows.rows() {
+            x.extend_from_slice(&self.lift(rows.row_ref(i)));
+        }
+        let name = format!("{}+{}", rows.name(), self.kind_name());
+        Dataset::new(name, x, rows.labels().to_vec(), d)
+    }
+
+    /// Lift only the feature rows (no label requirement) — the multiclass
+    /// path, whose backing labels are class ids rather than ±1.
+    pub fn lift_rows_unchecked(&self, rows: Rows) -> Vec<f32> {
+        let mut x = Vec::with_capacity(rows.rows() * self.dim());
+        for i in 0..rows.rows() {
+            x.extend_from_slice(&self.lift(rows.row_ref(i)));
+        }
+        x
+    }
+
+    /// Serialize. RFF maps persist only `(cols, dim, gamma, seed)` and
+    /// re-sample on parse; Nyström maps persist landmarks + Cholesky rows.
+    pub fn to_json(&self) -> Json {
+        match self {
+            FeatureMap::Rff(m) => Json::obj(vec![
+                ("kind", jstr("rff")),
+                ("cols", jnum(m.cols() as f64)),
+                ("dim", jnum(m.dim() as f64)),
+                ("gamma", jnum(m.gamma() as f64)),
+                ("seed", jnum(m.seed() as f64)),
+            ]),
+            FeatureMap::Nystrom(ny) => {
+                let cols = self.input_cols();
+                let flat_x: Vec<f64> =
+                    ny.landmark_x.iter().flatten().map(|v| *v as f64).collect();
+                let flat_chol: Vec<f64> =
+                    ny.chol_rows().iter().flatten().copied().collect();
+                let idx: Vec<f64> = ny.landmark_idx.iter().map(|i| *i as f64).collect();
+                let (kname, gamma) = match ny.kernel() {
+                    KernelKind::Linear => ("linear", 0.0),
+                    KernelKind::Rbf { gamma } => ("rbf", *gamma),
+                };
+                Json::obj(vec![
+                    ("kind", jstr("nystrom")),
+                    ("cols", jnum(cols as f64)),
+                    ("kernel", jstr(kname)),
+                    ("gamma", jnum(gamma as f64)),
+                    ("landmark_idx", jarr_f64(&idx)),
+                    ("landmark_x", jarr_f64(&flat_x)),
+                    ("chol", jarr_f64(&flat_chol)),
+                ])
+            }
+        }
+    }
+
+    /// Parse from the JSON produced by [`FeatureMap::to_json`]. RFF maps
+    /// re-sample from the recorded seed bit-identically.
+    pub fn from_json(j: &Json) -> crate::Result<FeatureMap> {
+        match j.req("kind")?.as_str()? {
+            "rff" => {
+                let cols = j.req("cols")?.as_usize()?;
+                let dim = j.req("dim")?.as_usize()?;
+                let gamma = j.req("gamma")?.as_f64()? as f32;
+                let seed = j.req("seed")?.as_f64()? as u64;
+                crate::ensure!(cols > 0 && dim > 0, "rff map needs cols > 0 and dim > 0");
+                crate::ensure!(gamma > 0.0, "rff map needs gamma > 0, got {gamma}");
+                Ok(FeatureMap::rff(cols, dim, gamma, seed))
+            }
+            "nystrom" => {
+                let cols = j.req("cols")?.as_usize()?;
+                crate::ensure!(cols > 0, "nystrom map needs cols > 0");
+                let kernel = match j.req("kernel")?.as_str()? {
+                    "linear" => KernelKind::Linear,
+                    "rbf" => KernelKind::Rbf { gamma: j.req("gamma")?.as_f64()? as f32 },
+                    other => crate::bail!("unknown kernel {other:?} in nystrom map"),
+                };
+                let idx: Vec<usize> = j
+                    .req("landmark_idx")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<crate::Result<_>>()?;
+                let flat_x = j.req("landmark_x")?.as_f64_vec()?;
+                let flat_chol = j.req("chol")?.as_f64_vec()?;
+                let s = idx.len();
+                crate::ensure!(s > 0, "nystrom map needs >= 1 landmark");
+                crate::ensure!(
+                    flat_x.len() == s * cols,
+                    "landmark_x has {} values, expected {s} x {cols}",
+                    flat_x.len()
+                );
+                crate::ensure!(
+                    flat_chol.len() == s * (s + 1) / 2,
+                    "chol has {} values, expected {}",
+                    flat_chol.len(),
+                    s * (s + 1) / 2
+                );
+                let landmark_x: Vec<Vec<f32>> = flat_x
+                    .chunks_exact(cols)
+                    .map(|r| r.iter().map(|v| *v as f32).collect())
+                    .collect();
+                let mut chol = Vec::with_capacity(s);
+                let mut off = 0usize;
+                for row in 0..s {
+                    chol.push(flat_chol[off..off + row + 1].to_vec());
+                    off += row + 1;
+                }
+                Ok(FeatureMap::Nystrom(Nystrom::from_parts(landmark_x, idx, chol, kernel)?))
+            }
+            other => crate::bail!("unknown feature map kind {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::SparseDataset;
+    use crate::data::{all_indices, synth::SynthSpec, DataView};
+
+    fn fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.01, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn rff_sampling_is_deterministic_in_seed() {
+        let a = RffMap::sample(6, 32, 0.8, 42);
+        let b = RffMap::sample(6, 32, 0.8, 42);
+        let c = RffMap::sample(6, 32, 0.8, 43);
+        let x = vec![0.3f32, 0.1, 0.9, 0.0, 0.5, 0.2];
+        assert_eq!(a.lift(RowRef::Dense(&x)), b.lift(RowRef::Dense(&x)));
+        assert_ne!(a.lift(RowRef::Dense(&x)), c.lift(RowRef::Dense(&x)));
+    }
+
+    #[test]
+    fn rff_inner_product_approximates_rbf() {
+        let d = fixture(24, 3);
+        let gamma = 1.5f32;
+        let k = KernelKind::Rbf { gamma };
+        let map = FeatureMap::rff(d.cols, 4096, gamma, 7);
+        let mut worst = 0.0f64;
+        for i in 0..8 {
+            for j in 0..8 {
+                let zi = map.lift(RowRef::Dense(d.row(i)));
+                let zj = map.lift(RowRef::Dense(d.row(j * 3)));
+                let approx: f64 = zi.iter().zip(&zj).map(|(a, b)| (a * b) as f64).sum();
+                let exact = k.eval(d.row(i), d.row(j * 3)) as f64;
+                worst = worst.max((approx - exact).abs());
+            }
+        }
+        // Monte-Carlo error is O(1/sqrt(D)) ~ 0.016 at D = 4096.
+        assert!(worst < 0.08, "worst |approx - exact| = {worst}");
+    }
+
+    #[test]
+    fn lift_dataset_shapes_and_labels() {
+        let d = fixture(40, 5);
+        let map = FeatureMap::rff(d.cols, 16, 0.5, 1);
+        let lifted = map.lift_dataset(Rows::Dense(&d));
+        assert_eq!(lifted.rows, 40);
+        assert_eq!(lifted.cols, 16);
+        assert_eq!(lifted.y, d.y);
+        assert_eq!(lifted.row(7), map.lift(RowRef::Dense(d.row(7))).as_slice());
+    }
+
+    #[test]
+    fn sparse_lift_matches_dense_lift() {
+        let d = fixture(20, 9);
+        let sp = SparseDataset::from_dense(&d);
+        let map = FeatureMap::rff(d.cols, 24, 1.0, 11);
+        for i in 0..d.rows {
+            let zd = map.lift(Rows::Dense(&d).row_ref(i));
+            let zs = map.lift(Rows::Sparse(&sp).row_ref(i));
+            for (a, b) in zd.iter().zip(&zs) {
+                assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rff_json_roundtrip_is_bit_exact() {
+        let map = FeatureMap::rff(5, 48, 0.7, 123);
+        let back = FeatureMap::from_json(&map.to_json()).unwrap();
+        let x = vec![0.2f32, 0.0, 0.8, 0.4, 0.6];
+        assert_eq!(map.lift(RowRef::Dense(&x)), back.lift(RowRef::Dense(&x)));
+        assert_eq!(back.kind_name(), "rff");
+        assert_eq!(back.dim(), 48);
+        assert_eq!(back.sampling_seed(), Some(123));
+    }
+
+    #[test]
+    fn nystrom_json_roundtrip_is_bit_exact() {
+        let d = fixture(50, 13);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 2.0 };
+        let map = FeatureMap::Nystrom(Nystrom::select(&v, &k, 8, 1024, 3));
+        let back = FeatureMap::from_json(&map.to_json()).unwrap();
+        assert_eq!(back.kind_name(), "nystrom");
+        assert_eq!(back.dim(), map.dim());
+        for i in 0..d.rows {
+            assert_eq!(
+                map.lift(RowRef::Dense(d.row(i))),
+                back.lift(RowRef::Dense(d.row(i))),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn nystrom_full_landmarks_reproduce_kernel() {
+        // With landmarks spanning the whole training set the embedding is a
+        // full pivoted Cholesky: <lift(x), lift(z)> == k(x, z) on all pairs.
+        let d = fixture(30, 17);
+        let idx = all_indices(&d);
+        let v = DataView::new(&d, &idx);
+        let k = KernelKind::Rbf { gamma: 1.0 };
+        let map = FeatureMap::Nystrom(Nystrom::select(&v, &k, d.rows, 1024, 5));
+        for i in 0..d.rows {
+            for j in 0..d.rows {
+                let zi = map.lift(RowRef::Dense(d.row(i)));
+                let zj = map.lift(RowRef::Dense(d.row(j)));
+                let approx: f64 = zi.iter().zip(&zj).map(|(a, b)| (a * b) as f64).sum();
+                let exact = k.eval(d.row(i), d.row(j)) as f64;
+                assert!((approx - exact).abs() < 1e-4, "({i},{j}): {approx} vs {exact}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_kind_and_bad_shapes() {
+        let bad = Json::obj(vec![("kind", jstr("fourier"))]);
+        assert!(FeatureMap::from_json(&bad).is_err());
+        let bad_dim = Json::obj(vec![
+            ("kind", jstr("rff")),
+            ("cols", jnum(4.0)),
+            ("dim", jnum(0.0)),
+            ("gamma", jnum(0.5)),
+            ("seed", jnum(1.0)),
+        ]);
+        assert!(FeatureMap::from_json(&bad_dim).is_err());
+    }
+}

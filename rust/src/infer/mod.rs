@@ -19,6 +19,9 @@
 //!   and use the same norms fast path, so a sparse SV against a dense row
 //!   costs one O(nnz) gather (not the O(cols) dense walk) and sparse×sparse
 //!   pairs stay an O(nnz) sorted merge.
+//! * **lifted dot** — feature-mapped models ([`crate::featmap`]) lift each
+//!   request row through their RFF/Nyström embedding and score one O(D)
+//!   f64-accumulated dot, independent of the training-set size.
 //!
 //! The block API ([`ScoringPlan::score_block`]) scores many rows per call —
 //! kernel inference is a blocked-GEMM problem, not a row-at-a-time one
@@ -41,6 +44,7 @@
 //! representation.
 
 use crate::data::{RowRef, Rows};
+use crate::featmap::FeatureMap;
 use crate::kernel::{dot, eval_with_norms, sq_norm_rr, KernelKind};
 use crate::odm::OdmModel;
 
@@ -80,6 +84,10 @@ pub fn decision_reference(model: &OdmModel, x: RowRef) -> f64 {
                 s += c * kernel.eval_rr(sv, x) as f64;
             }
             s
+        }
+        OdmModel::FeatureMapped { map, w } => {
+            let z = map.lift(x);
+            w.iter().zip(&z).map(|(a, b)| a * *b as f64).sum()
         }
     }
 }
@@ -122,6 +130,9 @@ enum Strategy {
         coef: Vec<f64>,
         cols: usize,
     },
+    /// Feature-mapped model: lift each request row through the RFF/Nyström
+    /// embedding, then one O(D) f64 dot against the lifted-space weights.
+    FeatMap { map: FeatureMap, w: Vec<f64> },
 }
 
 /// A scoring plan compiled once from an [`OdmModel`]: strategy selected,
@@ -174,6 +185,14 @@ impl ScoringPlan {
                         coef.clone(),
                         *cols,
                     ),
+                }
+            }
+            OdmModel::FeatureMapped { map, w } => {
+                let support = w.len();
+                ScoringPlan {
+                    strategy: Strategy::FeatMap { map: map.clone(), w: w.clone() },
+                    cols,
+                    support,
                 }
             }
         }
@@ -279,6 +298,12 @@ impl ScoringPlan {
                         cols: *cols,
                     }
                 });
+            }
+            Strategy::FeatMap { map, w } => {
+                for (r, o) in rows.iter().zip(out.iter_mut()) {
+                    let z = map.lift(*r);
+                    *o = w.iter().zip(&z).map(|(a, b)| a * *b as f64).sum();
+                }
             }
         }
     }
@@ -459,8 +484,9 @@ impl MulticlassPlan {
 
 /// A plan split into support-vector shards: `shard(s)` scores the s-th
 /// slice of the expansion, and the full decision is the sum of the shard
-/// partials. Linear plans (no expansion to split) always compile to one
-/// shard, as do requests for more shards than support vectors.
+/// partials. Linear and feature-mapped plans (no expansion to split) always
+/// compile to one shard, as do requests for more shards than support
+/// vectors.
 pub struct ShardedPlan {
     shards: Vec<ScoringPlan>,
     cols: usize,

@@ -78,6 +78,15 @@
 //! health/metrics frames, and hot-swappable versioned artifacts through
 //! [`net::ModelRegistry`].
 //!
+//! ## Feature-map approximation
+//!
+//! RBF serving at linear-model speed: [`featmap::FeatureMap`] lifts rows
+//! through random Fourier features or a Nyström landmark embedding, the
+//! linear solvers train in the lifted primal
+//! (`TrainSpec::rff` / `TrainSpec::nystrom`), and the compiled plan scores
+//! each query with a single O(D) dense dot product instead of O(#SV · d)
+//! kernel evaluations.
+//!
 //! ## Sparse data path
 //!
 //! High-dimensional sparse workloads (the paper's rcv1/news20-class text
@@ -104,6 +113,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod data;
 pub mod exp;
+pub mod featmap;
 pub mod infer;
 pub mod kernel;
 pub mod multiclass;

@@ -24,7 +24,7 @@
 
 use std::collections::HashMap;
 
-use sodm::api::{self, Artifact, Method, OvrOptions, TrainSpec};
+use sodm::api::{self, Artifact, FeatMapSpec, Method, OvrOptions, TrainSpec};
 use sodm::cluster::SimCluster;
 use sodm::data::libsvm;
 use sodm::data::libsvm::LoadedDataset;
@@ -44,11 +44,13 @@ use sodm::Result;
 /// anything else with an error listing the set).
 const GEN_DATA_FLAGS: &str = "name seed out scale rows cols density";
 const TRAIN_FLAGS: &str = "data method kernel gamma lambda theta upsilon p levels stratums \
-     workers epochs model-out no-shrink ordered-every seed multiclass no-shared-cache";
+     workers epochs model-out no-shrink ordered-every seed multiclass no-shared-cache \
+     rff-dim landmarks";
 const PREDICT_FLAGS: &str = "model data backend seed";
-const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve multiclass \
+const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve multiclass rff \
      scale seed datasets workers out-dir odm-cap rows cols density shards classes quick json \
      cores dataset";
+const CHECK_SUMMARIES_FLAGS: &str = "dir";
 const SERVE_BENCH_FLAGS: &str =
     "model data backend seed clients requests workers shards json quick remote";
 const SERVE_FLAGS: &str = "model addr workers shards";
@@ -74,6 +76,7 @@ fn run(cmd: &str, args: &[String]) -> Result<()> {
         "predict" => cmd_predict(&parse_flags(cmd, args, PREDICT_FLAGS)?),
         "experiment" => cmd_experiment(&parse_flags(cmd, args, EXPERIMENT_FLAGS)?),
         "serve-bench" => cmd_serve_bench(&parse_flags(cmd, args, SERVE_BENCH_FLAGS)?),
+        "check-summaries" => cmd_check_summaries(&parse_flags(cmd, args, CHECK_SUMMARIES_FLAGS)?),
         "serve" => cmd_serve(&parse_flags(cmd, args, SERVE_FLAGS)?),
         "admin" => cmd_admin(&parse_flags(cmd, args, ADMIN_FLAGS)?),
         "info" => {
@@ -108,7 +111,10 @@ USAGE: sodm <command> [--flag value]...
               CSR data trains odm|sodm|dsvrg without densification;
               dsvrg|svrg|csvrg are linear-kernel only — typed spec errors
               reject invalid method x kernel combinations up front)
-             [--kernel rbf|linear] [--gamma g] [--lambda l] [--theta t] [--upsilon u]
+             [--kernel rbf|linear|rff|nystrom] [--gamma g] [--lambda l] [--theta t] [--upsilon u]
+             (--kernel rff [--rff-dim 256] / --kernel nystrom [--landmarks 128]:
+              random-feature approximations of the rbf kernel — trains the
+              linear solvers in the lifted space, serves as one O(D) dot)
              [--p 4] [--levels 2] [--stratums 16] [--workers N] [--epochs 6]
              [--model-out m.json] [--no-shrink] [--ordered-every k]
              (--no-shrink disables DCD active-set shrinking — the reference
@@ -123,7 +129,7 @@ USAGE: sodm <command> [--flag value]...
   predict    --model m.json --data <...> [--backend native|xla]
              (multiclass artifacts score multiclass data natively)
   experiment (--table 1|2|3|4 | --figure 1|2|3|4 | --ablation | --sparse | --serve
-              | --remote-serve | --multiclass)
+              | --remote-serve | --multiclass | --rff)
              [--scale 0.05] [--seed 7] [--datasets a,b,c] [--workers N] [--out-dir results]
              (--sparse: CSR scaling benchmark, [--rows 10000] [--cols 100000]
               [--density 0.001]; writes results/sparse_bench.json)
@@ -135,6 +141,9 @@ USAGE: sodm <command> [--flag value]...
              (--multiclass: OVR shared-vs-private Gram-cache benchmark,
               [--classes 4] [--quick] [--json copy.json]; writes
               results/multiclass_bench.json)
+             (--rff: accuracy-vs-dimension-vs-latency frontier of rff and
+              nystrom feature maps against exact rbf, [--quick]
+              [--json copy.json]; writes results/rff_bench.json)
   serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
              [--workers N] [--shards N] [--json out.json]
              (--quick: self-contained dense + sparse RBF smoke, no --model/--data)
@@ -147,6 +156,10 @@ USAGE: sodm <command> [--flag value]...
   admin      --addr host:port [--swap m.json | --panics N | --stall-ms M |
               --metrics | --health]
              (one-shot wire client; default probe is --health)
+  check-summaries [--dir results]
+             (CI bench-artifact contract: every expected summary JSON exists,
+              carries its required keys, and contains only finite numbers;
+              summaries marked \"skipped\": true pass the key check)
   info
 "
     );
@@ -268,14 +281,30 @@ fn cmd_gen_data(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn parse_kernel(flags: &HashMap<String, String>, cols: usize) -> Result<KernelKind> {
+/// `--kernel` names either an exact kernel (`linear`, `rbf`) or a
+/// feature-map approximation of the rbf kernel (`rff`, `nystrom`); the
+/// latter return the rbf kernel being approximated plus a [`FeatMapSpec`]
+/// sized by `--rff-dim` / `--landmarks`.
+fn parse_kernel(
+    flags: &HashMap<String, String>,
+    cols: usize,
+) -> Result<(KernelKind, Option<FeatMapSpec>)> {
+    let rbf = |flags: &HashMap<String, String>| -> Result<KernelKind> {
+        let gamma = flag_f64(flags, "gamma", 1.0 / cols.max(1) as f64)? as f32;
+        Ok(KernelKind::Rbf { gamma })
+    };
     match flag(flags, "kernel").unwrap_or("rbf") {
-        "linear" => Ok(KernelKind::Linear),
-        "rbf" => {
-            let gamma = flag_f64(flags, "gamma", 1.0 / cols.max(1) as f64)? as f32;
-            Ok(KernelKind::Rbf { gamma })
+        "linear" => Ok((KernelKind::Linear, None)),
+        "rbf" => Ok((rbf(flags)?, None)),
+        "rff" => {
+            let dim = flag_usize(flags, "rff-dim", 256)?;
+            Ok((rbf(flags)?, Some(FeatMapSpec::Rff { dim })))
         }
-        other => sodm::bail!("unknown kernel {other:?}"),
+        "nystrom" => {
+            let landmarks = flag_usize(flags, "landmarks", 128)?;
+            Ok((rbf(flags)?, Some(FeatMapSpec::Nystrom { landmarks })))
+        }
+        other => sodm::bail!("unknown kernel {other:?} (linear|rbf|rff|nystrom)"),
     }
 }
 
@@ -307,9 +336,10 @@ fn build_train_spec(
     };
     // Linear-only methods default to the linear kernel when --kernel is
     // absent (the pre-facade CLI never required it); an explicit
-    // `--kernel rbf` still reaches the typed LinearOnly error.
-    let kernel = if flag(flags, "kernel").is_none() && method.linear_only() {
-        KernelKind::Linear
+    // `--kernel rbf` still reaches the typed LinearOnly error, while
+    // `--kernel rff|nystrom` lifts the data so those methods run.
+    let (kernel, feature_map) = if flag(flags, "kernel").is_none() && method.linear_only() {
+        (KernelKind::Linear, None)
     } else {
         parse_kernel(flags, cols)?
     };
@@ -332,6 +362,11 @@ fn build_train_spec(
         .epochs(flag_usize(flags, "epochs", 6)?)
         .partitions(workers.clamp(2, 16))
         .seed(flag_usize(flags, "seed", 7)? as u64);
+    match feature_map {
+        Some(FeatMapSpec::Rff { dim }) => spec = spec.rff(dim),
+        Some(FeatMapSpec::Nystrom { landmarks }) => spec = spec.nystrom(landmarks),
+        None => {}
+    }
     if multiclass {
         spec = spec.multiclass(OvrOptions {
             share_cache: !flags.contains_key("no-shared-cache"),
@@ -501,6 +536,9 @@ fn cmd_predict(flags: &HashMap<String, String>) -> Result<()> {
                 OdmModel::SparseKernel { .. } => {
                     sodm::bail!("CSR support vectors have no PJRT tile layout; use native")
                 }
+                OdmModel::FeatureMapped { .. } => {
+                    sodm::bail!("feature-mapped models score natively (one O(D) dot); use native")
+                }
             };
             let correct = decisions
                 .iter()
@@ -562,7 +600,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     }
     if flags.contains_key("serve") {
         let shards = flag_usize(flags, "shards", cfg.workers)?;
-        let (json, out) = sodm::exp::run_serve_benchmark(cfg.workers, shards, false)?;
+        let (json, out) = sodm::exp::run_serve_benchmark(cfg.workers, shards, false, cfg.seed)?;
         std::fs::create_dir_all(&cfg.out_dir)?;
         let path = cfg.out_dir.join("serve_bench.json");
         std::fs::write(&path, json.to_string())?;
@@ -573,7 +611,8 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("remote-serve") {
         let shards = flag_usize(flags, "shards", cfg.workers)?;
         let quick = flags.contains_key("quick");
-        let (json, out) = sodm::exp::run_remote_serve_benchmark(cfg.workers, shards, quick)?;
+        let (json, out) =
+            sodm::exp::run_remote_serve_benchmark(cfg.workers, shards, quick, cfg.seed)?;
         std::fs::create_dir_all(&cfg.out_dir)?;
         let path = cfg.out_dir.join("remote_serve_bench.json");
         std::fs::write(&path, json.to_string())?;
@@ -584,9 +623,24 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("multiclass") {
         let classes = flag_usize(flags, "classes", 4)?;
         let quick = flags.contains_key("quick");
-        let (json, out) = sodm::exp::run_multiclass_benchmark(classes, cfg.workers, quick)?;
+        let (json, out) =
+            sodm::exp::run_multiclass_benchmark(classes, cfg.workers, quick, cfg.seed)?;
         std::fs::create_dir_all(&cfg.out_dir)?;
         let path = cfg.out_dir.join("multiclass_bench.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("{out}");
+        println!("wrote {}", path.display());
+        if let Some(extra) = flag(flags, "json") {
+            std::fs::write(extra, json.to_string())?;
+            println!("wrote JSON summary to {extra}");
+        }
+        return Ok(());
+    }
+    if flags.contains_key("rff") {
+        let quick = flags.contains_key("quick");
+        let (json, out) = sodm::exp::run_rff_benchmark(cfg.workers, quick, cfg.seed)?;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("rff_bench.json");
         std::fs::write(&path, json.to_string())?;
         println!("{out}");
         println!("wrote {}", path.display());
@@ -617,7 +671,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     }
     sodm::bail!(
         "experiment needs --table N, --figure N, --ablation, --sparse, --serve, \
-         --remote-serve, or --multiclass"
+         --remote-serve, --multiclass, or --rff"
     )
 }
 
@@ -633,7 +687,8 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         return cmd_serve_bench_remote(flags, remote, workers, shards);
     }
     if flags.contains_key("quick") {
-        let (json, summary) = sodm::exp::run_serve_benchmark(workers, shards, true)?;
+        let seed = flag_usize(flags, "seed", 7)? as u64;
+        let (json, summary) = sodm::exp::run_serve_benchmark(workers, shards, true, seed)?;
         println!("{summary}");
         if let Some(path) = flag(flags, "json") {
             std::fs::write(path, json.to_string())?;
@@ -735,7 +790,9 @@ fn cmd_serve_bench_remote(
 ) -> Result<()> {
     if remote == "true" {
         let quick = flags.contains_key("quick");
-        let (json, summary) = sodm::exp::run_remote_serve_benchmark(workers, shards, quick)?;
+        let seed = flag_usize(flags, "seed", 7)? as u64;
+        let (json, summary) =
+            sodm::exp::run_remote_serve_benchmark(workers, shards, quick, seed)?;
         println!("{summary}");
         if let Some(path) = flag(flags, "json") {
             std::fs::write(path, json.to_string())?;
@@ -861,6 +918,86 @@ fn cmd_admin(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// The CI bench-artifact contract: each summary file the bench job uploads
+/// and the top-level keys it must carry. A summary that self-reports
+/// `"skipped": true` (e.g. the remote-serve drill on a runner without
+/// loopback) is exempt from the key contract but must still parse and be
+/// finite.
+const SUMMARY_CONTRACT: &[(&str, &[&str])] = &[
+    ("hotpath-summary.json", &["benches"]),
+    ("serve-summary.json", &["workers", "shards", "cases"]),
+    (
+        "multiclass-summary.json",
+        &["name", "classes", "shared_cache_speedup", "accuracy", "serve_agrees"],
+    ),
+    ("remote-serve-summary.json", &["name", "ok", "shed_rate", "p99_ms"]),
+    ("rff-summary.json", &["name", "exact_accuracy", "points", "within_tolerance"]),
+];
+
+/// True when every number reachable from `j` is finite. `Json::parse`
+/// already rejects NaN/inf literals, but summaries are produced in-process
+/// by the bench arms, so re-walk values defensively before upload.
+fn all_finite(j: &sodm::util::json::Json) -> bool {
+    use sodm::util::json::Json;
+    match j {
+        Json::Num(n) => n.is_finite(),
+        Json::Arr(items) => items.iter().all(all_finite),
+        Json::Obj(map) => map.values().all(all_finite),
+        Json::Str(_) | Json::Bool(_) | Json::Null => true,
+    }
+}
+
+/// Validate one summary file against its required keys; returns the list
+/// of violations (empty = pass).
+fn check_summary(path: &std::path::Path, keys: &[&str]) -> Vec<String> {
+    use sodm::util::json::Json;
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("{}: unreadable ({e})", path.display())],
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => return vec![format!("{}: invalid JSON ({e})", path.display())],
+    };
+    let mut violations = Vec::new();
+    if !all_finite(&json) {
+        violations.push(format!("{}: contains a non-finite number", path.display()));
+    }
+    if matches!(json.get("skipped"), Some(Json::Bool(true))) {
+        return violations;
+    }
+    for key in keys {
+        if json.get(key).is_none() {
+            violations.push(format!("{}: missing required key {key:?}", path.display()));
+        }
+    }
+    violations
+}
+
+/// `check-summaries`: gate the CI bench job on its own artifacts — every
+/// summary in [`SUMMARY_CONTRACT`] must exist in `--dir`, parse as JSON,
+/// carry its required keys, and contain only finite numbers.
+fn cmd_check_summaries(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = std::path::Path::new(flag(flags, "dir").unwrap_or("."));
+    let mut violations = Vec::new();
+    for (file, keys) in SUMMARY_CONTRACT {
+        let path = dir.join(file);
+        let bad = check_summary(&path, keys);
+        if bad.is_empty() {
+            println!("ok {}", path.display());
+        } else {
+            violations.extend(bad);
+        }
+    }
+    sodm::ensure!(
+        violations.is_empty(),
+        "bench summary contract violated:\n  {}",
+        violations.join("\n  ")
+    );
+    println!("all {} summaries satisfy the contract", SUMMARY_CONTRACT.len());
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!("sodm {} — three-layer rust+JAX+Pallas SODM", env!("CARGO_PKG_VERSION"));
     println!("cpus: {}", num_cpus());
@@ -940,6 +1077,53 @@ mod tests {
         explicit.insert("kernel".to_string(), "rbf".to_string());
         // an explicit rbf + dsvrg still reaches the typed LinearOnly error
         assert!(build_train_spec(&explicit, 10, false).is_err());
+    }
+
+    #[test]
+    fn rff_and_nystrom_kernels_build_feature_mapped_specs() {
+        let mut f: HashMap<String, String> = HashMap::new();
+        f.insert("kernel".to_string(), "rff".to_string());
+        let spec = build_train_spec(&f, 10, false).unwrap();
+        assert!(matches!(spec.kernel, KernelKind::Rbf { .. }));
+        assert_eq!(spec.feature_map, Some(FeatMapSpec::Rff { dim: 256 }));
+        f.insert("rff-dim".to_string(), "64".to_string());
+        let spec = build_train_spec(&f, 10, false).unwrap();
+        assert_eq!(spec.feature_map, Some(FeatMapSpec::Rff { dim: 64 }));
+        f.insert("kernel".to_string(), "nystrom".to_string());
+        f.insert("landmarks".to_string(), "32".to_string());
+        let spec = build_train_spec(&f, 10, false).unwrap();
+        assert_eq!(spec.feature_map, Some(FeatMapSpec::Nystrom { landmarks: 32 }));
+        // a linear-only method plus an explicit feature map trains in the
+        // lifted space instead of hitting the LinearOnly error
+        f.insert("method".to_string(), "dsvrg".to_string());
+        assert!(build_train_spec(&f, 10, false).is_ok());
+    }
+
+    #[test]
+    fn summary_contract_checks_keys_skips_and_unreadables() {
+        let dir = std::env::temp_dir().join(format!("sodm-check-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rff-summary.json");
+        std::fs::write(&p, "{\"name\":\"rff-frontier\"}").unwrap();
+        let bad = check_summary(&p, &["name", "points"]);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("points"), "{bad:?}");
+        std::fs::write(&p, "{\"skipped\":true}").unwrap();
+        assert!(check_summary(&p, &["name", "points"]).is_empty(), "skipped summaries pass");
+        std::fs::write(&p, "not json").unwrap();
+        assert_eq!(check_summary(&p, &["name"]).len(), 1);
+        let missing = check_summary(&dir.join("absent.json"), &["name"]);
+        assert!(missing[0].contains("unreadable"), "{missing:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn finiteness_walk_rejects_nested_non_finite_numbers() {
+        use sodm::util::json::{jstr, Json};
+        assert!(!all_finite(&Json::Num(f64::NAN)));
+        assert!(!all_finite(&Json::Arr(vec![Json::Num(1.0), Json::Num(f64::INFINITY)])));
+        let nested = Json::obj(vec![("a", jstr("x")), ("b", Json::Arr(vec![Json::Num(2.0)]))]);
+        assert!(all_finite(&nested));
     }
 
     #[test]

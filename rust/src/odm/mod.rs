@@ -8,6 +8,7 @@
 //! [`OdmModel::load`] itself.
 
 use crate::data::{DataView, Dataset, RowRef, Rows};
+use crate::featmap::FeatureMap;
 use crate::kernel::{dot, KernelKind};
 use crate::util::json::{jarr_f64, jstr, Json};
 
@@ -72,6 +73,16 @@ pub enum OdmModel {
         coef: Vec<f64>,
         cols: usize,
     },
+    /// Linear weights in a lifted feature space:
+    /// `f(x) = ⟨w, map.lift(x)⟩` — produced by feature-map training
+    /// ([`crate::api::TrainSpec::rff`] / [`crate::api::TrainSpec::nystrom`]).
+    /// Scoring is one O(D) dense dot product per query after the lift.
+    FeatureMapped {
+        /// The embedding the weights live in.
+        map: FeatureMap,
+        /// Primal weights in the lifted space, length `map.dim()`.
+        w: Vec<f64>,
+    },
 }
 
 impl OdmModel {
@@ -132,21 +143,25 @@ impl OdmModel {
         }
     }
 
-    /// Number of support vectors (linear: feature dim).
+    /// Number of support vectors (linear: feature dim; feature-mapped:
+    /// lifted dim D — the per-query work, like the linear case).
     pub fn support_size(&self) -> usize {
         match self {
             OdmModel::Linear { w } => w.len(),
             OdmModel::Kernel { coef, .. } => coef.len(),
             OdmModel::SparseKernel { coef, .. } => coef.len(),
+            OdmModel::FeatureMapped { w, .. } => w.len(),
         }
     }
 
-    /// Feature dimensionality the model scores.
+    /// Feature dimensionality the model scores (feature-mapped models
+    /// report the *input* space — the lift is internal).
     pub fn input_cols(&self) -> usize {
         match self {
             OdmModel::Linear { w } => w.len(),
             OdmModel::Kernel { cols, .. } => *cols,
             OdmModel::SparseKernel { cols, .. } => *cols,
+            OdmModel::FeatureMapped { map, .. } => map.input_cols(),
         }
     }
 
@@ -236,6 +251,11 @@ impl OdmModel {
                     ("coef", jarr_f64(coef)),
                 ])
             }
+            OdmModel::FeatureMapped { map, w } => Json::obj(vec![
+                ("kind", jstr("featmap")),
+                ("map", map.to_json()),
+                ("w", jarr_f64(w)),
+            ]),
         }
     }
 
@@ -294,6 +314,17 @@ impl OdmModel {
                     coef: j.req("coef")?.as_f64_vec()?,
                     cols: j.req("cols")?.as_usize()?,
                 })
+            }
+            "featmap" => {
+                let map = FeatureMap::from_json(j.req("map")?)?;
+                let w = j.req("w")?.as_f64_vec()?;
+                crate::ensure!(
+                    w.len() == map.dim(),
+                    "featmap model has {} weights but the map lifts to {}",
+                    w.len(),
+                    map.dim()
+                );
+                Ok(OdmModel::FeatureMapped { map, w })
             }
             other => crate::bail!("unknown model kind {other:?}"),
         }

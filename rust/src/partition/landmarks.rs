@@ -125,6 +125,42 @@ impl Nystrom {
         Nystrom { landmark_x, landmark_idx, chol, self_sim, landmark_norm, kernel: *kernel }
     }
 
+    /// Rebuild from serialized parts (landmark rows + lower-triangular
+    /// Cholesky rows) — the [`crate::featmap`] artifact path. The cached
+    /// self-similarities and squared norms are derived from `landmark_x`.
+    pub fn from_parts(
+        landmark_x: Vec<Vec<f32>>,
+        landmark_idx: Vec<usize>,
+        chol: Vec<Vec<f64>>,
+        kernel: KernelKind,
+    ) -> crate::Result<Nystrom> {
+        crate::ensure!(!landmark_x.is_empty(), "nystrom needs >= 1 landmark");
+        crate::ensure!(
+            landmark_x.len() == landmark_idx.len() && landmark_x.len() == chol.len(),
+            "landmark_x/landmark_idx/chol length mismatch"
+        );
+        let cols = landmark_x[0].len();
+        for (s, (z, c)) in landmark_x.iter().zip(&chol).enumerate() {
+            crate::ensure!(z.len() == cols, "landmark {s} has {} cols, expected {cols}", z.len());
+            let want = s + 1;
+            crate::ensure!(c.len() == want, "chol row {s} has {} entries, expected {want}", c.len());
+        }
+        let self_sim = landmark_x.iter().map(|z| kernel.eval(z, z)).collect();
+        let landmark_norm = landmark_x.iter().map(|z| sq_norm_rr(RowRef::Dense(z))).collect();
+        Ok(Nystrom { landmark_x, landmark_idx, chol, self_sim, landmark_norm, kernel })
+    }
+
+    /// The lower-triangular Cholesky rows (`chol[s]` has length `s + 1`) —
+    /// what [`crate::featmap`] persists for artifact round-trips.
+    pub fn chol_rows(&self) -> &[Vec<f64>] {
+        &self.chol
+    }
+
+    /// The kernel the landmarks were selected under.
+    pub fn kernel(&self) -> &KernelKind {
+        &self.kernel
+    }
+
     /// Number of landmarks actually selected (may be < requested if the pool
     /// became numerically dependent).
     pub fn len(&self) -> usize {

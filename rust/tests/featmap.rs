@@ -1,0 +1,145 @@
+//! Feature-map approximation integration tests (ISSUE 7 acceptance
+//! fixtures): RFF-trained models must track exact RBF accuracy at large
+//! map dimension, accuracy must be monotone (within noise) in the map
+//! dimension, the Nyström map with a full landmark budget must reproduce
+//! exact-RBF decisions, feature-mapped artifacts must round-trip through
+//! JSON bit-exactly, and an RFF artifact must serve over the TCP frontend
+//! identically to the in-process runtime.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use sodm::api::{self, Artifact, Method, TrainSpec};
+use sodm::data::synth::SynthSpec;
+use sodm::data::Dataset;
+use sodm::kernel::KernelKind;
+use sodm::net::{ModelRegistry, NetClient, NetServer};
+use sodm::odm::OdmModel;
+use sodm::qp::SolveBudget;
+use sodm::serve::ServeConfig;
+
+fn loopback_available() -> bool {
+    TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn fixture(rows: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut sgen = SynthSpec::named("svmguide1", 0.02, seed);
+    sgen.rows = rows;
+    sgen.generate().split(0.8, seed ^ 0xF1)
+}
+
+/// Shrinking off and a generous sweep budget: both the exact-kernel and
+/// lifted-linear solvers run plain DCD to (near) convergence, so their
+/// optima — not their iteration paths — are what the tests compare.
+fn rbf_spec(gamma: f32) -> TrainSpec {
+    let budget = SolveBudget { max_sweeps: 200, shrink: false, ..SolveBudget::default() };
+    TrainSpec::new(Method::ExactOdm).kernel(KernelKind::Rbf { gamma }).budget(budget).seed(9)
+}
+
+fn sign_agreement(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let same = a.iter().zip(b).filter(|(x, y)| (**x >= 0.0) == (**y >= 0.0)).count();
+    same as f64 / a.len() as f64
+}
+
+#[test]
+fn rff_tracks_exact_rbf_at_large_dimension() {
+    let (train, test) = fixture(600, 7);
+    let exact = api::train(&rbf_spec(0.5).build().unwrap(), &train).unwrap();
+    let rff = api::train(&rbf_spec(0.5).rff(1536).build().unwrap(), &train).unwrap();
+    let exact_acc = exact.accuracy(&test).unwrap();
+    let rff_acc = rff.accuracy(&test).unwrap();
+    assert!(
+        rff_acc + 0.02 >= exact_acc,
+        "rff at D=1536 must track exact rbf: {rff_acc:.4} vs {exact_acc:.4}"
+    );
+    let agree = sign_agreement(
+        &exact.as_binary().unwrap().decisions(&test),
+        &rff.as_binary().unwrap().decisions(&test),
+    );
+    assert!(agree >= 0.95, "decision agreement at D=1536 was only {agree:.3}");
+}
+
+#[test]
+fn rff_accuracy_is_monotone_in_dimension_within_noise() {
+    let (train, test) = fixture(600, 11);
+    let acc = |dim: usize| {
+        let art = api::train(&rbf_spec(0.5).rff(dim).build().unwrap(), &train).unwrap();
+        art.accuracy(&test).unwrap()
+    };
+    let (lo, mid, hi) = (acc(8), acc(64), acc(512));
+    assert!(mid + 0.03 >= lo, "D=64 ({mid:.4}) fell behind D=8 ({lo:.4})");
+    assert!(hi + 0.03 >= mid, "D=512 ({hi:.4}) fell behind D=64 ({mid:.4})");
+    assert!(hi + 0.03 >= lo, "D=512 ({hi:.4}) fell behind D=8 ({lo:.4})");
+}
+
+#[test]
+fn nystrom_with_full_landmark_budget_matches_exact_rbf() {
+    // With the landmark budget covering every training row, the Nyström
+    // kernel estimate is exact at the landmarks, so decisions coincide
+    // with the exact-RBF model up to solver/float tolerance.
+    let (train, test) = fixture(300, 13);
+    let exact = api::train(&rbf_spec(0.5).build().unwrap(), &train).unwrap();
+    let ny = api::train(&rbf_spec(0.5).nystrom(train.rows).build().unwrap(), &train).unwrap();
+    let exact_acc = exact.accuracy(&test).unwrap();
+    let ny_acc = ny.accuracy(&test).unwrap();
+    assert!(
+        (exact_acc - ny_acc).abs() <= 0.03,
+        "full-landmark nystrom must match exact rbf: {ny_acc:.4} vs {exact_acc:.4}"
+    );
+    let agree = sign_agreement(
+        &exact.as_binary().unwrap().decisions(&test),
+        &ny.as_binary().unwrap().decisions(&test),
+    );
+    assert!(agree >= 0.95, "full-landmark nystrom decision agreement was only {agree:.3}");
+}
+
+#[test]
+fn feature_mapped_artifact_round_trips_bit_exact() {
+    let (train, test) = fixture(200, 17);
+    for spec in [rbf_spec(0.5).rff(128), rbf_spec(0.5).nystrom(24)] {
+        let art = api::train(&spec.build().unwrap(), &train).unwrap();
+        let before = art.as_binary().unwrap().decisions(&test);
+
+        let dir = std::env::temp_dir().join(format!("sodm_featmap_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("featmap_model.json");
+        art.save(&path).unwrap();
+        let loaded = Artifact::load(path.to_str().unwrap()).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        assert!(matches!(loaded.as_binary(), Some(OdmModel::FeatureMapped { .. })));
+        assert_eq!(loaded.meta.feature_map, art.meta.feature_map);
+        assert_eq!(loaded.meta.feature_dim, art.meta.feature_dim);
+        assert_eq!(loaded.meta.feature_seed, art.meta.feature_seed);
+        let after = loaded.as_binary().unwrap().decisions(&test);
+        for (i, (a, b)) in before.iter().zip(&after).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b} after round-trip");
+        }
+    }
+}
+
+#[test]
+fn rff_artifact_serves_over_the_tcp_frontend() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let (train, test) = fixture(200, 19);
+    let artifact = api::train(&rbf_spec(0.5).rff(128).build().unwrap(), &train).unwrap();
+    assert!(matches!(artifact.as_binary(), Some(OdmModel::FeatureMapped { .. })));
+    let reference = artifact.serve(ServeConfig::default()).unwrap();
+
+    let cfg = ServeConfig { workers: 2, shards: 2, ..ServeConfig::default() };
+    let registry = Arc::new(ModelRegistry::start(artifact, cfg).unwrap());
+    let server = NetServer::bind("127.0.0.1:0", registry).unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for i in 0..24 {
+        let x = test.row(i * 3 % test.rows);
+        let want = reference.score(x).unwrap();
+        let got = client.score(x).unwrap().value().unwrap();
+        assert!((got - want).abs() < 1e-9, "row {i}: remote {got} vs in-process {want}");
+    }
+    reference.stop();
+    server.stop();
+}

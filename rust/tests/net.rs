@@ -338,7 +338,7 @@ fn remote_benchmark_quick_drill_resolves_every_request() {
         eprintln!("skipping: loopback sockets unavailable");
         return;
     }
-    let (json, summary) = sodm::exp::run_remote_serve_benchmark(2, 2, true).unwrap();
+    let (json, summary) = sodm::exp::run_remote_serve_benchmark(2, 2, true, 7).unwrap();
     assert!(!json.req("skipped").unwrap().as_bool().unwrap(), "{summary}");
     let submitted = json.req("submitted").unwrap().as_f64().unwrap();
     let resolved = json.req("resolved").unwrap().as_f64().unwrap();
