@@ -8,9 +8,12 @@
 //! over repeated runs.
 //!
 //! Flags (after `--` in `cargo bench --bench hotpath -- ...`):
-//! * `--quick`        — CI budget: smaller fixtures, fewer iterations
-//! * `--json <path>`  — write the run as a JSON summary (the CI bench
+//! * `--quick`            — CI budget: smaller fixtures, fewer iterations
+//! * `--json <path>`      — write the run as a JSON summary (the CI bench
 //!   artifact; seeds the bench trajectory)
+//! * `--simd-json <path>` — write the SIMD-core section (scalar baseline vs
+//!   the active core vs the quantized f32-storage plan) as its own summary
+//!   (`{"name": "simd", "simd_enabled": ..., "benches": [...]}`)
 
 use sodm::data::sparse::SparseSynthSpec;
 use sodm::data::{all_indices, identity_indices, synth::SynthSpec, DataView};
@@ -52,24 +55,25 @@ impl Report {
         self.entries.push(e);
     }
 
+    fn benches_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", jstr(e.name.clone())),
+                        ("mean_ms", Json::Num(e.mean_ms)),
+                        ("min_ms", Json::Num(e.min_ms)),
+                        ("rate", Json::Num(e.rate)),
+                        ("unit", jstr(e.unit.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     fn to_json(&self) -> Json {
-        Json::obj(vec![(
-            "benches",
-            Json::Arr(
-                self.entries
-                    .iter()
-                    .map(|e| {
-                        Json::obj(vec![
-                            ("name", jstr(e.name.clone())),
-                            ("mean_ms", Json::Num(e.mean_ms)),
-                            ("min_ms", Json::Num(e.min_ms)),
-                            ("rate", Json::Num(e.rate)),
-                            ("unit", jstr(e.unit.clone())),
-                        ])
-                    })
-                    .collect(),
-            ),
-        )])
+        Json::obj(vec![("benches", self.benches_json())])
     }
 }
 
@@ -81,7 +85,13 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let simd_json_path = args
+        .iter()
+        .position(|a| a == "--simd-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut report = Report { entries: Vec::new() };
+    let mut simd_report = Report { entries: Vec::new() };
     let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
 
     let mut spec = SynthSpec::named("ijcnn1", 0.02, 5);
@@ -322,7 +332,97 @@ fn main() {
         report.push("ovr shared-cache speedup", speedup, "x", &one);
     }
 
-    // 11-12. PJRT artifact paths (skipped without artifacts)
+    // 11. SIMD core: scalar 4-lane baseline vs the active numeric core, and
+    // the f64 plan vs its quantized (f32-storage) variant — single-row,
+    // serial block, parallel block, and the RFF lift. Written as the `simd`
+    // summary; on the stable (no-feature) build the "core" rows measure the
+    // scalar fallback, which is the point of the comparison.
+    {
+        use sodm::data::RowRef;
+        use sodm::featmap::FeatureMap;
+        use sodm::infer::{PlanPrecision, ScoringPlan};
+        use sodm::simd;
+        println!(
+            "\nsimd section: {} core build",
+            if simd::simd_enabled() { "vector (portable_simd)" } else { "scalar fallback" }
+        );
+        // Micro-kernel: sliding windows over one buffer so every call sees a
+        // fresh slice (nothing for the optimizer to hoist out of the loop).
+        let dim = 512usize;
+        let reps = if quick { 4_000 } else { 20_000 };
+        let buf_a: Vec<f32> = (0..dim + reps).map(|i| (i as f32 * 0.37).sin()).collect();
+        let buf_b: Vec<f32> = (0..dim + reps).map(|i| (i as f32 * 0.11).cos()).collect();
+        let stats = bench_loop(warm, iters, || {
+            let mut s = 0.0f32;
+            for r in 0..reps {
+                s += simd::scalar::dot_f32(&buf_a[r..r + dim], &buf_b[r..r + dim]);
+            }
+            s
+        });
+        simd_report.push("dot d=512 scalar baseline", (reps * dim) as f64, "mul", &stats);
+        let stats = bench_loop(warm, iters, || {
+            let mut s = 0.0f32;
+            for r in 0..reps {
+                s += simd::dot_f32(&buf_a[r..r + dim], &buf_b[r..r + dim]);
+            }
+            s
+        });
+        simd_report.push("dot d=512 core", (reps * dim) as f64, "mul", &stats);
+
+        // Plan scoring: the same trained RBF model compiled at f64 and at
+        // quantized f32 coefficient storage.
+        let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let mut out = vec![0.0f64; refs.len()];
+        for (tag, precision) in
+            [("f64", PlanPrecision::F64), ("quantized f32", PlanPrecision::F32)]
+        {
+            let plan = ScoringPlan::compile_with(&model, precision);
+            let stats = bench_loop(warm, iters.min(5), || {
+                let mut one = [0.0f64; 1];
+                let mut s = 0.0;
+                for r in &refs {
+                    plan.score_block(std::slice::from_ref(r), &mut one);
+                    s += one[0];
+                }
+                s
+            });
+            simd_report.push(&format!("plan single-row {tag}"), ds.rows as f64, "row", &stats);
+            let stats = bench_loop(warm, iters.min(5), || {
+                plan.score_block(&refs, &mut out);
+                out[0]
+            });
+            simd_report.push(&format!("plan block serial {tag}"), ds.rows as f64, "row", &stats);
+            let stats = bench_loop(warm, iters.min(5), || {
+                plan.score_block_parallel(&refs, sodm::util::pool::num_cpus(), &mut out);
+                out[0]
+            });
+            simd_report.push(
+                &format!("plan block parallel {tag}"),
+                ds.rows as f64,
+                "row",
+                &stats,
+            );
+        }
+
+        // RFF lift: per-row vs the cache-blocked multi-row Wx kernel.
+        let map = FeatureMap::rff(ds.cols, 256, 1.0, 7);
+        let mut z = vec![0.0f32; refs.len() * map.dim()];
+        let stats = bench_loop(warm, iters.min(3), || {
+            let mut s = 0.0f32;
+            for r in &refs {
+                s += map.lift(*r)[0];
+            }
+            s
+        });
+        simd_report.push("rff lift per-row (D=256)", ds.rows as f64, "row", &stats);
+        let stats = bench_loop(warm, iters.min(3), || {
+            map.lift_block(&refs, &mut z);
+            z[0]
+        });
+        simd_report.push("rff lift block (D=256)", ds.rows as f64, "row", &stats);
+    }
+
+    // 12-13. PJRT artifact paths (skipped without artifacts)
     match XlaEngine::load_default() {
         Some(engine) => {
             let m = engine.geometry.gram_m;
@@ -346,5 +446,14 @@ fn main() {
     if let Some(path) = json_path {
         std::fs::write(&path, report.to_json().to_string()).expect("write json summary");
         println!("\nwrote JSON summary to {path}");
+    }
+    if let Some(path) = simd_json_path {
+        let j = Json::obj(vec![
+            ("name", jstr("simd")),
+            ("simd_enabled", Json::Bool(sodm::simd::simd_enabled())),
+            ("benches", simd_report.benches_json()),
+        ]);
+        std::fs::write(&path, j.to_string()).expect("write simd json summary");
+        println!("wrote SIMD summary to {path}");
     }
 }

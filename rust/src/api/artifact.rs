@@ -32,7 +32,7 @@
 //! instead of being misread.
 
 use crate::data::Rows;
-use crate::infer::{MulticlassPlan, ScoringPlan};
+use crate::infer::{MulticlassPlan, PlanPrecision, ScoringPlan};
 use crate::kernel::KernelKind;
 use crate::multiclass::{MulticlassDataset, MulticlassModel};
 use crate::odm::{OdmModel, OdmParams};
@@ -119,6 +119,11 @@ pub struct TrainMeta {
     /// RFF sampling seed — recorded so artifacts are reproducible from the
     /// spec alone (`None` for Nyström maps and unmapped training).
     pub feature_seed: Option<u64>,
+    /// Coefficient storage precision requested for compiled scoring plans
+    /// ([`crate::api::TrainSpec::plan_precision`]). `None` means the f64
+    /// default — only non-default knobs are serialized, so f64 artifacts
+    /// keep their historical bytes.
+    pub plan_precision: Option<PlanPrecision>,
 }
 
 impl TrainMeta {
@@ -138,6 +143,7 @@ impl TrainMeta {
             feature_map: map.map(|m| m.kind_name().to_string()),
             feature_dim: map.map(|m| m.dim()),
             feature_seed: map.and_then(|m| m.sampling_seed()),
+            plan_precision: None,
         }
     }
 
@@ -169,6 +175,9 @@ impl TrainMeta {
         }
         if let Some(s) = self.feature_seed {
             pairs.push(("feature_seed", Json::Num(s as f64)));
+        }
+        if let Some(p) = self.plan_precision {
+            pairs.push(("plan_precision", jstr(p.name())));
         }
         Json::obj(pairs)
     }
@@ -203,6 +212,15 @@ impl TrainMeta {
             },
             feature_seed: match j.get("feature_seed") {
                 Some(v) => Some(v.as_f64()? as u64),
+                None => None,
+            },
+            plan_precision: match j.get("plan_precision") {
+                Some(v) => {
+                    let tag = v.as_str()?;
+                    Some(PlanPrecision::parse(tag).ok_or_else(|| {
+                        crate::err!("unknown plan_precision {tag:?} (want \"f64\" or \"f32\")")
+                    })?)
+                }
                 None => None,
             },
         })
@@ -330,11 +348,23 @@ impl Artifact {
         }
     }
 
-    /// Compile the scoring plan(s) once for repeated batch scoring.
+    /// Compile the scoring plan(s) once for repeated batch scoring, at the
+    /// precision the artifact's metadata requests (f64 unless the run set
+    /// [`crate::api::TrainSpec::plan_precision`]).
     pub fn compile_plan(&self) -> ArtifactPlan {
+        self.compile_plan_with(self.meta.plan_precision.unwrap_or_default())
+    }
+
+    /// [`Artifact::compile_plan`] with an explicit coefficient storage
+    /// precision, overriding the metadata's knob.
+    pub fn compile_plan_with(&self, precision: PlanPrecision) -> ArtifactPlan {
         match &self.model {
-            ArtifactModel::Binary(m) => ArtifactPlan::Binary(ScoringPlan::compile(m)),
-            ArtifactModel::Multiclass(m) => ArtifactPlan::Multiclass(m.compile()),
+            ArtifactModel::Binary(m) => {
+                ArtifactPlan::Binary(ScoringPlan::compile_with(m, precision))
+            }
+            ArtifactModel::Multiclass(m) => {
+                ArtifactPlan::Multiclass(m.compile_with(precision))
+            }
         }
     }
 
@@ -403,8 +433,11 @@ impl Artifact {
     pub fn into_serve_with_backend(
         self,
         backend: Backend,
-        cfg: ServeConfig,
+        mut cfg: ServeConfig,
     ) -> crate::Result<ServerHandle> {
+        // An unset config precision inherits the artifact's recorded knob,
+        // so hot-swapping a quantized artifact serves it quantized.
+        cfg.precision = cfg.precision.or(self.meta.plan_precision);
         match self.model {
             ArtifactModel::Binary(m) => serve(m, backend, cfg),
             ArtifactModel::Multiclass(m) => {

@@ -64,6 +64,7 @@ use crate::data::libsvm::LoadedDataset;
 use crate::data::sparse::SparseDataset;
 use crate::data::{identity_indices, DataView, Dataset, Rows};
 use crate::featmap::FeatureMap;
+use crate::infer::PlanPrecision;
 use crate::kernel::KernelKind;
 use crate::multiclass::{train_ovr, MulticlassDataset, OvrConfig};
 use crate::odm::{train_exact_odm_stats, OdmModel, OdmParams};
@@ -407,6 +408,10 @@ pub struct TrainSpec {
     /// (see [`FeatMapSpec`]; set via [`TrainSpec::rff`] /
     /// [`TrainSpec::nystrom`]).
     pub feature_map: Option<FeatMapSpec>,
+    /// Coefficient storage precision for compiled scoring plans built from
+    /// this run's artifact (recorded in [`TrainMeta`]; training itself
+    /// always runs in f64). See [`crate::infer::PlanPrecision`].
+    pub plan_precision: PlanPrecision,
     /// Seed for partitioning, sweep permutations, and shuffles.
     pub seed: u64,
 }
@@ -437,6 +442,7 @@ impl TrainSpec {
             ordered: false,
             multiclass: None,
             feature_map: None,
+            plan_precision: PlanPrecision::default(),
             seed: 0x50D,
         }
     }
@@ -561,6 +567,14 @@ impl TrainSpec {
     /// to `landmarks` greedily selected training rows.
     pub fn nystrom(mut self, landmarks: usize) -> Self {
         self.feature_map = Some(FeatMapSpec::Nystrom { landmarks });
+        self
+    }
+
+    /// Set the coefficient storage precision for scoring plans compiled
+    /// from this run's artifact ([`PlanPrecision::F32`] halves the plan's
+    /// memory traffic; accumulation stays f64 either way).
+    pub fn plan_precision(mut self, precision: PlanPrecision) -> Self {
+        self.plan_precision = precision;
         self
     }
 
@@ -809,6 +823,12 @@ fn finish_meta(spec: &TrainSpec, seconds: f64, acc: MetaAcc) -> TrainMeta {
         feature_map: None,
         feature_dim: None,
         feature_seed: None,
+        // F64 is the implicit default — only a non-default knob is recorded
+        // (and serialized), so f64 artifacts keep their historical bytes.
+        plan_precision: match spec.plan_precision {
+            PlanPrecision::F64 => None,
+            p => Some(p),
+        },
     }
 }
 
@@ -847,9 +867,7 @@ fn lifted_primal(model: &OdmModel, dim: usize) -> crate::Result<Vec<f64>> {
             crate::ensure!(*cols == dim, "lifted expansion has {cols} cols, want {dim}");
             let mut w = vec![0.0f64; dim];
             for (sv, c) in sv_x.chunks_exact(*cols).zip(coef) {
-                for (wj, xj) in w.iter_mut().zip(sv) {
-                    *wj += c * *xj as f64;
-                }
+                crate::simd::axpy_f64_f32(&mut w, *c, sv);
             }
             Ok(w)
         }

@@ -87,16 +87,52 @@ impl RffMap {
         self.seed
     }
 
-    /// Lift one row of either backing: `sqrt(2/D) · cos(Wx + b)`. Sparse
-    /// rows gather through [`dot_rr`] in O(nnz) per output feature.
+    /// Lift one row of either backing: `sqrt(2/D) · cos(Wx + b)`. The dense
+    /// `Wx` product runs through the vectorized core
+    /// ([`crate::simd::block_dot_f32`]); sparse rows gather through
+    /// [`dot_rr`] in O(nnz) per output feature.
     pub fn lift(&self, x: RowRef) -> Vec<f32> {
-        let scale = (2.0 / self.dim as f32).sqrt();
-        let mut z = Vec::with_capacity(self.dim);
-        for (wr, br) in self.w.chunks_exact(self.cols).zip(&self.b) {
-            let t = dot_rr(x, RowRef::Dense(wr)) + br;
-            z.push(scale * t.cos());
-        }
+        let mut z = vec![0.0f32; self.dim];
+        self.lift_block(&[x], &mut z);
         z
+    }
+
+    /// Lift a block of rows at once into `out` (row-major
+    /// `rows.len() × dim`): the projection is walked in row tiles that stay
+    /// hot in cache while every request row of the block visits them — the
+    /// cache-blocked multi-row `Wx` kernel behind batch scoring and the
+    /// one-time training lift. Bit-identical to [`RffMap::lift`] per row.
+    pub fn lift_block(&self, rows: &[RowRef], out: &mut [f32]) {
+        assert_eq!(out.len(), rows.len() * self.dim, "out must be rows x dim");
+        /// Projection rows per tile (W_TILE · cols f32 stays L1-resident at
+        /// typical feature counts).
+        const W_TILE: usize = 32;
+        let scale = (2.0 / self.dim as f32).sqrt();
+        let mut j0 = 0usize;
+        while j0 < self.dim {
+            let j1 = (j0 + W_TILE).min(self.dim);
+            let wt = &self.w[j0 * self.cols..j1 * self.cols];
+            for (ri, r) in rows.iter().enumerate() {
+                let zr = &mut out[ri * self.dim + j0..ri * self.dim + j1];
+                match *r {
+                    RowRef::Dense(xs) => {
+                        crate::simd::block_dot_f32(wt, self.cols, xs, zr);
+                        for (t, br) in zr.iter_mut().zip(&self.b[j0..j1]) {
+                            *t = scale * (*t + br).cos();
+                        }
+                    }
+                    x => {
+                        for ((wr, br), o) in
+                            wt.chunks_exact(self.cols).zip(&self.b[j0..j1]).zip(zr.iter_mut())
+                        {
+                            let t = dot_rr(x, RowRef::Dense(wr)) + br;
+                            *o = scale * t.cos();
+                        }
+                    }
+                }
+            }
+            j0 = j1;
+        }
     }
 }
 
@@ -167,25 +203,39 @@ impl FeatureMap {
         }
     }
 
+    /// Lift a block of rows into `out` (row-major `rows.len() × dim`). RFF
+    /// maps walk their projection in cache-blocked tiles shared across the
+    /// block ([`RffMap::lift_block`]); the Nyström embedding is inherently
+    /// row-at-a-time (back-substitution per row) and falls back to
+    /// [`FeatureMap::lift`]. Bit-identical to per-row lifting either way.
+    pub fn lift_block(&self, rows: &[RowRef], out: &mut [f32]) {
+        match self {
+            FeatureMap::Rff(m) => m.lift_block(rows, out),
+            FeatureMap::Nystrom(_) => {
+                let d = self.dim();
+                assert_eq!(out.len(), rows.len() * d, "out must be rows x dim");
+                for (r, zr) in rows.iter().zip(out.chunks_exact_mut(d)) {
+                    zr.copy_from_slice(&self.lift(*r));
+                }
+            }
+        }
+    }
+
     /// Lift a whole dataset (either backing) into a dense lifted dataset,
     /// preserving labels — the one-time training-side cost.
     pub fn lift_dataset(&self, rows: Rows) -> Dataset {
-        let d = self.dim();
-        let mut x = Vec::with_capacity(rows.rows() * d);
-        for i in 0..rows.rows() {
-            x.extend_from_slice(&self.lift(rows.row_ref(i)));
-        }
+        let x = self.lift_rows_unchecked(rows);
         let name = format!("{}+{}", rows.name(), self.kind_name());
-        Dataset::new(name, x, rows.labels().to_vec(), d)
+        Dataset::new(name, x, rows.labels().to_vec(), self.dim())
     }
 
     /// Lift only the feature rows (no label requirement) — the multiclass
-    /// path, whose backing labels are class ids rather than ±1.
+    /// path, whose backing labels are class ids rather than ±1. Runs the
+    /// blocked lift over the whole set at once.
     pub fn lift_rows_unchecked(&self, rows: Rows) -> Vec<f32> {
-        let mut x = Vec::with_capacity(rows.rows() * self.dim());
-        for i in 0..rows.rows() {
-            x.extend_from_slice(&self.lift(rows.row_ref(i)));
-        }
+        let refs: Vec<RowRef> = (0..rows.rows()).map(|i| rows.row_ref(i)).collect();
+        let mut x = vec![0.0f32; refs.len() * self.dim()];
+        self.lift_block(&refs, &mut x);
         x
     }
 

@@ -36,7 +36,15 @@
 //! ([`decision_reference`]) only by f32 norm-expansion roundoff, and f64
 //! partial-sum regrouping (tiles, shards) is associativity noise;
 //! `rust/tests/infer_serve.rs` pins plan-vs-reference agreement at 1e-6 on
-//! dense and CSR fixtures.
+//! dense and CSR fixtures. All dense dots route through the vectorized core
+//! ([`crate::simd`]).
+//!
+//! Precision: every `compile` has a `compile_with` twin taking a
+//! [`PlanPrecision`]. The default `F64` stores coefficients/weights exactly
+//! as trained; `F32` halves their footprint (support vectors are f32
+//! already) and accumulates in f64, trading ~1e-7 relative coefficient
+//! error for bandwidth — `rust/tests/quantized.rs` pins binary decisions
+//! within 1e-4 relative and ≥99.9% argmax agreement on multiclass fixtures.
 //!
 //! Typed artifacts compile their plans here:
 //! [`crate::api::Artifact::compile_plan`] wraps [`ScoringPlan`] (binary) or
@@ -56,6 +64,120 @@ const SV_TILE: usize = 256;
 /// Below this many rows a parallel block falls back to the serial loop (the
 /// scoped-thread spawn would cost more than it saves).
 const PAR_MIN_ROWS: usize = 32;
+
+/// Request rows lifted per feature-map sub-block: a tile of the RFF
+/// projection stays hot in cache across this many rows, and the lifted
+/// buffer stays O(LIFT_BLOCK · D) regardless of the block size.
+const LIFT_BLOCK: usize = 64;
+
+/// Numeric storage precision of a compiled plan's coefficients and weights
+/// (support vectors are f32 in every variant). Threaded from
+/// [`crate::api::Artifact::compile_plan_with`], the serve config, and the
+/// `train`/`serve` CLI `--plan-precision`/`--precision` flags.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanPrecision {
+    /// Coefficients/weights stored as trained (f64) — bit-identical to the
+    /// historical plans.
+    #[default]
+    F64,
+    /// f32 storage, f64 accumulation: half the coefficient/weight
+    /// footprint for ~1e-7 relative coefficient roundoff (error bound
+    /// pinned in `rust/tests/quantized.rs`).
+    F32,
+}
+
+impl PlanPrecision {
+    /// `"f64"` / `"f32"` — the tag used by TrainMeta JSON and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanPrecision::F64 => "f64",
+            PlanPrecision::F32 => "f32",
+        }
+    }
+
+    /// Parse the [`PlanPrecision::name`] tag (`None` on anything else).
+    pub fn parse(s: &str) -> Option<PlanPrecision> {
+        match s {
+            "f64" => Some(PlanPrecision::F64),
+            "f32" => Some(PlanPrecision::F32),
+            _ => None,
+        }
+    }
+}
+
+/// Expansion coefficients at either storage precision.
+enum Coefs {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+}
+
+impl Coefs {
+    fn quantize(coef: Vec<f64>, precision: PlanPrecision) -> Coefs {
+        match precision {
+            PlanPrecision::F64 => Coefs::F64(coef),
+            PlanPrecision::F32 => Coefs::F32(coef.iter().map(|c| *c as f32).collect()),
+        }
+    }
+
+    fn precision(&self) -> PlanPrecision {
+        match self {
+            Coefs::F64(_) => PlanPrecision::F64,
+            Coefs::F32(_) => PlanPrecision::F32,
+        }
+    }
+}
+
+/// Primal weights (linear and feature-mapped plans) at either storage
+/// precision; scoring always accumulates in f64.
+enum Weights {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+}
+
+impl Weights {
+    fn quantize(w: Vec<f64>, precision: PlanPrecision) -> Weights {
+        match precision {
+            PlanPrecision::F64 => Weights::F64(w),
+            PlanPrecision::F32 => Weights::F32(w.iter().map(|v| *v as f32).collect()),
+        }
+    }
+
+    fn precision(&self) -> PlanPrecision {
+        match self {
+            Weights::F64(_) => PlanPrecision::F64,
+            Weights::F32(_) => PlanPrecision::F32,
+        }
+    }
+
+    /// Linear decision of a request row (historical semantics: dense rows
+    /// truncate to the overlap, sparse rows are bounds-guarded).
+    fn score(&self, x: RowRef) -> f64 {
+        match (self, x) {
+            (Weights::F64(w), RowRef::Dense(xs)) => crate::simd::dot_f64_f32(w, xs),
+            (Weights::F64(w), x) => linear_score(w, x),
+            (Weights::F32(w), RowRef::Dense(xs)) => crate::simd::dot_f32_acc_f64(w, xs),
+            (Weights::F32(w), RowRef::Sparse { indices, values, .. }) => {
+                let mut s = 0.0f64;
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    let j = *i as usize;
+                    if j < w.len() {
+                        s += w[j] as f64 * *v as f64;
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// Decision of an already-lifted row (dense, same length as the
+    /// weights): one f64-accumulated dot.
+    fn dot_z(&self, z: &[f32]) -> f64 {
+        match self {
+            Weights::F64(w) => crate::simd::dot_f64_f32(w, z),
+            Weights::F32(w) => crate::simd::dot_f32_acc_f64(w, z),
+        }
+    }
+}
 
 /// The scalar reference decision — the historical row-at-a-time
 /// `OdmModel::decision_rr` loop, kept verbatim as the semantic spec the
@@ -114,11 +236,11 @@ fn linear_score(w: &[f64], x: RowRef) -> f64 {
 
 /// Per-kernel scoring strategy selected at compile time.
 enum Strategy {
-    /// One f64 dot per row (linear models and collapsed linear-kernel
-    /// expansions).
-    Linear { w: Vec<f64> },
+    /// One f64-accumulated dot per row (linear models and collapsed
+    /// linear-kernel expansions).
+    Linear { w: Weights },
     /// Dense RBF expansion: row-major SV tiles + precomputed ‖x_s‖².
-    DenseRbf { gamma: f32, sv_x: Vec<f32>, sv_norms: Vec<f32>, coef: Vec<f64>, cols: usize },
+    DenseRbf { gamma: f32, sv_x: Vec<f32>, sv_norms: Vec<f32>, coef: Coefs, cols: usize },
     /// CSR RBF expansion: canonical CSR SVs + precomputed ‖x_s‖², norms fast
     /// path so mixed pairs cost O(nnz).
     SparseRbf {
@@ -127,12 +249,13 @@ enum Strategy {
         sv_indices: Vec<u32>,
         sv_values: Vec<f32>,
         sv_norms: Vec<f32>,
-        coef: Vec<f64>,
+        coef: Coefs,
         cols: usize,
     },
-    /// Feature-mapped model: lift each request row through the RFF/Nyström
-    /// embedding, then one O(D) f64 dot against the lifted-space weights.
-    FeatMap { map: FeatureMap, w: Vec<f64> },
+    /// Feature-mapped model: lift request rows block-at-a-time through the
+    /// RFF/Nyström embedding, then one O(D) f64-accumulated dot per row
+    /// against the lifted-space weights.
+    FeatMap { map: FeatureMap, w: Weights },
 }
 
 /// A scoring plan compiled once from an [`OdmModel`]: strategy selected,
@@ -145,25 +268,32 @@ pub struct ScoringPlan {
 }
 
 impl ScoringPlan {
-    /// Compile a plan from any model variant.
+    /// Compile a plan from any model variant (f64 storage — bit-identical
+    /// to the historical plans).
     pub fn compile(model: &OdmModel) -> Self {
+        Self::compile_with(model, PlanPrecision::F64)
+    }
+
+    /// Compile a plan with an explicit storage precision (see
+    /// [`PlanPrecision`]; `F64` is [`ScoringPlan::compile`]).
+    pub fn compile_with(model: &OdmModel, precision: PlanPrecision) -> Self {
         let cols = model.input_cols();
         match model {
-            OdmModel::Linear { w } => Self::from_linear(w.clone(), cols, w.len()),
+            OdmModel::Linear { w } => Self::from_linear(w.clone(), cols, w.len(), precision),
             OdmModel::Kernel { kernel, sv_x, coef, cols } => match kernel {
                 KernelKind::Linear => {
                     // Collapse the expansion to primal weights: one dot per
-                    // row instead of one dot per (SV, row) pair.
+                    // row instead of one dot per (SV, row) pair. The f64
+                    // collapse runs at full precision either way; only the
+                    // stored result is quantized.
                     let mut w = vec![0.0f64; *cols];
-                    for (si, c) in coef.iter().enumerate() {
-                        for (j, wj) in w.iter_mut().enumerate() {
-                            *wj += c * sv_x[si * cols + j] as f64;
-                        }
+                    for (sv, c) in sv_x.chunks_exact(*cols).zip(coef) {
+                        crate::simd::axpy_f64_f32(&mut w, *c, sv);
                     }
-                    Self::from_linear(w, *cols, coef.len())
+                    Self::from_linear(w, *cols, coef.len(), precision)
                 }
                 KernelKind::Rbf { gamma } => {
-                    Self::dense_rbf(*gamma, sv_x.clone(), coef.clone(), *cols)
+                    Self::dense_rbf(*gamma, sv_x.clone(), coef.clone(), *cols, precision)
                 }
             },
             OdmModel::SparseKernel { kernel, sv_indptr, sv_indices, sv_values, coef, cols } => {
@@ -175,7 +305,7 @@ impl ScoringPlan {
                                 w[sv_indices[k] as usize] += c * sv_values[k] as f64;
                             }
                         }
-                        Self::from_linear(w, *cols, coef.len())
+                        Self::from_linear(w, *cols, coef.len(), precision)
                     }
                     KernelKind::Rbf { gamma } => Self::sparse_rbf(
                         *gamma,
@@ -184,13 +314,17 @@ impl ScoringPlan {
                         sv_values.clone(),
                         coef.clone(),
                         *cols,
+                        precision,
                     ),
                 }
             }
             OdmModel::FeatureMapped { map, w } => {
                 let support = w.len();
                 ScoringPlan {
-                    strategy: Strategy::FeatMap { map: map.clone(), w: w.clone() },
+                    strategy: Strategy::FeatMap {
+                        map: map.clone(),
+                        w: Weights::quantize(w.clone(), precision),
+                    },
                     cols,
                     support,
                 }
@@ -198,11 +332,18 @@ impl ScoringPlan {
         }
     }
 
-    fn from_linear(w: Vec<f64>, cols: usize, support: usize) -> Self {
+    fn from_linear(w: Vec<f64>, cols: usize, support: usize, precision: PlanPrecision) -> Self {
+        let w = Weights::quantize(w, precision);
         ScoringPlan { strategy: Strategy::Linear { w }, cols, support }
     }
 
-    fn dense_rbf(gamma: f32, sv_x: Vec<f32>, coef: Vec<f64>, cols: usize) -> Self {
+    fn dense_rbf(
+        gamma: f32,
+        sv_x: Vec<f32>,
+        coef: Vec<f64>,
+        cols: usize,
+        precision: PlanPrecision,
+    ) -> Self {
         let sv_norms: Vec<f32> = (0..coef.len())
             .map(|s| {
                 let sv = &sv_x[s * cols..(s + 1) * cols];
@@ -210,6 +351,7 @@ impl ScoringPlan {
             })
             .collect();
         let support = coef.len();
+        let coef = Coefs::quantize(coef, precision);
         ScoringPlan {
             strategy: Strategy::DenseRbf { gamma, sv_x, sv_norms, coef, cols },
             cols,
@@ -224,11 +366,13 @@ impl ScoringPlan {
         sv_values: Vec<f32>,
         coef: Vec<f64>,
         cols: usize,
+        precision: PlanPrecision,
     ) -> Self {
         let sv_norms: Vec<f32> = (0..coef.len())
             .map(|s| sv_values[sv_indptr[s]..sv_indptr[s + 1]].iter().map(|v| v * v).sum::<f32>())
             .collect();
         let support = coef.len();
+        let coef = Coefs::quantize(coef, precision);
         ScoringPlan {
             strategy: Strategy::SparseRbf {
                 gamma,
@@ -248,6 +392,14 @@ impl ScoringPlan {
     #[inline]
     pub fn input_cols(&self) -> usize {
         self.cols
+    }
+
+    /// The storage precision the plan was compiled with.
+    pub fn precision(&self) -> PlanPrecision {
+        match &self.strategy {
+            Strategy::Linear { w } | Strategy::FeatMap { w, .. } => w.precision(),
+            Strategy::DenseRbf { coef, .. } | Strategy::SparseRbf { coef, .. } => coef.precision(),
+        }
     }
 
     /// Support vectors behind the plan (linear plans report the expansion
@@ -273,13 +425,15 @@ impl ScoringPlan {
         match &self.strategy {
             Strategy::Linear { w } => {
                 for (r, o) in rows.iter().zip(out.iter_mut()) {
-                    *o = linear_score(w, *r);
+                    *o = w.score(*r);
                 }
             }
             Strategy::DenseRbf { gamma, sv_x, sv_norms, coef, cols } => {
-                rbf_tiled(*gamma, sv_norms, coef, rows, out, |s| {
-                    RowRef::Dense(&sv_x[s * cols..(s + 1) * cols])
-                });
+                let sv_at = |s: usize| RowRef::Dense(&sv_x[s * cols..(s + 1) * cols]);
+                match coef {
+                    Coefs::F64(c) => rbf_tiled(*gamma, sv_norms, c, rows, out, &sv_at),
+                    Coefs::F32(c) => rbf_tiled(*gamma, sv_norms, c, rows, out, &sv_at),
+                }
             }
             Strategy::SparseRbf {
                 gamma,
@@ -290,19 +444,31 @@ impl ScoringPlan {
                 coef,
                 cols,
             } => {
-                rbf_tiled(*gamma, sv_norms, coef, rows, out, |s| {
+                let sv_at = |s: usize| {
                     let (lo, hi) = (sv_indptr[s], sv_indptr[s + 1]);
                     RowRef::Sparse {
                         indices: &sv_indices[lo..hi],
                         values: &sv_values[lo..hi],
                         cols: *cols,
                     }
-                });
+                };
+                match coef {
+                    Coefs::F64(c) => rbf_tiled(*gamma, sv_norms, c, rows, out, &sv_at),
+                    Coefs::F32(c) => rbf_tiled(*gamma, sv_norms, c, rows, out, &sv_at),
+                }
             }
             Strategy::FeatMap { map, w } => {
-                for (r, o) in rows.iter().zip(out.iter_mut()) {
-                    let z = map.lift(*r);
-                    *o = w.iter().zip(&z).map(|(a, b)| a * *b as f64).sum();
+                // Lift in LIFT_BLOCK-row sub-blocks: the map walks its
+                // projection in tiles that stay hot across the sub-block's
+                // rows, and the lifted buffer stays bounded.
+                let d = map.dim();
+                let mut z = vec![0.0f32; LIFT_BLOCK.min(rows.len()) * d];
+                for (rchunk, ochunk) in rows.chunks(LIFT_BLOCK).zip(out.chunks_mut(LIFT_BLOCK)) {
+                    let zs = &mut z[..rchunk.len() * d];
+                    map.lift_block(rchunk, zs);
+                    for (zi, o) in zs.chunks_exact(d).zip(ochunk.iter_mut()) {
+                        *o = w.dot_z(zi);
+                    }
                 }
             }
         }
@@ -352,10 +518,10 @@ impl ScoringPlan {
 /// recomputed `shards` times per batch — an O(shards/sv) overhead that is
 /// negligible at sane shard counts (≤ cpus) against real expansions; keep
 /// it in mind before pushing `shards` toward the SV count.
-fn rbf_tiled<'a>(
+fn rbf_tiled<'a, C: Copy + Into<f64>>(
     gamma: f32,
     sv_norms: &[f32],
-    coef: &[f64],
+    coef: &[C],
     rows: &[RowRef],
     out: &mut [f64],
     sv_at: impl Fn(usize) -> RowRef<'a>,
@@ -370,7 +536,9 @@ fn rbf_tiled<'a>(
             let mut acc = 0.0f64;
             for s in s0..s1 {
                 let kv = eval_with_norms(&k, sv_at(s), sv_norms[s], *r, nx[ri]) as f64;
-                acc += coef[s] * kv;
+                // f32 coefficients widen exactly; the accumulator is f64
+                // at either storage precision.
+                acc += coef[s].into() * kv;
             }
             out[ri] += acc;
         }
@@ -409,12 +577,19 @@ impl MulticlassPlan {
     /// Compile one plan per class model (all must score the same feature
     /// dimensionality).
     pub fn compile(models: &[OdmModel]) -> Self {
+        Self::compile_with(models, PlanPrecision::F64)
+    }
+
+    /// [`MulticlassPlan::compile`] with an explicit storage precision for
+    /// every per-class plan.
+    pub fn compile_with(models: &[OdmModel], precision: PlanPrecision) -> Self {
         assert!(!models.is_empty(), "multiclass plan needs at least one class");
         let cols = models[0].input_cols();
         for m in models {
             assert_eq!(m.input_cols(), cols, "class models must share input dims");
         }
-        MulticlassPlan { plans: models.iter().map(ScoringPlan::compile).collect(), cols }
+        let plans = models.iter().map(|m| ScoringPlan::compile_with(m, precision)).collect();
+        MulticlassPlan { plans, cols }
     }
 
     /// Number of classes.
@@ -493,8 +668,15 @@ pub struct ShardedPlan {
 }
 
 impl ShardedPlan {
-    /// Compile `model` into at most `shards` support-vector shards.
+    /// Compile `model` into at most `shards` support-vector shards (f64
+    /// storage).
     pub fn compile(model: &OdmModel, shards: usize) -> Self {
+        Self::compile_with(model, shards, PlanPrecision::F64)
+    }
+
+    /// [`ShardedPlan::compile`] with an explicit storage precision for
+    /// every shard.
+    pub fn compile_with(model: &OdmModel, shards: usize, precision: PlanPrecision) -> Self {
         let cols = model.input_cols();
         let want = shards.max(1);
         let plans = match model {
@@ -511,6 +693,7 @@ impl ShardedPlan {
                             sv_x[lo * cols..hi * cols].to_vec(),
                             coef[lo..hi].to_vec(),
                             *cols,
+                            precision,
                         )
                     })
                     .collect()
@@ -538,11 +721,12 @@ impl ShardedPlan {
                             sv_values[base..sv_indptr[hi]].to_vec(),
                             coef[lo..hi].to_vec(),
                             *cols,
+                            precision,
                         )
                     })
                     .collect()
             }
-            _ => vec![ScoringPlan::compile(model)],
+            _ => vec![ScoringPlan::compile_with(model, precision)],
         };
         ShardedPlan { shards: plans, cols }
     }
@@ -814,5 +998,48 @@ mod tests {
         }
         let from_rows = mc.score_rows(Rows::Dense(&ds), 4);
         assert_eq!(from_rows, par);
+    }
+
+    #[test]
+    fn plan_precision_tags_round_trip() {
+        assert_eq!(PlanPrecision::default(), PlanPrecision::F64);
+        for p in [PlanPrecision::F64, PlanPrecision::F32] {
+            assert_eq!(PlanPrecision::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlanPrecision::parse("i8"), None);
+    }
+
+    #[test]
+    fn quantized_dense_plan_tracks_f64_plan() {
+        let (m, ds) = dense_rbf_model();
+        let p64 = ScoringPlan::compile(&m);
+        let p32 = ScoringPlan::compile_with(&m, PlanPrecision::F32);
+        assert_eq!(p64.precision(), PlanPrecision::F64);
+        assert_eq!(p32.precision(), PlanPrecision::F32);
+        assert_eq!(p32.support_size(), p64.support_size());
+        let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let (mut a, mut b) = (vec![0.0; refs.len()], vec![0.0; refs.len()]);
+        p64.score_block(&refs, &mut a);
+        p32.score_block(&refs, &mut b);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            // Coefficient quantization is ~1e-7 relative; 1e-4 is the
+            // documented decision bound.
+            assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "row {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn quantized_sharded_plan_sums_like_f64() {
+        let (m, ds) = dense_rbf_model();
+        let full = ScoringPlan::compile_with(&m, PlanPrecision::F32);
+        let sharded = ShardedPlan::compile_with(&m, 3, PlanPrecision::F32);
+        assert_eq!(sharded.shard(0).precision(), PlanPrecision::F32);
+        let refs: Vec<RowRef> = (0..12).map(|i| RowRef::Dense(ds.row(i))).collect();
+        let (mut a, mut b) = (vec![0.0; refs.len()], vec![0.0; refs.len()]);
+        full.score_block(&refs, &mut a);
+        sharded.score_block(&refs, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-9 * (1.0 + x.abs()), "{x} vs {y}");
+        }
     }
 }

@@ -62,51 +62,21 @@ impl KernelKind {
     }
 }
 
-/// Dense dot product; f32 accumulation in 4 lanes helps the autovectorizer.
+/// Dense dot product, routed through the vectorized core
+/// ([`crate::simd::dot_f32`]): scalar 4-lane on the default build
+/// (bit-identical to the historical loop), explicit `std::simd` lanes with
+/// `--features simd`. f32 accumulation — see the accumulation contract in
+/// [`crate::simd`] before using on very long rows.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::simd::dot_f32(a, b)
 }
 
-/// Squared euclidean distance with the same lane structure as [`dot`].
+/// Squared euclidean distance with the same lane structure (and
+/// accumulation contract) as [`dot`].
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        let d0 = a[i] - b[i];
-        let d1 = a[i + 1] - b[i + 1];
-        let d2 = a[i + 2] - b[i + 2];
-        let d3 = a[i + 3] - b[i + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s.max(0.0)
+    crate::simd::sq_dist_f32(a, b)
 }
 
 /// Dot product of two CSR rows: sorted-index merge join, O(nnz_a + nnz_b).

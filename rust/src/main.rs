@@ -45,7 +45,7 @@ use sodm::Result;
 const GEN_DATA_FLAGS: &str = "name seed out scale rows cols density";
 const TRAIN_FLAGS: &str = "data method kernel gamma lambda theta upsilon p levels stratums \
      workers epochs model-out no-shrink ordered-every seed multiclass no-shared-cache \
-     rff-dim landmarks";
+     rff-dim landmarks plan-precision";
 const PREDICT_FLAGS: &str = "model data backend seed";
 const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve multiclass rff \
      scale seed datasets workers out-dir odm-cap rows cols density shards classes quick json \
@@ -53,7 +53,7 @@ const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve 
 const CHECK_SUMMARIES_FLAGS: &str = "dir";
 const SERVE_BENCH_FLAGS: &str =
     "model data backend seed clients requests workers shards json quick remote";
-const SERVE_FLAGS: &str = "model addr workers shards";
+const SERVE_FLAGS: &str = "model addr workers shards precision";
 const ADMIN_FLAGS: &str = "addr swap panics stall-ms health metrics";
 
 fn main() {
@@ -117,6 +117,9 @@ USAGE: sodm <command> [--flag value]...
               linear solvers in the lifted space, serves as one O(D) dot)
              [--p 4] [--levels 2] [--stratums 16] [--workers N] [--epochs 6]
              [--model-out m.json] [--no-shrink] [--ordered-every k]
+             [--plan-precision f64|f32] (f32: compiled scoring plans store
+              coefficients quantized — half the memory traffic, f64
+              accumulation; recorded in the artifact metadata)
              (--no-shrink disables DCD active-set shrinking — the reference
               solver; --ordered-every k makes every k-th sweep visit
               coordinates in descending violation order)
@@ -151,8 +154,11 @@ USAGE: sodm <command> [--flag value]...
               --remote <addr> --data <...>: load-generate against a running
               `serve` and report client-observed p50/p95/p99 + shed rate)
   serve      --model m.json [--addr 127.0.0.1:7878] [--workers N] [--shards N]
+             [--precision f64|f32]
              (TCP frontend over the batched scoring runtime; length-prefixed
-              binary frames, typed overload shedding, hot-swappable artifacts)
+              binary frames, typed overload shedding, hot-swappable artifacts;
+              --precision forces the plan storage precision — default
+              inherits the artifact's recorded knob)
   admin      --addr host:port [--swap m.json | --panics N | --stall-ms M |
               --metrics | --health]
              (one-shot wire client; default probe is --health)
@@ -321,6 +327,13 @@ fn parse_params(flags: &HashMap<String, String>) -> Result<OdmParams> {
 /// Assemble the typed [`TrainSpec`] from CLI flags — the single flag-to-spec
 /// path for binary and `--multiclass` training. Bad combinations surface as
 /// the facade's typed `SpecError`s.
+/// `--plan-precision` / `--precision` values: `f64` (default) or `f32`
+/// (quantized coefficient storage, f64 accumulation).
+fn parse_precision(tag: &str) -> Result<sodm::infer::PlanPrecision> {
+    sodm::infer::PlanPrecision::parse(tag)
+        .ok_or_else(|| sodm::err!("precision must be \"f64\" or \"f32\", got {tag:?}"))
+}
+
 fn build_train_spec(
     flags: &HashMap<String, String>,
     cols: usize,
@@ -366,6 +379,9 @@ fn build_train_spec(
         Some(FeatMapSpec::Rff { dim }) => spec = spec.rff(dim),
         Some(FeatMapSpec::Nystrom { landmarks }) => spec = spec.nystrom(landmarks),
         None => {}
+    }
+    if let Some(tag) = flag(flags, "plan-precision") {
+        spec = spec.plan_precision(parse_precision(tag)?);
     }
     if multiclass {
         spec = spec.multiclass(OvrOptions {
@@ -871,9 +887,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let bind_addr = flag(flags, "addr").unwrap_or("127.0.0.1:7878");
     let workers = flag_usize(flags, "workers", num_cpus().clamp(1, 8))?;
     let shards = flag_usize(flags, "shards", workers)?;
+    let precision = flag(flags, "precision").map(parse_precision).transpose()?;
     let artifact = Artifact::load(model_path)?;
     let info = artifact.info();
-    let cfg = ServeConfig { workers, shards, ..ServeConfig::default() };
+    let cfg = ServeConfig { workers, shards, precision, ..ServeConfig::default() };
     let registry = Arc::new(ModelRegistry::start(artifact, cfg)?);
     let server = NetServer::bind(bind_addr, registry)?;
     let addr = server.local_addr();
@@ -932,6 +949,7 @@ const SUMMARY_CONTRACT: &[(&str, &[&str])] = &[
     ),
     ("remote-serve-summary.json", &["name", "ok", "shed_rate", "p99_ms"]),
     ("rff-summary.json", &["name", "exact_accuracy", "points", "within_tolerance"]),
+    ("simd-summary.json", &["name", "simd_enabled", "benches"]),
 ];
 
 /// True when every number reachable from `j` is finite. `Json::parse`

@@ -347,6 +347,15 @@ impl MulticlassModel {
         crate::infer::MulticlassPlan::compile(&self.models)
     }
 
+    /// [`MulticlassModel::compile`] with an explicit coefficient storage
+    /// precision (see [`crate::infer::PlanPrecision`]).
+    pub fn compile_with(
+        &self,
+        precision: crate::infer::PlanPrecision,
+    ) -> crate::infer::MulticlassPlan {
+        crate::infer::MulticlassPlan::compile_with(&self.models, precision)
+    }
+
     /// Predicted class index per row of a dataset of either backing.
     pub fn predict_argmax<'a>(&self, data: impl Into<Rows<'a>>, workers: usize) -> Vec<usize> {
         self.compile().predict_rows(data.into(), workers)

@@ -583,37 +583,18 @@ fn solve_odm_linear(
     OdmDualSolution { zeta, beta, stats }
 }
 
-#[inline]
-fn dot_f64(w: &[f64], x: &[f32]) -> f64 {
-    // 4-lane unroll (autovectorizer-friendly; §Perf)
-    let n = w.len().min(x.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += w[i] * x[i] as f64;
-        s1 += w[i + 1] * x[i + 1] as f64;
-        s2 += w[i + 2] * x[i + 2] as f64;
-        s3 += w[i + 3] * x[i + 3] as f64;
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += w[i] * x[i] as f64;
-    }
-    s
-}
-
 /// f64-accumulated dot of the maintained weight vector with a feature row of
-/// any backing. Dense rows take the historical 4-lane path ([`dot_f64`]);
-/// sparse rows gather over their nonzeros, O(nnz). Deliberately distinct
-/// from `svrg`'s order-preserving margin loop (which needs dense/sparse
-/// summation parity) and `OdmModel::decision_rr`'s bounds-guarded arm
-/// (which scores untrusted external rows) — indices here are solver-internal
-/// and trusted.
+/// any backing. Dense rows take the vectorized core's 4-lane f64 path
+/// ([`crate::simd::dot_f64_f32`] — bit-identical to the historical local
+/// `dot_f64` on every build); sparse rows gather over their nonzeros,
+/// O(nnz). Deliberately distinct from `svrg`'s order-preserving margin loop
+/// (which needs dense/sparse summation parity) and
+/// `OdmModel::decision_rr`'s bounds-guarded arm (which scores untrusted
+/// external rows) — indices here are solver-internal and trusted.
 #[inline]
 fn dot_f64_rr(w: &[f64], x: RowRef) -> f64 {
     match x {
-        RowRef::Dense(xs) => dot_f64(w, xs),
+        RowRef::Dense(xs) => crate::simd::dot_f64_f32(w, xs),
         RowRef::Sparse { indices, values, .. } => {
             let mut s = 0.0f64;
             for (i, v) in indices.iter().zip(values.iter()) {

@@ -111,6 +111,10 @@ pub struct ServeConfig {
     /// Support-vector shards the plan is split into (clamped to the
     /// expansion size; linear models always compile to one shard).
     pub shards: usize,
+    /// Coefficient storage precision for the compiled plan. `None` (the
+    /// default) inherits the artifact's recorded knob when serving through
+    /// [`crate::api::Artifact`], else f64; `Some` forces it.
+    pub precision: Option<crate::infer::PlanPrecision>,
 }
 
 impl Default for ServeConfig {
@@ -122,6 +126,7 @@ impl Default for ServeConfig {
             queue_depth: 4096,
             workers: w,
             shards: w,
+            precision: None,
         }
     }
 }
@@ -788,7 +793,9 @@ fn multi_reply(r: Reply) -> std::result::Result<MultiScore, SubmitError> {
 pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
     let cols = model.input_cols();
-    let plan = Arc::new(PlanSet::Binary(ShardedPlan::compile(&model, cfg.shards)));
+    let precision = cfg.precision.unwrap_or_default();
+    let plan =
+        Arc::new(PlanSet::Binary(ShardedPlan::compile_with(&model, cfg.shards, precision)));
     // The model itself is only needed for the PJRT tile dispatch; native
     // servers score exclusively through the compiled plan, so don't keep a
     // second copy of the support vectors alive.
@@ -810,8 +817,12 @@ pub fn serve_multiclass(model: MulticlassModel, cfg: ServeConfig) -> Result<Serv
     crate::ensure!(model.n_classes() >= 2, "multiclass serving needs >= 2 classes");
     let cols = model.input_cols();
     let classes = model.n_classes();
-    let plans: Vec<ShardedPlan> =
-        model.models.iter().map(|m| ShardedPlan::compile(m, cfg.shards)).collect();
+    let precision = cfg.precision.unwrap_or_default();
+    let plans: Vec<ShardedPlan> = model
+        .models
+        .iter()
+        .map(|m| ShardedPlan::compile_with(m, cfg.shards, precision))
+        .collect();
     for p in &plans {
         crate::ensure!(p.input_cols() == cols, "class models must share input dims");
     }

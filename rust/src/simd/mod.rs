@@ -1,0 +1,417 @@
+//! One vectorized numeric core under every hot path (ROADMAP item 4).
+//!
+//! Every dense inner loop in the crate — the kernel dots
+//! ([`crate::kernel::dot`] / [`crate::kernel::sq_dist`]), the DCD margin
+//! dots ([`crate::qp`]), the linear-collapse axpy ([`crate::infer`],
+//! [`crate::api`]), and the RFF lift `Wx` product ([`crate::featmap`]) —
+//! funnels through the micro-kernels here, so there is exactly one place to
+//! vectorize and exactly one accumulation contract to test. The historical
+//! per-module copies (the `api/mod.rs` chunks_exact loop, `qp::dot_f64`,
+//! the `featmap` lift loop) are deleted; their summation orders live on in
+//! [`scalar`].
+//!
+//! Two implementations sit behind each public function:
+//!
+//! * **[`scalar`]** (default, stable toolchain) — the hand-unrolled 4-lane
+//!   loops, bit-identical to the historical copies they replaced (pinned by
+//!   the tests below), so the default build's scores do not move.
+//! * **vector** (`--features simd`, nightly `std::simd`) — explicit
+//!   portable-SIMD lanes with a deterministic left-to-right lane reduction.
+//!   The f64-accumulating kernels keep 4 lanes and therefore the scalar
+//!   path's exact grouping (bit-identical across both builds); the
+//!   f32-accumulating kernels widen to 8 lanes, which regroups the f32 sums
+//!   — last-bit kernel-value differences on the simd leg only. Every
+//!   in-tree bit-exactness assertion compares two paths within one build,
+//!   and cross-path pins carry ≥1e-6 slack, so both CI legs run the full
+//!   suite.
+//!
+//! # Accumulation contract
+//!
+//! The f32-accumulating kernels ([`dot_f32`], [`sq_dist_f32`]) carry
+//! relative error O(n·eps_f32/L) in the row length n (L = lane count):
+//! worst-case ~1e-3 relative at n = 100 000 on same-sign data, √n
+//! random-walk in practice. `rust/tests/properties.rs` pins both against an
+//! f64 reference on 100k-dim vectors. Anything that feeds a *decision sum*
+//! accumulates in f64 instead ([`dot_f64_f32`], [`dot_f32_acc_f64`],
+//! [`axpy_f64_f32`]) — quantized plans store f32 and accumulate f64 for
+//! exactly this reason.
+
+/// Whether this build's vector path is the explicit `std::simd` one
+/// (`--features simd`, nightly) rather than the scalar 4-lane fallback.
+/// Recorded in the `simd-summary.json` bench artifact so speedup claims are
+/// attributable to a build mode.
+#[inline]
+pub const fn simd_enabled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Dense f32 dot product, f32 accumulation (see the module-level
+/// accumulation contract). Length mismatch is a caller bug
+/// (`debug_assert`); the loop trusts `a.len()`.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    active::dot_f32(a, b)
+}
+
+/// Squared euclidean distance with the same lane structure (and
+/// accumulation contract) as [`dot_f32`]; clamped at 0 against roundoff.
+#[inline]
+pub fn sq_dist_f32(a: &[f32], b: &[f32]) -> f32 {
+    active::sq_dist_f32(a, b)
+}
+
+/// f64-accumulated dot of an f64 weight vector with an f32 feature row,
+/// truncating to the shorter length (the DCD solvers' and linear plans'
+/// historical semantics: dimension mismatches score the overlap).
+/// Bit-identical across the scalar and simd builds (4 f64 lanes both ways).
+#[inline]
+pub fn dot_f64_f32(w: &[f64], x: &[f32]) -> f64 {
+    active::dot_f64_f32(w, x)
+}
+
+/// f64-accumulated dot of two f32 rows, truncating to the shorter length —
+/// the quantized-plan scoring kernel (f32 storage, f64 accumulate; the
+/// f32→f64 product widening is exact). Bit-identical across builds.
+#[inline]
+pub fn dot_f32_acc_f64(a: &[f32], b: &[f32]) -> f64 {
+    active::dot_f32_acc_f64(a, b)
+}
+
+/// `y[j] += a * x[j]` over the overlap of `y` and `x` — the linear-kernel
+/// collapse / lifted-primal accumulation. Elementwise (no cross-lane sum),
+/// so it is bit-identical across builds and to the historical zip loops.
+#[inline]
+pub fn axpy_f64_f32(y: &mut [f64], a: f64, x: &[f32]) {
+    active::axpy_f64_f32(y, a, x)
+}
+
+/// GEMV micro-kernel: `out[r] = ⟨w[r·cols .. (r+1)·cols], x⟩` for every
+/// row of the row-major matrix `w` — the RFF lift's `Wx` product. Callers
+/// that score many rows tile *around* this (see
+/// [`crate::featmap::RffMap::lift_block`]) so a tile of `w` stays hot in
+/// cache while every request row visits it.
+#[inline]
+pub fn block_dot_f32(w: &[f32], cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert!(cols > 0 && w.len() == cols * out.len(), "w must be out.len() x cols");
+    for (wr, o) in w.chunks_exact(cols).zip(out.iter_mut()) {
+        *o = active::dot_f32(wr, x);
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+use self::scalar as active;
+#[cfg(feature = "simd")]
+use self::vector as active;
+
+/// The stable-toolchain reference implementations: hand-unrolled 4-lane
+/// loops, kept public so the bench's scalar-vs-SIMD section and the
+/// property tests can compare against them on either build. On the default
+/// build these *are* the public functions.
+pub mod scalar {
+    /// 4-lane f32 dot — the historical `kernel::dot` loop, verbatim.
+    #[inline]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for i in chunks * 4..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// 4-lane squared distance — the historical `kernel::sq_dist` loop.
+    #[inline]
+    pub fn sq_dist_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            let d0 = a[i] - b[i];
+            let d1 = a[i + 1] - b[i + 1];
+            let d2 = a[i + 2] - b[i + 2];
+            let d3 = a[i + 3] - b[i + 3];
+            s0 += d0 * d0;
+            s1 += d1 * d1;
+            s2 += d2 * d2;
+            s3 += d3 * d3;
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for i in chunks * 4..n {
+            let d = a[i] - b[i];
+            s += d * d;
+        }
+        s.max(0.0)
+    }
+
+    /// 4-lane f64×f32 dot — the historical `qp::dot_f64` loop, verbatim
+    /// (including the truncating `min` length).
+    #[inline]
+    pub fn dot_f64_f32(w: &[f64], x: &[f32]) -> f64 {
+        let n = w.len().min(x.len());
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += w[i] * x[i] as f64;
+            s1 += w[i + 1] * x[i + 1] as f64;
+            s2 += w[i + 2] * x[i + 2] as f64;
+            s3 += w[i + 3] * x[i + 3] as f64;
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for i in chunks * 4..n {
+            s += w[i] * x[i] as f64;
+        }
+        s
+    }
+
+    /// 4-lane f32×f32 dot with f64 accumulation (products widened exactly).
+    #[inline]
+    pub fn dot_f32_acc_f64(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len().min(b.len());
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += a[i] as f64 * b[i] as f64;
+            s1 += a[i + 1] as f64 * b[i + 1] as f64;
+            s2 += a[i + 2] as f64 * b[i + 2] as f64;
+            s3 += a[i + 3] as f64 * b[i + 3] as f64;
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for i in chunks * 4..n {
+            s += a[i] as f64 * b[i] as f64;
+        }
+        s
+    }
+
+    /// Elementwise `y += a·x` over the overlap — the historical zip loops.
+    #[inline]
+    pub fn axpy_f64_f32(y: &mut [f64], a: f64, x: &[f32]) {
+        for (yj, xj) in y.iter_mut().zip(x) {
+            *yj += a * *xj as f64;
+        }
+    }
+}
+
+/// Explicit portable-SIMD implementations (nightly `std::simd`). Lane sums
+/// reduce left-to-right through `to_array()` so results are deterministic;
+/// the f64 kernels keep 4 lanes to preserve the scalar path's exact
+/// grouping, the f32 kernels widen to 8.
+#[cfg(feature = "simd")]
+mod vector {
+    use std::simd::prelude::*;
+
+    #[inline]
+    fn hsum_f32(v: f32x8) -> f32 {
+        v.to_array().iter().sum()
+    }
+
+    #[inline]
+    fn hsum_f64(v: f64x4) -> f64 {
+        v.to_array().iter().sum()
+    }
+
+    #[inline]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = f32x8::splat(0.0);
+        for c in 0..chunks {
+            let i = c * 8;
+            acc += f32x8::from_slice(&a[i..i + 8]) * f32x8::from_slice(&b[i..i + 8]);
+        }
+        let mut s = hsum_f32(acc);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn sq_dist_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = f32x8::splat(0.0);
+        for c in 0..chunks {
+            let i = c * 8;
+            let d = f32x8::from_slice(&a[i..i + 8]) - f32x8::from_slice(&b[i..i + 8]);
+            acc += d * d;
+        }
+        let mut s = hsum_f32(acc);
+        for i in chunks * 8..n {
+            let d = a[i] - b[i];
+            s += d * d;
+        }
+        s.max(0.0)
+    }
+
+    #[inline]
+    pub fn dot_f64_f32(w: &[f64], x: &[f32]) -> f64 {
+        let n = w.len().min(x.len());
+        let chunks = n / 4;
+        let mut acc = f64x4::splat(0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            let xv = f32x4::from_slice(&x[i..i + 4]).cast::<f64>();
+            acc += f64x4::from_slice(&w[i..i + 4]) * xv;
+        }
+        let mut s = hsum_f64(acc);
+        for i in chunks * 4..n {
+            s += w[i] * x[i] as f64;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn dot_f32_acc_f64(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len().min(b.len());
+        let chunks = n / 4;
+        let mut acc = f64x4::splat(0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            let av = f32x4::from_slice(&a[i..i + 4]).cast::<f64>();
+            let bv = f32x4::from_slice(&b[i..i + 4]).cast::<f64>();
+            acc += av * bv;
+        }
+        let mut s = hsum_f64(acc);
+        for i in chunks * 4..n {
+            s += a[i] as f64 * b[i] as f64;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn axpy_f64_f32(y: &mut [f64], a: f64, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let chunks = n / 4;
+        let av = f64x4::splat(a);
+        for c in 0..chunks {
+            let i = c * 4;
+            let xv = f32x4::from_slice(&x[i..i + 4]).cast::<f64>();
+            let yv = f64x4::from_slice(&y[i..i + 4]) + av * xv;
+            yv.copy_to_slice(&mut y[i..i + 4]);
+        }
+        for i in chunks * 4..n {
+            y[i] += a * x[i] as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_pair(rng: &mut Pcg32, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let b = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        (a, b)
+    }
+
+    /// Lengths that exercise empty, sub-lane, lane-boundary, and tail cases
+    /// for both the 4-lane scalar and 8-lane vector paths.
+    const LENGTHS: [usize; 10] = [0, 1, 3, 4, 7, 8, 9, 31, 64, 257];
+
+    #[test]
+    fn scalar_path_is_the_historical_loop_bit_for_bit() {
+        // The spec the dedupe satellite pins: the scalar micro-kernels must
+        // reproduce the deleted per-module copies exactly. The reference
+        // loops here are sequential f64/f32 re-derivations only for axpy
+        // (elementwise, order-free); for the 4-lane sums the scalar module
+        // *is* the historical code, so pin the public functions against it
+        // on the default build.
+        let mut rng = Pcg32::seeded(0x51AD);
+        for n in LENGTHS {
+            let (a, b) = random_pair(&mut rng, n);
+            let w: Vec<f64> = a.iter().map(|v| *v as f64 * 1.5).collect();
+            #[cfg(not(feature = "simd"))]
+            {
+                assert_eq!(dot_f32(&a, &b).to_bits(), scalar::dot_f32(&a, &b).to_bits());
+                assert_eq!(sq_dist_f32(&a, &b).to_bits(), scalar::sq_dist_f32(&a, &b).to_bits());
+            }
+            // f64-accumulating kernels keep 4 lanes on both builds: the
+            // public path must match the scalar reference bit-for-bit even
+            // with --features simd.
+            assert_eq!(dot_f64_f32(&w, &b).to_bits(), scalar::dot_f64_f32(&w, &b).to_bits());
+            assert_eq!(
+                dot_f32_acc_f64(&a, &b).to_bits(),
+                scalar::dot_f32_acc_f64(&a, &b).to_bits()
+            );
+            let mut y1: Vec<f64> = w.clone();
+            let mut y2: Vec<f64> = w.clone();
+            axpy_f64_f32(&mut y1, 0.75, &b);
+            scalar::axpy_f64_f32(&mut y2, 0.75, &b);
+            for (p, q) in y1.iter().zip(&y2) {
+                assert_eq!(p.to_bits(), q.to_bits(), "axpy must be elementwise-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_and_scalar_agree_within_f32_regrouping() {
+        // On the simd build the 8-lane f32 kernels regroup the sum; on the
+        // default build both sides are the same code. Either way the
+        // agreement bound is f32 regrouping noise, far inside 1e-5 relative
+        // at these lengths.
+        let mut rng = Pcg32::seeded(0xC0DE);
+        for n in LENGTHS {
+            let (a, b) = random_pair(&mut rng, n);
+            let (d1, d2) = (dot_f32(&a, &b) as f64, scalar::dot_f32(&a, &b) as f64);
+            assert!((d1 - d2).abs() <= 1e-5 * (1.0 + d2.abs()), "n={n}: {d1} vs {d2}");
+            let (q1, q2) = (sq_dist_f32(&a, &b) as f64, scalar::sq_dist_f32(&a, &b) as f64);
+            assert!((q1 - q2).abs() <= 1e-5 * (1.0 + q2.abs()), "n={n}: {q1} vs {q2}");
+        }
+    }
+
+    #[test]
+    fn truncating_kernels_score_the_overlap() {
+        // dot_f64_f32 / dot_f32_acc_f64 / axpy keep the historical
+        // truncating semantics: mismatched lengths use the shorter side.
+        let w = vec![1.0f64, 2.0, 3.0, 4.0, 5.0];
+        let x = vec![1.0f32, 1.0, 1.0];
+        assert_eq!(dot_f64_f32(&w, &x), 6.0);
+        assert_eq!(dot_f64_f32(&w[..2], &x), 3.0);
+        let a = vec![2.0f32, 2.0];
+        assert_eq!(dot_f32_acc_f64(&a, &x), 4.0);
+        let mut y = vec![0.0f64; 5];
+        axpy_f64_f32(&mut y, 2.0, &x);
+        assert_eq!(y, vec![2.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn block_dot_matches_per_row_dots() {
+        let mut rng = Pcg32::seeded(7);
+        let (rows, cols) = (13, 37);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32() - 0.5).collect();
+        let x: Vec<f32> = (0..cols).map(|_| rng.next_f32() - 0.5).collect();
+        let mut out = vec![0.0f32; rows];
+        block_dot_f32(&w, cols, &x, &mut out);
+        for (r, o) in out.iter().enumerate() {
+            let want = dot_f32(&w[r * cols..(r + 1) * cols], &x);
+            assert_eq!(o.to_bits(), want.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn widened_products_are_exact() {
+        // f32→f64 widening before the product makes each term exact, so on
+        // power-of-two values the f64-accumulated kernels are exact sums.
+        let a = vec![0.5f32, 0.25, 2.0, 8.0, 0.125];
+        let b = vec![4.0f32, 8.0, 0.5, 0.25, 16.0];
+        assert_eq!(dot_f32_acc_f64(&a, &b), 2.0 + 2.0 + 1.0 + 2.0 + 2.0);
+    }
+}

@@ -200,6 +200,45 @@ fn prop_split_preserves_all_rows() {
 }
 
 #[test]
+fn prop_f32_kernel_accumulation_tracks_f64_reference() {
+    // The accumulation contract of the vectorized core (rust/src/simd):
+    // `kernel::dot` / `kernel::sq_dist` accumulate in f32 across 4 (scalar)
+    // or 8 (simd) independent lanes, so the worst-case relative error is
+    // O(n·eps_f32 / lanes) — about 1e-3 at n = 100 000 — while random data
+    // sits in the much smaller sqrt(n) random-walk regime. Pin both kernels
+    // against an exact f64 reference at the documented bound.
+    let mut rng = Pcg32::seeded(0x51D);
+    let n = 100_000usize;
+    for case in 0..4 {
+        let a: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let dot64: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        let dot32 = sodm::kernel::dot(&a, &b) as f64;
+        // The roundoff accrues on the magnitude sum, not the (cancelling)
+        // signed sum — that's the scale the bound is relative to.
+        let mag: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs() as f64).sum();
+        assert!(
+            (dot32 - dot64).abs() <= 1e-3 * mag.max(1.0),
+            "case {case}: dot drift {} exceeds 1e-3 x {mag}",
+            (dot32 - dot64).abs()
+        );
+        let sq64: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| {
+                let d = (*x - *y) as f64;
+                d * d
+            })
+            .sum();
+        let sq32 = sodm::kernel::sq_dist(&a, &b) as f64;
+        assert!(
+            (sq32 - sq64).abs() <= 1e-3 * sq64.max(1.0),
+            "case {case}: sq_dist drift {sq32} vs {sq64}"
+        );
+    }
+}
+
+#[test]
 fn prop_synth_profiles_generate_consistently() {
     let mut rng = Pcg32::seeded(0x188);
     for _ in 0..8 {

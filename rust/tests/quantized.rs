@@ -1,0 +1,191 @@
+//! Quantized scoring-plan coverage (ISSUE 8 acceptance fixtures): an f32
+//! coefficient-storage plan must track the f64 plan within 1e-4 relative on
+//! dense, CSR, and feature-mapped fixtures; multiclass argmax must agree
+//! with the f64 plan on >= 99.9% of a fixture set; and the precision knob
+//! must survive the artifact JSON round trip and flow into serving.
+
+use sodm::api::{self, Method, TrainSpec};
+use sodm::data::sparse::SparseSynthSpec;
+use sodm::data::synth::SynthSpec;
+use sodm::data::RowRef;
+use sodm::infer::{PlanPrecision, ScoringPlan};
+use sodm::kernel::KernelKind;
+use sodm::multiclass::{train_ovr, MulticlassSynthSpec, OvrConfig};
+use sodm::odm::{train_exact_odm, OdmModel, OdmParams};
+use sodm::qp::SolveBudget;
+use sodm::serve::{serve, Backend, ServeConfig};
+use sodm::util::json::Json;
+
+/// The quantization error bound the plans are pinned to: storing an f64
+/// coefficient as f32 perturbs it by <= eps_f32/2 relative, and the f64
+/// accumulation adds nothing on top, so decisions drift by well under 1e-4
+/// relative to the f64 plan.
+fn quant_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-4 * (1.0 + b.abs())
+}
+
+fn dense_fixture() -> (OdmModel, sodm::data::Dataset) {
+    let mut spec = SynthSpec::named("svmguide1", 0.02, 21);
+    spec.rows = 300;
+    let ds = spec.generate();
+    let model = train_exact_odm(
+        &ds,
+        &KernelKind::Rbf { gamma: 1.5 },
+        &OdmParams::default(),
+        &SolveBudget { max_sweeps: 60, ..SolveBudget::default() },
+    );
+    (model, ds)
+}
+
+#[test]
+fn quantized_dense_plan_tracks_f64_within_1e4() {
+    let (model, ds) = dense_fixture();
+    let plan = ScoringPlan::compile_with(&model, PlanPrecision::F64);
+    let qplan = ScoringPlan::compile_with(&model, PlanPrecision::F32);
+    assert_eq!(plan.precision(), PlanPrecision::F64);
+    assert_eq!(qplan.precision(), PlanPrecision::F32);
+    assert_eq!(plan.support_size(), qplan.support_size());
+    let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+    let (mut full, mut quant) = (vec![0.0; refs.len()], vec![0.0; refs.len()]);
+    plan.score_block(&refs, &mut full);
+    qplan.score_block(&refs, &mut quant);
+    for (i, (q, f)) in quant.iter().zip(&full).enumerate() {
+        assert!(quant_close(*q, *f), "row {i}: quantized {q} vs f64 {f}");
+    }
+}
+
+#[test]
+fn quantized_csr_plan_tracks_f64_within_1e4() {
+    let sp = SparseSynthSpec::new(250, 1500, 0.02, 23).generate();
+    let model = train_exact_odm(
+        &sp,
+        &KernelKind::Rbf { gamma: 0.4 },
+        &OdmParams::default(),
+        &SolveBudget { max_sweeps: 30, ..SolveBudget::default() },
+    );
+    assert!(matches!(model, OdmModel::SparseKernel { .. }));
+    let plan = ScoringPlan::compile_with(&model, PlanPrecision::F64);
+    let qplan = ScoringPlan::compile_with(&model, PlanPrecision::F32);
+    assert_eq!(qplan.precision(), PlanPrecision::F32);
+    let refs: Vec<RowRef> = (0..sp.rows).map(|i| sp.row_ref(i)).collect();
+    let (mut full, mut quant) = (vec![0.0; refs.len()], vec![0.0; refs.len()]);
+    plan.score_block(&refs, &mut full);
+    qplan.score_block(&refs, &mut quant);
+    for (i, (q, f)) in quant.iter().zip(&full).enumerate() {
+        assert!(quant_close(*q, *f), "row {i}: quantized {q} vs f64 {f}");
+    }
+}
+
+#[test]
+fn quantized_feature_mapped_plan_tracks_f64_within_1e4() {
+    let mut dspec = SynthSpec::named("svmguide1", 0.02, 27);
+    dspec.rows = 250;
+    let ds = dspec.generate();
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 1.0 })
+        .rff(64)
+        .build()
+        .unwrap();
+    let artifact = api::train(&spec, &ds).unwrap();
+    let model = artifact.as_binary().unwrap();
+    assert!(matches!(model, OdmModel::FeatureMapped { .. }));
+    let plan = ScoringPlan::compile_with(model, PlanPrecision::F64);
+    let qplan = ScoringPlan::compile_with(model, PlanPrecision::F32);
+    assert_eq!(qplan.precision(), PlanPrecision::F32);
+    let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+    let (mut full, mut quant) = (vec![0.0; refs.len()], vec![0.0; refs.len()]);
+    plan.score_block(&refs, &mut full);
+    qplan.score_block(&refs, &mut quant);
+    for (i, (q, f)) in quant.iter().zip(&full).enumerate() {
+        assert!(quant_close(*q, *f), "row {i}: quantized {q} vs f64 {f}");
+    }
+}
+
+#[test]
+fn quantized_multiclass_argmax_agrees_above_999_per_mille() {
+    let mc = MulticlassSynthSpec::new(4, 2000, 8, 29).generate();
+    let kernel = KernelKind::Rbf { gamma: 1.0 / 16.0 };
+    let budget = SolveBudget { max_sweeps: 30, ..SolveBudget::default() };
+    let cfg = OvrConfig { budget, ..OvrConfig::default() };
+    let run = train_ovr(&mc, &kernel, &OdmParams::default(), &cfg);
+    let plan = run.model.compile_with(PlanPrecision::F64);
+    let qplan = run.model.compile_with(PlanPrecision::F32);
+    let full = plan.predict_rows(mc.as_rows(), 2);
+    let quant = qplan.predict_rows(mc.as_rows(), 2);
+    let agree = full.iter().zip(&quant).filter(|(a, b)| a == b).count();
+    let rate = agree as f64 / full.len() as f64;
+    assert!(rate >= 0.999, "argmax agreement {rate:.4} below the 99.9% gate");
+    // Per-class margins stay inside the same quantization bound as the
+    // binary plans.
+    let fs = plan.score_rows(mc.as_rows(), 2);
+    let qs = qplan.score_rows(mc.as_rows(), 2);
+    for (i, (q, f)) in qs.iter().zip(&fs).enumerate() {
+        assert!(quant_close(*q, *f), "margin {i}: quantized {q} vs f64 {f}");
+    }
+}
+
+#[test]
+fn plan_precision_survives_artifact_round_trip() {
+    let mut dspec = SynthSpec::named("svmguide1", 0.02, 31);
+    dspec.rows = 200;
+    let ds = dspec.generate();
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 1.2 })
+        .plan_precision(PlanPrecision::F32)
+        .build()
+        .unwrap();
+    let artifact = api::train(&spec, &ds).unwrap();
+    assert_eq!(artifact.meta.plan_precision, Some(PlanPrecision::F32));
+    let text = artifact.to_json().to_string();
+    assert!(text.contains("plan_precision"), "knob must serialize: {text}");
+    let back = api::Artifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.meta.plan_precision, Some(PlanPrecision::F32));
+    // compile_plan honors the recorded knob; compile_plan_with overrides it.
+    let plan = back.compile_plan();
+    assert_eq!(plan.as_binary().unwrap().precision(), PlanPrecision::F32);
+    let forced = back.compile_plan_with(PlanPrecision::F64);
+    assert_eq!(forced.as_binary().unwrap().precision(), PlanPrecision::F64);
+    // The quantized plan still tracks the f64 plan on the training rows.
+    let refs: Vec<RowRef> = (0..ds.rows).map(|i| RowRef::Dense(ds.row(i))).collect();
+    let (mut full, mut quant) = (vec![0.0; refs.len()], vec![0.0; refs.len()]);
+    forced.as_binary().unwrap().score_block(&refs, &mut full);
+    plan.as_binary().unwrap().score_block(&refs, &mut quant);
+    for (i, (q, f)) in quant.iter().zip(&full).enumerate() {
+        assert!(quant_close(*q, *f), "row {i}: quantized {q} vs f64 {f}");
+    }
+}
+
+#[test]
+fn default_precision_artifacts_keep_historical_json() {
+    let mut dspec = SynthSpec::named("svmguide1", 0.02, 33);
+    dspec.rows = 150;
+    let ds = dspec.generate();
+    let spec = TrainSpec::new(Method::ExactOdm)
+        .kernel(KernelKind::Rbf { gamma: 1.0 })
+        .build()
+        .unwrap();
+    let artifact = api::train(&spec, &ds).unwrap();
+    assert_eq!(artifact.meta.plan_precision, None);
+    // Only non-default knobs serialize — an f64 artifact's envelope carries
+    // no plan_precision key, byte-compatible with pre-quantization readers.
+    assert!(!artifact.to_json().to_string().contains("plan_precision"));
+}
+
+#[test]
+fn serve_with_forced_f32_precision_tracks_f64_decisions() {
+    let (model, ds) = dense_fixture();
+    let plan = ScoringPlan::compile_with(&model, PlanPrecision::F64);
+    let cfg = ServeConfig {
+        workers: 2,
+        shards: 2,
+        precision: Some(PlanPrecision::F32),
+        ..ServeConfig::default()
+    };
+    let h = serve(model.clone(), Backend::Native, cfg).unwrap();
+    for i in (0..ds.rows).step_by(7) {
+        let got = h.score(ds.row(i)).unwrap();
+        let want = plan.score_rr(RowRef::Dense(ds.row(i)));
+        assert!(quant_close(got, want), "row {i}: served {got} vs f64 plan {want}");
+    }
+    h.stop();
+}
