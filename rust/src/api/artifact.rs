@@ -147,6 +147,28 @@ impl TrainMeta {
         }
     }
 
+    /// Metadata for an [`crate::online::OnlineOdm`] snapshot: method tag
+    /// `"online"`, linear kernel (online learning is primal-only), and the
+    /// stream position in `updates` so a restored learner resumes exactly
+    /// where the snapshot left off. `converged` is always false — a
+    /// streaming learner never terminates.
+    pub fn online(params: OdmParams, updates: u64) -> Self {
+        TrainMeta {
+            method: "online".to_string(),
+            kernel: KernelKind::Linear,
+            params,
+            seconds: 0.0,
+            sweeps: 0,
+            updates,
+            converged: false,
+            shrink_ratio: 0.0,
+            feature_map: None,
+            feature_dim: None,
+            feature_seed: None,
+            plan_precision: None,
+        }
+    }
+
     fn to_json(&self) -> Json {
         let (kname, gamma) = match self.kernel {
             KernelKind::Linear => ("linear", 0.0),

@@ -900,6 +900,194 @@ pub fn run_rff_benchmark(
     Ok((json, summary))
 }
 
+/// Online streaming benchmark (ROADMAP item 3): prequential test-then-train
+/// evaluation on the synthetic drifting-blob stream, against a frozen batch
+/// baseline trained on the pre-drift prefix. After the concept flips, the
+/// frozen model's accuracy collapses while the online learner re-converges
+/// within a few hundred updates; the run *fails* with a typed error unless
+/// the online learner's post-drift prequential accuracy beats the frozen
+/// model by a pinned margin — that `ensure!` is the CI contract behind
+/// `experiment --online` (which writes `online_bench.json` and the bench
+/// job's `online-summary.json` copy). When loopback sockets are available
+/// the run also executes a live serve drill: [`ModelRegistry`] started with
+/// an online learner, concurrent remote scores and feedback updates across
+/// cadence-driven snapshot hot-swaps, failing on any lost or duplicated
+/// update and on any typed `Stopped` leaking to a healthy client.
+pub fn run_online_benchmark(
+    workers: usize,
+    quick: bool,
+    seed: u64,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::net::{ErrorCode, ModelRegistry, NetClient, NetServer, Outcome};
+    use crate::odm::OdmParams;
+    use crate::online::{DriftStream, OnlineOdm};
+    use crate::serve::ServeConfig;
+    use crate::util::json::{jstr, Json};
+    use std::sync::Arc;
+
+    let (pre, post) = if quick { (600usize, 600usize) } else { (3_000, 3_000) };
+    let cols = 12usize;
+    let params = OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 };
+    let eta = 0.05;
+
+    // Frozen baseline: batch-train a linear SVRG model on the pre-drift
+    // prefix, then never update it again.
+    let mut stream = DriftStream::new(cols, pre as u64, seed);
+    let train = stream.take_dataset(pre, "drift-pre");
+    let spec = TrainSpec::new(Method::Svrg).workers(workers).epochs(4).seed(seed).build()?;
+    let frozen = api::train(&spec, &train)?;
+    let frozen_pre = frozen.accuracy(&train)?;
+
+    // The online learner warms up prequentially on the same prefix...
+    let mut online = OnlineOdm::new(cols, params, eta)?;
+    for i in 0..train.rows {
+        online.step_dense(train.row(i), train.y[i]);
+    }
+    let online_pre = online.prequential_accuracy();
+
+    // ...then the concept flips. Post-drift examples are scored
+    // test-then-train by the online learner and recorded so the frozen
+    // model is evaluated on exactly the same rows.
+    let mut tail = OnlineOdm::from_weights(online.weights().to_vec(), params, eta, online.seen())?;
+    let mut px = Vec::with_capacity(post * cols);
+    let mut py = Vec::with_capacity(post);
+    for _ in 0..post {
+        let (x, y) = stream.next_example();
+        tail.step_dense(&x, y);
+        px.extend_from_slice(&x);
+        py.push(y);
+    }
+    let post_ds = Dataset::new("drift-post", px, py, cols);
+    let online_post = tail.prequential_accuracy();
+    let frozen_post = frozen.accuracy(&post_ds)?;
+
+    // The acceptance gate: streaming updates must actually buy post-drift
+    // accuracy, by a wide pinned margin (the drift negates the concept, so
+    // the frozen model lands near zero while the online learner recovers
+    // within ~1/eta steps — anything close is a regression).
+    let margin = 0.15;
+    crate::ensure!(
+        online_post >= frozen_post + margin,
+        "online post-drift prequential accuracy {online_post:.4} does not beat the \
+         frozen batch model {frozen_post:.4} by {margin}"
+    );
+
+    // Live serve drill (skipped where loopback sockets are unavailable):
+    // one updater streams feedback over TCP while a scorer hammers the
+    // same server across the snapshot hot-swaps the cadence triggers.
+    let drill = if std::net::TcpListener::bind("127.0.0.1:0").is_ok() {
+        let (updates_n, cadence) = if quick { (120u64, 25u64) } else { (600, 50) };
+        let learner = OnlineOdm::new(cols, params, eta)?;
+        let cfg = ServeConfig {
+            workers,
+            max_wait: std::time::Duration::from_millis(1),
+            ..ServeConfig::default()
+        };
+        let registry = Arc::new(ModelRegistry::start_online(learner, cfg, cadence)?);
+        let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry))?;
+        let addr = server.local_addr().to_string();
+
+        let mut feeder = DriftStream::new(cols, u64::MAX, seed ^ 0xFEED);
+        let feed: Vec<(Vec<f32>, f32)> =
+            (0..updates_n as usize).map(|_| feeder.next_example()).collect();
+        let (last_seen, scores_ok) = std::thread::scope(|s| -> crate::Result<(u64, u64)> {
+            let updater = s.spawn(|| -> crate::Result<u64> {
+                let mut c = NetClient::connect(addr.as_str())?;
+                let mut last = 0u64;
+                for (x, y) in &feed {
+                    match c.update(x, *y)? {
+                        Outcome::Value((seen, _version)) => last = seen,
+                        Outcome::Rejected { code, msg } => {
+                            crate::bail!("update rejected mid-stream ({code:?}): {msg}")
+                        }
+                    }
+                }
+                Ok(last)
+            });
+            let mut c = NetClient::connect(addr.as_str())?;
+            let mut ok = 0u64;
+            for (x, _) in &feed {
+                match c.score(x)? {
+                    Outcome::Value(d) => {
+                        crate::ensure!(d.is_finite(), "non-finite score from online server");
+                        ok += 1;
+                    }
+                    // Shedding under concurrent load is legitimate; any
+                    // other rejection — a Stopped leaking through a swap,
+                    // a validation error — fails the drill.
+                    Outcome::Rejected { code, msg } => {
+                        crate::ensure!(
+                            matches!(code, ErrorCode::Overloaded),
+                            "score rejected ({code:?}) during online drill: {msg}"
+                        );
+                    }
+                }
+            }
+            let last = updater.join().expect("updater thread panicked")?;
+            Ok((last, ok))
+        })?;
+        let final_version = registry.version();
+        let slot_updates = registry.online_slot().expect("online registry").updates();
+        server.stop();
+
+        crate::ensure!(
+            last_seen == updates_n && slot_updates == updates_n,
+            "lost or duplicated updates across snapshot swaps: last seen {last_seen}, \
+             slot counted {slot_updates}, submitted {updates_n}"
+        );
+        let min_version = 1 + (updates_n / cadence) as u32;
+        crate::ensure!(
+            final_version >= min_version,
+            "online registry snapshotted too rarely: v{final_version} after {updates_n} \
+             updates at cadence {cadence} (expected >= v{min_version})"
+        );
+        Some((updates_n, scores_ok, final_version))
+    } else {
+        None
+    };
+
+    let mut fields = vec![
+        ("name", jstr("online-stream")),
+        ("cols", Json::Num(cols as f64)),
+        ("pre_drift_rows", Json::Num(pre as f64)),
+        ("post_drift_rows", Json::Num(post as f64)),
+        ("eta", Json::Num(eta)),
+        ("workers", Json::Num(workers as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("online_pre_drift_accuracy", Json::Num(online_pre)),
+        ("frozen_train_accuracy", Json::Num(frozen_pre)),
+        ("online_post_drift_accuracy", Json::Num(online_post)),
+        ("frozen_post_drift_accuracy", Json::Num(frozen_post)),
+        ("beats_frozen", Json::Bool(true)),
+    ];
+    let drill_line = match drill {
+        Some((updates, scores, version)) => {
+            fields.push(("drill_skipped", Json::Bool(false)));
+            fields.push(("drill_updates", Json::Num(updates as f64)));
+            fields.push(("drill_scores_ok", Json::Num(scores as f64)));
+            fields.push(("drill_final_version", Json::Num(version as f64)));
+            format!(
+                "serve drill: {updates} remote updates + {scores} scores across snapshot \
+                 swaps, artifact v{version}, zero lost updates"
+            )
+        }
+        None => {
+            fields.push(("drill_skipped", Json::Bool(true)));
+            "serve drill skipped: loopback sockets unavailable".to_string()
+        }
+    };
+    let json = Json::obj(fields);
+    let summary = format!(
+        "online streaming benchmark ({pre} pre-drift + {post} post-drift rows, {cols} cols)\n\
+         pre-drift : online prequential {online_pre:.4}  frozen on its train set {frozen_pre:.4}\n\
+         post-drift: online prequential {online_post:.4}  frozen {frozen_post:.4}  \
+         (margin {:+.4})\n\
+         {drill_line}",
+        online_post - frozen_post,
+    );
+    Ok((json, summary))
+}
+
 /// Gradient-based comparators for Fig. 4, through the facade's gradient
 /// dispatch ([`Method::Dsvrg`]/[`Method::Svrg`]/[`Method::Csvrg`]).
 pub fn run_gradient_method(
@@ -1013,6 +1201,23 @@ mod tests {
         // The frontier carries exact + every rff dim + every nystrom mark.
         let points = json.req("points").unwrap().as_arr().unwrap();
         assert_eq!(points.len(), 1 + 3 + 2);
+    }
+
+    #[test]
+    fn online_benchmark_beats_frozen_and_keeps_every_update() {
+        let (json, summary) = run_online_benchmark(2, true, 7).unwrap();
+        let text = json.to_string();
+        assert!(text.contains("\"name\":\"online-stream\""), "{text}");
+        assert!(text.contains("online_post_drift_accuracy"), "{text}");
+        assert!(text.contains("frozen_post_drift_accuracy"), "{text}");
+        assert!(text.contains("\"beats_frozen\":true"), "{text}");
+        // Loopback-dependent: when the drill ran, it must have kept every
+        // update (the ensure! gates inside already failed otherwise).
+        assert!(
+            text.contains("\"drill_skipped\":true") || text.contains("\"drill_updates\":120"),
+            "{text}"
+        );
+        assert!(summary.contains("post-drift"), "{summary}");
     }
 
     #[test]

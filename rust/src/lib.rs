@@ -79,6 +79,17 @@
 //! health/metrics frames, and hot-swappable versioned artifacts through
 //! [`net::ModelRegistry`].
 //!
+//! ## Online / streaming
+//!
+//! Drifting-data workloads serve through the online primal ODM learner
+//! ([`online::OnlineOdm`]): per-example O(nnz) margin-distribution updates
+//! over a label-feedback stream (prequential accounting built in), wrapped
+//! in an [`online::OnlineSlot`] behind the serve runtime
+//! ([`serve::serve_online`]) and the TCP registry
+//! ([`net::ModelRegistry::start_online`]), which periodically snapshots the
+//! live weights to a versioned artifact and hot-swaps it — scoring always
+//! reads an immutable compiled plan, so updates never tear a read.
+//!
 //! ## Feature-map approximation
 //!
 //! RBF serving at linear-model speed: [`featmap::FeatureMap`] lifts rows
@@ -133,6 +144,7 @@ pub mod kernel;
 pub mod multiclass;
 pub mod net;
 pub mod odm;
+pub mod online;
 pub mod partition;
 pub mod qp;
 pub mod runtime;

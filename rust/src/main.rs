@@ -6,6 +6,8 @@
 //! * `predict`    — score a saved artifact on a dataset (native or `--backend xla`)
 //! * `experiment` — regenerate a paper table (`--table 1..4`) or figure
 //!                  (`--figure 1..4`)
+//! * `stream`     — prequential online ODM over a feedback stream (libsvm
+//!                  replay or the synthetic drifting-blob generator)
 //! * `serve`      — network-facing model server (TCP wire protocol over the
 //!                  batched scoring runtime; hot-swappable artifacts)
 //! * `admin`      — one-shot wire client: health/metrics probes, hot swap,
@@ -48,8 +50,10 @@ const TRAIN_FLAGS: &str = "data method kernel gamma lambda theta upsilon p level
      rff-dim landmarks plan-precision";
 const PREDICT_FLAGS: &str = "model data backend seed";
 const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve multiclass rff \
-     scale seed datasets workers out-dir odm-cap rows cols density shards classes quick json \
-     cores dataset";
+     online scale seed datasets workers out-dir odm-cap rows cols density shards classes quick \
+     json cores dataset";
+const STREAM_FLAGS: &str =
+    "data rows cols drift-at eta lambda theta upsilon seed report-every model-out";
 const CHECK_SUMMARIES_FLAGS: &str = "dir";
 const SERVE_BENCH_FLAGS: &str =
     "model data backend seed clients requests workers shards json quick remote";
@@ -75,6 +79,7 @@ fn run(cmd: &str, args: &[String]) -> Result<()> {
         "train" => cmd_train(&parse_flags(cmd, args, TRAIN_FLAGS)?),
         "predict" => cmd_predict(&parse_flags(cmd, args, PREDICT_FLAGS)?),
         "experiment" => cmd_experiment(&parse_flags(cmd, args, EXPERIMENT_FLAGS)?),
+        "stream" => cmd_stream(&parse_flags(cmd, args, STREAM_FLAGS)?),
         "serve-bench" => cmd_serve_bench(&parse_flags(cmd, args, SERVE_BENCH_FLAGS)?),
         "check-summaries" => cmd_check_summaries(&parse_flags(cmd, args, CHECK_SUMMARIES_FLAGS)?),
         "serve" => cmd_serve(&parse_flags(cmd, args, SERVE_FLAGS)?),
@@ -147,6 +152,19 @@ USAGE: sodm <command> [--flag value]...
              (--rff: accuracy-vs-dimension-vs-latency frontier of rff and
               nystrom feature maps against exact rbf, [--quick]
               [--json copy.json]; writes results/rff_bench.json)
+             (--online: prequential drift benchmark — online learner vs a
+              frozen batch model, plus a TCP serve drill with feedback
+              updates across snapshot hot-swaps, [--quick]
+              [--json copy.json]; writes results/online_bench.json)
+  stream     prequential (test-then-train) online ODM over a stream:
+             [--data <file.libsvm | synth:name[:scale]>] replays a dense
+             dataset in row order; without --data, streams the synthetic
+             drifting-blob generator ([--rows 2000] [--cols 12]
+             [--drift-at rows/2])
+             [--eta 0.05] [--lambda 8] [--theta 0.2] [--upsilon 0.5]
+             [--seed 7] [--report-every n] [--model-out m.json]
+             (--model-out saves the final online snapshot as a versioned
+              artifact — loadable by predict/serve like any other model)
   serve-bench --model m.json --data <...> [--backend native|xla] [--clients 8]
              [--workers N] [--shards N] [--json out.json]
              (--quick: self-contained dense + sparse RBF smoke, no --model/--data)
@@ -666,6 +684,20 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         }
         return Ok(());
     }
+    if flags.contains_key("online") {
+        let quick = flags.contains_key("quick");
+        let (json, out) = sodm::exp::run_online_benchmark(cfg.workers, quick, cfg.seed)?;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("online_bench.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("{out}");
+        println!("wrote {}", path.display());
+        if let Some(extra) = flag(flags, "json") {
+            std::fs::write(extra, json.to_string())?;
+            println!("wrote JSON summary to {extra}");
+        }
+        return Ok(());
+    }
     if let Some(f) = flag(flags, "figure") {
         let out = match f {
             "1" => figure1(&cfg)?,
@@ -687,8 +719,67 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     }
     sodm::bail!(
         "experiment needs --table N, --figure N, --ablation, --sparse, --serve, \
-         --remote-serve, --multiclass, or --rff"
+         --remote-serve, --multiclass, --rff, or --online"
     )
+}
+
+/// `stream`: prequential (test-then-train) online ODM over a feedback
+/// stream. With `--data`, replays a dense dataset in row order — each row
+/// is scored with the pre-update weights, then trains the learner. Without
+/// `--data`, draws from the synthetic drifting-blob generator so the
+/// post-drift recovery is visible in the rolling accuracy. `--model-out`
+/// saves the final state as a versioned online artifact.
+fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::online::{DriftStream, OnlineOdm};
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let eta = flag_f64(flags, "eta", 0.05)?;
+    let params = parse_params(flags)?;
+
+    let (mut learner, streamed) = if let Some(path) = flag(flags, "data") {
+        let LoadedDataset::Dense(ds) = load_data(path, seed)? else {
+            sodm::bail!("stream replay is dense-only; use a dense libsvm file or synth:<name>")
+        };
+        let mut learner = OnlineOdm::new(ds.cols, params, eta)?;
+        let report = flag_usize(flags, "report-every", (ds.rows / 10).max(1))?.max(1);
+        for i in 0..ds.rows {
+            learner.step_dense(ds.row(i), ds.y[i]);
+            if (i + 1) % report == 0 {
+                println!(
+                    "{:>8} examples  prequential accuracy {:.4}",
+                    i + 1,
+                    learner.prequential_accuracy()
+                );
+            }
+        }
+        (learner, format!("replayed {} examples from {path}", ds.rows))
+    } else {
+        let rows = flag_usize(flags, "rows", 2_000)?;
+        let cols = flag_usize(flags, "cols", 12)?;
+        let drift_at = flag_usize(flags, "drift-at", rows / 2)? as u64;
+        let mut stream = DriftStream::new(cols, drift_at, seed);
+        let mut learner = OnlineOdm::new(cols, params, eta)?;
+        let report = flag_usize(flags, "report-every", (rows / 10).max(1))?.max(1);
+        for i in 0..rows {
+            let (x, y) = stream.next_example();
+            learner.step_dense(&x, y);
+            if (i + 1) % report == 0 {
+                println!(
+                    "{:>8} examples  prequential accuracy {:.4}{}",
+                    i + 1,
+                    learner.prequential_accuracy(),
+                    if stream.drifted() { "  (post-drift)" } else { "" }
+                );
+            }
+        }
+        let line = format!("streamed {rows} synthetic examples ({cols} cols, drift at {drift_at})");
+        (learner, line)
+    };
+    println!("{streamed}: prequential accuracy {:.4}", learner.prequential_accuracy());
+    if let Some(out) = flag(flags, "model-out") {
+        learner.snapshot().save(out)?;
+        println!("online snapshot saved to {out}");
+    }
+    Ok(())
 }
 
 /// Serve a model under synthetic concurrent load and report latency/
@@ -950,6 +1041,10 @@ const SUMMARY_CONTRACT: &[(&str, &[&str])] = &[
     ("remote-serve-summary.json", &["name", "ok", "shed_rate", "p99_ms"]),
     ("rff-summary.json", &["name", "exact_accuracy", "points", "within_tolerance"]),
     ("simd-summary.json", &["name", "simd_enabled", "benches"]),
+    (
+        "online-summary.json",
+        &["name", "online_post_drift_accuracy", "frozen_post_drift_accuracy", "beats_frozen"],
+    ),
 ];
 
 /// True when every number reachable from `j` is finite. `Json::parse`

@@ -135,6 +135,20 @@ impl NetClient {
         self.multi_outcome(&req)
     }
 
+    /// Send one `(row, label)` feedback example to the server's online
+    /// learner. On acceptance returns `(seen, version)`: the learner's
+    /// total update count after this example and the artifact version
+    /// currently serving (scoring reflects this update no later than the
+    /// snapshot swap past `seen`). Rejections (no online learner, bad
+    /// dims/label, shed) come back as typed [`Outcome::Rejected`].
+    pub fn update(&mut self, x: &[f32], y: f32) -> Result<Outcome<(u64, u32)>> {
+        match self.request(&Request::Update { x: x.to_vec(), y })? {
+            Reply::UpdateOk { seen, version } => Ok(Outcome::Value((seen, version))),
+            Reply::Error { code, msg } => Ok(Outcome::Rejected { code, msg }),
+            other => Err(crate::err!("unexpected reply kind 0x{:02x}", other.kind())),
+        }
+    }
+
     /// Health probe: the server's JSON summary (artifact version, model
     /// shape, runtime state).
     pub fn health(&mut self) -> Result<String> {

@@ -20,6 +20,7 @@
 //! | 0x02 | ScoreSparse      | `nnz: u32`, `nnz × u32` idx, `nnz × f32` |
 //! | 0x03 | MulticlassDense  | as ScoreDense                            |
 //! | 0x04 | MulticlassSparse | as ScoreSparse                           |
+//! | 0x05 | Update           | `n: u32`, `n × f32` features, `y: f32`   |
 //! | 0x10 | Health           | empty                                    |
 //! | 0x11 | Metrics          | empty                                    |
 //! | 0x20 | AdminSwap        | `len: u32`, UTF-8 artifact path          |
@@ -31,6 +32,7 @@
 //! |------|-----------|---------------------------------------------|
 //! | 0x81 | Score     | `f64` decision value                        |
 //! | 0x82 | Multi     | `argmax: u32`, `k: u32`, `k × f64` margins  |
+//! | 0x83 | UpdateOk  | `seen: u64`, `version: u32`                 |
 //! | 0x90 | HealthOk  | UTF-8 JSON                                  |
 //! | 0x91 | MetricsOk | UTF-8 JSON                                  |
 //! | 0xA0 | AdminOk   | `version: u32` (artifact version now live)  |
@@ -106,6 +108,9 @@ pub enum Request {
     MulticlassDense(Vec<f32>),
     /// Multiclass CSR score request.
     MulticlassSparse { indices: Vec<u32>, values: Vec<f32> },
+    /// One `(row, label)` feedback example for the server's online
+    /// learner (`y ∈ {−1, +1}`; servers without one answer `Invalid`).
+    Update { x: Vec<f32>, y: f32 },
     /// Liveness + model shape probe.
     Health,
     /// Serving metrics snapshot.
@@ -124,6 +129,10 @@ pub enum Reply {
     Score(f64),
     /// Multiclass argmax + per-class margins.
     Multi { argmax: u32, scores: Vec<f64> },
+    /// Feedback accepted: total updates the learner has consumed and the
+    /// artifact version currently serving (scores reflect the learner no
+    /// later than the next snapshot swap past `seen`).
+    UpdateOk { seen: u64, version: u32 },
     /// Health JSON (artifact version, model shape, runtime state).
     Health(String),
     /// Metrics JSON (served/shed counts, latency percentiles, …).
@@ -196,6 +205,10 @@ fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
 fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
@@ -248,6 +261,7 @@ impl Request {
             Request::ScoreSparse { .. } => 0x02,
             Request::MulticlassDense(_) => 0x03,
             Request::MulticlassSparse { .. } => 0x04,
+            Request::Update { .. } => 0x05,
             Request::Health => 0x10,
             Request::Metrics => 0x11,
             Request::AdminSwap { .. } => 0x20,
@@ -261,6 +275,11 @@ impl Request {
             Request::ScoreDense(x) | Request::MulticlassDense(x) => dense_payload(x),
             Request::ScoreSparse { indices, values } => sparse_payload(indices, values),
             Request::MulticlassSparse { indices, values } => sparse_payload(indices, values),
+            Request::Update { x, y } => {
+                let mut p = dense_payload(x);
+                p.extend_from_slice(&y.to_le_bytes());
+                p
+            }
             Request::Health | Request::Metrics => Vec::new(),
             Request::AdminSwap { path } => {
                 let mut p = Vec::new();
@@ -290,6 +309,7 @@ impl Reply {
         match self {
             Reply::Score(_) => 0x81,
             Reply::Multi { .. } => 0x82,
+            Reply::UpdateOk { .. } => 0x83,
             Reply::Health(_) => 0x90,
             Reply::Metrics(_) => 0x91,
             Reply::AdminOk { .. } => 0xA0,
@@ -306,6 +326,12 @@ impl Reply {
                 put_u32(&mut p, *argmax);
                 put_u32(&mut p, scores.len() as u32);
                 put_f64s(&mut p, scores);
+                p
+            }
+            Reply::UpdateOk { seen, version } => {
+                let mut p = Vec::with_capacity(12);
+                put_u64(&mut p, *seen);
+                put_u32(&mut p, *version);
                 p
             }
             Reply::Health(json) | Reply::Metrics(json) => json.as_bytes().to_vec(),
@@ -355,6 +381,14 @@ impl<'a> Cur<'a> {
 
     fn u32(&mut self) -> Result<u32, FrameError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, FrameError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn f64(&mut self) -> Result<f64, FrameError> {
@@ -460,6 +494,14 @@ fn decode_request(kind: u8, p: &[u8]) -> Result<Request, FrameError> {
             let (indices, values) = decode_sparse(p)?;
             Ok(Request::MulticlassSparse { indices, values })
         }
+        0x05 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let x = c.f32s(n)?;
+            let y = c.f32()?;
+            c.done()?;
+            Ok(Request::Update { x, y })
+        }
         0x10 | 0x11 => {
             if !p.is_empty() {
                 return Err(FrameError::BadPayload("health/metrics take no payload"));
@@ -506,6 +548,13 @@ fn decode_reply(kind: u8, p: &[u8]) -> Result<Reply, FrameError> {
             let scores = c.f64s(k)?;
             c.done()?;
             Ok(Reply::Multi { argmax, scores })
+        }
+        0x83 => {
+            let mut c = Cur::new(p);
+            let seen = c.u64()?;
+            let version = c.u32()?;
+            c.done()?;
+            Ok(Reply::UpdateOk { seen, version })
         }
         0x90 => Ok(Reply::Health(text(p)?)),
         0x91 => Ok(Reply::Metrics(text(p)?)),
@@ -586,6 +635,13 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        match round_trip_request(Request::Update { x: vec![0.25, -3.5], y: -1.0 }) {
+            Request::Update { x, y } => {
+                assert_eq!(x, vec![0.25, -3.5]);
+                assert_eq!(y, -1.0);
+            }
+            other => panic!("{other:?}"),
+        }
         assert!(matches!(round_trip_request(Request::Health), Request::Health));
         assert!(matches!(round_trip_request(Request::Metrics), Request::Metrics));
         match round_trip_request(Request::AdminSwap { path: "m.json".into() }) {
@@ -626,6 +682,15 @@ mod tests {
         }
         match round_trip_reply(Reply::AdminOk { version: 7 }) {
             Reply::AdminOk { version } => assert_eq!(version, 7),
+            other => panic!("{other:?}"),
+        }
+        // u64 counter survives beyond u32 range (long-running streams).
+        let big = (u32::MAX as u64) + 12_345;
+        match round_trip_reply(Reply::UpdateOk { seen: big, version: 9 }) {
+            Reply::UpdateOk { seen, version } => {
+                assert_eq!(seen, big);
+                assert_eq!(version, 9);
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -22,8 +22,11 @@
 //!
 //! * [`frame`] — the length-prefixed binary wire protocol (magic +
 //!   version + kind + payload; dense/CSR binary and multiclass scoring,
-//!   health/metrics probes, admin swap + fault injection).
-//! * [`registry`] — [`ModelRegistry`], the versioned hot-swap slot.
+//!   online `(row, label)` feedback updates, health/metrics probes,
+//!   admin swap + fault injection).
+//! * [`registry`] — [`ModelRegistry`], the versioned hot-swap slot —
+//!   also the cadence-driven snapshot loop for online learners
+//!   ([`ModelRegistry::start_online`] / [`ModelRegistry::update`]).
 //! * [`server`] — [`NetServer`], acceptor + thread-per-connection
 //!   handlers with typed error replies and clean shutdown.
 //! * [`client`] — [`NetClient`], the blocking client the remote bench,

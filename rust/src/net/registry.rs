@@ -14,15 +14,29 @@
 //! 4. Stop the old runtime — its request sender drops, in-flight batches
 //!    drain **on the old plan**, workers join. Requests that raced the
 //!    teardown see [`SubmitError::Stopped`](crate::serve::SubmitError) and
-//!    the network layer retries them once against the new slot.
+//!    the network layer retries them against whichever generation is
+//!    live by then (bounded, generation-aware — see `with_swap_retry`).
 //!
 //! Swaps are serialized by a mutex; scoring never takes it.
+//!
+//! # Online registries
+//!
+//! [`ModelRegistry::start_online`] serves a live
+//! [`OnlineOdm`](crate::online::OnlineOdm) instead of a frozen artifact:
+//! feedback flows through [`ModelRegistry::update`] into one shared
+//! [`OnlineSlot`](crate::online::OnlineSlot), and every `snapshot_every`
+//! updates the registry snapshots the learner to a versioned artifact
+//! (method tag `"online"`) and hot-swaps it through the exact lifecycle
+//! above. Because the slot is shared by every generation, updates applied
+//! *during* a swap land in the same learner the next snapshot reads —
+//! none are lost or applied twice.
 
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::api::{Artifact, ArtifactInfo};
-use crate::serve::{ServeConfig, ServerHandle};
+use crate::online::{OnlineOdm, OnlineSlot};
+use crate::serve::{serve_online, ServeConfig, ServerHandle, SubmitError};
 use crate::Result;
 
 /// One live serving generation: the runtime handle plus the metadata the
@@ -39,6 +53,17 @@ pub struct ServingSlot {
     pub source: String,
 }
 
+/// Cadence state for an online registry: the shared learner plus the
+/// bookkeeping that decides when the next snapshot swap is due.
+struct OnlineState {
+    slot: Arc<OnlineSlot>,
+    /// Snapshot + hot-swap after this many updates since the last swap.
+    snapshot_every: u64,
+    /// Update count at the last snapshot swap (CAS-claimed so concurrent
+    /// updaters trigger exactly one swap per cadence interval).
+    last_snapshot: AtomicU64,
+}
+
 /// Versioned, hot-swappable serving slot (see the [module docs](self)).
 pub struct ModelRegistry {
     slot: RwLock<Arc<ServingSlot>>,
@@ -46,6 +71,8 @@ pub struct ModelRegistry {
     admin: Mutex<()>,
     cfg: ServeConfig,
     next_version: AtomicU32,
+    /// Present on registries started with [`ModelRegistry::start_online`].
+    online: Option<OnlineState>,
 }
 
 impl ModelRegistry {
@@ -59,7 +86,102 @@ impl ModelRegistry {
             admin: Mutex::new(()),
             cfg,
             next_version: AtomicU32::new(2),
+            online: None,
         })
+    }
+
+    /// Start serving a live online learner as version 1: the scoring plan
+    /// is compiled from the learner's current weights, feedback flows
+    /// through [`ModelRegistry::update`], and every `snapshot_every`
+    /// updates the learner is snapshotted to a versioned artifact and
+    /// hot-swapped in (build-before-swap, old generation drains).
+    pub fn start_online(
+        learner: OnlineOdm,
+        cfg: ServeConfig,
+        snapshot_every: u64,
+    ) -> Result<ModelRegistry> {
+        crate::ensure!(snapshot_every >= 1, "snapshot cadence must be >= 1 update");
+        let slot = Arc::new(OnlineSlot::new(learner));
+        let seen = slot.updates();
+        let artifact = slot.snapshot();
+        let info = artifact.info();
+        let handle = serve_online(Arc::clone(&slot), cfg.clone())?;
+        let serving =
+            ServingSlot { handle, info, version: 1, source: "<online>".to_string() };
+        Ok(ModelRegistry {
+            slot: RwLock::new(Arc::new(serving)),
+            admin: Mutex::new(()),
+            cfg,
+            next_version: AtomicU32::new(2),
+            online: Some(OnlineState {
+                slot,
+                snapshot_every,
+                last_snapshot: AtomicU64::new(seen),
+            }),
+        })
+    }
+
+    /// The shared online learner, on registries started with
+    /// [`ModelRegistry::start_online`].
+    pub fn online_slot(&self) -> Option<&Arc<OnlineSlot>> {
+        self.online.as_ref().map(|s| &s.slot)
+    }
+
+    /// Apply one `(row, label)` feedback example to the online learner;
+    /// returns `(seen, version)` — the learner's total update count after
+    /// this example and the artifact version currently serving. Validation
+    /// (dimensions, finiteness, `y ∈ {−1, +1}`) runs on the serving
+    /// handle's feedback path; the step itself goes to the *shared* slot,
+    /// so an update racing a snapshot swap still lands (a draining
+    /// generation's handle steps the same learner — no `Stopped`, no lost
+    /// update). When this update crosses the snapshot cadence, the caller
+    /// pays for the swap before returning.
+    pub fn update(&self, x: &[f32], y: f32) -> std::result::Result<(u64, u32), SubmitError> {
+        let state = match &self.online {
+            Some(s) => s,
+            None => {
+                return Err(SubmitError::Invalid(
+                    "registry has no online learner (started from a frozen artifact)".into(),
+                ))
+            }
+        };
+        let seen = self.current().handle.update(x, y)?;
+        // Claim the cadence boundary with a CAS so exactly one updater
+        // performs each snapshot swap; losers (and updates mid-swap)
+        // continue unblocked.
+        let last = state.last_snapshot.load(Ordering::Acquire);
+        if seen >= last.saturating_add(state.snapshot_every)
+            && state
+                .last_snapshot
+                .compare_exchange(last, seen, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            // A failed swap (spawn error) keeps the previous generation
+            // serving — the update itself already landed, so don't turn
+            // an applied update into a client-visible error.
+            let _ = self.snapshot_swap();
+        }
+        Ok((seen, self.version()))
+    }
+
+    /// Snapshot the online learner and hot-swap the fresh artifact in
+    /// (see [`ModelRegistry::swap`] for the lifecycle). The new
+    /// generation's handle keeps the same shared learner attached.
+    pub fn snapshot_swap(&self) -> Result<u32> {
+        let state = match &self.online {
+            Some(s) => s,
+            None => crate::bail!("registry has no online learner"),
+        };
+        let _admin = self.admin.lock().unwrap();
+        let artifact = state.slot.snapshot();
+        let info = artifact.info();
+        let source = format!("<online snapshot @{}>", artifact.meta.updates);
+        let handle = serve_online(Arc::clone(&state.slot), self.cfg.clone())?;
+        let version = self.next_version.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(ServingSlot { handle, info, version, source });
+        let old = std::mem::replace(&mut *self.slot.write().unwrap(), fresh);
+        old.handle.stop();
+        Ok(version)
     }
 
     /// The current serving generation. Callers hold the `Arc` across one
@@ -117,7 +239,7 @@ mod tests {
     use crate::odm::OdmModel;
     use crate::serve::SubmitError;
 
-    fn linear_artifact(w: Vec<f32>) -> Artifact {
+    fn linear_artifact(w: Vec<f64>) -> Artifact {
         let model = ArtifactModel::Binary(OdmModel::Linear { w });
         let meta = TrainMeta::legacy(&model);
         Artifact { model, meta }
@@ -171,5 +293,42 @@ mod tests {
         assert_eq!(slot.source, path.to_str().unwrap());
         reg.stop();
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn online_registry_snapshots_on_cadence_and_loses_no_updates() {
+        use crate::odm::OdmParams;
+        use crate::online::DriftStream;
+        let params = OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 };
+        let learner = OnlineOdm::new(6, params, 0.05).unwrap();
+        let reg = ModelRegistry::start_online(learner, ServeConfig::default(), 50).unwrap();
+        assert_eq!(reg.version(), 1);
+        assert!(reg.online_slot().is_some());
+        // A frozen registry rejects feedback.
+        let frozen =
+            ModelRegistry::start(linear_artifact(vec![1.0; 6]), ServeConfig::default()).unwrap();
+        assert!(matches!(frozen.update(&[0.0; 6], 1.0), Err(SubmitError::Invalid(_))));
+        frozen.stop();
+
+        let mut stream = DriftStream::new(6, u64::MAX, 5);
+        let mut last_seen = 0;
+        for _ in 0..120 {
+            let (x, y) = stream.next_example();
+            let (seen, _version) = reg.update(&x, y).unwrap();
+            last_seen = seen;
+        }
+        assert_eq!(last_seen, 120, "every update must be counted exactly once");
+        assert_eq!(reg.online_slot().unwrap().updates(), 120);
+        // Cadence 50 over 120 updates → swaps at 50 and 100: version 3.
+        assert_eq!(reg.version(), 3);
+        let slot = reg.current();
+        assert!(slot.source.starts_with("<online snapshot @"));
+        assert_eq!(slot.info.method, "online");
+        // The serving plan reflects a snapshot of the trained (nonzero)
+        // weights, not the zero-initialized version-1 plan.
+        let (x, _) = stream.next_example();
+        let d = slot.handle.score(&x).unwrap();
+        assert!(d.is_finite() && d != 0.0, "snapshot plan must carry trained weights");
+        reg.stop();
     }
 }

@@ -15,8 +15,12 @@
 //!   truncation) get the error reply and then the connection closes —
 //!   frame boundaries can no longer be trusted.
 //! * A request that races an artifact hot-swap (typed `Stopped` from the
-//!   draining runtime) is retried once against the fresh slot before an
-//!   error is returned.
+//!   draining runtime) is retried against whichever generation is live,
+//!   as long as each retry observes a *newer* registry generation
+//!   (bounded; periodic online snapshots make back-to-back swaps
+//!   routine). `Stopped` only reaches a client when the server is
+//!   actually shutting down — the generation stopped without a
+//!   successor.
 //!
 //! [`NetServer::stop`] shuts down in order: stop accepting, unblock and
 //! join the acceptor, shut down every live connection socket, join the
@@ -202,6 +206,10 @@ fn dispatch(registry: &ModelRegistry, req: Request) -> Reply {
             let f = |s: &ServingSlot| s.handle.try_score_multiclass_sparse(&indices, &values);
             multi_reply(with_swap_retry(registry, f))
         }
+        Request::Update { x, y } => match registry.update(&x, y) {
+            Ok((seen, version)) => Reply::UpdateOk { seen, version },
+            Err(e) => error_reply(e),
+        },
         Request::Health => Reply::Health(health_json(&registry.current()).to_string()),
         Request::Metrics => Reply::Metrics(metrics_json(&registry.current()).to_string()),
         Request::AdminSwap { path } => match registry.swap_from_path(&path) {
@@ -219,17 +227,37 @@ fn dispatch(registry: &ModelRegistry, req: Request) -> Reply {
     }
 }
 
-/// Run one scoring closure against the current slot, retrying once if it
-/// raced a hot-swap (the draining runtime answers typed `Stopped`; the
-/// fresh slot serves the retry).
+/// Retries after a request races a hot-swap. Each retry must observe a
+/// newer registry generation, so the bound is "swaps in flight while this
+/// request ran", capped here; a healthy client can't see `Stopped` just
+/// because several snapshots swapped back-to-back.
+const MAX_SWAP_RETRIES: u32 = 4;
+
+/// Run one scoring closure against the current slot, retrying while it
+/// races hot-swaps: a typed `Stopped` from a draining runtime is retried
+/// against the fresh slot *only if the registry generation advanced* —
+/// `Stopped` on an unchanged generation means real shutdown (no successor
+/// is coming) and is returned immediately rather than spun on.
 fn with_swap_retry<T>(
     registry: &ModelRegistry,
     f: impl Fn(&ServingSlot) -> std::result::Result<T, SubmitError>,
 ) -> std::result::Result<T, SubmitError> {
-    match f(&registry.current()) {
-        Err(SubmitError::Stopped) => f(&registry.current()),
-        other => other,
+    let mut slot = registry.current();
+    for _ in 0..MAX_SWAP_RETRIES {
+        match f(&slot) {
+            Err(SubmitError::Stopped) => {
+                let fresh = registry.current();
+                if fresh.version == slot.version {
+                    // The generation that answered Stopped is still
+                    // current: the server is shutting down, not swapping.
+                    return Err(SubmitError::Stopped);
+                }
+                slot = fresh;
+            }
+            other => return other,
+        }
     }
+    f(&slot)
 }
 
 fn error_reply(e: SubmitError) -> Reply {
@@ -276,9 +304,16 @@ fn health_json(slot: &ServingSlot) -> Json {
 }
 
 /// Metrics frame payload: the serving runtime's counters + percentiles.
+/// Latency percentiles are `null` until the histogram has samples — an
+/// idle server used to fabricate a ~1 µs first-bucket "percentile" here;
+/// `latency_samples` says how many measurements back the numbers.
 fn metrics_json(slot: &ServingSlot) -> Json {
     let m = slot.handle.metrics();
-    Json::obj(vec![
+    let pct = |p: f64| match m.percentile(p) {
+        Some(ms) => Json::Num(ms),
+        None => Json::Null,
+    };
+    let mut pairs = vec![
         ("version", Json::Num(slot.version as f64)),
         ("requests", Json::Num(m.requests.load(Ordering::Relaxed) as f64)),
         ("batches", Json::Num(m.batches.load(Ordering::Relaxed) as f64)),
@@ -288,20 +323,27 @@ fn metrics_json(slot: &ServingSlot) -> Json {
         ("failed_batches", Json::Num(m.failed_batches.load(Ordering::Relaxed) as f64)),
         ("mean_batch_size", Json::Num(m.mean_batch_size())),
         ("mean_queue_wait_ms", Json::Num(m.mean_queue_wait_ms())),
-        ("p50_ms", Json::Num(m.p50_ms())),
-        ("p95_ms", Json::Num(m.p95_ms())),
-        ("p99_ms", Json::Num(m.p99_ms())),
-    ])
+        ("latency_samples", Json::Num(m.latency_samples() as f64)),
+        ("p50_ms", pct(50.0)),
+        ("p95_ms", pct(95.0)),
+        ("p99_ms", pct(99.0)),
+    ];
+    if let Some(online) = slot.handle.online_slot() {
+        pairs.push(("online_updates", Json::Num(online.updates() as f64)));
+        pairs.push(("prequential_accuracy", Json::Num(online.prequential_accuracy())));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::api::{Artifact, ArtifactModel, TrainMeta};
+    use crate::net::client::Outcome;
     use crate::odm::OdmModel;
     use crate::serve::ServeConfig;
 
-    fn linear_artifact(w: Vec<f32>) -> Artifact {
+    fn linear_artifact(w: Vec<f64>) -> Artifact {
         let model = ArtifactModel::Binary(OdmModel::Linear { w });
         let meta = TrainMeta::legacy(&model);
         Artifact { model, meta }
@@ -330,5 +372,55 @@ mod tests {
         assert!(metrics.contains("\"requests\""), "{metrics}");
         srv.stop();
         srv.stop(); // idempotent
+    }
+
+    #[test]
+    fn idle_metrics_report_null_percentiles() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback sockets unavailable");
+            return;
+        }
+        let reg =
+            ModelRegistry::start(linear_artifact(vec![1.0, 1.0]), ServeConfig::default()).unwrap();
+        let srv = NetServer::bind("127.0.0.1:0", Arc::new(reg)).unwrap();
+        let mut c = crate::net::client::NetClient::connect(srv.local_addr()).unwrap();
+        let idle = c.metrics().unwrap();
+        assert!(idle.contains("\"latency_samples\":0"), "{idle}");
+        assert!(idle.contains("\"p50_ms\":null"), "idle percentiles must be null: {idle}");
+        assert!(idle.contains("\"p99_ms\":null"), "{idle}");
+        let _ = c.score(&[1.0, 2.0]).unwrap().value().unwrap();
+        let warm = c.metrics().unwrap();
+        assert!(!warm.contains("\"p50_ms\":null"), "served traffic must report latency: {warm}");
+        srv.stop();
+    }
+
+    #[test]
+    fn online_updates_flow_over_tcp() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback sockets unavailable");
+            return;
+        }
+        let params = crate::odm::OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 };
+        let learner = crate::online::OnlineOdm::new(4, params, 0.05).unwrap();
+        let reg = ModelRegistry::start_online(learner, ServeConfig::default(), 10).unwrap();
+        let srv = NetServer::bind("127.0.0.1:0", Arc::new(reg)).unwrap();
+        let mut c = crate::net::client::NetClient::connect(srv.local_addr()).unwrap();
+        let mut stream = crate::online::DriftStream::new(4, u64::MAX, 17);
+        for i in 1..=25u64 {
+            let (x, y) = stream.next_example();
+            let (seen, version) = c.update(&x, y).unwrap().value().unwrap();
+            assert_eq!(seen, i, "updates must be counted exactly once");
+            assert!(version >= 1);
+        }
+        // Cadence 10 over 25 updates → snapshot swaps at 10 and 20.
+        assert_eq!(srv.registry().version(), 3);
+        let metrics = c.metrics().unwrap();
+        assert!(metrics.contains("\"online_updates\":25"), "{metrics}");
+        // Typed rejections, not transport errors.
+        let bad_dim = c.update(&[1.0; 3], 1.0).unwrap();
+        assert!(matches!(bad_dim, Outcome::Rejected { code: ErrorCode::Invalid, .. }));
+        let bad_label = c.update(&[1.0; 4], 0.25).unwrap();
+        assert!(matches!(bad_label, Outcome::Rejected { code: ErrorCode::Invalid, .. }));
+        srv.stop();
     }
 }

@@ -1,0 +1,442 @@
+//! Online / streaming primal ODM (ROADMAP item 3): the first subsystem
+//! where the model mutates *while* serving.
+//!
+//! [`OnlineOdm`] consumes a `(row, label)` feedback stream and applies
+//! per-example stochastic updates to the primal ODM objective
+//! p(w) = ½‖w‖² + λ/(2M(1−θ)²) Σᵢ(ξᵢ² + υεᵢ²): each example costs one
+//! margin dot plus one scaled row add, `w ← (1−η)·w − η·c·y·x` with
+//! `c = grad_coef(y⟨w,x⟩)` from the same piecewise-quadratic margin loss
+//! the batch SVRG solvers optimize. Sparse rows cost O(nnz), not O(d) —
+//! the uniform `(1−η)` shrink on untouched coordinates is composed in
+//! closed form by the [`crate::svrg`] lazy-decay machinery
+//! (`LazyVr::new_sgd`, fixed point 0) rather than paid eagerly.
+//!
+//! Every step is prequential (test-then-train): the example is scored
+//! with the *pre-update* weights before it trains, so
+//! [`OnlineOdm::prequential_accuracy`] is an honest streaming estimate of
+//! generalization — the standard evaluation for drifting streams.
+//!
+//! Serving integration: [`OnlineSlot`] wraps a learner in a mutex for
+//! concurrent feedback, and [`crate::serve::serve_online`] /
+//! [`crate::net::ModelRegistry::start_online`] attach it behind the
+//! existing registry slot. The consistency contract is
+//! *snapshot-isolation*: scoring always runs against the immutable
+//! compiled plan of the last snapshot (torn-read free by construction),
+//! updates mutate the learner under its lock, and every `snapshot_every`
+//! updates the registry hot-swaps a fresh versioned [`Artifact`] (method
+//! tag `"online"`) through the unchanged build-before-swap path. Staleness
+//! is therefore bounded by the snapshot cadence, never by lock contention
+//! on the scoring path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::api::{Artifact, ArtifactModel, TrainMeta};
+use crate::data::{Dataset, RowRef};
+use crate::odm::{OdmModel, OdmParams};
+use crate::svrg::LazyVr;
+use crate::util::rng::Pcg32;
+
+/// Online primal ODM learner over a `(row, label)` feedback stream.
+///
+/// One [`OnlineOdm::step`] per example: prequential score, then an O(nnz)
+/// SGD update on the margin-distribution objective. Snapshot/restore
+/// round-trips bit-exactly through [`Artifact`] JSON (`f64` weights
+/// serialize shortest-round-trip), so a restored learner continues the
+/// *identical* weight trajectory the original would have taken.
+#[derive(Debug)]
+pub struct OnlineOdm {
+    w: Vec<f64>,
+    lazy: LazyVr,
+    params: OdmParams,
+    eta: f64,
+    /// Examples consumed in total, including any carried in by restore.
+    seen: u64,
+    /// Steps taken by *this* instance (prequential denominator).
+    stepped: u64,
+    correct: u64,
+}
+
+impl OnlineOdm {
+    /// Fresh learner at `w = 0` for `cols` input features. `eta` is the
+    /// SGD step size and must lie in `(0, 1)` so the per-step weight
+    /// shrink `(1−η)` is a contraction.
+    pub fn new(cols: usize, params: OdmParams, eta: f64) -> crate::Result<Self> {
+        Self::from_weights(vec![0.0; cols], params, eta, 0)
+    }
+
+    /// Resume a learner from explicit weights (snapshot restore, or warm
+    /// start from a batch-trained linear model). `seen` seeds the update
+    /// counter; prequential counters restart from here.
+    pub fn from_weights(
+        w: Vec<f64>,
+        params: OdmParams,
+        eta: f64,
+        seen: u64,
+    ) -> crate::Result<Self> {
+        crate::ensure!(!w.is_empty(), "online learner needs >= 1 feature column");
+        crate::ensure!(
+            eta.is_finite() && eta > 0.0 && eta < 1.0,
+            "online eta must lie in (0, 1), got {eta}"
+        );
+        crate::ensure!(w.iter().all(|v| v.is_finite()), "non-finite weight in warm start");
+        let lazy = LazyVr::new_sgd(w.len(), eta);
+        Ok(Self { w, lazy, params, eta, seen, stepped: 0, correct: 0 })
+    }
+
+    /// Resume from a snapshotted [`Artifact`]: binary linear models only
+    /// (that is what [`OnlineOdm::snapshot`] writes). Parameters and the
+    /// update counter come from the artifact's metadata, so the restored
+    /// learner continues the exact trajectory of the one that snapshotted.
+    pub fn restore(artifact: &Artifact, eta: f64) -> crate::Result<Self> {
+        let model = match artifact.as_binary() {
+            Some(m) => m,
+            None => crate::bail!("online restore needs a binary artifact"),
+        };
+        let w = match model {
+            OdmModel::Linear { w } => w.clone(),
+            _ => crate::bail!("online restore needs a linear model"),
+        };
+        Self::from_weights(w, artifact.meta.params, eta, artifact.meta.updates)
+    }
+
+    /// Input dimensionality.
+    pub fn cols(&self) -> usize {
+        self.w.len()
+    }
+
+    /// ODM objective parameters this learner optimizes.
+    pub fn params(&self) -> &OdmParams {
+        &self.params
+    }
+
+    /// SGD step size.
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    /// Examples consumed so far (including any carried in by a restore).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// One prequential step: score `x` with the pre-update weights (the
+    /// returned value is the decision value `⟨w, x⟩`, and the rolling
+    /// accuracy is updated from its sign *before* training), then apply
+    /// the O(nnz) lazy-decay SGD update for `(x, y)`.
+    pub fn step(&mut self, x: RowRef, y: f32) -> f64 {
+        debug_assert_eq!(x.cols(), self.w.len(), "row/learner dimension mismatch");
+        let m = self.lazy.step_row_online(&mut self.w, x, y, &self.params);
+        // m = y·⟨w,x⟩ pre-update. Correctness matches Artifact::accuracy's
+        // rule `(d >= 0) == (y > 0)`: ties on the boundary go to class +1.
+        let correct = if y > 0.0 { m >= 0.0 } else { m > 0.0 };
+        if correct {
+            self.correct += 1;
+        }
+        self.stepped += 1;
+        self.seen += 1;
+        let yd = y as f64;
+        if yd == 0.0 {
+            0.0
+        } else {
+            m / yd
+        }
+    }
+
+    /// [`OnlineOdm::step`] for a dense feature slice.
+    pub fn step_dense(&mut self, x: &[f32], y: f32) -> f64 {
+        self.step(RowRef::Dense(x), y)
+    }
+
+    /// Fraction of prequential predictions that were correct over the
+    /// steps taken by this instance (0 before any step; restarts at a
+    /// restore — a restored learner's history is in the artifact, not in
+    /// this counter).
+    pub fn prequential_accuracy(&self) -> f64 {
+        if self.stepped == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.stepped as f64
+    }
+
+    /// Current weights with all pending lazy decay applied. `&mut`
+    /// because flushing materializes the composed shrink into `w`.
+    pub fn weights(&mut self) -> &[f64] {
+        self.lazy.flush(&mut self.w);
+        &self.w
+    }
+
+    /// Decision value `⟨w, x⟩` without training (read-only scoring needs
+    /// the pending decay materialized first, hence `&mut`).
+    pub fn decision(&mut self, x: RowRef) -> f64 {
+        self.lazy.flush(&mut self.w);
+        crate::svrg::margin(&self.w, x, 1.0)
+    }
+
+    /// Snapshot the learner to a versioned [`Artifact`]: flushes pending
+    /// decay, clones the weights into a binary linear model, and tags the
+    /// metadata with method `"online"` plus the update counter — the
+    /// artifact flows through [`crate::net::ModelRegistry`] hot-swap (and
+    /// save/load, bit-exactly) unchanged.
+    pub fn snapshot(&mut self) -> Artifact {
+        self.lazy.flush(&mut self.w);
+        Artifact {
+            model: ArtifactModel::Binary(OdmModel::Linear { w: self.w.clone() }),
+            meta: TrainMeta::online(self.params, self.seen),
+        }
+    }
+}
+
+/// Thread-safe shared handle to one online learner, attached to the serve
+/// runtime ([`crate::serve::serve_online`]) and the TCP registry
+/// ([`crate::net::ModelRegistry::start_online`]).
+///
+/// The learner lives behind a mutex (feedback updates are short — one
+/// O(nnz) step); the update counter is mirrored into an atomic so metrics
+/// and cadence checks never take the lock. Because every surface shares
+/// one `Arc<OnlineSlot>`, updates applied while a snapshot hot-swap is in
+/// flight land in the same learner the *next* snapshot reads — no update
+/// is ever lost or applied twice across a swap.
+#[derive(Debug)]
+pub struct OnlineSlot {
+    learner: Mutex<OnlineOdm>,
+    updates: AtomicU64,
+    cols: usize,
+}
+
+impl OnlineSlot {
+    /// Wrap a learner for concurrent feedback.
+    pub fn new(learner: OnlineOdm) -> Self {
+        let cols = learner.cols();
+        let updates = AtomicU64::new(learner.seen());
+        Self { learner: Mutex::new(learner), updates, cols }
+    }
+
+    /// Input dimensionality (lock-free — validation shouldn't contend
+    /// with updates).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total examples the learner has consumed (lock-free mirror).
+    pub fn updates(&self) -> u64 {
+        self.updates.load(Ordering::Acquire)
+    }
+
+    /// Apply one feedback example; returns the pre-update decision value
+    /// and the total update count *after* this example.
+    pub fn update(&self, x: RowRef<'_>, y: f32) -> (f64, u64) {
+        let mut learner = self.lock();
+        let d = learner.step(x, y);
+        let seen = learner.seen();
+        self.updates.store(seen, Ordering::Release);
+        (d, seen)
+    }
+
+    /// [`OnlineSlot::update`] for a dense feature slice.
+    pub fn update_dense(&self, x: &[f32], y: f32) -> (f64, u64) {
+        self.update(RowRef::Dense(x), y)
+    }
+
+    /// Prequential accuracy of the wrapped learner.
+    pub fn prequential_accuracy(&self) -> f64 {
+        self.lock().prequential_accuracy()
+    }
+
+    /// Snapshot the wrapped learner to a versioned artifact (see
+    /// [`OnlineOdm::snapshot`]).
+    pub fn snapshot(&self) -> Artifact {
+        self.lock().snapshot()
+    }
+
+    /// The learner's current weights as a plain linear model (what
+    /// [`crate::serve::serve_online`] compiles its initial plan from).
+    pub fn snapshot_model(&self) -> OdmModel {
+        let mut learner = self.lock();
+        OdmModel::Linear { w: learner.weights().to_vec() }
+    }
+
+    /// Lock the learner, surviving poisoning: a panicking updater can't
+    /// corrupt the weights mid-step (the lazy-decay step has no unwind
+    /// points between related writes worth protecting), so later callers
+    /// keep the last consistent state rather than panicking forever.
+    fn lock(&self) -> std::sync::MutexGuard<'_, OnlineOdm> {
+        match self.learner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+/// Synthetic drifting-blob stream: two Gaussian blobs at `±sep·𝟙` whose
+/// centers *negate* at `drift_at` examples — the worst case for a frozen
+/// model (its post-drift accuracy collapses toward 0) and the standard
+/// abrupt-drift fixture for prequential evaluation.
+#[derive(Debug)]
+pub struct DriftStream {
+    rng: Pcg32,
+    cols: usize,
+    sep: f32,
+    noise: f32,
+    drift_at: u64,
+    emitted: u64,
+}
+
+impl DriftStream {
+    /// Stream of `cols`-dimensional examples drifting after `drift_at`
+    /// draws. Blob separation 1.0 per coordinate against unit Gaussian
+    /// noise: individually weak features, collectively an easy margin —
+    /// the regime where margin-distribution methods shine.
+    pub fn new(cols: usize, drift_at: u64, seed: u64) -> Self {
+        Self { rng: Pcg32::seeded(seed ^ 0x0D11E), cols, sep: 1.0, noise: 1.0, drift_at, emitted: 0 }
+    }
+
+    /// Input dimensionality of emitted rows.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// True once the concept has flipped.
+    pub fn drifted(&self) -> bool {
+        self.emitted >= self.drift_at
+    }
+
+    /// Draw the next `(row, label)` example.
+    pub fn next_example(&mut self) -> (Vec<f32>, f32) {
+        let y: f32 = if self.rng.gen_bool(0.5) { 1.0 } else { -1.0 };
+        let flip: f32 = if self.emitted >= self.drift_at { -1.0 } else { 1.0 };
+        let center = flip * y * self.sep;
+        let x: Vec<f32> =
+            (0..self.cols).map(|_| center + self.noise * self.rng.standard_normal()).collect();
+        self.emitted += 1;
+        (x, y)
+    }
+
+    /// Drain the next `n` examples into a [`Dataset`] (what the frozen
+    /// batch baseline trains on in the benchmark).
+    pub fn take_dataset(&mut self, n: usize, name: &str) -> Dataset {
+        let mut x = Vec::with_capacity(n * self.cols);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (xi, yi) = self.next_example();
+            x.extend_from_slice(&xi);
+            y.push(yi);
+        }
+        Dataset::new(name, x, y, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn params() -> OdmParams {
+        OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 }
+    }
+
+    #[test]
+    fn learns_separable_blobs_prequentially() {
+        let mut stream = DriftStream::new(12, u64::MAX, 7);
+        let mut learner = OnlineOdm::new(12, params(), 0.05).unwrap();
+        // Burn-in, then measure prequential accuracy on the tail only.
+        for _ in 0..300 {
+            let (x, y) = stream.next_example();
+            learner.step_dense(&x, y);
+        }
+        let mut tail = OnlineOdm::from_weights(
+            learner.weights().to_vec(),
+            params(),
+            0.05,
+            learner.seen(),
+        )
+        .unwrap();
+        for _ in 0..300 {
+            let (x, y) = stream.next_example();
+            tail.step_dense(&x, y);
+        }
+        assert!(
+            tail.prequential_accuracy() > 0.9,
+            "post-burn-in prequential accuracy {} too low",
+            tail.prequential_accuracy()
+        );
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_exactly() {
+        let mut stream = DriftStream::new(6, u64::MAX, 11);
+        let mut a = OnlineOdm::new(6, params(), 0.1).unwrap();
+        for _ in 0..120 {
+            let (x, y) = stream.next_example();
+            a.step_dense(&x, y);
+        }
+        // Snapshot → JSON → restore, then drive both on identical input.
+        let json = a.snapshot().to_json().to_string();
+        let art = Artifact::from_json(&crate::util::json::Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(art.meta.method, "online");
+        assert_eq!(art.meta.updates, 120);
+        let mut b = OnlineOdm::restore(&art, 0.1).unwrap();
+        assert_eq!(b.seen(), 120);
+        let cont: Vec<(Vec<f32>, f32)> = (0..80).map(|_| stream.next_example()).collect();
+        for (x, y) in &cont {
+            let da = a.step_dense(x, *y);
+            let db = b.step_dense(x, *y);
+            assert_eq!(da.to_bits(), db.to_bits(), "prequential decisions diverged");
+        }
+        let wa: Vec<u64> = a.weights().iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u64> = b.weights().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wa, wb, "weight trajectories diverged after restore");
+    }
+
+    #[test]
+    fn drift_stream_negates_centers() {
+        let mut stream = DriftStream::new(4, 200, 3);
+        let mut pre = 0.0f64;
+        for _ in 0..200 {
+            let (x, y) = stream.next_example();
+            pre += x.iter().map(|v| (*v * y) as f64).sum::<f64>();
+        }
+        assert!(stream.drifted());
+        let mut post = 0.0f64;
+        for _ in 0..200 {
+            let (x, y) = stream.next_example();
+            post += x.iter().map(|v| (*v * y) as f64).sum::<f64>();
+        }
+        assert!(pre > 0.0 && post < 0.0, "expected y-correlation to flip: {pre} vs {post}");
+    }
+
+    #[test]
+    fn slot_counts_concurrent_updates_exactly() {
+        let slot = Arc::new(OnlineSlot::new(OnlineOdm::new(8, params(), 0.05).unwrap()));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let slot = Arc::clone(&slot);
+            handles.push(std::thread::spawn(move || {
+                let mut stream = DriftStream::new(8, u64::MAX, 100 + t);
+                for _ in 0..200 {
+                    let (x, y) = stream.next_example();
+                    slot.update_dense(&x, y);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(slot.updates(), 800, "lost or duplicated updates");
+        let art = slot.snapshot();
+        assert_eq!(art.meta.updates, 800);
+        let m = art.as_binary().unwrap();
+        match m {
+            OdmModel::Linear { w } => assert!(w.iter().all(|v| v.is_finite())),
+            _ => panic!("online snapshot must be linear"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_eta_and_empty_weights() {
+        assert!(OnlineOdm::new(0, params(), 0.1).is_err());
+        assert!(OnlineOdm::new(4, params(), 0.0).is_err());
+        assert!(OnlineOdm::new(4, params(), 1.0).is_err());
+        assert!(OnlineOdm::new(4, params(), f64::NAN).is_err());
+    }
+}

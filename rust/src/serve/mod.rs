@@ -288,24 +288,33 @@ impl LatencyHistogram {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
-    /// The `p`-th percentile (`0 < p <= 100`) in milliseconds: the upper
-    /// bound of the bucket where the cumulative count crosses `p`%.
-    /// Bucketing contract: the reported value is always >= the exact sample
-    /// percentile and <= 2x it (log2 buckets). Returns 0 with no samples.
-    pub fn percentile_ms(&self, p: f64) -> f64 {
+    /// The `p`-th percentile (`0 < p <= 100`) in milliseconds, or `None`
+    /// when no samples have been recorded — an idle histogram has no
+    /// latency to report, and the old 0-sample path fabricated a ~1 µs
+    /// "percentile" out of the first bucket's upper bound. Reported values
+    /// are the closing bucket's upper bound: always >= the exact sample
+    /// percentile and <= 2x it (log₂ buckets).
+    pub fn percentile(&self, p: f64) -> Option<f64> {
         let total = self.count();
         if total == 0 {
-            return 0.0;
+            return None;
         }
         let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (b, c) in self.buckets.iter().enumerate() {
             seen += c.load(Ordering::Relaxed);
             if seen >= target {
-                return (1u64 << (b + 1)) as f64 / 1e3;
+                return Some((1u64 << (b + 1)) as f64 / 1e3);
             }
         }
-        (1u64 << LAT_BUCKETS) as f64 / 1e3
+        Some((1u64 << LAT_BUCKETS) as f64 / 1e3)
+    }
+
+    /// [`LatencyHistogram::percentile`] flattened for report strings:
+    /// empty histograms read 0 (explicitly *not* a measured latency —
+    /// JSON surfaces use the `Option` form and emit `null` instead).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile(p).unwrap_or(0.0)
     }
 }
 
@@ -394,6 +403,18 @@ impl ServeMetrics {
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed).max(1);
         self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Latency samples recorded so far (0 means the percentile accessors
+    /// have nothing real to report — wire surfaces emit `null`).
+    pub fn latency_samples(&self) -> u64 {
+        self.latency.count()
+    }
+
+    /// End-to-end request latency percentile in milliseconds, `None` while
+    /// idle (see [`LatencyHistogram::percentile`]).
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        self.latency.percentile(p)
     }
 
     /// Median end-to-end request latency, milliseconds.
@@ -528,6 +549,10 @@ pub struct ServerHandle {
     cols: usize,
     /// `Some(K)` on multiclass servers, `None` on binary servers.
     classes: Option<usize>,
+    /// Online learner attached by [`serve_online`]: the feedback path
+    /// ([`ServerHandle::update`]) steps this learner; scoring keeps
+    /// reading the immutable compiled plan from the last snapshot.
+    online: Option<Arc<crate::online::OnlineSlot>>,
 }
 
 impl ServerHandle {
@@ -747,6 +772,38 @@ impl ServerHandle {
         Ok(if self.score(x)? >= 0.0 { 1.0 } else { -1.0 })
     }
 
+    /// Apply one `(row, label)` feedback example to the attached online
+    /// learner (servers started with [`serve_online`]; others answer
+    /// [`SubmitError::Invalid`]). Validation mirrors the scoring path:
+    /// dimension + finiteness on `x`, `y ∈ {−1, +1}`. Returns the total
+    /// update count after this example. Scoring requests are *not*
+    /// affected until the next snapshot — see the consistency contract in
+    /// [`crate::online`].
+    pub fn update(&self, x: &[f32], y: f32) -> std::result::Result<u64, SubmitError> {
+        let slot = match &self.online {
+            Some(s) => s,
+            None => {
+                return Err(SubmitError::Invalid(
+                    "server has no online learner attached (start with serve_online)".into(),
+                ))
+            }
+        };
+        // Reuse the dense request validation (dimension + finiteness).
+        self.dense_row(x)?;
+        if y != 1.0 && y != -1.0 {
+            return Err(SubmitError::Invalid(format!("label must be ±1, got {y}")));
+        }
+        let (_d, seen) = slot.update_dense(x, y);
+        Ok(seen)
+    }
+
+    /// The attached online learner, if this server was started with
+    /// [`serve_online`] (registries share this slot across snapshot
+    /// hot-swaps so no update is lost in transit).
+    pub fn online_slot(&self) -> Option<&Arc<crate::online::OnlineSlot>> {
+        self.online.as_ref()
+    }
+
     /// True until [`ServerHandle::stop`] ran (on any clone of this handle).
     pub fn is_running(&self) -> bool {
         self.tx.lock().unwrap().is_some()
@@ -804,6 +861,23 @@ pub fn serve(model: OdmModel, backend: Backend, cfg: ServeConfig) -> Result<Serv
         Backend::Native => None,
     };
     spawn_runtime(model, backend, plan, cfg, cols, None)
+}
+
+/// Start a binary server for an online learner: compiles the scoring plan
+/// from the slot's *current* snapshot and attaches the slot so
+/// [`ServerHandle::update`] can apply feedback. The running plan is
+/// immutable — updates accumulate in the learner and become visible to
+/// scoring when the owner (typically [`crate::net::ModelRegistry`])
+/// snapshots and swaps in a fresh server. Native backend only: online
+/// snapshots are plain linear models.
+pub fn serve_online(
+    slot: Arc<crate::online::OnlineSlot>,
+    cfg: ServeConfig,
+) -> Result<ServerHandle> {
+    let model = slot.snapshot_model();
+    let mut handle = serve(model, Backend::Native, cfg)?;
+    handle.online = Some(slot);
+    Ok(handle)
 }
 
 /// Start a multiclass server: one sharded plan per one-vs-rest class, each
@@ -872,6 +946,7 @@ fn spawn_runtime(
         batcher: Arc::new(Mutex::new(Some(batcher))),
         cols,
         classes,
+        online: None,
     })
 }
 
@@ -1125,6 +1200,19 @@ mod tests {
             &SolveBudget::default(),
         );
         (m, ds)
+    }
+
+    fn linear_model() -> OdmModel {
+        OdmModel::Linear { w: vec![0.5, -1.0, 0.25, 0.0, 2.0] }
+    }
+
+    fn one_worker() -> ServeConfig {
+        ServeConfig {
+            workers: 1,
+            shards: 1,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -1430,14 +1518,63 @@ mod tests {
     #[test]
     fn latency_histogram_percentiles() {
         let hist = LatencyHistogram::new();
+        // Idle histograms have no latency to report: the Option form says
+        // so, the flattened form reads 0 — never the old phantom ~1 µs
+        // first-bucket bound.
+        assert_eq!(hist.percentile(50.0), None);
+        assert_eq!(hist.percentile(99.0), None);
         assert_eq!(hist.percentile_ms(50.0), 0.0);
         for _ in 0..99 {
             hist.record_us(100); // bucket [64, 128) µs
         }
         hist.record_us(1 << 20); // one ~1 s outlier
         assert_eq!(hist.count(), 100);
+        assert!(hist.percentile(50.0).is_some());
         assert!(hist.percentile_ms(50.0) <= 0.128 + 1e-12);
         assert!(hist.percentile_ms(99.0) <= 0.128 + 1e-12);
         assert!(hist.percentile_ms(100.0) >= 1000.0);
+    }
+
+    #[test]
+    fn idle_server_metrics_report_no_phantom_latency() {
+        let h = serve(linear_model(), Backend::Native, one_worker()).unwrap();
+        assert_eq!(h.metrics().latency_samples(), 0);
+        assert_eq!(h.metrics().percentile(50.0), None);
+        assert_eq!(h.metrics().p99_ms(), 0.0);
+        h.stop();
+    }
+
+    #[test]
+    fn online_server_updates_then_reswaps_fresh_snapshot() {
+        use crate::online::{DriftStream, OnlineOdm, OnlineSlot};
+        let params = crate::odm::OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 };
+        let slot = Arc::new(OnlineSlot::new(OnlineOdm::new(5, params, 0.05).unwrap()));
+        let h = serve_online(Arc::clone(&slot), one_worker()).unwrap();
+        // A fresh learner scores 0 everywhere; the plan is a valid server.
+        assert_eq!(h.score(&[1.0; 5]).unwrap(), 0.0);
+        assert!(h.online_slot().is_some());
+        // Feedback flows through the handle; scoring stays on the old
+        // (immutable) snapshot until a new server is compiled.
+        let mut stream = DriftStream::new(5, u64::MAX, 21);
+        let mut last = 0;
+        for _ in 0..200 {
+            let (x, y) = stream.next_example();
+            last = h.update(&x, y).unwrap();
+        }
+        assert_eq!(last, 200);
+        assert_eq!(h.score(&[1.0; 5]).unwrap(), 0.0, "plan must be snapshot-isolated");
+        // Dimension/label/attachment validation on the feedback path.
+        assert!(matches!(h.update(&[1.0; 4], 1.0), Err(SubmitError::Invalid(_))));
+        assert!(matches!(h.update(&[1.0; 5], 0.5), Err(SubmitError::Invalid(_))));
+        h.stop();
+        // Re-serve from the live slot: the updated weights now score.
+        let h2 = serve_online(Arc::clone(&slot), one_worker()).unwrap();
+        let (x, _) = stream.next_example();
+        let d = h2.score(&x).unwrap();
+        assert!(d.is_finite() && d != 0.0);
+        h2.stop();
+        let plain = serve(linear_model(), Backend::Native, one_worker()).unwrap();
+        assert!(matches!(plain.update(&[1.0; 4], 1.0), Err(SubmitError::Invalid(_))));
+        plain.stop();
     }
 }

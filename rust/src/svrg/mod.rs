@@ -56,7 +56,7 @@ impl GradSource for NativeGrad {
 
 /// Per-instance margin helper: m_i = y_i <w, x_i> (O(nnz) on sparse rows).
 #[inline]
-fn margin(w: &[f64], x: RowRef, y: f32) -> f64 {
+pub(crate) fn margin(w: &[f64], x: RowRef, y: f32) -> f64 {
     // NOTE (§Perf): a 4-lane manual unroll was tried on the dense arm and
     // measured ~13% SLOWER than this simple zip loop (the compiler already
     // vectorizes it, and the unroll defeated its f32->f64 widening
@@ -182,7 +182,11 @@ pub fn resolve_eta<'a>(cfg_eta: f64, data: impl Into<Rows<'a>>, params: &OdmPara
 /// Lazily-applied variance-reduced iterate (see module docs): coordinates
 /// untouched by a step accumulate the closed-form decay toward the
 /// per-epoch fixed point `f = w_snap − h` and are materialized on demand.
-struct LazyVr {
+///
+/// Crate-visible so the online learner ([`crate::online`]) reuses the same
+/// O(nnz) lazy-decay bookkeeping for plain (non-variance-reduced) SGD steps
+/// via [`LazyVr::step_row_online`], where the fixed point is `f = 0`.
+pub(crate) struct LazyVr {
     /// Fixed point f_j = w_snap_j − h_j of the untouched-coordinate map.
     f: Vec<f64>,
     /// 1 − η.
@@ -212,13 +216,37 @@ impl LazyVr {
         }
     }
 
+    /// Lazy iterate for plain online SGD: the untouched-coordinate map is
+    /// `w_j ← (1−η) w_j` (fixed point 0), composed in closed form between
+    /// touches exactly like the variance-reduced variant.
+    pub(crate) fn new_sgd(cols: usize, eta: f64) -> Self {
+        Self {
+            f: vec![0.0; cols],
+            decay: 1.0 - eta,
+            applied: vec![0; cols],
+            step: 0,
+            eta,
+            all_current: true,
+        }
+    }
+
     /// Bring coordinate j current through all steps performed so far.
     /// Only meaningful while `all_current` is false.
     #[inline]
     fn refresh(&mut self, w: &mut [f64], j: usize) {
         let k = self.step - self.applied[j];
         if k > 0 {
-            let p = if k == 1 { self.decay } else { self.decay.powi(k as i32) };
+            // `powi` takes an i32 exponent: on streams long enough that a
+            // coordinate's untouched gap exceeds i32::MAX, `k as i32` would
+            // silently truncate (even flip the sign) and explode the decay
+            // factor. Checked conversion, with a powf fallback that stays
+            // exact for any representable k and underflows cleanly to the
+            // fixed point (decay < 1 ⇒ decay^k → 0).
+            let p = match (k, i32::try_from(k)) {
+                (1, _) => self.decay,
+                (_, Ok(k32)) => self.decay.powi(k32),
+                (_, Err(_)) => self.decay.powf(k as f64),
+            };
             w[j] = self.f[j] + p * (w[j] - self.f[j]);
             self.applied[j] = self.step;
         }
@@ -272,8 +300,63 @@ impl LazyVr {
         }
     }
 
+    /// One plain SGD step on instance (x, y) for the online learner:
+    /// `w ← (1−η)(w) − η c y x` with `c = grad_coef(margin)`, O(nnz(x))
+    /// through the same lazy bookkeeping as [`LazyVr::step_row`] (requires
+    /// a [`LazyVr::new_sgd`] iterate, whose fixed point is 0). Returns the
+    /// pre-update margin so callers can do prequential (test-then-train)
+    /// accounting without a second pass over the row.
+    pub(crate) fn step_row_online(
+        &mut self,
+        w: &mut [f64],
+        x: RowRef,
+        y: f32,
+        params: &OdmParams,
+    ) -> f64 {
+        match x {
+            RowRef::Dense(xs) => {
+                if !self.all_current {
+                    for j in 0..xs.len() {
+                        self.refresh(w, j);
+                    }
+                    self.all_current = true;
+                }
+                let m = margin(w, x, y);
+                let dc = grad_coef(m, params) * y as f64;
+                let eta = self.eta;
+                for (j, xj) in xs.iter().enumerate() {
+                    w[j] = self.f[j] + self.decay * (w[j] - self.f[j]) - eta * dc * *xj as f64;
+                }
+                self.step += 1;
+                m
+            }
+            RowRef::Sparse { indices, values, .. } => {
+                if self.all_current {
+                    for a in self.applied.iter_mut() {
+                        *a = self.step;
+                    }
+                    self.all_current = false;
+                }
+                for &i in indices {
+                    self.refresh(w, i as usize);
+                }
+                let m = margin(w, x, y);
+                let dc = grad_coef(m, params) * y as f64;
+                let next = self.step + 1;
+                let eta = self.eta;
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    let j = *i as usize;
+                    w[j] = self.f[j] + self.decay * (w[j] - self.f[j]) - eta * dc * *v as f64;
+                    self.applied[j] = next;
+                }
+                self.step = next;
+                m
+            }
+        }
+    }
+
     /// Apply all pending decay (checkpoints, epoch end, final model).
-    fn flush(&mut self, w: &mut [f64]) {
+    pub(crate) fn flush(&mut self, w: &mut [f64]) {
         if self.all_current {
             return;
         }
@@ -768,6 +851,75 @@ mod tests {
         };
         for (a, b) in ws.iter().zip(wd) {
             assert!((a - b).abs() < 1e-6 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lazy_flush_matches_eager_decay_on_large_gap() {
+        // A coordinate untouched for k steps must flush to exactly the
+        // k-fold composition of the per-step affine map (the closed form
+        // the whole O(nnz) story rests on).
+        let (w_snap, h, eta) = ([0.5f64], [0.125f64], 0.02);
+        let mut lazy = LazyVr::new(&w_snap, &h, eta);
+        lazy.all_current = false;
+        let k = 500usize;
+        lazy.step = k;
+        let mut w = vec![2.0f64];
+        lazy.flush(&mut w);
+        let f = w_snap[0] - h[0];
+        let mut eager = 2.0f64;
+        for _ in 0..k {
+            eager = f + (1.0 - eta) * (eager - f);
+        }
+        assert!((w[0] - eager).abs() < 1e-10, "lazy {} vs eager {eager}", w[0]);
+    }
+
+    #[test]
+    fn lazy_decay_survives_gaps_beyond_i32() {
+        // Gaps longer than i32::MAX steps used to truncate through
+        // `powi(k as i32)` (wrapping to a *negative* exponent, exploding
+        // the factor). The checked conversion underflows cleanly to the
+        // fixed point instead.
+        let mut lazy = LazyVr::new(&[1.0, 2.0], &[0.25, 0.5], 0.01);
+        lazy.all_current = false;
+        lazy.step = (i32::MAX as usize) + 17;
+        let mut w = vec![5.0f64, -3.0];
+        lazy.flush(&mut w);
+        // 0.99^(2^31) underflows to exactly 0, so w lands on f = w_snap − h.
+        assert_eq!(w, vec![0.75, 1.5]);
+    }
+
+    #[test]
+    fn online_sgd_step_matches_eager_reference() {
+        // step_row_online on sparse rows (lazy path) must track the eager
+        // dense reference update w ← (1−η)w − η·c·y·x bit-for-bit within
+        // floating tolerance, including across untouched-coordinate gaps.
+        let sp = SparseSynthSpec::new(120, 40, 0.12, 19).generate();
+        let dense = sp.to_dense();
+        let p = OdmParams::default();
+        let eta = 0.05;
+        let mut lazy = LazyVr::new_sgd(sp.cols, eta);
+        let mut w_lazy = vec![0.0f64; sp.cols];
+        let mut w_eager = vec![0.0f64; sp.cols];
+        for i in 0..sp.rows {
+            let (lo, hi) = (sp.indptr[i], sp.indptr[i + 1]);
+            let x = RowRef::Sparse {
+                indices: &sp.indices[lo..hi],
+                values: &sp.values[lo..hi],
+                cols: sp.cols,
+            };
+            let m_lazy = lazy.step_row_online(&mut w_lazy, x, sp.y[i], &p);
+            let xd = dense.row(i);
+            let m_eager = margin(&w_eager, RowRef::Dense(xd), dense.y[i]);
+            let c = grad_coef(m_eager, &p) * dense.y[i] as f64;
+            for (j, v) in xd.iter().enumerate() {
+                w_eager[j] = (1.0 - eta) * w_eager[j] - eta * c * *v as f64;
+            }
+            assert!((m_lazy - m_eager).abs() < 1e-9, "row {i}: {m_lazy} vs {m_eager}");
+        }
+        lazy.flush(&mut w_lazy);
+        for (a, b) in w_lazy.iter().zip(&w_eager) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
         }
     }
 

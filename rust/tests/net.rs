@@ -25,7 +25,7 @@ fn loopback_available() -> bool {
     TcpListener::bind("127.0.0.1:0").is_ok()
 }
 
-fn linear_artifact(w: Vec<f32>) -> Artifact {
+fn linear_artifact(w: Vec<f64>) -> Artifact {
     let model = ArtifactModel::Binary(OdmModel::Linear { w });
     let meta = TrainMeta::legacy(&model);
     Artifact { model, meta }
@@ -330,6 +330,88 @@ fn wire_protocol_round_trips_every_request_kind() {
             other => panic!("kind 0x{:02x} failed to round-trip: {other:?}", req.kind()),
         }
     }
+}
+
+/// Online fault drill: feedback updates and scores race snapshot-driven
+/// hot-swaps over real sockets. The contract under test — zero lost or
+/// duplicated updates (exactly-once counting across every swap), no typed
+/// `Stopped` ever leaking to a healthy client, and the served artifact
+/// advancing through the cadence-triggered versions.
+#[test]
+fn online_updates_survive_snapshot_swaps_without_loss() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    use sodm::odm::OdmParams;
+    use sodm::online::{DriftStream, OnlineOdm};
+
+    let params = OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 };
+    let learner = OnlineOdm::new(8, params, 0.05).unwrap();
+    let cfg = ServeConfig {
+        workers: 2,
+        shards: 2,
+        max_wait: std::time::Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
+    let cadence = 20u64;
+    let registry = Arc::new(ModelRegistry::start_online(learner, cfg, cadence).unwrap());
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+    let addr = server.local_addr();
+
+    let updaters = 3usize;
+    let per_updater = 80usize;
+    let scores = 120usize;
+    std::thread::scope(|s| {
+        for t in 0..updaters {
+            s.spawn(move || {
+                let mut conn = NetClient::connect(addr).unwrap();
+                let mut stream = DriftStream::new(8, u64::MAX, 40 + t as u64);
+                for _ in 0..per_updater {
+                    let (x, y) = stream.next_example();
+                    match conn.update(&x, y).unwrap() {
+                        Outcome::Value((seen, _version)) => {
+                            assert!(seen >= 1, "seen counter must be post-update");
+                        }
+                        Outcome::Rejected { code, msg } => {
+                            panic!("update rejected mid-stream ({code:?}): {msg}")
+                        }
+                    }
+                }
+            });
+        }
+        // A scorer hammers the same server across every swap: values only,
+        // or Overloaded shed — never Stopped, never a transport error.
+        let mut conn = NetClient::connect(addr).unwrap();
+        let probe = [0.5f32; 8];
+        for i in 0..scores {
+            match conn.score(&probe).unwrap() {
+                Outcome::Value(d) => assert!(d.is_finite(), "score {i} not finite"),
+                Outcome::Rejected { code, msg } => {
+                    assert!(
+                        matches!(code, ErrorCode::Overloaded),
+                        "score {i} drew non-shed rejection ({code:?}): {msg}"
+                    );
+                }
+            }
+        }
+    });
+
+    let submitted = (updaters * per_updater) as u64;
+    let slot = registry.online_slot().expect("online registry");
+    assert_eq!(slot.updates(), submitted, "lost or duplicated updates across swaps");
+    // Concurrent CAS claims may merge cadence boundaries (one swap can
+    // cover several), but with 240 updates at cadence 20 at least one swap
+    // is guaranteed: the first updater to check past a boundary wins the
+    // CAS (a failed CAS means another updater's swap succeeded).
+    assert!(
+        registry.version() >= 2,
+        "cadence swaps must advance the artifact: v{} after {submitted} updates",
+        registry.version()
+    );
+    // The snapshot the registry would publish next counts every update too.
+    assert_eq!(slot.snapshot().meta.updates, submitted);
+    server.stop();
 }
 
 #[test]

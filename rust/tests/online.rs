@@ -1,0 +1,134 @@
+//! Integration tests for the online / streaming subsystem
+//! ([`sodm::online`] + [`sodm::serve::serve_online`]): the drift contract
+//! (prequential online accuracy must beat a frozen batch model after the
+//! concept flips), bit-exact snapshot→restore through an artifact file on
+//! disk, and snapshot-isolated serving — concurrent feedback updates must
+//! never tear a served score.
+
+use std::sync::Arc;
+
+use sodm::api::{self, Artifact, Method, TrainSpec};
+use sodm::data::Dataset;
+use sodm::odm::OdmParams;
+use sodm::online::{DriftStream, OnlineOdm, OnlineSlot};
+use sodm::serve::{serve_online, ServeConfig};
+
+fn params() -> OdmParams {
+    OdmParams { lambda: 8.0, theta: 0.2, upsilon: 0.5 }
+}
+
+/// After the drift negates the concept, the frozen batch model collapses
+/// while the online learner re-converges within ~1/eta steps — the gap on
+/// identical post-drift rows is the whole point of streaming updates.
+#[test]
+fn online_learner_beats_frozen_batch_model_after_drift() {
+    let (pre, post, cols) = (500usize, 500usize, 10usize);
+    let mut stream = DriftStream::new(cols, pre as u64, 13);
+    let train = stream.take_dataset(pre, "pre-drift");
+    let spec = TrainSpec::new(Method::Svrg).epochs(4).seed(13).build().unwrap();
+    let frozen = api::train(&spec, &train).unwrap();
+
+    let mut online = OnlineOdm::new(cols, params(), 0.05).unwrap();
+    for i in 0..train.rows {
+        online.step_dense(train.row(i), train.y[i]);
+    }
+    let mut tail =
+        OnlineOdm::from_weights(online.weights().to_vec(), params(), 0.05, online.seen()).unwrap();
+    let mut px = Vec::with_capacity(post * cols);
+    let mut py = Vec::with_capacity(post);
+    for _ in 0..post {
+        let (x, y) = stream.next_example();
+        tail.step_dense(&x, y);
+        px.extend_from_slice(&x);
+        py.push(y);
+    }
+    let post_ds = Dataset::new("post-drift", px, py, cols);
+    let frozen_post = frozen.accuracy(&post_ds).unwrap();
+    let online_post = tail.prequential_accuracy();
+    assert!(
+        online_post >= frozen_post + 0.15,
+        "online prequential {online_post:.4} must beat frozen {frozen_post:.4} after drift"
+    );
+}
+
+/// Snapshot → artifact file on disk → restore resumes the *identical*
+/// trajectory: every later prequential decision and the final weights
+/// match to the bit (f64 weights serialize shortest-round-trip).
+#[test]
+fn snapshot_artifact_file_round_trip_restores_bit_exactly() {
+    let mut stream = DriftStream::new(7, u64::MAX, 21);
+    let mut a = OnlineOdm::new(7, params(), 0.08).unwrap();
+    for _ in 0..150 {
+        let (x, y) = stream.next_example();
+        a.step_dense(&x, y);
+    }
+    let dir = std::env::temp_dir().join(format!("sodm-online-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("online-snapshot.json");
+    a.snapshot().save(&path).unwrap();
+
+    let art = Artifact::load(&path).unwrap();
+    assert_eq!(art.meta.method, "online");
+    assert_eq!(art.meta.updates, 150);
+    let mut b = OnlineOdm::restore(&art, 0.08).unwrap();
+    assert_eq!(b.seen(), 150);
+    for _ in 0..100 {
+        let (x, y) = stream.next_example();
+        let da = a.step_dense(&x, y);
+        let db = b.step_dense(&x, y);
+        assert_eq!(da.to_bits(), db.to_bits(), "prequential decisions diverged after restore");
+    }
+    let wa: Vec<u64> = a.weights().iter().map(|v| v.to_bits()).collect();
+    let wb: Vec<u64> = b.weights().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(wa, wb, "weight trajectories diverged after file round trip");
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir(&dir);
+}
+
+/// Snapshot isolation through the serve runtime: the compiled plan behind
+/// a [`serve_online`] handle is immutable, so one probe must score
+/// bit-identically across the whole run while updater threads hammer the
+/// shared learner — and the update counter must come out exact.
+#[test]
+fn concurrent_updates_never_tear_served_scores() {
+    let slot = Arc::new(OnlineSlot::new(OnlineOdm::new(6, params(), 0.05).unwrap()));
+    // Warm the learner so the served snapshot carries trained weights.
+    let mut warm = DriftStream::new(6, u64::MAX, 31);
+    for _ in 0..100 {
+        let (x, y) = warm.next_example();
+        slot.update_dense(&x, y);
+    }
+    let cfg = ServeConfig { workers: 2, shards: 2, ..ServeConfig::default() };
+    let handle = serve_online(Arc::clone(&slot), cfg).unwrap();
+    let probe = [0.25f32; 6];
+    let want = handle.score(&probe).unwrap();
+    assert!(want.is_finite());
+
+    std::thread::scope(|s| {
+        for t in 0..3u64 {
+            let slot = Arc::clone(&slot);
+            s.spawn(move || {
+                let mut stream = DriftStream::new(6, u64::MAX, 60 + t);
+                for _ in 0..300 {
+                    let (x, y) = stream.next_example();
+                    slot.update_dense(&x, y);
+                }
+            });
+        }
+        for i in 0..200 {
+            let got = handle.score(&probe).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "score {i} torn by a live update");
+        }
+    });
+    assert_eq!(slot.updates(), 100 + 3 * 300, "lost or duplicated updates");
+
+    // A fresh snapshot handle serves the post-update weights; feedback
+    // through the *handle* steps the same shared learner.
+    let fresh = serve_online(Arc::clone(&slot), ServeConfig::default()).unwrap();
+    assert!(fresh.score(&probe).unwrap().is_finite());
+    let (x, y) = warm.next_example();
+    let seen = fresh.update(&x, y).unwrap();
+    assert_eq!(seen, 100 + 3 * 300 + 1);
+    handle.stop();
+    fresh.stop();
+}
