@@ -53,6 +53,7 @@ pub mod artifact;
 
 pub use artifact::{Artifact, ArtifactInfo, ArtifactModel, ArtifactPlan, TrainMeta, FORMAT_VERSION};
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::baselines::cascade::{train_cascade, CascadeConfig};
@@ -63,6 +64,7 @@ use crate::cluster::SimCluster;
 use crate::data::libsvm::LoadedDataset;
 use crate::data::sparse::SparseDataset;
 use crate::data::{identity_indices, DataView, Dataset, Rows};
+use crate::dist::{self, DistOptions};
 use crate::featmap::FeatureMap;
 use crate::infer::PlanPrecision;
 use crate::kernel::KernelKind;
@@ -213,6 +215,41 @@ pub enum FeatMapSpec {
     },
 }
 
+/// Distributed-run configuration attached to a [`TrainSpec`]: where the
+/// shard set lives, which executable serves it, and how the coordinator
+/// checkpoints. Only the plain linear [`Method::Dsvrg`] trains distributed
+/// (see [`crate::dist`]).
+#[derive(Clone, Debug)]
+pub struct DistSpec {
+    /// Directory holding `manifest.json` plus shard files (`sodm shard`).
+    pub shard_dir: PathBuf,
+    /// Worker executable to spawn — normally the running `sodm` binary.
+    pub worker_exe: PathBuf,
+    /// Rows resident per worker chunk; `0` loads shards fully in memory.
+    pub chunk_rows: usize,
+    /// Where the coordinator writes resumable checkpoints; `None` disables.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint cadence in stages; `0` disables cadence checkpoints.
+    pub ckpt_every_stages: usize,
+    /// Per-frame socket timeout in milliseconds; `0` disables.
+    pub frame_timeout_ms: u64,
+}
+
+impl DistSpec {
+    /// Distributed config over `shard_dir` served by `worker_exe`, with
+    /// in-memory shards, no checkpointing, and a 30 s frame timeout.
+    pub fn new(shard_dir: impl Into<PathBuf>, worker_exe: impl Into<PathBuf>) -> Self {
+        DistSpec {
+            shard_dir: shard_dir.into(),
+            worker_exe: worker_exe.into(),
+            chunk_rows: 0,
+            ckpt_dir: None,
+            ckpt_every_stages: 0,
+            frame_timeout_ms: 30_000,
+        }
+    }
+}
+
 /// A structurally invalid [`TrainSpec`] — returned by [`TrainSpec::build`] /
 /// [`TrainSpec::validate`] instead of panicking inside a trainer, mirroring
 /// [`crate::serve::ServeConfig::validate`].
@@ -295,6 +332,12 @@ pub enum SpecError {
     ZeroRffDim,
     /// A Nyström embedding needs at least one landmark.
     ZeroLandmarks,
+    /// A [`DistSpec`] was attached to a spec that is not plain linear
+    /// DSVRG — the multi-process coordinator only drives Algorithm 2.
+    DistributedUnsupported {
+        /// The offending method's name.
+        method: &'static str,
+    },
 }
 
 impl std::fmt::Display for SpecError {
@@ -339,6 +382,13 @@ impl std::fmt::Display for SpecError {
             }
             SpecError::ZeroRffDim => write!(f, "rff dimension must be >= 1"),
             SpecError::ZeroLandmarks => write!(f, "nystrom landmark budget must be >= 1"),
+            SpecError::DistributedUnsupported { method } => {
+                write!(
+                    f,
+                    "distributed training drives the plain linear dsvrg method only \
+                     (no feature maps), got {method:?}"
+                )
+            }
         }
     }
 }
@@ -412,6 +462,10 @@ pub struct TrainSpec {
     /// this run's artifact (recorded in [`TrainMeta`]; training itself
     /// always runs in f64). See [`crate::infer::PlanPrecision`].
     pub plan_precision: PlanPrecision,
+    /// `Some` runs DSVRG as a real multi-process coordinator over an
+    /// on-disk shard set instead of in-process (see [`crate::dist`]; set
+    /// via [`TrainSpec::distributed`], consumed by [`train_distributed`]).
+    pub dist: Option<DistSpec>,
     /// Seed for partitioning, sweep permutations, and shuffles.
     pub seed: u64,
 }
@@ -443,6 +497,7 @@ impl TrainSpec {
             multiclass: None,
             feature_map: None,
             plan_precision: PlanPrecision::default(),
+            dist: None,
             seed: 0x50D,
         }
     }
@@ -578,6 +633,14 @@ impl TrainSpec {
         self
     }
 
+    /// Attach a distributed-run configuration: train over the wire with
+    /// one worker process per shard in `dist.shard_dir` (plain linear
+    /// [`Method::Dsvrg`] only; consumed by [`train_distributed`]).
+    pub fn distributed(mut self, dist: DistSpec) -> Self {
+        self.dist = Some(dist);
+        self
+    }
+
     /// Set the seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
@@ -668,6 +731,11 @@ impl TrainSpec {
         }
         if self.multiclass.is_some() && self.method != Method::ExactOdm {
             return Err(SpecError::MulticlassUnsupported { method: self.method.name() });
+        }
+        // The wire coordinator replays Algorithm 2 exactly; anything that
+        // would reroute or lift the data has no distributed counterpart.
+        if self.dist.is_some() && (self.method != Method::Dsvrg || self.feature_map.is_some()) {
+            return Err(SpecError::DistributedUnsupported { method: self.method.name() });
         }
         Ok(())
     }
@@ -765,6 +833,112 @@ pub fn train_run<'a>(
     cluster: Option<&SimCluster>,
 ) -> crate::Result<TrainRun> {
     train_inner(spec, data.into(), cluster, true)
+}
+
+/// The one place a [`TrainSpec`] maps onto [`SvrgConfig`] — the in-process
+/// gradient dispatch and the distributed coordinator must build the exact
+/// same config or the 1e-9 dist-vs-sim equivalence breaks.
+fn svrg_config(spec: &TrainSpec) -> SvrgConfig {
+    SvrgConfig {
+        epochs: spec.epochs,
+        eta: spec.eta,
+        partitions: spec.partitions,
+        stratums: spec.stratums,
+        coreset: spec.coreset,
+        checkpoints_per_epoch: spec.checkpoints_per_epoch,
+        ordered: spec.ordered,
+        seed: spec.seed,
+    }
+}
+
+/// Everything [`train_distributed`] returns: the standard [`TrainRun`]
+/// shape plus the wire accounting and the resume handle.
+pub struct DistTrainRun {
+    /// The artifact + per-checkpoint snapshots, as [`train_run`] shapes
+    /// them (`class_stats` empty, `cache_hit_rate` 0 — binary linear only).
+    pub run: TrainRun,
+    /// Worker count, per-epoch/total bytes on the wire, frames sent.
+    pub stats: dist::DistStats,
+    /// Newest on-disk checkpoint, when the spec enabled checkpointing.
+    pub last_checkpoint: Option<PathBuf>,
+    /// True when the run stopped at a checkpoint instead of finishing
+    /// (see [`dist::DistOptions::stop_after_stages`]).
+    pub interrupted: bool,
+}
+
+/// Train a distributed spec: spawn one worker process per shard in the
+/// spec's [`DistSpec::shard_dir`] (written by `sodm shard`), drive DSVRG
+/// over loopback TCP, and wrap the result. The spec must carry a
+/// [`DistSpec`] ([`TrainSpec::distributed`]); the coordinator holds no
+/// training rows — data lives out-of-core in the worker shards. The final
+/// iterate is bit-exact (within 1e-9 asserted by tests) with what
+/// [`train`] computes in-process on the unsharded dataset.
+pub fn train_distributed(spec: &TrainSpec) -> crate::Result<DistTrainRun> {
+    distributed_inner(spec, None)
+}
+
+/// Resume an interrupted distributed run from a checkpoint written by a
+/// previous [`train_distributed`] call — `ckpt` is the path named by a
+/// worker-loss error or [`DistTrainRun::last_checkpoint`] (or
+/// [`dist::latest_checkpoint`]). The completed prefix is not recomputed
+/// and the final model is bit-exact with an uninterrupted run.
+pub fn resume_distributed(spec: &TrainSpec, ckpt: &Path) -> crate::Result<DistTrainRun> {
+    distributed_inner(spec, Some(ckpt))
+}
+
+fn distributed_inner(spec: &TrainSpec, resume: Option<&Path>) -> crate::Result<DistTrainRun> {
+    spec.validate()?;
+    let Some(ds) = spec.dist.as_ref() else {
+        crate::bail!("spec has no distributed configuration - call .distributed(..)");
+    };
+    let cfg = svrg_config(spec);
+    let opts = DistOptions {
+        grad_workers: spec.workers,
+        chunk_rows: ds.chunk_rows,
+        ckpt_dir: ds.ckpt_dir.clone(),
+        ckpt_every_stages: ds.ckpt_every_stages,
+        frame_timeout_ms: ds.frame_timeout_ms,
+        stop_after_stages: None,
+    };
+    let started = Instant::now();
+    let run = match resume {
+        None => dist::train_from_dir(&ds.worker_exe, &ds.shard_dir, &spec.params, &cfg, &opts)?,
+        Some(ck) => {
+            dist::resume_from_dir(&ds.worker_exe, &ds.shard_dir, ck, &spec.params, &cfg, &opts)?
+        }
+    };
+    let dist::DistRun {
+        model,
+        checkpoints,
+        total_seconds: _,
+        stats,
+        last_checkpoint,
+        interrupted,
+    } = run;
+    let snapshots = checkpoints
+        .iter()
+        .map(|c| TrainSnapshot {
+            elapsed: c.elapsed,
+            objective: c.objective,
+            partitions: stats.workers,
+            model: OdmModel::Linear { w: c.w.clone() },
+        })
+        .collect();
+    let mut meta = finish_meta(spec, started.elapsed().as_secs_f64(), MetaAcc::gradient());
+    // Record the wire provenance and whether every epoch actually ran.
+    meta.method = "dsvrg-dist".to_string();
+    meta.converged = !interrupted;
+    Ok(DistTrainRun {
+        run: TrainRun {
+            artifact: Artifact { model: ArtifactModel::Binary(model), meta },
+            snapshots,
+            class_stats: Vec::new(),
+            cache_hit_rate: 0.0,
+        },
+        stats,
+        last_checkpoint,
+        interrupted,
+    })
 }
 
 fn train_inner(
@@ -1017,16 +1191,7 @@ fn train_binary(
         // Sodm + linear kernel routes to DSVRG (paper §3.3), and the
         // explicit gradient methods land here directly.
         Method::Sodm | Method::Dsvrg | Method::Svrg | Method::Csvrg => {
-            let cfg = SvrgConfig {
-                epochs: spec.epochs,
-                eta: spec.eta,
-                partitions: spec.partitions,
-                stratums: spec.stratums,
-                coreset: spec.coreset,
-                checkpoints_per_epoch: spec.checkpoints_per_epoch,
-                ordered: spec.ordered,
-                seed: spec.seed,
-            };
+            let cfg = svrg_config(spec);
             let grad = NativeGrad { workers: spec.workers };
             let (run, partitions) = match spec.method {
                 Method::Svrg => (train_svrg(rows, &spec.params, &cfg, &grad), 1),
@@ -1219,6 +1384,22 @@ mod tests {
         );
         assert!(rbf_spec(Method::Sodm).build().is_ok());
         assert!(rbf_spec(Method::ExactOdm).multiclass(OvrOptions::default()).build().is_ok());
+    }
+
+    #[test]
+    fn distributed_requires_plain_linear_dsvrg() {
+        let d = DistSpec::new("shards", "sodm");
+        assert_eq!(
+            TrainSpec::new(Method::Sodm).distributed(d.clone()).build().unwrap_err(),
+            SpecError::DistributedUnsupported { method: "sodm" }
+        );
+        // A feature map lifts training into a dense space the raw shards
+        // don't hold, so dist + rff is rejected even on dsvrg.
+        assert_eq!(
+            rbf_spec(Method::Dsvrg).rff(32).distributed(d.clone()).build().unwrap_err(),
+            SpecError::DistributedUnsupported { method: "dsvrg" }
+        );
+        assert!(TrainSpec::new(Method::Dsvrg).distributed(d).build().is_ok());
     }
 
     #[test]

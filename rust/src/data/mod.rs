@@ -7,6 +7,7 @@
 //! dense and sparse backings share one code path without copies.
 
 pub mod libsvm;
+pub mod shardfile;
 pub mod sparse;
 pub mod synth;
 

@@ -1,0 +1,791 @@
+//! On-disk partition shards for distributed / out-of-core training.
+//!
+//! A shard file holds one node's partition of a dataset in a flat
+//! little-endian binary layout (format v1):
+//!
+//! ```text
+//! magic   "SODMSHRD" (8 bytes)
+//! version u32 = 1
+//! flags   u32              bit 0: sparse (CSR payload)
+//! rows    u64              instances in this shard
+//! cols    u64              feature dimensionality
+//! index   u32              shard index within the set
+//! count   u32              shard count of the set
+//! seed    u64              partitioner seed the set was written with
+//! nnz     u64              stored entries (rows·cols for dense)
+//! labels  rows × f32
+//! orig    rows × u64       original global row ids (ordered-mode tie-breaks)
+//! payload dense:  rows·cols × f32, row-major
+//!         sparse: indptr (rows+1) × u64 · indices nnz × u32 · values nnz × f32
+//! ```
+//!
+//! [`write_shards`] partitions a dataset with the paper's §3.2 stratified
+//! partitioner and writes one file per node plus a `manifest.json`
+//! ([`ShardManifest`]) carrying the set-level facts a data-less coordinator
+//! needs: total rows, the η-auto sample statistic
+//! ([`crate::svrg::sample_sq_mean`]), and per-shard row counts. Sharding is
+//! deterministic in `seed` — the same data and seed produce byte-identical
+//! shards regardless of the writer's thread count — so re-sharding never
+//! silently changes a training trajectory.
+//!
+//! Reading is two-mode: [`ShardFile::load`] materializes the whole shard as
+//! a [`Dataset`]/[`SparseDataset`], while [`ShardFile::chunked`] returns a
+//! [`ShardChunks`] cursor that keeps only one `chunk_rows`-row window of the
+//! payload resident (labels and the CSR row index stay in memory), so a
+//! shard larger than RAM still serves both the sequential gradient pass and
+//! the shuffled variance-reduced pass in O(chunk) memory.
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::data::sparse::SparseDataset;
+use crate::data::{identity_indices, DataView, Dataset, RowRef, Rows};
+use crate::partition::{make_partitions, PartitionStrategy};
+use crate::util::json::{jnum, jstr, Json};
+use crate::{ensure, Result};
+
+/// File magic of shard format v1.
+pub const SHARD_MAGIC: [u8; 8] = *b"SODMSHRD";
+/// Current shard format version.
+pub const SHARD_VERSION: u32 = 1;
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Parsed fixed-size header of a shard file.
+#[derive(Clone, Debug)]
+pub struct ShardHeader {
+    pub rows: usize,
+    pub cols: usize,
+    pub sparse: bool,
+    pub shard_index: u32,
+    pub shard_count: u32,
+    pub seed: u64,
+    pub nnz: u64,
+}
+
+/// Set-level metadata written next to the shard files as `manifest.json`.
+/// Carries everything the coordinator needs without touching feature data.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    /// Dataset provenance name.
+    pub name: String,
+    /// Total rows across all shards.
+    pub rows: usize,
+    pub cols: usize,
+    pub sparse: bool,
+    /// Shard (= partition = worker) count.
+    pub shards: usize,
+    /// Stratum count the partitioner ran with.
+    pub stratums: usize,
+    /// Partitioner seed; must match the training seed for sim equivalence.
+    pub seed: u64,
+    /// Dataset-global η-auto statistic ([`crate::svrg::sample_sq_mean`]),
+    /// computed at shard time so the coordinator resolves the exact same
+    /// step size as an in-process run over the full data.
+    pub sample_sq_mean: f64,
+    /// Rows per shard, in shard order.
+    pub partition_lens: Vec<usize>,
+    /// Shard file names relative to the manifest's directory, in shard order.
+    pub files: Vec<String>,
+}
+
+impl ShardManifest {
+    /// Serialize to the crate's deterministic JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format_version", jnum(SHARD_VERSION as f64)),
+            ("kind", jstr("shard_manifest")),
+            ("name", jstr(self.name.clone())),
+            ("rows", jnum(self.rows as f64)),
+            ("cols", jnum(self.cols as f64)),
+            ("sparse", Json::Bool(self.sparse)),
+            ("shards", jnum(self.shards as f64)),
+            ("stratums", jnum(self.stratums as f64)),
+            ("seed", jnum(self.seed as f64)),
+            ("sample_sq_mean", jnum(self.sample_sq_mean)),
+            (
+                "partition_lens",
+                Json::Arr(self.partition_lens.iter().map(|&l| jnum(l as f64)).collect()),
+            ),
+            ("files", Json::Arr(self.files.iter().map(|f| jstr(f.clone())).collect())),
+        ])
+    }
+
+    /// Parse from JSON, rejecting unknown future versions.
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        let version = j.req("format_version")?.as_usize()?;
+        ensure!(
+            version as u32 <= SHARD_VERSION,
+            "shard manifest format v{version} is newer than this build (v{SHARD_VERSION})"
+        );
+        let partition_lens = j
+            .req("partition_lens")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<usize>>>()?;
+        let files = j
+            .req("files")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<String>>>()?;
+        Ok(ShardManifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            rows: j.req("rows")?.as_usize()?,
+            cols: j.req("cols")?.as_usize()?,
+            sparse: j.req("sparse")?.as_bool()?,
+            shards: j.req("shards")?.as_usize()?,
+            stratums: j.req("stratums")?.as_usize()?,
+            seed: j.req("seed")?.as_f64()? as u64,
+            sample_sq_mean: j.req("sample_sq_mean")?.as_f64()?,
+            partition_lens,
+            files,
+        })
+    }
+
+    /// Write `manifest.json` into `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        fs::write(dir.join(MANIFEST_FILE), self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&path)
+            .map_err(|e| crate::err!("reading shard manifest {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Absolute shard file paths, in shard order.
+    pub fn shard_paths(&self, dir: &Path) -> Vec<PathBuf> {
+        self.files.iter().map(|f| dir.join(f)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn put_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Write the rows `idx` (global ids into `src`) as one shard file. The
+/// payload kind follows the backing: dense datasets write row-major blocks,
+/// CSR datasets write CSR.
+pub fn write_shard(
+    path: &Path,
+    src: Rows,
+    idx: &[usize],
+    shard_index: u32,
+    shard_count: u32,
+    seed: u64,
+) -> Result<()> {
+    let cols = src.cols();
+    let sparse = src.is_sparse();
+    let nnz: u64 = if sparse {
+        idx.iter().map(|&g| src.row_ref(g).nnz() as u64).sum()
+    } else {
+        (idx.len() * cols) as u64
+    };
+    let file = File::create(path)
+        .map_err(|e| crate::err!("creating shard {}: {e}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(&SHARD_MAGIC)?;
+    put_u32(&mut w, SHARD_VERSION)?;
+    put_u32(&mut w, if sparse { 1 } else { 0 })?;
+    put_u64(&mut w, idx.len() as u64)?;
+    put_u64(&mut w, cols as u64)?;
+    put_u32(&mut w, shard_index)?;
+    put_u32(&mut w, shard_count)?;
+    put_u64(&mut w, seed)?;
+    put_u64(&mut w, nnz)?;
+    for &g in idx {
+        put_f32(&mut w, src.label(g))?;
+    }
+    for &g in idx {
+        put_u64(&mut w, g as u64)?;
+    }
+    if sparse {
+        let mut at = 0u64;
+        put_u64(&mut w, 0)?;
+        for &g in idx {
+            at += src.row_ref(g).nnz() as u64;
+            put_u64(&mut w, at)?;
+        }
+        for &g in idx {
+            if let RowRef::Sparse { indices, .. } = src.row_ref(g) {
+                for &i in indices {
+                    put_u32(&mut w, i)?;
+                }
+            }
+        }
+        for &g in idx {
+            if let RowRef::Sparse { values, .. } = src.row_ref(g) {
+                for &v in values {
+                    put_f32(&mut w, v)?;
+                }
+            }
+        }
+    } else {
+        for &g in idx {
+            if let RowRef::Dense(xs) = src.row_ref(g) {
+                for &v in xs {
+                    put_f32(&mut w, v)?;
+                }
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Partition `src` with the §3.2 stratified partitioner (the exact call
+/// [`crate::svrg::train_dsvrg`] makes, including the K ≤ m/2 clamp) and
+/// write one shard per partition plus `manifest.json` into `out_dir`.
+/// Deterministic in `seed`: partition assignment never depends on `workers`.
+pub fn write_shards(
+    src: Rows,
+    shards: usize,
+    stratums: usize,
+    seed: u64,
+    out_dir: &Path,
+    workers: usize,
+) -> Result<ShardManifest> {
+    let m_total = src.rows();
+    ensure!(m_total >= 2, "sharding needs at least 2 rows, got {m_total}");
+    let k = crate::svrg::effective_partitions(shards, m_total);
+    let all_idx = identity_indices(m_total);
+    let view = DataView::from_rows(src, &all_idx);
+    let partitions = make_partitions(
+        &view,
+        &crate::kernel::KernelKind::Linear,
+        k,
+        PartitionStrategy::StratifiedRkhs { stratums },
+        seed,
+        workers,
+    );
+    fs::create_dir_all(out_dir)?;
+    let mut files = Vec::with_capacity(k);
+    let mut lens = Vec::with_capacity(k);
+    for (j, part) in partitions.iter().enumerate() {
+        let file = format!("shard_{j:04}.sodm");
+        write_shard(&out_dir.join(&file), src, part, j as u32, k as u32, seed)?;
+        files.push(file);
+        lens.push(part.len());
+    }
+    let manifest = ShardManifest {
+        name: src.name().to_string(),
+        rows: m_total,
+        cols: src.cols(),
+        sparse: src.is_sparse(),
+        shards: k,
+        stratums,
+        seed,
+        sample_sq_mean: crate::svrg::sample_sq_mean(src),
+        partition_lens: lens,
+        files,
+    };
+    manifest.save(out_dir)?;
+    Ok(manifest)
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+fn get_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn get_u32(r: &mut impl Read) -> Result<u32> {
+    let b = get_exact(r, 4)?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn get_u64(r: &mut impl Read) -> Result<u64> {
+    let b = get_exact(r, 8)?;
+    Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+}
+
+fn get_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let b = get_exact(r, n.checked_mul(4).ok_or_else(|| crate::err!("shard block too large"))?)?;
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn get_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let b = get_exact(r, n.checked_mul(4).ok_or_else(|| crate::err!("shard block too large"))?)?;
+    Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn get_u64s(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
+    let b = get_exact(r, n.checked_mul(8).ok_or_else(|| crate::err!("shard block too large"))?)?;
+    Ok(b
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// A fully loaded shard: the payload materialized into the matching
+/// in-memory dataset type.
+pub enum ShardData {
+    Dense(Dataset),
+    Sparse(SparseDataset),
+}
+
+impl ShardData {
+    /// Borrow as the trainer-facing [`Rows`] abstraction.
+    pub fn as_rows(&self) -> Rows<'_> {
+        match self {
+            ShardData::Dense(d) => Rows::Dense(d),
+            ShardData::Sparse(s) => Rows::Sparse(s),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.as_rows().rows()
+    }
+}
+
+/// An opened shard file: header, labels, and original row ids resident;
+/// feature payload on disk until [`ShardFile::load`] or read through a
+/// [`ShardFile::chunked`] cursor.
+pub struct ShardFile {
+    path: PathBuf,
+    pub header: ShardHeader,
+    labels: Vec<f32>,
+    orig: Vec<u64>,
+    /// Sparse row index (rows+1 offsets); `None` for dense shards.
+    indptr: Option<Vec<u64>>,
+    /// Byte offset of the payload: dense block, or the CSR indices block
+    /// (the indptr that precedes it is already parsed into `indptr`).
+    payload_off: u64,
+}
+
+impl ShardFile {
+    /// Open and validate a shard file, loading header + labels + row ids
+    /// (+ CSR offsets) but not the feature payload.
+    pub fn open(path: &Path) -> Result<ShardFile> {
+        let file = File::open(path)
+            .map_err(|e| crate::err!("opening shard {}: {e}", path.display()))?;
+        let mut r = BufReader::new(file);
+        let magic = get_exact(&mut r, 8)?;
+        ensure!(magic == SHARD_MAGIC, "{}: not a shard file (bad magic)", path.display());
+        let version = get_u32(&mut r)?;
+        ensure!(
+            version == SHARD_VERSION,
+            "{}: shard format v{version}, this build reads v{SHARD_VERSION}",
+            path.display()
+        );
+        let flags = get_u32(&mut r)?;
+        let sparse = flags & 1 != 0;
+        let rows = usize::try_from(get_u64(&mut r)?)?;
+        let cols = usize::try_from(get_u64(&mut r)?)?;
+        let shard_index = get_u32(&mut r)?;
+        let shard_count = get_u32(&mut r)?;
+        let seed = get_u64(&mut r)?;
+        let nnz = get_u64(&mut r)?;
+        ensure!(
+            shard_count > 0 && shard_index < shard_count,
+            "{}: shard {shard_index}/{shard_count} out of range",
+            path.display()
+        );
+        if !sparse {
+            let dense_len = rows
+                .checked_mul(cols)
+                .ok_or_else(|| crate::err!("{}: rows·cols overflows", path.display()))?;
+            ensure!(
+                nnz == dense_len as u64,
+                "{}: dense shard nnz {nnz} != rows·cols {dense_len}",
+                path.display()
+            );
+        }
+        let labels = get_f32s(&mut r, rows)?;
+        let orig = get_u64s(&mut r, rows)?;
+        let mut indptr = None;
+        // header(56) + labels(rows·4) + orig(rows·8)
+        let mut payload_off = 56 + rows as u64 * 12;
+        if sparse {
+            let ip = get_u64s(&mut r, rows + 1)?;
+            let monotone = ip.windows(2).all(|w| w[0] <= w[1]);
+            ensure!(
+                ip.first() == Some(&0) && ip.last() == Some(&nnz) && monotone,
+                "{}: corrupt CSR row offsets",
+                path.display()
+            );
+            payload_off += (rows as u64 + 1) * 8;
+            indptr = Some(ip);
+        }
+        Ok(ShardFile {
+            path: path.to_path_buf(),
+            header: ShardHeader { rows, cols, sparse, shard_index, shard_count, seed, nnz },
+            labels,
+            orig,
+            indptr,
+            payload_off,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.header.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.header.cols
+    }
+
+    /// Shard labels (resident).
+    pub fn labels(&self) -> &[f32] {
+        &self.labels
+    }
+
+    /// Original global row ids, in shard order (resident).
+    pub fn orig(&self) -> &[u64] {
+        &self.orig
+    }
+
+    /// Materialize the whole payload as an in-memory dataset.
+    pub fn load(&self) -> Result<ShardData> {
+        let mut f = File::open(&self.path)?;
+        f.seek(SeekFrom::Start(self.payload_off))?;
+        let name = format!("shard{}:{}", self.header.shard_index, self.path.display());
+        if self.header.sparse {
+            let nnz = usize::try_from(self.header.nnz)?;
+            let indices = get_u32s(&mut f, nnz)?;
+            let values = get_f32s(&mut f, nnz)?;
+            let indptr: Vec<usize> = self
+                .indptr
+                .as_ref()
+                .expect("sparse shard has indptr")
+                .iter()
+                .map(|&v| v as usize)
+                .collect();
+            Ok(ShardData::Sparse(SparseDataset::new(
+                name,
+                indptr,
+                indices,
+                values,
+                self.labels.clone(),
+                self.header.cols,
+            )))
+        } else {
+            let x = get_f32s(&mut f, self.header.rows * self.header.cols)?;
+            Ok(ShardData::Dense(Dataset::new(name, x, self.labels.clone(), self.header.cols)))
+        }
+    }
+
+    /// Open a chunked cursor keeping at most `chunk_rows` rows of payload
+    /// resident (labels and CSR offsets stay in memory — O(rows) ids, not
+    /// O(rows·cols) features).
+    pub fn chunked(&self, chunk_rows: usize) -> Result<ShardChunks> {
+        ensure!(chunk_rows > 0, "chunk_rows must be positive");
+        let file = File::open(&self.path)?;
+        Ok(ShardChunks {
+            file,
+            rows: self.header.rows,
+            cols: self.header.cols,
+            nnz: self.header.nnz,
+            labels: self.labels.clone(),
+            indptr: self.indptr.clone(),
+            payload_off: self.payload_off,
+            chunk_rows,
+            lo: 0,
+            hi: 0,
+            dense: Vec::new(),
+            sp_indices: Vec::new(),
+            sp_values: Vec::new(),
+        })
+    }
+}
+
+/// Chunked shard cursor: random row access with one `chunk_rows`-row payload
+/// window resident. Sequential scans (the gradient and loss passes) fault
+/// one chunk per `chunk_rows` rows; the shuffled variance-reduced pass
+/// faults per jump but still holds only one window at a time.
+pub struct ShardChunks {
+    file: File,
+    rows: usize,
+    cols: usize,
+    nnz: u64,
+    labels: Vec<f32>,
+    indptr: Option<Vec<u64>>,
+    payload_off: u64,
+    chunk_rows: usize,
+    /// Cached window [lo, hi); empty until the first access.
+    lo: usize,
+    hi: usize,
+    dense: Vec<f32>,
+    sp_indices: Vec<u32>,
+    sp_values: Vec<f32>,
+}
+
+impl ShardChunks {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn label(&self, i: usize) -> f32 {
+        self.labels[i]
+    }
+
+    /// Stored payload entries currently resident — the O(chunk) bound the
+    /// out-of-core tests pin.
+    pub fn resident_values(&self) -> usize {
+        self.dense.len() + self.sp_values.len()
+    }
+
+    fn load_chunk(&mut self, lo: usize) -> Result<()> {
+        let hi = (lo + self.chunk_rows).min(self.rows);
+        match &self.indptr {
+            None => {
+                self.file
+                    .seek(SeekFrom::Start(self.payload_off + (lo * self.cols) as u64 * 4))?;
+                self.dense = get_f32s(&mut self.file, (hi - lo) * self.cols)?;
+            }
+            Some(ip) => {
+                let (a, b) = (ip[lo], ip[hi]);
+                let n = usize::try_from(b - a)?;
+                self.file.seek(SeekFrom::Start(self.payload_off + a * 4))?;
+                self.sp_indices = get_u32s(&mut self.file, n)?;
+                let values_off = self.payload_off + self.nnz * 4;
+                self.file.seek(SeekFrom::Start(values_off + a * 4))?;
+                self.sp_values = get_f32s(&mut self.file, n)?;
+            }
+        }
+        self.lo = lo;
+        self.hi = hi;
+        Ok(())
+    }
+
+    /// Feature row `i` (shard-local), faulting in its chunk if needed.
+    pub fn row(&mut self, i: usize) -> Result<RowRef<'_>> {
+        ensure!(i < self.rows, "shard row {i} out of range ({} rows)", self.rows);
+        if i < self.lo || i >= self.hi {
+            self.load_chunk(i / self.chunk_rows * self.chunk_rows)?;
+        }
+        match &self.indptr {
+            None => {
+                let at = (i - self.lo) * self.cols;
+                Ok(RowRef::Dense(&self.dense[at..at + self.cols]))
+            }
+            Some(ip) => {
+                let base = ip[self.lo];
+                let (a, b) = ((ip[i] - base) as usize, (ip[i + 1] - base) as usize);
+                Ok(RowRef::Sparse {
+                    indices: &self.sp_indices[a..b],
+                    values: &self.sp_values[a..b],
+                    cols: self.cols,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::SparseSynthSpec;
+    use crate::data::synth::SynthSpec;
+
+    fn dense_fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    #[test]
+    fn dense_shard_round_trips() {
+        let ds = dense_fixture(40, 3);
+        let dir = crate::util::temp_dir("shard-dense");
+        let path = dir.join("s.sodm");
+        let idx: Vec<usize> = vec![5, 0, 17, 39, 2];
+        write_shard(&path, Rows::Dense(&ds), &idx, 0, 1, 7).unwrap();
+        let sf = ShardFile::open(&path).unwrap();
+        assert_eq!(sf.rows(), idx.len());
+        assert_eq!(sf.cols(), ds.cols);
+        assert_eq!(sf.orig(), &[5u64, 0, 17, 39, 2]);
+        let ShardData::Dense(out) = sf.load().unwrap() else { panic!("expected dense") };
+        for (local, &g) in idx.iter().enumerate() {
+            assert_eq!(out.row(local), ds.row(g));
+            assert_eq!(out.y[local], ds.y[g]);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sparse_shard_round_trips_with_empty_rows_and_single_row() {
+        // CSR with an explicitly empty row, plus a single-row shard.
+        let sp = SparseDataset::new(
+            "toy",
+            vec![0, 2, 2, 3],
+            vec![1, 4, 0],
+            vec![1.0, 2.0, 3.0],
+            vec![1.0, -1.0, 1.0],
+            6,
+        );
+        let dir = crate::util::temp_dir("shard-sparse");
+        let path = dir.join("s.sodm");
+        write_shard(&path, Rows::Sparse(&sp), &[0, 1, 2], 0, 1, 1).unwrap();
+        let sf = ShardFile::open(&path).unwrap();
+        let ShardData::Sparse(out) = sf.load().unwrap() else { panic!("expected sparse") };
+        assert_eq!(out.indptr, sp.indptr);
+        assert_eq!(out.indices, sp.indices);
+        assert_eq!(out.values, sp.values);
+        assert_eq!(out.y, sp.y);
+        // single-row shard, and it's the empty row
+        let p1 = dir.join("one.sodm");
+        write_shard(&p1, Rows::Sparse(&sp), &[1], 0, 1, 1).unwrap();
+        let one = ShardFile::open(&p1).unwrap();
+        assert_eq!(one.rows(), 1);
+        assert_eq!(one.header.nnz, 0);
+        let ShardData::Sparse(o) = one.load().unwrap() else { panic!() };
+        assert_eq!(o.indptr, vec![0, 0]);
+        assert_eq!(o.row_ref(0).nnz(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_property_round_trip_random_subsets() {
+        // Property: for random index subsets of random CSR data, every row
+        // and label survives the disk round trip exactly (both full loads
+        // and the chunked cursor).
+        let sp = SparseSynthSpec::new(60, 30, 0.2, 11).generate();
+        let mut rng = crate::util::rng::Pcg32::seeded(99);
+        for trial in 0..10u32 {
+            let len = 1 + rng.gen_range(sp.rows - 1);
+            let idx: Vec<usize> = (0..len).map(|_| rng.gen_range(sp.rows)).collect();
+            let dir = crate::util::temp_dir("shard-prop");
+            let path = dir.join("s.sodm");
+            write_shard(&path, Rows::Sparse(&sp), &idx, 0, 1, trial as u64).unwrap();
+            let sf = ShardFile::open(&path).unwrap();
+            let loaded = sf.load().unwrap();
+            let full = loaded.as_rows();
+            let mut chunks = sf.chunked(3).unwrap();
+            for (local, &g) in idx.iter().enumerate() {
+                assert_eq!(
+                    full.row_ref(local).to_dense_vec(),
+                    Rows::Sparse(&sp).row_ref(g).to_dense_vec()
+                );
+                assert_eq!(full.label(local), sp.y[g]);
+                assert_eq!(
+                    chunks.row(local).unwrap().to_dense_vec(),
+                    Rows::Sparse(&sp).row_ref(g).to_dense_vec()
+                );
+                assert_eq!(chunks.label(local), sp.y[g]);
+            }
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn chunked_cursor_random_access_stays_o_chunk() {
+        let ds = dense_fixture(64, 5);
+        let dir = crate::util::temp_dir("shard-chunk");
+        let path = dir.join("s.sodm");
+        let idx: Vec<usize> = (0..ds.rows).collect();
+        write_shard(&path, Rows::Dense(&ds), &idx, 0, 1, 1).unwrap();
+        let sf = ShardFile::open(&path).unwrap();
+        let chunk = 8;
+        let mut cur = sf.chunked(chunk).unwrap();
+        // shuffled access pattern, like the VR pass
+        let mut order: Vec<usize> = (0..ds.rows).collect();
+        crate::util::rng::Pcg32::seeded(4).shuffle(&mut order);
+        for &i in &order {
+            let got = cur.row(i).unwrap().to_dense_vec();
+            assert_eq!(got, ds.row(i).to_vec());
+            assert!(
+                cur.resident_values() <= chunk * ds.cols,
+                "resident {} > chunk bound {}",
+                cur.resident_values(),
+                chunk * ds.cols
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_shards_is_deterministic_in_seed_and_worker_count() {
+        // The PR 7-style seed-plumbing guarantee: same data + same seed ⇒
+        // byte-identical shard files, regardless of writer thread count.
+        let ds = dense_fixture(80, 9);
+        let (da, db, dc) = (
+            crate::util::temp_dir("shards-a"),
+            crate::util::temp_dir("shards-b"),
+            crate::util::temp_dir("shards-c"),
+        );
+        let ma = write_shards(Rows::Dense(&ds), 4, 4, 42, &da, 1).unwrap();
+        let mb = write_shards(Rows::Dense(&ds), 4, 4, 42, &db, 4).unwrap();
+        let mc = write_shards(Rows::Dense(&ds), 4, 4, 43, &dc, 1).unwrap();
+        assert_eq!(ma.partition_lens, mb.partition_lens);
+        assert_eq!(ma.files, mb.files);
+        for f in &ma.files {
+            let ba = std::fs::read(da.join(f)).unwrap();
+            let bb = std::fs::read(db.join(f)).unwrap();
+            assert_eq!(ba, bb, "shard {f} differs across worker counts");
+        }
+        // a different seed must actually change the assignment
+        let read = |d: &std::path::Path, f: &str| std::fs::read(d.join(f)).unwrap();
+        let assignments_differ =
+            ma.files.iter().zip(&mc.files).any(|(fa, fc)| read(&da, fa) != read(&dc, fc));
+        assert!(assignments_differ, "seed is not threaded through the partitioner");
+        for d in [&da, &db, &dc] {
+            std::fs::remove_dir_all(d).unwrap();
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips_and_rejects_future_versions() {
+        let ds = dense_fixture(40, 13);
+        let dir = crate::util::temp_dir("shard-manifest");
+        let m = write_shards(Rows::Dense(&ds), 2, 4, 5, &dir, 2).unwrap();
+        let back = ShardManifest::load(&dir).unwrap();
+        assert_eq!(back.rows, m.rows);
+        assert_eq!(back.seed, 5);
+        assert_eq!(back.partition_lens, m.partition_lens);
+        assert_eq!(back.sample_sq_mean, m.sample_sq_mean, "η statistic must survive bit-exactly");
+        assert_eq!(back.shard_paths(&dir).len(), back.shards);
+        let mut j = m.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("format_version".into(), jnum(99.0));
+        }
+        assert!(ShardManifest::from_json(&j).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_future_version() {
+        let dir = crate::util::temp_dir("shard-bad");
+        let p = dir.join("bad.sodm");
+        std::fs::write(&p, b"NOTSHARD________________").unwrap();
+        assert!(ShardFile::open(&p).is_err());
+        let ds = dense_fixture(10, 1);
+        let good = dir.join("good.sodm");
+        write_shard(&good, Rows::Dense(&ds), &[0, 1, 2], 0, 1, 1).unwrap();
+        let mut bytes = std::fs::read(&good).unwrap();
+        bytes[8] = 9; // version byte
+        std::fs::write(&good, &bytes).unwrap();
+        let err = ShardFile::open(&good).unwrap_err();
+        assert!(format!("{err}").contains("v9"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,1404 @@
+//! True multi-process distributed DSVRG — the coordinator/worker runtime
+//! behind `sodm train --distributed` and `sodm worker`.
+//!
+//! The in-process [`crate::cluster::SimCluster`] *models* Algorithm 2's
+//! communication; this module actually sends it. A coordinator process holds
+//! no feature data at all — it drives N worker processes over the
+//! length-prefixed SODM wire protocol ([`crate::net::frame`]), each worker
+//! owning exactly one on-disk shard ([`crate::data::shardfile`]) of the
+//! stratified partition. Per epoch the coordinator:
+//!
+//! 1. broadcasts the snapshot iterate and collects per-shard gradient sums
+//!    ([`TrainRequest::GradSum`]), averaging them into the reference
+//!    gradient `h` with [`crate::svrg::dsvrg_reference`];
+//! 2. installs `(w_snap, h, η)` on every worker
+//!    ([`TrainRequest::EpochSetup`]);
+//! 3. runs the serial round-robin stage passes: worker `j` receives the
+//!    current iterate plus its shuffled shard-local visit order
+//!    ([`TrainRequest::StagePass`]), applies
+//!    [`crate::svrg::dsvrg_stage_pass`] — the *same* function the simulator
+//!    calls — and hands the iterate back along with any checkpoint-boundary
+//!    snapshots it crossed;
+//! 4. resolves each checkpoint's objective with a [`TrainRequest::LossSum`]
+//!    round combined in worker order, bit-identical to
+//!    [`crate::svrg::partitioned_objective`].
+//!
+//! Because the partition assignment, shuffle RNG consumption, η resolution
+//! (via the manifest's recorded [`crate::svrg::sample_sq_mean`] statistic),
+//! and the per-stage step all match the simulator exactly, a distributed run
+//! reproduces the in-process trajectory bit-for-bit — the 1e-9 acceptance
+//! bound in the tests is slack, not tolerance.
+//!
+//! # Fault tolerance
+//!
+//! The coordinator checkpoints a [`DistCheckpoint`] — epoch/stage cursor,
+//! epoch snapshot, and the current iterate as a versioned
+//! [`crate::api::Artifact`] — every `ckpt_every_stages` stages
+//! ([`DistOptions`]). Worker loss mid-run surfaces as a typed error naming
+//! the checkpoint to resume from (per-frame socket timeouts detect hangs);
+//! [`resume_from_dir`] replays the shuffle RNG up to the cursor and
+//! continues bit-exactly, so an interrupted-then-resumed run equals an
+//! uninterrupted one.
+//!
+//! # Out-of-core workers
+//!
+//! A worker opens its shard either fully in memory or through the chunked
+//! reader ([`crate::data::shardfile::ShardFile::chunked`]), keeping O(chunk)
+//! feature rows resident — datasets larger than RAM train with the same
+//! arithmetic (chunked gradient sums run sequentially, which is bit-equal to
+//! `grad_workers = 1`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::api::{Artifact, ArtifactModel, TrainMeta};
+use crate::data::shardfile::{ShardChunks, ShardData, ShardFile, ShardHeader, ShardManifest};
+use crate::data::{identity_indices, DataView};
+use crate::kernel::KernelKind;
+use crate::net::frame::{
+    self, ErrorCode, FrameError, ReadOutcome, Reply, TrainReply, TrainRequest,
+};
+use crate::odm::{OdmModel, OdmParams};
+use crate::svrg::{
+    dsvrg_reference, dsvrg_stage_pass, effective_partitions, eta_from_sample, grad_coef,
+    grad_sum_native, loss_sum_seq, loss_term, margin, objective_from_losses, SvrgCheckpoint,
+    SvrgConfig,
+};
+use crate::util::json::{jarr_f64, jnum, jstr, Json};
+use crate::util::rng::Pcg32;
+use crate::util::sort_desc_by_key;
+use crate::{bail, ensure, Result};
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// How a worker holds its shard: fully materialized, or chunk-faulted with
+/// O(chunk) feature rows resident.
+enum Store {
+    Mem(ShardData),
+    Chunked(ShardChunks),
+}
+
+impl Store {
+    fn rows(&self) -> usize {
+        match self {
+            Store::Mem(d) => d.rows(),
+            Store::Chunked(c) => c.rows(),
+        }
+    }
+
+    /// Shard gradient sum + loss at `w` — Algorithm 2 lines 6-8 for this
+    /// node. The in-memory arm runs [`grad_sum_native`] (parallel); the
+    /// chunked arm is its sequential loop verbatim, bit-equal to
+    /// `workers = 1`.
+    fn grad_sum(
+        &mut self,
+        w: &[f64],
+        params: &OdmParams,
+        workers: usize,
+    ) -> Result<(Vec<f64>, f64)> {
+        match self {
+            Store::Mem(data) => {
+                let rows = data.as_rows();
+                let idx = identity_indices(rows.rows());
+                let view = DataView::from_rows(rows, &idx);
+                Ok(grad_sum_native(w, &view, params, workers))
+            }
+            Store::Chunked(c) => {
+                let mut g = vec![0.0f64; w.len()];
+                let mut loss = 0.0f64;
+                for i in 0..c.rows() {
+                    let y = c.label(i);
+                    let x = c.row(i)?;
+                    let mi = margin(w, x, y);
+                    let co = grad_coef(mi, params);
+                    if co != 0.0 {
+                        x.axpy_into(&mut g, co * y as f64);
+                    }
+                    loss += loss_term(mi, params);
+                }
+                Ok((g, loss))
+            }
+        }
+    }
+
+    /// Sequential shard loss sum at `w` (the checkpoint-objective round).
+    fn loss_seq(&mut self, w: &[f64], params: &OdmParams) -> Result<f64> {
+        match self {
+            Store::Mem(data) => {
+                let rows = data.as_rows();
+                let idx = identity_indices(rows.rows());
+                let view = DataView::from_rows(rows, &idx);
+                Ok(loss_sum_seq(w, &view, params))
+            }
+            Store::Chunked(c) => {
+                let mut loss = 0.0f64;
+                for i in 0..c.rows() {
+                    let y = c.label(i);
+                    let x = c.row(i)?;
+                    loss += loss_term(margin(w, x, y), params);
+                }
+                Ok(loss)
+            }
+        }
+    }
+
+    /// |grad_coef| at the snapshot per shard-local row — the violation key
+    /// the ordered mode sorts by.
+    fn violation_keys(&mut self, w_snap: &[f64], params: &OdmParams) -> Result<Vec<f64>> {
+        match self {
+            Store::Mem(data) => {
+                let rows = data.as_rows();
+                Ok((0..rows.rows())
+                    .map(|i| {
+                        grad_coef(margin(w_snap, rows.row_ref(i), rows.label(i)), params).abs()
+                    })
+                    .collect())
+            }
+            Store::Chunked(c) => {
+                let mut keys = Vec::with_capacity(c.rows());
+                for i in 0..c.rows() {
+                    let y = c.label(i);
+                    let x = c.row(i)?;
+                    keys.push(grad_coef(margin(w_snap, x, y), params).abs());
+                }
+                Ok(keys)
+            }
+        }
+    }
+
+    /// One variance-reduced stage pass over the shard, through the shared
+    /// [`dsvrg_stage_pass`]. Checkpoint crossings land in `ckpts`.
+    fn stage_pass(
+        &mut self,
+        w: &mut Vec<f64>,
+        w_snap: &[f64],
+        h: &[f64],
+        eta: f64,
+        params: &OdmParams,
+        order: &[usize],
+        done_before: u64,
+        ckpt_every: u64,
+        ckpts: &mut Vec<(u64, Vec<f64>)>,
+    ) -> Result<u64> {
+        match self {
+            Store::Mem(data) => {
+                let rows = data.as_rows();
+                dsvrg_stage_pass(
+                    w,
+                    w_snap,
+                    h,
+                    eta,
+                    params,
+                    order,
+                    &mut |i, step| {
+                        step(rows.row_ref(i), rows.label(i));
+                        Ok(())
+                    },
+                    done_before,
+                    ckpt_every,
+                    &mut |done, wc| ckpts.push((done, wc.to_vec())),
+                )
+            }
+            Store::Chunked(c) => dsvrg_stage_pass(
+                w,
+                w_snap,
+                h,
+                eta,
+                params,
+                order,
+                &mut |i, step| {
+                    let y = c.label(i);
+                    let x = c.row(i)?;
+                    step(x, y);
+                    Ok(())
+                },
+                done_before,
+                ckpt_every,
+                &mut |done, wc| ckpts.push((done, wc.to_vec())),
+            ),
+        }
+    }
+}
+
+/// Per-connection worker state machine: hyperparameters arrive with `Hello`,
+/// epoch state with `EpochSetup`, and everything else validates against it.
+struct Session {
+    store: Store,
+    /// Original global row ids in shard order — lets the ordered mode sort
+    /// the exact same (key, global-id) pairs the simulator sorts.
+    orig: Vec<u64>,
+    header: ShardHeader,
+    params: Option<OdmParams>,
+    grad_workers: usize,
+    w_snap: Vec<f64>,
+    h: Vec<f64>,
+    eta: f64,
+    /// Shard-local visit order for ordered mode, computed at epoch setup.
+    ordered_order: Option<Vec<usize>>,
+}
+
+impl Session {
+    fn new(store: Store, orig: Vec<u64>, header: ShardHeader) -> Session {
+        Session {
+            store,
+            orig,
+            header,
+            params: None,
+            grad_workers: 1,
+            w_snap: Vec::new(),
+            h: Vec::new(),
+            eta: 0.0,
+            ordered_order: None,
+        }
+    }
+
+    fn params(&self) -> Result<OdmParams> {
+        self.params.ok_or_else(|| crate::err!("training request before hello"))
+    }
+
+    /// Violation-ordered shard-local visit order: sort the shard's *global*
+    /// ids through the same [`sort_desc_by_key`] call (same keys, same
+    /// tie-break on global id) the simulator uses, then map back to local
+    /// positions.
+    fn violation_order(&mut self, params: &OdmParams) -> Result<Vec<usize>> {
+        let keys = self.store.violation_keys(&self.w_snap, params)?;
+        let local_of: HashMap<usize, usize> =
+            self.orig.iter().enumerate().map(|(l, &g)| (g as usize, l)).collect();
+        let mut globals: Vec<usize> = self.orig.iter().map(|&g| g as usize).collect();
+        sort_desc_by_key(&mut globals, |g| keys[local_of[&g]]);
+        Ok(globals.iter().map(|&g| local_of[&g]).collect())
+    }
+
+    fn handle(&mut self, req: TrainRequest) -> Result<TrainReply> {
+        let rows = self.store.rows();
+        let cols = self.header.cols;
+        match req {
+            TrainRequest::Hello { grad_workers, lambda, theta, upsilon } => {
+                self.params = Some(OdmParams { lambda, theta, upsilon });
+                self.grad_workers = (grad_workers as usize).max(1);
+                Ok(TrainReply::HelloOk {
+                    shard_index: self.header.shard_index,
+                    shard_count: self.header.shard_count,
+                    rows: rows as u64,
+                    cols: cols as u64,
+                    sparse: self.header.sparse,
+                    seed: self.header.seed,
+                })
+            }
+            TrainRequest::GradSum { w_snap } => {
+                let params = self.params()?;
+                ensure!(
+                    w_snap.len() == cols,
+                    "grad round: w has {} coords, shard has {cols} features",
+                    w_snap.len()
+                );
+                let (g, loss) = self.store.grad_sum(&w_snap, &params, self.grad_workers)?;
+                Ok(TrainReply::GradOk { g, loss })
+            }
+            TrainRequest::EpochSetup { w_snap, h, eta, ordered } => {
+                let params = self.params()?;
+                ensure!(
+                    w_snap.len() == cols,
+                    "epoch setup: w_snap has {} coords, shard has {cols} features",
+                    w_snap.len()
+                );
+                ensure!(
+                    h.len() == cols,
+                    "epoch setup: h has {} coords, shard has {cols} features",
+                    h.len()
+                );
+                ensure!(
+                    eta.is_finite() && eta > 0.0,
+                    "epoch setup: step size {eta} is not positive-finite"
+                );
+                self.w_snap = w_snap;
+                self.h = h;
+                self.eta = eta;
+                self.ordered_order =
+                    if ordered { Some(self.violation_order(&params)?) } else { None };
+                Ok(TrainReply::EpochOk)
+            }
+            TrainRequest::StagePass { w, order, done_before, ckpt_every } => {
+                let params = self.params()?;
+                ensure!(self.w_snap.len() == cols, "stage pass before epoch setup");
+                ensure!(
+                    w.len() == cols,
+                    "stage pass: w has {} coords, shard has {cols} features",
+                    w.len()
+                );
+                let order: Vec<usize> = if order.is_empty() {
+                    self.ordered_order
+                        .clone()
+                        .ok_or_else(|| crate::err!("empty order without ordered epoch setup"))?
+                } else {
+                    ensure!(
+                        order.len() == rows,
+                        "stage order has {} entries, shard has {rows} rows",
+                        order.len()
+                    );
+                    order.iter().map(|&i| i as usize).collect()
+                };
+                ensure!(
+                    order.iter().all(|&i| i < rows),
+                    "stage order index out of range ({rows} rows)"
+                );
+                let mut w = w;
+                let mut ckpts: Vec<(u64, Vec<f64>)> = Vec::new();
+                self.store.stage_pass(
+                    &mut w,
+                    &self.w_snap,
+                    &self.h,
+                    self.eta,
+                    &params,
+                    &order,
+                    done_before,
+                    ckpt_every,
+                    &mut ckpts,
+                )?;
+                Ok(TrainReply::StageOk { w, ckpts })
+            }
+            TrainRequest::LossSum { w } => {
+                let params = self.params()?;
+                ensure!(
+                    w.len() == cols,
+                    "loss round: w has {} coords, shard has {cols} features",
+                    w.len()
+                );
+                Ok(TrainReply::LossOk { loss: self.store.loss_seq(&w, &params)? })
+            }
+            TrainRequest::Done => Ok(TrainReply::DoneOk),
+        }
+    }
+}
+
+/// Accept one coordinator connection on `listener` and serve the training
+/// session over `shard` until `Done`, the peer closes, or a non-recoverable
+/// protocol error. `chunk_rows == 0` loads the shard fully in memory;
+/// otherwise the chunked reader keeps O(`chunk_rows`) feature rows resident.
+///
+/// The first (and every) frame is version-checked: a mismatched peer gets
+/// the typed [`frame::version_mismatch_reply`] `Admin` error instead of a
+/// desynced stream, then the connection closes.
+pub fn serve_shard(listener: &TcpListener, shard: &ShardFile, chunk_rows: usize) -> Result<()> {
+    let store = if chunk_rows == 0 {
+        Store::Mem(shard.load()?)
+    } else {
+        Store::Chunked(shard.chunked(chunk_rows)?)
+    };
+    let mut session = Session::new(store, shard.orig().to_vec(), shard.header.clone());
+
+    let (stream, _) = listener.accept()?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        match frame::read_train_request(&mut reader)? {
+            ReadOutcome::Eof => return Ok(()),
+            ReadOutcome::Malformed(FrameError::BadVersion(v)) => {
+                // The payload was deliberately not consumed — the stream is
+                // desynced, so answer the negotiation and hang up.
+                let Reply::Error { code, msg } = frame::version_mismatch_reply(v) else {
+                    unreachable!("version_mismatch_reply always builds an error reply")
+                };
+                TrainReply::Error { code, msg }.write_to(&mut writer)?;
+                return Ok(());
+            }
+            ReadOutcome::Malformed(e) => {
+                let reply = TrainReply::Error { code: ErrorCode::Malformed, msg: e.to_string() };
+                reply.write_to(&mut writer)?;
+                if !e.recoverable() {
+                    return Ok(());
+                }
+            }
+            ReadOutcome::Frame(TrainRequest::Done) => {
+                TrainReply::DoneOk.write_to(&mut writer)?;
+                return Ok(());
+            }
+            ReadOutcome::Frame(req) => {
+                let reply = match session.handle(req) {
+                    Ok(rep) => rep,
+                    Err(e) => {
+                        TrainReply::Error { code: ErrorCode::Invalid, msg: e.to_string() }
+                            .write_to(&mut writer)?;
+                        continue;
+                    }
+                };
+                reply.write_to(&mut writer)?;
+            }
+        }
+    }
+}
+
+/// Entry point for the `sodm worker` subcommand: bind an ephemeral loopback
+/// port, announce it on stdout as `SODM-WORKER LISTENING <addr>` (the line
+/// the spawning coordinator parses), and serve one training session.
+pub fn run_worker(shard_path: &Path, chunk_rows: usize) -> Result<()> {
+    let shard = ShardFile::open(shard_path)?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    println!("SODM-WORKER LISTENING {}", listener.local_addr()?);
+    std::io::stdout().flush()?;
+    serve_shard(&listener, &shard, chunk_rows)
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+/// Byte-counting wrapper so the coordinator reports exactly the frame bytes
+/// it consumed from each worker.
+struct CountingReader {
+    inner: BufReader<TcpStream>,
+    bytes: u64,
+}
+
+impl Read for CountingReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.bytes += n as u64;
+        Ok(n)
+    }
+}
+
+/// One coordinator→worker connection with wire accounting. Per-frame socket
+/// timeouts ([`DistOptions::frame_timeout_ms`]) turn a hung or dead worker
+/// into a typed error instead of a stalled run.
+pub struct WorkerConn {
+    /// Worker (= shard = partition) index.
+    pub index: usize,
+    stream: TcpStream,
+    reader: CountingReader,
+    bytes_out: u64,
+    frames: u64,
+}
+
+impl WorkerConn {
+    /// Connect to a worker and apply per-frame timeouts (`0` disables).
+    pub fn connect(index: usize, addr: &str, timeout_ms: u64) -> Result<WorkerConn> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| crate::err!("worker {index} at {addr}: connect failed: {e}"))?;
+        stream.set_nodelay(true)?;
+        if timeout_ms > 0 {
+            let t = Some(Duration::from_millis(timeout_ms));
+            stream.set_read_timeout(t)?;
+            stream.set_write_timeout(t)?;
+        }
+        let reader = CountingReader { inner: BufReader::new(stream.try_clone()?), bytes: 0 };
+        Ok(WorkerConn { index, stream, reader, bytes_out: 0, frames: 0 })
+    }
+
+    fn send(&mut self, req: &TrainRequest) -> Result<()> {
+        let f = req.to_frame();
+        self.bytes_out += f.len() as u64;
+        self.frames += 1;
+        self.stream
+            .write_all(&f)
+            .map_err(|e| crate::err!("worker {}: send failed: {e}", self.index))
+    }
+
+    fn recv(&mut self) -> Result<TrainReply> {
+        match frame::read_train_reply(&mut self.reader)? {
+            ReadOutcome::Eof => bail!("worker {} closed the connection", self.index),
+            ReadOutcome::Malformed(FrameError::BadVersion(v)) => bail!(
+                "protocol version mismatch: worker {} speaks v{v}, this coordinator speaks v{}",
+                self.index,
+                frame::VERSION
+            ),
+            ReadOutcome::Malformed(e) => bail!("worker {}: malformed reply: {e}", self.index),
+            ReadOutcome::Frame(TrainReply::Error { code, msg }) => {
+                bail!("worker {} error ({code:?}): {msg}", self.index)
+            }
+            ReadOutcome::Frame(rep) => Ok(rep),
+        }
+    }
+
+    fn roundtrip(&mut self, req: &TrainRequest) -> Result<TrainReply> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Total bytes this connection moved (both directions).
+    pub fn bytes(&self) -> u64 {
+        self.bytes_out + self.reader.bytes
+    }
+}
+
+/// Knobs for a distributed run that have no in-process analogue.
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Threads each worker uses for its gradient-sum pass (chunked shards
+    /// always run sequentially, which equals `1`).
+    pub grad_workers: usize,
+    /// Rows resident per worker chunk; `0` = fully in memory.
+    pub chunk_rows: usize,
+    /// Where the coordinator writes [`DistCheckpoint`]s; `None` disables.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint cadence in stages; `0` disables cadence checkpoints.
+    pub ckpt_every_stages: usize,
+    /// Per-frame socket timeout; `0` disables (tests use it for determinism
+    /// under load, production wants it on).
+    pub frame_timeout_ms: u64,
+    /// Stop (checkpoint + return `interrupted`) after this many global
+    /// stages — the kill-and-resume tests' injection point.
+    pub stop_after_stages: Option<u64>,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            grad_workers: 1,
+            chunk_rows: 0,
+            ckpt_dir: None,
+            ckpt_every_stages: 0,
+            frame_timeout_ms: 30_000,
+            stop_after_stages: None,
+        }
+    }
+}
+
+/// Wire accounting for one distributed run.
+#[derive(Clone, Debug)]
+pub struct DistStats {
+    pub workers: usize,
+    /// Bytes moved (both directions, all workers) per completed epoch.
+    pub bytes_per_epoch: Vec<u64>,
+    /// Total bytes moved, including session setup and partial epochs.
+    pub bytes_total: u64,
+    /// Request frames sent.
+    pub frames: u64,
+}
+
+/// Result of a distributed run.
+pub struct DistRun {
+    pub model: OdmModel,
+    pub checkpoints: Vec<SvrgCheckpoint>,
+    pub total_seconds: f64,
+    pub stats: DistStats,
+    /// Most recent checkpoint written (the resume point after a failure).
+    pub last_checkpoint: Option<PathBuf>,
+    /// True when the run stopped at [`DistOptions::stop_after_stages`]
+    /// rather than finishing every epoch.
+    pub interrupted: bool,
+}
+
+/// A resumable coordinator checkpoint: the epoch/stage cursor, the epoch's
+/// snapshot iterate, and the current model as a versioned [`Artifact`]
+/// (loadable by every artifact consumer in the repo — `infer`, `serve`,
+/// `artifact-info`). Saved as `ckpt_NNNNNN.json` plus an atomically-renamed
+/// `latest.json` alias.
+#[derive(Clone, Debug)]
+pub struct DistCheckpoint {
+    /// Epoch the resumed run continues *from* (next stage to execute).
+    pub epoch: usize,
+    /// Stage cursor within `epoch` (0 = fresh epoch, takes a new snapshot).
+    pub stage: usize,
+    /// Instances consumed in `epoch` before `stage`.
+    pub done_in_epoch: u64,
+    /// The epoch's snapshot iterate (unused when `stage == 0`).
+    pub w_snap: Vec<f64>,
+    /// Current iterate + training metadata.
+    pub artifact: Artifact,
+}
+
+impl DistCheckpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format_version", jnum(1.0)),
+            ("kind", jstr("dist_checkpoint")),
+            ("epoch", jnum(self.epoch as f64)),
+            ("stage", jnum(self.stage as f64)),
+            ("done_in_epoch", jnum(self.done_in_epoch as f64)),
+            ("w_snap", jarr_f64(&self.w_snap)),
+            ("artifact", self.artifact.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DistCheckpoint> {
+        ensure!(
+            j.req("kind")?.as_str()? == "dist_checkpoint",
+            "not a dist_checkpoint document"
+        );
+        let version = j.req("format_version")?.as_usize()?;
+        ensure!(version == 1, "unsupported dist_checkpoint format_version {version}");
+        Ok(DistCheckpoint {
+            epoch: j.req("epoch")?.as_usize()?,
+            stage: j.req("stage")?.as_usize()?,
+            done_in_epoch: j.req("done_in_epoch")?.as_usize()? as u64,
+            w_snap: j.req("w_snap")?.as_f64_vec()?,
+            artifact: Artifact::from_json(j.req("artifact")?)?,
+        })
+    }
+
+    /// Write `ckpt_{global_stage:06}.json` under `dir` and repoint
+    /// `latest.json` at the same contents (write-then-rename, so a crash
+    /// mid-checkpoint never corrupts the resume alias). Returns the
+    /// checkpoint's own path.
+    pub fn save(&self, dir: &Path, global_stage: u64) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let text = self.to_json().to_string();
+        let path = dir.join(format!("ckpt_{global_stage:06}.json"));
+        std::fs::write(&path, &text)?;
+        let tmp = dir.join("latest.json.tmp");
+        std::fs::write(&tmp, &text)?;
+        std::fs::rename(&tmp, dir.join("latest.json"))?;
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<DistCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("checkpoint {}: {e}", path.display()))?;
+        DistCheckpoint::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// The `latest.json` resume alias inside a checkpoint directory.
+pub fn latest_checkpoint(dir: &Path) -> PathBuf {
+    dir.join("latest.json")
+}
+
+fn checkpoint_artifact(w: &[f64], params: &OdmParams, seconds: f64, updates: u64) -> Artifact {
+    Artifact {
+        model: ArtifactModel::Binary(OdmModel::Linear { w: w.to_vec() }),
+        meta: TrainMeta {
+            method: "dsvrg-dist".to_string(),
+            kernel: KernelKind::Linear,
+            params: *params,
+            seconds,
+            sweeps: 0,
+            updates,
+            converged: false,
+            shrink_ratio: 0.0,
+            feature_map: None,
+            feature_dim: None,
+            feature_seed: None,
+            plan_precision: None,
+        },
+    }
+}
+
+/// The typed worker-loss error: what died, and where to resume from.
+fn lost(worker: usize, last: &Option<PathBuf>, e: crate::Error) -> crate::Error {
+    match last {
+        Some(p) => crate::err!("worker {worker} lost: {e}; resume from checkpoint {}", p.display()),
+        None => crate::err!("worker {worker} lost: {e}; no checkpoint written - restart the run"),
+    }
+}
+
+/// Open one session per worker address and validate each worker's shard
+/// against the manifest — index, count, shape, and the partitioner seed
+/// (so a re-sharded directory from a different `--seed` is rejected instead
+/// of silently diverging from the simulator).
+pub fn connect_workers(
+    addrs: &[String],
+    manifest: &ShardManifest,
+    params: &OdmParams,
+    opts: &DistOptions,
+) -> Result<Vec<WorkerConn>> {
+    ensure!(
+        addrs.len() == manifest.shards,
+        "manifest has {} shards but {} worker addresses were given",
+        manifest.shards,
+        addrs.len()
+    );
+    let mut conns = Vec::with_capacity(addrs.len());
+    for (j, addr) in addrs.iter().enumerate() {
+        let mut conn = WorkerConn::connect(j, addr, opts.frame_timeout_ms)?;
+        let hello = TrainRequest::Hello {
+            grad_workers: opts.grad_workers.max(1) as u32,
+            lambda: params.lambda,
+            theta: params.theta,
+            upsilon: params.upsilon,
+        };
+        let rep = conn.roundtrip(&hello)?;
+        let TrainReply::HelloOk { shard_index, shard_count, rows, cols, sparse: _, seed } = rep
+        else {
+            bail!("worker {j}: unexpected hello reply kind 0x{:02X}", rep.kind());
+        };
+        ensure!(shard_index as usize == j, "worker {j} serves shard {shard_index}");
+        ensure!(
+            shard_count as usize == manifest.shards,
+            "worker {j}: shard set has {shard_count} shards, manifest says {}",
+            manifest.shards
+        );
+        ensure!(
+            rows as usize == manifest.partition_lens[j],
+            "worker {j}: shard has {rows} rows, manifest says {}",
+            manifest.partition_lens[j]
+        );
+        ensure!(
+            cols as usize == manifest.cols,
+            "worker {j}: shard has {cols} features, manifest says {}",
+            manifest.cols
+        );
+        ensure!(
+            seed == manifest.seed,
+            "worker {j}: shard written with seed {seed}, manifest says {} - re-shard with a matching --seed",
+            manifest.seed
+        );
+        conns.push(conn);
+    }
+    Ok(conns)
+}
+
+/// Drive distributed DSVRG over already-connected workers. With
+/// `resume = Some((checkpoint, its path))` the run continues from the
+/// checkpoint's cursor bit-exactly (the shuffle RNG is replayed up to it).
+///
+/// The trajectory — iterates, checkpoint objectives, final model — is
+/// bit-identical to [`crate::svrg::train_dsvrg`] on the unsharded data with
+/// the same [`SvrgConfig`] and a [`crate::svrg::NativeGrad`] of
+/// [`DistOptions::grad_workers`] threads (chunked shards require
+/// `grad_workers = 1`).
+pub fn train_connected(
+    conns: &mut [WorkerConn],
+    manifest: &ShardManifest,
+    params: &OdmParams,
+    cfg: &SvrgConfig,
+    opts: &DistOptions,
+    resume: Option<(DistCheckpoint, PathBuf)>,
+) -> Result<DistRun> {
+    let k = conns.len();
+    let m_total = manifest.rows;
+    let n = manifest.cols;
+    ensure!(k == manifest.shards, "{k} connections for {} shards", manifest.shards);
+    ensure!(
+        effective_partitions(cfg.partitions, m_total) == k,
+        "config wants {} partitions on {m_total} rows but the shard set has {k} - re-shard or adjust --partitions",
+        cfg.partitions
+    );
+    ensure!(
+        cfg.seed == manifest.seed,
+        "training seed {} does not match the shard set's seed {} - the shuffle schedule would diverge from the partitioner",
+        cfg.seed,
+        manifest.seed
+    );
+    let lens = &manifest.partition_lens;
+    let eta = eta_from_sample(cfg.eta, manifest.sample_sq_mean, params);
+    let ckpt_every = (m_total / cfg.checkpoints_per_epoch.max(1)).max(1) as u64;
+
+    let start = Instant::now();
+    let mut w = vec![0.0f64; n];
+    let mut epoch0 = 0usize;
+    let mut stage0 = 0usize;
+    let mut done0 = 0u64;
+    let mut resume_snap: Option<Vec<f64>> = None;
+    let mut last_checkpoint: Option<PathBuf> = None;
+    if let Some((ck, path)) = resume {
+        let model = ck
+            .artifact
+            .as_binary()
+            .ok_or_else(|| crate::err!("checkpoint artifact holds no binary model"))?;
+        let OdmModel::Linear { w: cw } = model else {
+            bail!("checkpoint artifact is not a linear model");
+        };
+        ensure!(cw.len() == n, "checkpoint has {} coords, data has {n} features", cw.len());
+        ensure!(
+            ck.stage == 0 || ck.w_snap.len() == n,
+            "mid-epoch checkpoint is missing its snapshot iterate"
+        );
+        ensure!(
+            ck.epoch < cfg.epochs || (ck.epoch == cfg.epochs && ck.stage == 0),
+            "checkpoint cursor (epoch {}) is beyond the configured {} epochs",
+            ck.epoch,
+            cfg.epochs
+        );
+        w = cw.clone();
+        epoch0 = ck.epoch;
+        stage0 = ck.stage;
+        done0 = ck.done_in_epoch;
+        resume_snap = Some(ck.w_snap);
+        last_checkpoint = Some(path);
+    }
+
+    // Replay the shuffle RNG: the simulator consumes one length-lens[j]
+    // Fisher-Yates shuffle per stage, in stage order, so skipping to the
+    // cursor means burning exactly that sequence.
+    let mut rng = Pcg32::seeded(cfg.seed ^ 0xD5);
+    if !cfg.ordered {
+        for s in 0..(epoch0 * k + stage0) {
+            let mut dummy: Vec<usize> = (0..lens[s % k]).collect();
+            rng.shuffle(&mut dummy);
+        }
+    }
+    let mut global_stage = (epoch0 * k + stage0) as u64;
+
+    let mut checkpoints: Vec<SvrgCheckpoint> = Vec::new();
+    let mut bytes_per_epoch: Vec<u64> = Vec::new();
+    let mut bytes_mark: u64 = conns.iter().map(|c| c.bytes()).sum();
+    let mut interrupted = false;
+
+    'epochs: for epoch in epoch0..cfg.epochs {
+        let (start_stage, mut done_in_epoch) =
+            if epoch == epoch0 { (stage0, done0) } else { (0, 0) };
+        // A fresh epoch snapshots the current iterate; resuming mid-epoch
+        // restores the snapshot the interrupted epoch was taken with.
+        let w_snap = if epoch == epoch0 && (start_stage > 0 || done_in_epoch > 0) {
+            resume_snap
+                .take()
+                .ok_or_else(|| crate::err!("mid-epoch resume without a snapshot"))?
+        } else {
+            w.clone()
+        };
+
+        // Algorithm 2 lines 5-9: broadcast the snapshot, gather per-shard
+        // gradient sums in worker order, average into the reference.
+        let mut partials: Vec<(Vec<f64>, f64)> = Vec::with_capacity(k);
+        for conn in conns.iter_mut() {
+            let idx = conn.index;
+            let rep = conn
+                .roundtrip(&TrainRequest::GradSum { w_snap: w_snap.clone() })
+                .map_err(|e| lost(idx, &last_checkpoint, e))?;
+            match rep {
+                TrainReply::GradOk { g, loss } => {
+                    ensure!(g.len() == n, "worker {idx}: gradient has {} coords", g.len());
+                    partials.push((g, loss));
+                }
+                other => {
+                    bail!("worker {idx}: unexpected grad reply kind 0x{:02X}", other.kind())
+                }
+            }
+        }
+        let h = dsvrg_reference(&partials, &w_snap, m_total);
+
+        for conn in conns.iter_mut() {
+            let idx = conn.index;
+            let rep = conn
+                .roundtrip(&TrainRequest::EpochSetup {
+                    w_snap: w_snap.clone(),
+                    h: h.clone(),
+                    eta,
+                    ordered: cfg.ordered,
+                })
+                .map_err(|e| lost(idx, &last_checkpoint, e))?;
+            ensure!(
+                matches!(rep, TrainReply::EpochOk),
+                "worker {idx}: unexpected epoch-setup reply kind 0x{:02X}",
+                rep.kind()
+            );
+        }
+
+        // Lines 10-15: serial round-robin stage passes, iterate handed
+        // worker to worker through the coordinator.
+        for j in start_stage..k {
+            let order: Vec<u32> = if cfg.ordered {
+                Vec::new()
+            } else {
+                let mut local: Vec<usize> = (0..lens[j]).collect();
+                rng.shuffle(&mut local);
+                local.into_iter().map(|i| i as u32).collect()
+            };
+            let idx = conns[j].index;
+            let rep = conns[j]
+                .roundtrip(&TrainRequest::StagePass {
+                    w: std::mem::take(&mut w),
+                    order,
+                    done_before: done_in_epoch,
+                    ckpt_every,
+                })
+                .map_err(|e| lost(idx, &last_checkpoint, e))?;
+            let (new_w, stage_ckpts) = match rep {
+                TrainReply::StageOk { w, ckpts } => (w, ckpts),
+                other => {
+                    bail!("worker {idx}: unexpected stage reply kind 0x{:02X}", other.kind())
+                }
+            };
+            ensure!(new_w.len() == n, "worker {idx}: stage returned {} coords", new_w.len());
+            w = new_w;
+            done_in_epoch += lens[j] as u64;
+
+            // Resolve each crossed checkpoint's objective with a loss round
+            // combined in worker order - bit-identical to the simulator's
+            // partitioned objective.
+            for (done, wc) in &stage_ckpts {
+                ensure!(wc.len() == n, "worker {idx}: checkpoint iterate has {} coords", wc.len());
+                let mut losses = Vec::with_capacity(k);
+                for conn in conns.iter_mut() {
+                    let ci = conn.index;
+                    let rep = conn
+                        .roundtrip(&TrainRequest::LossSum { w: wc.clone() })
+                        .map_err(|e| lost(ci, &last_checkpoint, e))?;
+                    match rep {
+                        TrainReply::LossOk { loss } => losses.push(loss),
+                        other => bail!(
+                            "worker {ci}: unexpected loss reply kind 0x{:02X}",
+                            other.kind()
+                        ),
+                    }
+                }
+                checkpoints.push(SvrgCheckpoint {
+                    epoch,
+                    fraction: *done as f64 / m_total as f64,
+                    elapsed: start.elapsed().as_secs_f64(),
+                    objective: objective_from_losses(wc, &losses, m_total),
+                    w: wc.clone(),
+                });
+            }
+
+            global_stage += 1;
+            let stop_here = opts.stop_after_stages.is_some_and(|s| global_stage >= s);
+            let cadence_hit = opts.ckpt_every_stages > 0
+                && global_stage % opts.ckpt_every_stages as u64 == 0;
+            if let Some(dir) = &opts.ckpt_dir {
+                if cadence_hit || stop_here {
+                    let at_end = j + 1 == k;
+                    let ck = DistCheckpoint {
+                        epoch: if at_end { epoch + 1 } else { epoch },
+                        stage: if at_end { 0 } else { j + 1 },
+                        done_in_epoch: if at_end { 0 } else { done_in_epoch },
+                        w_snap: w_snap.clone(),
+                        artifact: checkpoint_artifact(
+                            &w,
+                            params,
+                            start.elapsed().as_secs_f64(),
+                            epoch as u64 * m_total as u64 + done_in_epoch,
+                        ),
+                    };
+                    last_checkpoint = Some(ck.save(dir, global_stage)?);
+                }
+            }
+            if stop_here {
+                interrupted = true;
+                break 'epochs;
+            }
+        }
+
+        let now: u64 = conns.iter().map(|c| c.bytes()).sum();
+        bytes_per_epoch.push(now - bytes_mark);
+        bytes_mark = now;
+    }
+
+    if !interrupted {
+        for conn in conns.iter_mut() {
+            let idx = conn.index;
+            let rep = conn.roundtrip(&TrainRequest::Done)?;
+            ensure!(
+                matches!(rep, TrainReply::DoneOk),
+                "worker {idx}: unexpected done reply kind 0x{:02X}",
+                rep.kind()
+            );
+        }
+    }
+
+    let bytes_total: u64 = conns.iter().map(|c| c.bytes()).sum();
+    let frames: u64 = conns.iter().map(|c| c.frames).sum();
+    Ok(DistRun {
+        model: OdmModel::Linear { w },
+        checkpoints,
+        total_seconds: start.elapsed().as_secs_f64(),
+        stats: DistStats { workers: k, bytes_per_epoch, bytes_total, frames },
+        last_checkpoint,
+        interrupted,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process harness
+// ---------------------------------------------------------------------------
+
+/// A spawned `sodm worker` child. Killed (and reaped) on drop so tests and
+/// interrupted runs never leak processes.
+pub struct WorkerProc {
+    child: Child,
+    /// Loopback address the worker announced.
+    pub addr: String,
+}
+
+impl WorkerProc {
+    /// Kill the worker immediately — the failure-injection hook for the
+    /// worker-loss tests.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn one `sodm worker` process for `shard` and wait for its
+/// `SODM-WORKER LISTENING <addr>` announcement.
+pub fn spawn_worker(exe: &Path, shard: &Path, chunk_rows: usize) -> Result<WorkerProc> {
+    let mut child = Command::new(exe)
+        .arg("worker")
+        .arg("--shard")
+        .arg(shard)
+        .arg("--chunk")
+        .arg(chunk_rows.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .map_err(|e| crate::err!("spawning {} worker: {e}", exe.display()))?;
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| crate::err!("worker stdout was not captured"))?;
+    let reader = BufReader::new(stdout);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if let Some(addr) = line.strip_prefix("SODM-WORKER LISTENING ") {
+            return Ok(WorkerProc { child, addr: addr.trim().to_string() });
+        }
+    }
+    let _ = child.kill();
+    let _ = child.wait();
+    bail!("worker for {} exited before announcing its address", shard.display())
+}
+
+/// Spawn one worker process per shard in manifest order.
+pub fn launch_workers(
+    exe: &Path,
+    manifest: &ShardManifest,
+    shard_dir: &Path,
+    chunk_rows: usize,
+) -> Result<Vec<WorkerProc>> {
+    manifest
+        .shard_paths(shard_dir)
+        .iter()
+        .map(|p| spawn_worker(exe, p, chunk_rows))
+        .collect()
+}
+
+/// Full multi-process run over a sharded directory: spawn workers, connect,
+/// train, tear down.
+pub fn train_from_dir(
+    exe: &Path,
+    shard_dir: &Path,
+    params: &OdmParams,
+    cfg: &SvrgConfig,
+    opts: &DistOptions,
+) -> Result<DistRun> {
+    let manifest = ShardManifest::load(shard_dir)?;
+    let procs = launch_workers(exe, &manifest, shard_dir, opts.chunk_rows)?;
+    let addrs: Vec<String> = procs.iter().map(|p| p.addr.clone()).collect();
+    let mut conns = connect_workers(&addrs, &manifest, params, opts)?;
+    train_connected(&mut conns, &manifest, params, cfg, opts, None)
+}
+
+/// Resume a killed run from a [`DistCheckpoint`] with a fresh set of worker
+/// processes; the result is bit-exact with a never-interrupted run.
+pub fn resume_from_dir(
+    exe: &Path,
+    shard_dir: &Path,
+    ckpt_path: &Path,
+    params: &OdmParams,
+    cfg: &SvrgConfig,
+    opts: &DistOptions,
+) -> Result<DistRun> {
+    let ck = DistCheckpoint::load(ckpt_path)?;
+    let manifest = ShardManifest::load(shard_dir)?;
+    let procs = launch_workers(exe, &manifest, shard_dir, opts.chunk_rows)?;
+    let addrs: Vec<String> = procs.iter().map(|p| p.addr.clone()).collect();
+    let mut conns = connect_workers(&addrs, &manifest, params, opts)?;
+    train_connected(&mut conns, &manifest, params, cfg, opts, Some((ck, ckpt_path.to_path_buf())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shardfile::write_shards;
+    use crate::data::synth::SynthSpec;
+    use crate::data::{Dataset, Rows};
+    use crate::svrg::{train_dsvrg, NativeGrad};
+    use std::thread;
+
+    fn loopback() -> bool {
+        TcpListener::bind("127.0.0.1:0").is_ok()
+    }
+
+    fn fixture(rows: usize, seed: u64) -> Dataset {
+        let mut s = SynthSpec::named("svmguide1", 0.02, seed);
+        s.rows = rows;
+        s.generate()
+    }
+
+    /// Bind each listener first (so the address is known before the serving
+    /// thread starts) — the in-process stand-in for `sodm worker` processes.
+    fn spawn_shard_threads(
+        dir: &Path,
+        manifest: &ShardManifest,
+        chunk_rows: usize,
+    ) -> (Vec<String>, Vec<thread::JoinHandle<Result<()>>>) {
+        let mut addrs = Vec::new();
+        let mut handles = Vec::new();
+        for path in manifest.shard_paths(dir) {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(listener.local_addr().unwrap().to_string());
+            handles.push(thread::spawn(move || {
+                let shard = ShardFile::open(&path)?;
+                serve_shard(&listener, &shard, chunk_rows)
+            }));
+        }
+        (addrs, handles)
+    }
+
+    fn linear_w(model: &OdmModel) -> &Vec<f64> {
+        let OdmModel::Linear { w } = model else {
+            panic!("expected a linear model");
+        };
+        w
+    }
+
+    fn max_abs_gap(a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    /// Distributed run over worker threads vs the in-process simulator: the
+    /// acceptance bound is 1e-9; the determinism argument says it is 0.
+    fn assert_matches_sim(k: usize, chunk_rows: usize, grad_workers: usize, ordered: bool) {
+        let ds = fixture(48, 11);
+        let seed = 0x5EED;
+        let dir = crate::util::temp_dir("dist-eq");
+        let manifest = write_shards(Rows::Dense(&ds), k, 8, seed, &dir, 2).unwrap();
+        assert_eq!(manifest.shards, k);
+        let params = OdmParams::default();
+        let cfg = SvrgConfig {
+            epochs: 3,
+            partitions: k,
+            seed,
+            ordered,
+            ..SvrgConfig::default()
+        };
+        let opts = DistOptions {
+            grad_workers,
+            frame_timeout_ms: 0,
+            ..DistOptions::default()
+        };
+
+        let (addrs, handles) = spawn_shard_threads(&dir, &manifest, chunk_rows);
+        let mut conns = connect_workers(&addrs, &manifest, &params, &opts).unwrap();
+        let run = train_connected(&mut conns, &manifest, &params, &cfg, &opts, None).unwrap();
+        drop(conns);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+
+        let sim = train_dsvrg(&ds, &params, &cfg, None, &NativeGrad { workers: grad_workers });
+        assert!(
+            max_abs_gap(linear_w(&run.model), linear_w(&sim.model)) <= 1e-9,
+            "distributed final iterate diverged from the simulator"
+        );
+        assert_eq!(run.checkpoints.len(), sim.checkpoints.len());
+        for (d, s) in run.checkpoints.iter().zip(&sim.checkpoints) {
+            assert_eq!(d.epoch, s.epoch);
+            assert_eq!(d.fraction, s.fraction);
+            assert!((d.objective - s.objective).abs() <= 1e-9);
+            assert!(max_abs_gap(&d.w, &s.w) <= 1e-9);
+        }
+        assert_eq!(run.stats.bytes_per_epoch.len(), cfg.epochs);
+        assert!(run.stats.bytes_per_epoch.iter().all(|&b| b > 0));
+        // Total also counts the Hello and Done rounds outside the epochs.
+        assert!(run.stats.bytes_total > run.stats.bytes_per_epoch.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn two_worker_threads_match_the_simulator() {
+        if !loopback() {
+            return;
+        }
+        assert_matches_sim(2, 0, 2, false);
+    }
+
+    #[test]
+    fn four_worker_threads_match_the_simulator() {
+        if !loopback() {
+            return;
+        }
+        assert_matches_sim(4, 0, 1, false);
+    }
+
+    #[test]
+    fn chunked_out_of_core_workers_match_the_simulator() {
+        if !loopback() {
+            return;
+        }
+        // Chunked gradient sums are sequential ≡ one grad worker.
+        assert_matches_sim(2, 5, 1, false);
+    }
+
+    #[test]
+    fn ordered_mode_matches_the_simulator() {
+        if !loopback() {
+            return;
+        }
+        assert_matches_sim(2, 0, 1, true);
+    }
+
+    #[test]
+    fn dist_checkpoint_round_trips_bit_exact() {
+        let w = vec![0.1 + 0.2, -1.5e-300, 3.0f64.sqrt() * 1e8, f64::MIN_POSITIVE];
+        let ck = DistCheckpoint {
+            epoch: 2,
+            stage: 1,
+            done_in_epoch: 37,
+            w_snap: w.clone(),
+            artifact: checkpoint_artifact(&w, &OdmParams::default(), 1.25, 99),
+        };
+        let back =
+            DistCheckpoint::from_json(&Json::parse(&ck.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.epoch, 2);
+        assert_eq!(back.stage, 1);
+        assert_eq!(back.done_in_epoch, 37);
+        assert_eq!(back.w_snap, w);
+        let Some(OdmModel::Linear { w: bw }) = back.artifact.as_binary() else {
+            panic!("expected a linear artifact");
+        };
+        assert_eq!(bw, &w);
+        assert_eq!(back.artifact.meta.method, "dsvrg-dist");
+        assert_eq!(back.artifact.meta.updates, 99);
+
+        // Disk round trip + the `latest.json` alias.
+        let dir = crate::util::temp_dir("dist-ckpt");
+        let path = ck.save(&dir, 5).unwrap();
+        assert!(path.ends_with("ckpt_000005.json"));
+        let from_disk = DistCheckpoint::load(&path).unwrap();
+        assert_eq!(from_disk.w_snap, w);
+        let from_latest = DistCheckpoint::load(&latest_checkpoint(&dir)).unwrap();
+        assert_eq!(from_latest.w_snap, w);
+        assert_eq!(linear_w(from_latest.artifact.as_binary().unwrap()), &w);
+    }
+
+    #[test]
+    fn interrupted_run_resumes_bit_exact() {
+        if !loopback() {
+            return;
+        }
+        let ds = fixture(48, 13);
+        let seed = 0xD15C;
+        let dir = crate::util::temp_dir("dist-resume");
+        let manifest = write_shards(Rows::Dense(&ds), 2, 8, seed, &dir, 2).unwrap();
+        let params = OdmParams::default();
+        let cfg = SvrgConfig { epochs: 3, partitions: 2, seed, ..SvrgConfig::default() };
+        let opts = DistOptions { frame_timeout_ms: 0, ..DistOptions::default() };
+
+        // Uninterrupted reference.
+        let (addrs, handles) = spawn_shard_threads(&dir, &manifest, 0);
+        let mut conns = connect_workers(&addrs, &manifest, &params, &opts).unwrap();
+        let full = train_connected(&mut conns, &manifest, &params, &cfg, &opts, None).unwrap();
+        drop(conns);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert!(!full.interrupted);
+
+        // Kill after 3 of the 6 global stages, checkpointing on the way out
+        // (mid-epoch: stage 1 of epoch 1, so resume replays the RNG and
+        // restores the epoch snapshot).
+        let ckpt_dir = dir.join("ckpt");
+        let kill_opts = DistOptions {
+            frame_timeout_ms: 0,
+            ckpt_dir: Some(ckpt_dir.clone()),
+            ckpt_every_stages: 2,
+            stop_after_stages: Some(3),
+            ..DistOptions::default()
+        };
+        let (addrs, handles) = spawn_shard_threads(&dir, &manifest, 0);
+        let mut conns = connect_workers(&addrs, &manifest, &params, &kill_opts).unwrap();
+        let cut =
+            train_connected(&mut conns, &manifest, &params, &cfg, &kill_opts, None).unwrap();
+        drop(conns);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert!(cut.interrupted);
+        let resume_path = cut.last_checkpoint.expect("stop wrote a checkpoint");
+        assert!(resume_path.ends_with("ckpt_000003.json"));
+
+        // Resume with a fresh set of workers.
+        let ck = DistCheckpoint::load(&resume_path).unwrap();
+        assert_eq!((ck.epoch, ck.stage), (1, 1));
+        let (addrs, handles) = spawn_shard_threads(&dir, &manifest, 0);
+        let mut conns = connect_workers(&addrs, &manifest, &params, &opts).unwrap();
+        let resumed = train_connected(
+            &mut conns,
+            &manifest,
+            &params,
+            &cfg,
+            &opts,
+            Some((ck, resume_path)),
+        )
+        .unwrap();
+        drop(conns);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+
+        assert_eq!(
+            linear_w(&full.model),
+            linear_w(&resumed.model),
+            "kill-and-resume must be bit-exact vs the uninterrupted run"
+        );
+    }
+
+    #[test]
+    fn mismatched_peer_version_draws_typed_admin_error() {
+        if !loopback() {
+            return;
+        }
+        let ds = fixture(16, 5);
+        let dir = crate::util::temp_dir("dist-ver");
+        let manifest = write_shards(Rows::Dense(&ds), 2, 8, 7, &dir, 1).unwrap();
+        let path = manifest.shard_paths(&dir).remove(0);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let shard = ShardFile::open(&path)?;
+            serve_shard(&listener, &shard, 0)
+        });
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut bytes = TrainRequest::Done.to_frame();
+        bytes[4] = 9; // a future protocol version
+        stream.write_all(&bytes).unwrap();
+        match frame::read_train_reply(&mut stream).unwrap() {
+            ReadOutcome::Frame(TrainReply::Error { code, msg }) => {
+                assert_eq!(code, ErrorCode::Admin);
+                assert!(msg.contains("v9"), "error names the peer version: {msg}");
+            }
+            _ => panic!("expected a typed admin error"),
+        }
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn resharding_is_deterministic_in_the_seed() {
+        let ds = fixture(32, 9);
+        let d1 = crate::util::temp_dir("dist-seed1");
+        let d2 = crate::util::temp_dir("dist-seed2");
+        let d3 = crate::util::temp_dir("dist-seed3");
+        // Same seed, different partitioner worker counts: identical bytes.
+        let m1 = write_shards(Rows::Dense(&ds), 2, 8, 42, &d1, 3).unwrap();
+        let m2 = write_shards(Rows::Dense(&ds), 2, 8, 42, &d2, 1).unwrap();
+        assert_eq!(m1.to_json().to_string(), m2.to_json().to_string());
+        for (a, b) in m1.shard_paths(&d1).iter().zip(m2.shard_paths(&d2).iter()) {
+            assert_eq!(std::fs::read(a).unwrap(), std::fs::read(b).unwrap());
+        }
+        // A different seed reassigns rows.
+        let m3 = write_shards(Rows::Dense(&ds), 2, 8, 43, &d3, 1).unwrap();
+        let differs = m1
+            .shard_paths(&d1)
+            .iter()
+            .zip(m3.shard_paths(&d3).iter())
+            .any(|(a, b)| std::fs::read(a).unwrap() != std::fs::read(b).unwrap());
+        assert!(differs, "changing the seed must change the shard assignment");
+    }
+
+    #[test]
+    fn worker_loss_error_names_the_resume_checkpoint() {
+        let e = lost(1, &Some(PathBuf::from("/tmp/ck/ckpt_000004.json")), crate::err!("io: gone"));
+        let msg = e.to_string();
+        assert!(msg.contains("worker 1 lost"));
+        assert!(msg.contains("ckpt_000004.json"));
+        let e = lost(0, &None, crate::err!("io: gone"));
+        assert!(e.to_string().contains("restart from scratch"));
+    }
+}

@@ -1088,6 +1088,142 @@ pub fn run_online_benchmark(
     Ok((json, summary))
 }
 
+/// Distributed DSVRG benchmark — the multi-process coordinator
+/// ([`crate::dist`]) against the in-process run on the same fixture:
+///
+/// 1. shards the dataset out-of-core (`sodm shard`'s exact writer),
+/// 2. trains in-process for the reference trajectory and wall-clock,
+/// 3. trains over loopback TCP with one worker process per shard and
+///    asserts the final iterates agree to 1e-9,
+/// 4. kills a run mid-epoch at a checkpoint and resumes it, asserting the
+///    resumed model is bit-exact with the uninterrupted one,
+///
+/// and reports speedup + bytes-per-epoch. Shared by
+/// `experiment --distributed` (writes `dist_bench.json`) and the CI bench
+/// job. Skips gracefully (`"skipped": true`) where loopback sockets or
+/// process spawning are unavailable (sandboxed runners).
+pub fn run_dist_benchmark(
+    shards: usize,
+    quick: bool,
+    seed: u64,
+) -> crate::Result<(crate::util::json::Json, String)> {
+    use crate::data::shardfile::write_shards;
+    use crate::data::Rows;
+    use crate::dist::{self, DistOptions};
+    use crate::svrg::SvrgConfig;
+    use crate::util::json::{jstr, Json};
+
+    if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+        let json = Json::obj(vec![("name", jstr("dist-dsvrg")), ("skipped", Json::Bool(true))]);
+        let line = "distributed benchmark skipped: loopback sockets unavailable".to_string();
+        return Ok((json, line));
+    }
+    let exe = std::env::current_exe()?;
+
+    let (rows, epochs, grad_workers) = if quick { (200, 3, 2) } else { (600, 4, 2) };
+    let mut sgen = SynthSpec::named("svmguide1", 0.02, seed);
+    sgen.rows = rows;
+    let ds = sgen.generate();
+
+    let base = std::env::temp_dir().join(format!("sodm_dist_bench_{}", std::process::id()));
+    let shard_dir = base.join("shards");
+    let ckpt_dir = base.join("ckpts");
+    let manifest = write_shards(Rows::Dense(&ds), shards, 8, seed, &shard_dir, grad_workers)?;
+    let k = manifest.shards;
+
+    // Reference: the in-process simulator through the facade.
+    let sim_spec = TrainSpec::new(Method::Dsvrg)
+        .workers(grad_workers)
+        .epochs(epochs)
+        .partitions(k)
+        .stratums(8)
+        .seed(seed)
+        .build()?;
+    let sim_run = api::train_run(&sim_spec, &ds, None)?;
+    let sim_seconds = sim_run.artifact.meta.seconds;
+    let sim_w = match sim_run.artifact.as_binary() {
+        Some(crate::odm::OdmModel::Linear { w }) => w.clone(),
+        _ => crate::bail!("dsvrg yields a linear model"),
+    };
+
+    // The same spec over the wire: worker processes, out-of-core shards.
+    let dist_spec =
+        sim_spec.clone().distributed(crate::api::DistSpec::new(&shard_dir, &exe)).build()?;
+    let full = api::train_distributed(&dist_spec)?;
+    let dist_seconds = full.run.artifact.meta.seconds;
+    let dist_w = match full.run.artifact.as_binary() {
+        Some(crate::odm::OdmModel::Linear { w }) => w.clone(),
+        _ => crate::bail!("distributed dsvrg yields a linear model"),
+    };
+    let max_abs_gap = sim_w.iter().zip(&dist_w).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    crate::ensure!(
+        sim_w.len() == dist_w.len() && max_abs_gap <= 1e-9,
+        "distributed trajectory diverged from the simulator: max |gap| = {max_abs_gap:e}"
+    );
+
+    // Fault-tolerance drill: stop at a checkpoint mid-run, resume with
+    // fresh worker processes, and demand the bit-exact final model. The
+    // coordinator-level entry points expose the stop injection the facade
+    // deliberately doesn't.
+    let cfg = SvrgConfig { epochs, partitions: k, stratums: 8, seed, ..SvrgConfig::default() };
+    let kill_opts = DistOptions {
+        grad_workers,
+        ckpt_dir: Some(ckpt_dir.clone()),
+        ckpt_every_stages: 2,
+        stop_after_stages: Some((k as u64 * epochs as u64) / 2),
+        ..DistOptions::default()
+    };
+    let killed = dist::train_from_dir(&exe, &shard_dir, &sim_spec.params, &cfg, &kill_opts)?;
+    crate::ensure!(killed.interrupted, "stop injection must interrupt the run");
+    let ckpt =
+        killed.last_checkpoint.ok_or_else(|| crate::err!("interrupted run wrote no checkpoint"))?;
+    let resume_opts = DistOptions { grad_workers, ..DistOptions::default() };
+    let resumed =
+        dist::resume_from_dir(&exe, &shard_dir, &ckpt, &sim_spec.params, &cfg, &resume_opts)?;
+    let crate::odm::OdmModel::Linear { w: resumed_w } = resumed.model else {
+        crate::bail!("distributed dsvrg yields a linear model")
+    };
+    let resume_exact = resumed_w.len() == dist_w.len()
+        && resumed_w.iter().zip(&dist_w).all(|(a, b)| a.to_bits() == b.to_bits());
+    crate::ensure!(resume_exact, "resumed run is not bit-exact with the uninterrupted one");
+
+    let _ = std::fs::remove_dir_all(&base);
+
+    let stats = &full.stats;
+    crate::ensure!(stats.bytes_total > 0, "a wire run must move bytes");
+    crate::ensure!(stats.bytes_per_epoch.len() == epochs, "expected one bytes figure per epoch");
+    let per_epoch: Vec<Json> = stats.bytes_per_epoch.iter().map(|&b| Json::Num(b as f64)).collect();
+    let speedup = sim_seconds / dist_seconds.max(1e-9);
+    let json = Json::obj(vec![
+        ("name", jstr("dist-dsvrg")),
+        ("skipped", Json::Bool(false)),
+        ("workers", Json::Num(k as f64)),
+        ("grad_workers", Json::Num(grad_workers as f64)),
+        ("rows", Json::Num(manifest.rows as f64)),
+        ("cols", Json::Num(manifest.cols as f64)),
+        ("epochs", Json::Num(epochs as f64)),
+        ("sim_seconds", Json::Num(sim_seconds)),
+        ("dist_seconds", Json::Num(dist_seconds)),
+        ("speedup", Json::Num(speedup)),
+        ("bytes_per_epoch", Json::Arr(per_epoch)),
+        ("bytes_total", Json::Num(stats.bytes_total as f64)),
+        ("frames", Json::Num(stats.frames as f64)),
+        ("max_abs_gap", Json::Num(max_abs_gap)),
+        ("resume_exact", Json::Bool(resume_exact)),
+    ]);
+    let line = format!(
+        "distributed dsvrg benchmark ({k} worker processes, {} rows x {} cols, {epochs} epochs)\n\
+         in-process {sim_seconds:.3}s vs over-the-wire {dist_seconds:.3}s (speedup {speedup:.2}x)\n\
+         bytes/epoch {:?} (total {}), max |w gap| {max_abs_gap:.2e}, \
+         kill-and-resume bit-exact: {resume_exact}",
+        manifest.rows,
+        manifest.cols,
+        stats.bytes_per_epoch,
+        stats.bytes_total,
+    );
+    Ok((json, line))
+}
+
 /// Gradient-based comparators for Fig. 4, through the facade's gradient
 /// dispatch ([`Method::Dsvrg`]/[`Method::Svrg`]/[`Method::Csvrg`]).
 pub fn run_gradient_method(

@@ -137,6 +137,7 @@ pub mod api;
 pub mod baselines;
 pub mod cluster;
 pub mod data;
+pub mod dist;
 pub mod exp;
 pub mod featmap;
 pub mod infer;

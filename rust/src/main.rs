@@ -3,9 +3,15 @@
 //! Subcommands:
 //! * `gen-data`   — materialize an emulated dataset in LIBSVM format
 //! * `train`      — train a model through the `sodm::api` facade
+//!                  (`--distributed [n]` runs real multi-process DSVRG over
+//!                  loopback TCP; see `shard`/`worker`)
 //! * `predict`    — score a saved artifact on a dataset (native or `--backend xla`)
 //! * `experiment` — regenerate a paper table (`--table 1..4`) or figure
 //!                  (`--figure 1..4`)
+//! * `shard`      — partition a dataset with the §3.2 stratified partitioner
+//!                  and write out-of-core shard files + `manifest.json`
+//! * `worker`     — serve one shard file to a distributed-training
+//!                  coordinator (normally spawned by `train --distributed`)
 //! * `stream`     — prequential online ODM over a feedback stream (libsvm
 //!                  replay or the synthetic drifting-blob generator)
 //! * `serve`      — network-facing model server (TCP wire protocol over the
@@ -47,11 +53,13 @@ use sodm::Result;
 const GEN_DATA_FLAGS: &str = "name seed out scale rows cols density";
 const TRAIN_FLAGS: &str = "data method kernel gamma lambda theta upsilon p levels stratums \
      workers epochs model-out no-shrink ordered-every seed multiclass no-shared-cache \
-     rff-dim landmarks plan-precision";
+     rff-dim landmarks plan-precision distributed shard-dir ckpt-dir ckpt-every resume chunk";
 const PREDICT_FLAGS: &str = "model data backend seed";
 const EXPERIMENT_FLAGS: &str = "table figure ablation sparse serve remote-serve multiclass rff \
-     online scale seed datasets workers out-dir odm-cap rows cols density shards classes quick \
-     json cores dataset";
+     online distributed scale seed datasets workers out-dir odm-cap rows cols density shards \
+     classes quick json cores dataset";
+const SHARD_FLAGS: &str = "data out-dir shards stratums seed workers";
+const WORKER_FLAGS: &str = "shard chunk";
 const STREAM_FLAGS: &str =
     "data rows cols drift-at eta lambda theta upsilon seed report-every model-out";
 const CHECK_SUMMARIES_FLAGS: &str = "dir";
@@ -80,6 +88,8 @@ fn run(cmd: &str, args: &[String]) -> Result<()> {
         "predict" => cmd_predict(&parse_flags(cmd, args, PREDICT_FLAGS)?),
         "experiment" => cmd_experiment(&parse_flags(cmd, args, EXPERIMENT_FLAGS)?),
         "stream" => cmd_stream(&parse_flags(cmd, args, STREAM_FLAGS)?),
+        "shard" => cmd_shard(&parse_flags(cmd, args, SHARD_FLAGS)?),
+        "worker" => cmd_worker(&parse_flags(cmd, args, WORKER_FLAGS)?),
         "serve-bench" => cmd_serve_bench(&parse_flags(cmd, args, SERVE_BENCH_FLAGS)?),
         "check-summaries" => cmd_check_summaries(&parse_flags(cmd, args, CHECK_SUMMARIES_FLAGS)?),
         "serve" => cmd_serve(&parse_flags(cmd, args, SERVE_FLAGS)?),
@@ -132,6 +142,13 @@ USAGE: sodm <command> [--flag value]...
               label per row; distinct labels become classes) or
               mc-synth:classes:rows:cols; K class solves in parallel with a
               shared Gram cache (--no-shared-cache for private caches)
+             [--distributed [n]]: real multi-process DSVRG — spawns n worker
+              processes (one per shard) and trains over loopback TCP;
+              reuses --shard-dir if it holds a shard set (seed-checked),
+              otherwise shards the train split there first
+              [--shard-dir dir] [--chunk rows] (out-of-core workers keep
+              only `rows` resident) [--ckpt-dir dir] [--ckpt-every stages]
+              [--resume ckpt.json] (resume a killed run bit-exactly)
              models save as versioned artifact JSON (model + training
              metadata); predict/serve-bench also load legacy model JSON
   predict    --model m.json --data <...> [--backend native|xla]
@@ -156,6 +173,10 @@ USAGE: sodm <command> [--flag value]...
               frozen batch model, plus a TCP serve drill with feedback
               updates across snapshot hot-swaps, [--quick]
               [--json copy.json]; writes results/online_bench.json)
+             (--distributed: multi-process DSVRG benchmark — wall-clock +
+              bytes-per-epoch vs the in-process run, plus a kill/resume
+              bit-exactness drill, [--shards 2] [--quick] [--json copy.json];
+              writes results/dist_bench.json)
   stream     prequential (test-then-train) online ODM over a stream:
              [--data <file.libsvm | synth:name[:scale]>] replays a dense
              dataset in row order; without --data, streams the synthetic
@@ -171,6 +192,16 @@ USAGE: sodm <command> [--flag value]...
              (--remote: self-contained TCP loopback drill, no --model/--data;
               --remote <addr> --data <...>: load-generate against a running
               `serve` and report client-observed p50/p95/p99 + shed rate)
+  shard      --data <...> [--out-dir shards] [--shards 4] [--stratums 16]
+             [--seed 7] [--workers N]
+             (partition with the §3.2 stratified partitioner — deterministic
+              in --seed, independent of --workers — and write one
+              shard_NNNN.sodm per partition plus manifest.json; feeds
+              `train --distributed` / `worker`)
+  worker     --shard shard_0000.sodm [--chunk rows]
+             (serve one shard to a training coordinator over loopback TCP;
+              prints its bound address on stdout; --chunk keeps only that
+              many rows resident — normally spawned by train --distributed)
   serve      --model m.json [--addr 127.0.0.1:7878] [--workers N] [--shards N]
              [--precision f64|f32]
              (TCP frontend over the batched scoring runtime; length-prefixed
@@ -477,6 +508,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("multiclass") {
         return cmd_train_multiclass(flags);
     }
+    if flags.contains_key("distributed") {
+        return cmd_train_distributed(flags);
+    }
     let seed = flag_usize(flags, "seed", 7)? as u64;
     let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
     let loaded = load_data(data_spec, seed)?;
@@ -508,6 +542,152 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         println!("model saved to {out}");
     }
     Ok(())
+}
+
+/// `train --distributed [n]`: real multi-process DSVRG. Shards the train
+/// split out-of-core (or reuses a seed-checked `--shard-dir`), spawns one
+/// `sodm worker` process per shard, and drives the coordinator over
+/// loopback TCP through [`api::train_distributed`] — the final model is
+/// bit-exact (1e-9) with what the in-process simulator computes.
+fn cmd_train_distributed(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::data::shardfile::{write_shards, ShardManifest};
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
+    let loaded = load_data(data_spec, seed)?;
+    let (train, test) = loaded.split(0.8, seed);
+    let (train_rows, test_rows) = (train.as_rows(), test.as_rows());
+
+    // Distributed runs are DSVRG-only; default the method so the bare flag
+    // does the right thing (an explicit conflicting --method still reaches
+    // the typed DistributedUnsupported error below).
+    let mut f = flags.clone();
+    f.entry("method".to_string()).or_insert_with(|| "dsvrg".to_string());
+    let spec = build_train_spec(&f, train_rows.cols(), false)?;
+
+    let requested = match flag(flags, "distributed") {
+        Some("true") | None => 0, // bare switch: size from the shard set (or default 2)
+        Some(v) => v.parse::<usize>()?,
+    };
+    let shard_dir = match flag(flags, "shard-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("sodm-dist-{}", std::process::id())),
+    };
+    let manifest = if shard_dir.join("manifest.json").is_file() {
+        let m = ShardManifest::load(&shard_dir)?;
+        sodm::ensure!(
+            requested == 0 || requested == m.shards,
+            "--distributed {requested} but {} holds {} shards — re-shard or drop the count",
+            shard_dir.display(),
+            m.shards
+        );
+        sodm::ensure!(
+            m.seed == spec.seed,
+            "shard set {} was written with seed {} but this run uses seed {} — \
+             re-shard with a matching --seed",
+            shard_dir.display(),
+            m.seed,
+            spec.seed
+        );
+        m
+    } else {
+        write_shards(
+            train_rows,
+            requested.max(2),
+            spec.stratums,
+            spec.seed,
+            &shard_dir,
+            spec.workers,
+        )?
+    };
+    println!(
+        "shard set: {} shards over {} rows at {}",
+        manifest.shards,
+        manifest.rows,
+        shard_dir.display()
+    );
+
+    let mut d = sodm::api::DistSpec::new(&shard_dir, std::env::current_exe()?);
+    d.chunk_rows = flag_usize(flags, "chunk", 0)?;
+    d.ckpt_every_stages = flag_usize(flags, "ckpt-every", 0)?;
+    if let Some(dir) = flag(flags, "ckpt-dir") {
+        d.ckpt_dir = Some(dir.into());
+        // --ckpt-dir without a cadence still checkpoints: once per epoch.
+        if d.ckpt_every_stages == 0 {
+            d.ckpt_every_stages = manifest.shards;
+        }
+    }
+    let spec = spec.partitions(manifest.shards).stratums(manifest.stratums).distributed(d).build()?;
+
+    let out = match flag(flags, "resume") {
+        Some(ck) => api::resume_distributed(&spec, std::path::Path::new(ck))?,
+        None => api::train_distributed(&spec)?,
+    };
+    let artifact = out.run.artifact;
+    let acc_train = artifact.accuracy(train_rows)?;
+    let acc_test = artifact.accuracy(test_rows)?;
+    let s = &out.stats;
+    let per_epoch: Vec<String> = s.bytes_per_epoch.iter().map(|b| b.to_string()).collect();
+    println!(
+        "method={} workers={} rows={} time={:.2}s train_acc={acc_train:.4} \
+         test_acc={acc_test:.4} bytes_total={} frames={} bytes_per_epoch=[{}]",
+        artifact.meta.method,
+        s.workers,
+        manifest.rows,
+        artifact.meta.seconds,
+        s.bytes_total,
+        s.frames,
+        per_epoch.join(",")
+    );
+    if let Some(ck) = &out.last_checkpoint {
+        println!("last checkpoint: {}", ck.display());
+    }
+    if out.interrupted {
+        println!("run interrupted before finishing — resume with --resume <checkpoint>");
+    }
+    if let Some(path) = flag(flags, "model-out") {
+        artifact.save(path)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+/// `shard`: partition a dataset with the §3.2 stratified partitioner and
+/// write one out-of-core shard file per partition plus `manifest.json`.
+/// Deterministic in `--seed` and independent of `--workers`, so re-sharding
+/// the same data reproduces identical files.
+fn cmd_shard(flags: &HashMap<String, String>) -> Result<()> {
+    use sodm::data::shardfile::write_shards;
+    let data_spec = flag(flags, "data").ok_or_else(|| sodm::err!("--data is required"))?;
+    let seed = flag_usize(flags, "seed", 7)? as u64;
+    let shards = flag_usize(flags, "shards", 4)?;
+    let stratums = flag_usize(flags, "stratums", 16)?;
+    let workers = flag_usize(flags, "workers", num_cpus())?;
+    let out_dir = std::path::PathBuf::from(flag(flags, "out-dir").unwrap_or("shards"));
+    let loaded = load_data(data_spec, seed)?;
+    let m = write_shards(loaded.as_rows(), shards, stratums, seed, &out_dir, workers)?;
+    println!(
+        "wrote {} shards ({} rows x {} cols, {}) + manifest.json to {} (seed {})",
+        m.shards,
+        m.rows,
+        m.cols,
+        if m.sparse { "CSR" } else { "dense" },
+        out_dir.display(),
+        m.seed
+    );
+    for (file, len) in m.files.iter().zip(&m.partition_lens) {
+        println!("  {file}: {len} rows");
+    }
+    Ok(())
+}
+
+/// `worker`: serve one shard file to a distributed-training coordinator.
+/// Prints `SODM-WORKER LISTENING <addr>` on stdout once bound, then blocks
+/// until the coordinator disconnects. Normally spawned by
+/// `train --distributed`, but runnable by hand for debugging.
+fn cmd_worker(flags: &HashMap<String, String>) -> Result<()> {
+    let shard = flag(flags, "shard").ok_or_else(|| sodm::err!("--shard is required"))?;
+    let chunk = flag_usize(flags, "chunk", 0)?;
+    sodm::dist::run_worker(std::path::Path::new(shard), chunk)
 }
 
 /// Score a saved artifact (current envelope or legacy v0 model JSON) on a
@@ -698,6 +878,21 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
         }
         return Ok(());
     }
+    if flags.contains_key("distributed") {
+        let shards = flag_usize(flags, "shards", 2)?;
+        let quick = flags.contains_key("quick");
+        let (json, out) = sodm::exp::run_dist_benchmark(shards, quick, cfg.seed)?;
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let path = cfg.out_dir.join("dist_bench.json");
+        std::fs::write(&path, json.to_string())?;
+        println!("{out}");
+        println!("wrote {}", path.display());
+        if let Some(extra) = flag(flags, "json") {
+            std::fs::write(extra, json.to_string())?;
+            println!("wrote JSON summary to {extra}");
+        }
+        return Ok(());
+    }
     if let Some(f) = flag(flags, "figure") {
         let out = match f {
             "1" => figure1(&cfg)?,
@@ -719,7 +914,7 @@ fn cmd_experiment(flags: &HashMap<String, String>) -> Result<()> {
     }
     sodm::bail!(
         "experiment needs --table N, --figure N, --ablation, --sparse, --serve, \
-         --remote-serve, --multiclass, --rff, or --online"
+         --remote-serve, --multiclass, --rff, --online, or --distributed"
     )
 }
 
@@ -1044,6 +1239,10 @@ const SUMMARY_CONTRACT: &[(&str, &[&str])] = &[
     (
         "online-summary.json",
         &["name", "online_post_drift_accuracy", "frozen_post_drift_accuracy", "beats_frozen"],
+    ),
+    (
+        "dist-summary.json",
+        &["name", "workers", "speedup", "bytes_total", "max_abs_gap", "resume_exact"],
     ),
 ];
 

@@ -76,6 +76,10 @@ impl NetClient {
         match frame::read_reply(&mut self.reader)? {
             ReadOutcome::Frame(rep) => Ok(rep),
             ReadOutcome::Eof => Err(crate::err!("server closed the connection")),
+            ReadOutcome::Malformed(frame::FrameError::BadVersion(v)) => Err(crate::err!(
+                "server speaks protocol v{v}, this client speaks v{} — upgrade the older side",
+                frame::VERSION
+            )),
             ReadOutcome::Malformed(e) => Err(crate::err!("malformed reply frame: {e}")),
         }
     }

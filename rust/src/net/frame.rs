@@ -7,7 +7,7 @@
 //! offset  size  field
 //! 0       4     magic  b"SODM"
 //! 4       1     protocol version (VERSION = 1)
-//! 5       1     frame kind (request 0x01..0x21, reply 0x81..0xE0)
+//! 5       1     frame kind (request 0x01..0x35, reply 0x81..0xE0)
 //! 6       4     payload length, u32 little-endian (<= MAX_PAYLOAD)
 //! 10      n     payload (kind-specific, all integers/floats little-endian)
 //! ```
@@ -26,6 +26,17 @@
 //! | 0x20 | AdminSwap        | `len: u32`, UTF-8 artifact path          |
 //! | 0x21 | AdminFault       | `panics: u32`, `stall_ms: u32`           |
 //!
+//! Training requests (coordinator → worker, [`TrainRequest`]):
+//!
+//! | kind | name       | payload                                              |
+//! |------|------------|------------------------------------------------------|
+//! | 0x30 | Hello      | `grad_workers: u32`, `λ θ υ: 3 × f32`                |
+//! | 0x31 | GradSum    | `n: u32`, `n × f64` snapshot w                       |
+//! | 0x32 | EpochSetup | `n: u32`, `n × f64` w_snap, `n × f64` h, `eta: f64`, `ordered: u8` |
+//! | 0x33 | StagePass  | `n: u32`, `n × f64` w, `k: u32`, `k × u32` order, `done: u64`, `ckpt_every: u64` |
+//! | 0x34 | LossSum    | `n: u32`, `n × f64` w                                |
+//! | 0x35 | Done       | empty                                                |
+//!
 //! Reply payloads:
 //!
 //! | kind | name      | payload                                     |
@@ -36,12 +47,29 @@
 //! | 0x90 | HealthOk  | UTF-8 JSON                                  |
 //! | 0x91 | MetricsOk | UTF-8 JSON                                  |
 //! | 0xA0 | AdminOk   | `version: u32` (artifact version now live)  |
+//! | 0xB0 | HelloOk   | `index: u32`, `count: u32`, `rows: u64`, `cols: u64`, `sparse: u8`, `seed: u64` |
+//! | 0xB1 | GradOk    | `n: u32`, `n × f64` gradient sum, `loss: f64` |
+//! | 0xB2 | EpochOk   | empty                                       |
+//! | 0xB3 | StageOk   | `n: u32`, `n × f64` w, `k: u32`, `k × (done: u64, n × f64 w)` checkpoints |
+//! | 0xB4 | LossOk    | `loss: f64`                                 |
+//! | 0xB5 | DoneOk    | empty                                       |
 //! | 0xE0 | Error     | `code: u8` ([`ErrorCode`]), UTF-8 message   |
 //!
 //! Decoding distinguishes *recoverable* malformations (valid framing, bad
 //! content — the connection stays usable) from *desyncing* ones (bad
 //! magic/version/length — the server replies typed and closes, since frame
 //! boundaries can no longer be trusted). See [`FrameError::recoverable`].
+//!
+//! # Version negotiation
+//!
+//! Byte 4 of every header names the protocol version, checked on *every*
+//! frame — so the first frame of a connection is always a negotiation
+//! point. A server (scoring or training) that reads a frame with a foreign
+//! version byte replies [`version_mismatch_reply`] — a typed `Admin` error
+//! naming both versions — and closes instead of desyncing; a client that
+//! receives a foreign-version reply surfaces the same message
+//! ([`FrameError::BadVersion`] is never silently skipped, because the
+//! payload length field of a foreign version cannot be trusted).
 
 use std::io::{ErrorKind, Read, Write};
 
@@ -352,6 +380,195 @@ impl Reply {
     }
 }
 
+/// Typed `Admin` error for a protocol-version mismatch: names both versions
+/// so the operator knows which side to upgrade. The sender must close the
+/// connection after this reply — a foreign version's length field cannot be
+/// trusted, so the stream is desynced by definition.
+pub fn version_mismatch_reply(peer_version: u8) -> Reply {
+    Reply::Error {
+        code: ErrorCode::Admin,
+        msg: format!(
+            "protocol version mismatch: peer speaks v{peer_version}, this side speaks v{VERSION}"
+        ),
+    }
+}
+
+/// A decoded distributed-training request (coordinator → worker). One
+/// connection drives one worker: `Hello` configures it, then per epoch one
+/// `GradSum`, one `EpochSetup`, one `StagePass` per round-robin turn, and a
+/// `LossSum` per checkpoint; `Done` ends the session.
+#[derive(Clone, Debug)]
+pub enum TrainRequest {
+    /// Open the training session: gradient-pass thread count and the ODM
+    /// hyperparameters (λ, θ, υ) the worker evaluates gradients with.
+    Hello { grad_workers: u32, lambda: f32, theta: f32, upsilon: f32 },
+    /// Compute the shard's gradient sum + loss at the snapshot iterate.
+    GradSum { w_snap: Vec<f64> },
+    /// Per-epoch setup: snapshot, reference gradient, step size, and
+    /// whether stage orders are violation-ordered (computed worker-side)
+    /// instead of shipped shuffles.
+    EpochSetup { w_snap: Vec<f64>, h: Vec<f64>, eta: f64, ordered: bool },
+    /// Run one variance-reduced stage pass over the shard: current `w`,
+    /// the shuffled shard-local visit order (empty when ordered mode
+    /// computes it worker-side), the epoch's instances-done counter, and
+    /// the checkpoint cadence in instances.
+    StagePass { w: Vec<f64>, order: Vec<u32>, done_before: u64, ckpt_every: u64 },
+    /// Sequential shard loss sum at `w` (checkpoint objective round).
+    LossSum { w: Vec<f64> },
+    /// Training finished; the worker replies and exits.
+    Done,
+}
+
+impl TrainRequest {
+    /// This request's frame kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            TrainRequest::Hello { .. } => 0x30,
+            TrainRequest::GradSum { .. } => 0x31,
+            TrainRequest::EpochSetup { .. } => 0x32,
+            TrainRequest::StagePass { .. } => 0x33,
+            TrainRequest::LossSum { .. } => 0x34,
+            TrainRequest::Done => 0x35,
+        }
+    }
+
+    /// Serialize as one wire frame.
+    pub fn to_frame(&self) -> Vec<u8> {
+        let payload = match self {
+            TrainRequest::Hello { grad_workers, lambda, theta, upsilon } => {
+                let mut p = Vec::with_capacity(16);
+                put_u32(&mut p, *grad_workers);
+                put_f32s(&mut p, &[*lambda, *theta, *upsilon]);
+                p
+            }
+            TrainRequest::GradSum { w_snap } => {
+                let mut p = Vec::with_capacity(4 + 8 * w_snap.len());
+                put_u32(&mut p, w_snap.len() as u32);
+                put_f64s(&mut p, w_snap);
+                p
+            }
+            TrainRequest::EpochSetup { w_snap, h, eta, ordered } => {
+                let mut p = Vec::with_capacity(13 + 16 * w_snap.len());
+                put_u32(&mut p, w_snap.len() as u32);
+                put_f64s(&mut p, w_snap);
+                put_f64s(&mut p, h);
+                p.extend_from_slice(&eta.to_le_bytes());
+                p.push(u8::from(*ordered));
+                p
+            }
+            TrainRequest::StagePass { w, order, done_before, ckpt_every } => {
+                let mut p = Vec::with_capacity(24 + 8 * w.len() + 4 * order.len());
+                put_u32(&mut p, w.len() as u32);
+                put_f64s(&mut p, w);
+                put_u32(&mut p, order.len() as u32);
+                put_u32s(&mut p, order);
+                put_u64(&mut p, *done_before);
+                put_u64(&mut p, *ckpt_every);
+                p
+            }
+            TrainRequest::LossSum { w } => {
+                let mut p = Vec::with_capacity(4 + 8 * w.len());
+                put_u32(&mut p, w.len() as u32);
+                put_f64s(&mut p, w);
+                p
+            }
+            TrainRequest::Done => Vec::new(),
+        };
+        frame_bytes(self.kind(), &payload)
+    }
+
+    /// Write this request as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.to_frame())
+    }
+}
+
+/// A decoded distributed-training reply (worker → coordinator). Workers
+/// answer protocol failures with the shared [`Reply::Error`] frame (0xE0),
+/// which [`read_train_reply`] surfaces as [`TrainReply::Error`].
+#[derive(Clone, Debug)]
+pub enum TrainReply {
+    /// Session accepted: the shard this worker owns (index/count/shape) and
+    /// the partitioner seed its shard set was written with.
+    HelloOk { shard_index: u32, shard_count: u32, rows: u64, cols: u64, sparse: bool, seed: u64 },
+    /// Shard gradient sum + summed loss at the snapshot.
+    GradOk { g: Vec<f64>, loss: f64 },
+    /// Epoch setup installed.
+    EpochOk,
+    /// Stage pass finished: the handed-back iterate plus any checkpoint
+    /// boundary crossings `(done_in_epoch, w)` hit during the pass.
+    StageOk { w: Vec<f64>, ckpts: Vec<(u64, Vec<f64>)> },
+    /// Sequential shard loss at the requested iterate.
+    LossOk { loss: f64 },
+    /// Session closed; the worker process exits after sending this.
+    DoneOk,
+    /// Typed failure (shared 0xE0 error frame).
+    Error { code: ErrorCode, msg: String },
+}
+
+impl TrainReply {
+    /// This reply's frame kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            TrainReply::HelloOk { .. } => 0xB0,
+            TrainReply::GradOk { .. } => 0xB1,
+            TrainReply::EpochOk => 0xB2,
+            TrainReply::StageOk { .. } => 0xB3,
+            TrainReply::LossOk { .. } => 0xB4,
+            TrainReply::DoneOk => 0xB5,
+            TrainReply::Error { .. } => 0xE0,
+        }
+    }
+
+    /// Serialize as one wire frame.
+    pub fn to_frame(&self) -> Vec<u8> {
+        let payload = match self {
+            TrainReply::HelloOk { shard_index, shard_count, rows, cols, sparse, seed } => {
+                let mut p = Vec::with_capacity(33);
+                put_u32(&mut p, *shard_index);
+                put_u32(&mut p, *shard_count);
+                put_u64(&mut p, *rows);
+                put_u64(&mut p, *cols);
+                p.push(u8::from(*sparse));
+                put_u64(&mut p, *seed);
+                p
+            }
+            TrainReply::GradOk { g, loss } => {
+                let mut p = Vec::with_capacity(12 + 8 * g.len());
+                put_u32(&mut p, g.len() as u32);
+                put_f64s(&mut p, g);
+                p.extend_from_slice(&loss.to_le_bytes());
+                p
+            }
+            TrainReply::EpochOk | TrainReply::DoneOk => Vec::new(),
+            TrainReply::StageOk { w, ckpts } => {
+                let mut p = Vec::with_capacity(8 + 8 * w.len() * (1 + ckpts.len()));
+                put_u32(&mut p, w.len() as u32);
+                put_f64s(&mut p, w);
+                put_u32(&mut p, ckpts.len() as u32);
+                for (done, cw) in ckpts {
+                    put_u64(&mut p, *done);
+                    put_f64s(&mut p, cw);
+                }
+                p
+            }
+            TrainReply::LossOk { loss } => loss.to_le_bytes().to_vec(),
+            TrainReply::Error { code, msg } => {
+                let mut p = Vec::with_capacity(1 + msg.len());
+                p.push(*code as u8);
+                p.extend_from_slice(msg.as_bytes());
+                p
+            }
+        };
+        frame_bytes(self.kind(), &payload)
+    }
+
+    /// Write this reply as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.to_frame())
+    }
+}
+
 // ---- decoding ----------------------------------------------------------
 
 /// Bounds-checked little-endian payload cursor.
@@ -599,6 +816,147 @@ pub fn read_reply(r: &mut impl Read) -> std::io::Result<ReadOutcome<Reply>> {
     })
 }
 
+fn decode_train_request(kind: u8, p: &[u8]) -> Result<TrainRequest, FrameError> {
+    match kind {
+        0x30 => {
+            let mut c = Cur::new(p);
+            let grad_workers = c.u32()?;
+            let lambda = c.f32()?;
+            let theta = c.f32()?;
+            let upsilon = c.f32()?;
+            c.done()?;
+            Ok(TrainRequest::Hello { grad_workers, lambda, theta, upsilon })
+        }
+        0x31 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let w_snap = c.f64s(n)?;
+            c.done()?;
+            Ok(TrainRequest::GradSum { w_snap })
+        }
+        0x32 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let w_snap = c.f64s(n)?;
+            let h = c.f64s(n)?;
+            let eta = c.f64()?;
+            let ordered = c.u8()? != 0;
+            c.done()?;
+            Ok(TrainRequest::EpochSetup { w_snap, h, eta, ordered })
+        }
+        0x33 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let w = c.f64s(n)?;
+            let k = c.u32()? as usize;
+            let order = c.u32s(k)?;
+            let done_before = c.u64()?;
+            let ckpt_every = c.u64()?;
+            c.done()?;
+            Ok(TrainRequest::StagePass { w, order, done_before, ckpt_every })
+        }
+        0x34 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let w = c.f64s(n)?;
+            c.done()?;
+            Ok(TrainRequest::LossSum { w })
+        }
+        0x35 => {
+            if !p.is_empty() {
+                return Err(FrameError::BadPayload("done takes no payload"));
+            }
+            Ok(TrainRequest::Done)
+        }
+        other => Err(FrameError::UnknownKind(other)),
+    }
+}
+
+fn decode_train_reply(kind: u8, p: &[u8]) -> Result<TrainReply, FrameError> {
+    match kind {
+        0xB0 => {
+            let mut c = Cur::new(p);
+            let shard_index = c.u32()?;
+            let shard_count = c.u32()?;
+            let rows = c.u64()?;
+            let cols = c.u64()?;
+            let sparse = c.u8()? != 0;
+            let seed = c.u64()?;
+            c.done()?;
+            Ok(TrainReply::HelloOk { shard_index, shard_count, rows, cols, sparse, seed })
+        }
+        0xB1 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let g = c.f64s(n)?;
+            let loss = c.f64()?;
+            c.done()?;
+            Ok(TrainReply::GradOk { g, loss })
+        }
+        0xB2 | 0xB5 => {
+            if !p.is_empty() {
+                return Err(FrameError::BadPayload("ack frames take no payload"));
+            }
+            Ok(if kind == 0xB2 { TrainReply::EpochOk } else { TrainReply::DoneOk })
+        }
+        0xB3 => {
+            let mut c = Cur::new(p);
+            let n = c.u32()? as usize;
+            let w = c.f64s(n)?;
+            let k = c.u32()? as usize;
+            let mut ckpts = Vec::with_capacity(k.min(1024));
+            for _ in 0..k {
+                let done = c.u64()?;
+                let cw = c.f64s(n)?;
+                ckpts.push((done, cw));
+            }
+            c.done()?;
+            Ok(TrainReply::StageOk { w, ckpts })
+        }
+        0xB4 => {
+            let mut c = Cur::new(p);
+            let loss = c.f64()?;
+            c.done()?;
+            Ok(TrainReply::LossOk { loss })
+        }
+        0xE0 => {
+            let mut c = Cur::new(p);
+            let code = ErrorCode::from_u8(c.u8()?)
+                .ok_or(FrameError::BadPayload("unknown error code"))?;
+            let msg = std::str::from_utf8(&p[1..])
+                .map(str::to_string)
+                .map_err(|_| FrameError::BadPayload("reply text is not UTF-8"))?;
+            Ok(TrainReply::Error { code, msg })
+        }
+        other => Err(FrameError::UnknownKind(other)),
+    }
+}
+
+/// Read + decode one training request frame (worker side).
+pub fn read_train_request(r: &mut impl Read) -> std::io::Result<ReadOutcome<TrainRequest>> {
+    Ok(match read_raw(r)? {
+        ReadOutcome::Eof => ReadOutcome::Eof,
+        ReadOutcome::Malformed(e) => ReadOutcome::Malformed(e),
+        ReadOutcome::Frame((kind, payload)) => match decode_train_request(kind, &payload) {
+            Ok(req) => ReadOutcome::Frame(req),
+            Err(e) => ReadOutcome::Malformed(e),
+        },
+    })
+}
+
+/// Read + decode one training reply frame (coordinator side). The shared
+/// 0xE0 error frame decodes as [`TrainReply::Error`].
+pub fn read_train_reply(r: &mut impl Read) -> std::io::Result<ReadOutcome<TrainReply>> {
+    Ok(match read_raw(r)? {
+        ReadOutcome::Eof => ReadOutcome::Eof,
+        ReadOutcome::Malformed(e) => ReadOutcome::Malformed(e),
+        ReadOutcome::Frame((kind, payload)) => match decode_train_reply(kind, &payload) {
+            Ok(rep) => ReadOutcome::Frame(rep),
+            Err(e) => ReadOutcome::Malformed(e),
+        },
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -759,5 +1117,178 @@ mod tests {
         let ReadOutcome::Malformed(e) = read_request(&mut cur).unwrap() else { panic!() };
         assert!(matches!(e, FrameError::BadPayload(_)), "{e:?}");
         assert!(e.recoverable());
+    }
+
+    fn round_trip_train_request(req: TrainRequest) -> TrainRequest {
+        let bytes = req.to_frame();
+        let mut cur = &bytes[..];
+        match read_train_request(&mut cur).unwrap() {
+            ReadOutcome::Frame(r) => r,
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    fn round_trip_train_reply(rep: TrainReply) -> TrainReply {
+        let bytes = rep.to_frame();
+        let mut cur = &bytes[..];
+        match read_train_reply(&mut cur).unwrap() {
+            ReadOutcome::Frame(r) => r,
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn train_requests_round_trip() {
+        let hello =
+            TrainRequest::Hello { grad_workers: 3, lambda: 0.25, theta: 0.5, upsilon: 1.5 };
+        match round_trip_train_request(hello) {
+            TrainRequest::Hello { grad_workers, lambda, theta, upsilon } => {
+                assert_eq!(grad_workers, 3);
+                assert_eq!((lambda, theta, upsilon), (0.25, 0.5, 1.5));
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip_train_request(TrainRequest::GradSum { w_snap: vec![1.5, -2.25] }) {
+            TrainRequest::GradSum { w_snap } => assert_eq!(w_snap, vec![1.5, -2.25]),
+            other => panic!("{other:?}"),
+        }
+        let setup = TrainRequest::EpochSetup {
+            w_snap: vec![0.5, 1.0],
+            h: vec![-0.125, 2.0],
+            eta: 0.03125,
+            ordered: true,
+        };
+        match round_trip_train_request(setup) {
+            TrainRequest::EpochSetup { w_snap, h, eta, ordered } => {
+                assert_eq!(w_snap, vec![0.5, 1.0]);
+                assert_eq!(h, vec![-0.125, 2.0]);
+                assert_eq!(eta, 0.03125);
+                assert!(ordered);
+            }
+            other => panic!("{other:?}"),
+        }
+        let stage = TrainRequest::StagePass {
+            w: vec![-1.0, 0.75],
+            order: vec![2, 0, 1],
+            done_before: (u32::MAX as u64) + 7,
+            ckpt_every: 128,
+        };
+        match round_trip_train_request(stage) {
+            TrainRequest::StagePass { w, order, done_before, ckpt_every } => {
+                assert_eq!(w, vec![-1.0, 0.75]);
+                assert_eq!(order, vec![2, 0, 1]);
+                assert_eq!(done_before, (u32::MAX as u64) + 7);
+                assert_eq!(ckpt_every, 128);
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip_train_request(TrainRequest::LossSum { w: vec![4.5] }) {
+            TrainRequest::LossSum { w } => assert_eq!(w, vec![4.5]),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip_train_request(TrainRequest::Done), TrainRequest::Done));
+    }
+
+    #[test]
+    fn train_replies_round_trip() {
+        let hello = TrainReply::HelloOk {
+            shard_index: 1,
+            shard_count: 4,
+            rows: (u32::MAX as u64) + 9,
+            cols: 17,
+            sparse: true,
+            seed: 0x50D,
+        };
+        match round_trip_train_reply(hello) {
+            TrainReply::HelloOk { shard_index, shard_count, rows, cols, sparse, seed } => {
+                assert_eq!((shard_index, shard_count), (1, 4));
+                assert_eq!((rows, cols), ((u32::MAX as u64) + 9, 17));
+                assert!(sparse);
+                assert_eq!(seed, 0x50D);
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip_train_reply(TrainReply::GradOk { g: vec![0.5, -0.5], loss: 3.25 }) {
+            TrainReply::GradOk { g, loss } => {
+                assert_eq!(g, vec![0.5, -0.5]);
+                assert_eq!(loss, 3.25);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip_train_reply(TrainReply::EpochOk), TrainReply::EpochOk));
+        let stage = TrainReply::StageOk {
+            w: vec![1.0, 2.0],
+            ckpts: vec![(64, vec![0.5, 0.25]), (128, vec![-1.0, -2.0])],
+        };
+        match round_trip_train_reply(stage) {
+            TrainReply::StageOk { w, ckpts } => {
+                assert_eq!(w, vec![1.0, 2.0]);
+                assert_eq!(ckpts, vec![(64, vec![0.5, 0.25]), (128, vec![-1.0, -2.0])]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip_train_reply(TrainReply::LossOk { loss: -0.75 }) {
+            TrainReply::LossOk { loss } => assert_eq!(loss, -0.75),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip_train_reply(TrainReply::DoneOk), TrainReply::DoneOk));
+        let err = TrainReply::Error { code: ErrorCode::Admin, msg: "stop".into() };
+        match round_trip_train_reply(err) {
+            TrainReply::Error { code, msg } => {
+                assert_eq!(code, ErrorCode::Admin);
+                assert_eq!(msg, "stop");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn old_client_new_server_negotiates_typed_error() {
+        // An "old client" whose frames carry version 0: the server must see
+        // BadVersion and answer with the typed Admin reply naming both
+        // versions instead of desyncing on an untrusted length field.
+        let mut bytes = TrainRequest::Done.to_frame();
+        bytes[4] = 0;
+        let mut cur = &bytes[..];
+        let ReadOutcome::Malformed(e) = read_train_request(&mut cur).unwrap() else { panic!() };
+        assert_eq!(e, FrameError::BadVersion(0));
+        assert!(!e.recoverable());
+
+        let reply = version_mismatch_reply(0);
+        let Reply::Error { code, msg } = &reply else { panic!("{reply:?}") };
+        assert_eq!(*code, ErrorCode::Admin);
+        assert!(msg.contains("v0") && msg.contains(&format!("v{VERSION}")), "{msg}");
+
+        // The typed reply itself decodes on the old client's side too: the
+        // 0xE0 error frame predates the training kinds.
+        match round_trip_train_reply(TrainReply::Error {
+            code: ErrorCode::Admin,
+            msg: msg.clone(),
+        }) {
+            TrainReply::Error { code, .. } => assert_eq!(code, ErrorCode::Admin),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn new_client_old_server_surfaces_bad_version() {
+        // A "new client" reading a v9 server's reply stream: BadVersion with
+        // the peer's version, not a payload desync.
+        let mut bytes = TrainReply::EpochOk.to_frame();
+        bytes[4] = 9;
+        let mut cur = &bytes[..];
+        let ReadOutcome::Malformed(e) = read_train_reply(&mut cur).unwrap() else { panic!() };
+        assert_eq!(e, FrameError::BadVersion(9));
+        assert!(!e.recoverable());
+        assert!(format!("{e}").contains("version 9"));
+    }
+
+    #[test]
+    fn train_kind_bytes_are_stable() {
+        // Wire compatibility: kind bytes are a protocol contract.
+        assert_eq!(TrainRequest::Done.to_frame()[5], 0x35);
+        assert_eq!(TrainRequest::GradSum { w_snap: vec![] }.to_frame()[5], 0x31);
+        assert_eq!(TrainReply::EpochOk.to_frame()[5], 0xB2);
+        assert_eq!(TrainReply::DoneOk.to_frame()[5], 0xB5);
     }
 }

@@ -173,7 +173,13 @@ fn handle_conn(stream: TcpStream, _id: u64, shared: &Shared) {
             Err(_) | Ok(ReadOutcome::Eof) => break,
             Ok(ReadOutcome::Malformed(e)) => {
                 shared.metrics.malformed.fetch_add(1, Ordering::Relaxed);
-                let reply = Reply::Error { code: ErrorCode::Malformed, msg: e.to_string() };
+                // A wrong version byte gets the negotiation reply (typed
+                // Admin error naming both versions) so old/new peers fail
+                // loudly; other malformations get the generic typed error.
+                let reply = match e {
+                    frame::FrameError::BadVersion(v) => frame::version_mismatch_reply(v),
+                    _ => Reply::Error { code: ErrorCode::Malformed, msg: e.to_string() },
+                };
                 let _ = reply.write_to(&mut writer);
                 if !e.recoverable() {
                     break;

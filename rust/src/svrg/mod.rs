@@ -158,14 +158,12 @@ pub fn primal_objective(w: &[f64], view: &DataView, params: &OdmParams, workers:
     reg + loss_sum / view.len() as f64
 }
 
-/// Resolve the configured step size: explicit, or auto 0.5/L.
-pub fn resolve_eta<'a>(cfg_eta: f64, data: impl Into<Rows<'a>>, params: &OdmParams) -> f64 {
-    if cfg_eta > 0.0 {
-        return cfg_eta;
-    }
+/// Mean squared stored-entry norm over the η-auto sample (512 evenly spaced
+/// rows) — the one data statistic the auto step size depends on. Recorded in
+/// shard manifests so a distributed coordinator that never sees the rows
+/// still resolves the exact same η as the in-process trainer.
+pub fn sample_sq_mean<'a>(data: impl Into<Rows<'a>>) -> f64 {
     let rows: Rows = data.into();
-    let theta = params.theta as f64;
-    let s = params.lambda as f64 / ((1.0 - theta) * (1.0 - theta));
     let m = rows.rows();
     let sample = m.min(512);
     let mut avg_sq = 0.0;
@@ -175,8 +173,132 @@ pub fn resolve_eta<'a>(cfg_eta: f64, data: impl Into<Rows<'a>>, params: &OdmPara
         r.for_each_stored(|_, v| sq += (v as f64) * (v as f64));
         avg_sq += sq;
     }
-    avg_sq /= sample.max(1) as f64;
+    avg_sq / sample.max(1) as f64
+}
+
+/// Step size from the η knob and the sample statistic: explicit if positive,
+/// otherwise auto ~0.5/L with L ≈ 1 + λ/(1-θ)² · E[‖x‖²].
+pub fn eta_from_sample(cfg_eta: f64, avg_sq: f64, params: &OdmParams) -> f64 {
+    if cfg_eta > 0.0 {
+        return cfg_eta;
+    }
+    let theta = params.theta as f64;
+    let s = params.lambda as f64 / ((1.0 - theta) * (1.0 - theta));
     0.5 / (1.0 + s * avg_sq)
+}
+
+/// Resolve the configured step size: explicit, or auto 0.5/L.
+pub fn resolve_eta<'a>(cfg_eta: f64, data: impl Into<Rows<'a>>, params: &OdmParams) -> f64 {
+    if cfg_eta > 0.0 {
+        return cfg_eta;
+    }
+    eta_from_sample(cfg_eta, sample_sq_mean(data), params)
+}
+
+/// Node count actually used for a requested K on `m_total` rows: Algorithm 2
+/// caps K at m/2 so every node keeps at least two instances. The `shard` CLI
+/// applies the same clamp so shard counts always line up with `train_dsvrg`.
+pub fn effective_partitions(requested: usize, m_total: usize) -> usize {
+    requested.clamp(1, m_total / 2)
+}
+
+/// Algorithm 2 line 9: average the per-node gradient sums into the reference
+/// gradient `h = Σ_j g_j / m + w_snap` (the +w term is the regulariser).
+/// Partials must be combined in node order — the sim and the distributed
+/// coordinator both do, so the two produce bit-identical references.
+pub fn dsvrg_reference(partials: &[(Vec<f64>, f64)], w_snap: &[f64], m_total: usize) -> Vec<f64> {
+    let mut h = vec![0.0f64; w_snap.len()];
+    for (g, _) in partials {
+        for (a, b) in h.iter_mut().zip(g) {
+            *a += b;
+        }
+    }
+    for (hj, wj) in h.iter_mut().zip(w_snap) {
+        *hj = *hj / m_total as f64 + *wj;
+    }
+    h
+}
+
+/// Sequential summed loss over a view, in row order. This is the form a
+/// distributed worker produces by streaming its shard, so the sim's
+/// checkpoint objective sums partitions the same way to stay bit-comparable.
+pub fn loss_sum_seq(w: &[f64], view: &DataView, params: &OdmParams) -> f64 {
+    let mut loss = 0.0;
+    for i in 0..view.len() {
+        loss += loss_term(margin(w, view.row_ref(i), view.label(i)), params);
+    }
+    loss
+}
+
+/// Primal objective from per-node sequential loss sums combined in node
+/// order: ½‖w‖² + Σ_j loss_j / m.
+pub fn objective_from_losses(w: &[f64], losses: &[f64], m_total: usize) -> f64 {
+    let reg = 0.5 * w.iter().map(|a| a * a).sum::<f64>();
+    let loss_sum: f64 = losses.iter().sum();
+    reg + loss_sum / m_total as f64
+}
+
+/// Checkpoint objective in the partitioned form the distributed runtime also
+/// produces (one sequential loss sum per node, combined in node order) —
+/// bit-identical whether the partitions live in this process or behind
+/// worker sockets. Runs on the thread pool directly rather than through the
+/// [`SimCluster`] ledger: checkpoint evaluation is instrumentation, not
+/// Algorithm 2 communication, so it must not pollute the comm accounting.
+pub fn partitioned_objective(
+    w: &[f64],
+    rows: Rows,
+    partitions: &[Vec<usize>],
+    params: &OdmParams,
+    workers: usize,
+) -> f64 {
+    let losses: Vec<f64> = pool::parallel_map(partitions.len(), workers, |j| {
+        let pview = DataView::from_rows(rows, &partitions[j]);
+        loss_sum_seq(w, &pview, params)
+    });
+    let m_total: usize = partitions.iter().map(|p| p.len()).sum();
+    objective_from_losses(w, &losses, m_total)
+}
+
+/// One DSVRG stage (Algorithm 2 lines 11-14) through the lazy iterate: a
+/// fresh [`LazyVr`] over `(w_snap, h, eta)` consumes `order` via `visit`
+/// (which resolves an order entry to its row — global index for the sim,
+/// shard-local position for a distributed worker), flushing pending decay at
+/// every checkpoint boundary and at stage end so `w` leaves fully
+/// materialized. Returns the updated instances-done counter.
+///
+/// This is the single shared implementation of the per-stage step: the
+/// in-process [`train_dsvrg`] and the real multi-process worker
+/// ([`crate::dist`]) both call it, which is what makes the 1e-9
+/// sim-vs-distributed equivalence a property of the call graph rather than
+/// of two hand-synced loops.
+pub fn dsvrg_stage_pass(
+    w: &mut Vec<f64>,
+    w_snap: &[f64],
+    h: &[f64],
+    eta: f64,
+    params: &OdmParams,
+    order: &[usize],
+    visit: &mut dyn FnMut(usize, &mut dyn FnMut(RowRef<'_>, f32)) -> crate::Result<()>,
+    done_before: u64,
+    ckpt_every: u64,
+    on_ckpt: &mut dyn FnMut(u64, &[f64]),
+) -> crate::Result<u64> {
+    let mut lazy = LazyVr::new(w_snap, h, eta);
+    let mut done = done_before;
+    for &i in order {
+        {
+            let lz = &mut lazy;
+            let wr = &mut *w;
+            visit(i, &mut |x, y| lz.step_row(wr, w_snap, x, y, params))?;
+        }
+        done += 1;
+        if ckpt_every > 0 && done % ckpt_every == 0 {
+            lazy.flush(w);
+            on_ckpt(done, w);
+        }
+    }
+    lazy.flush(w);
+    Ok(done)
 }
 
 /// Lazily-applied variance-reduced iterate (see module docs): coordinates
@@ -453,7 +575,7 @@ pub fn train_dsvrg<'a>(
     let view = DataView::from_rows(rows, &all_idx);
 
     // Lines 1-2: stratified partitions.
-    let k = cfg.partitions.clamp(1, m_total / 2);
+    let k = effective_partitions(cfg.partitions, m_total);
     let partitions = make_partitions(
         &view,
         &crate::kernel::KernelKind::Linear,
@@ -467,7 +589,7 @@ pub fn train_dsvrg<'a>(
     let mut w = vec![0.0f64; n];
     let mut rng = Pcg32::seeded(cfg.seed ^ 0xD5);
     let mut checkpoints = Vec::new();
-    let ckpt_every = (m_total / cfg.checkpoints_per_epoch.max(1)).max(1);
+    let ckpt_every = (m_total / cfg.checkpoints_per_epoch.max(1)).max(1) as u64;
 
     for epoch in 0..cfg.epochs {
         // Line 5: broadcast w.
@@ -480,21 +602,12 @@ pub fn train_dsvrg<'a>(
         });
         // Line 9: center averages; h includes the +w regulariser term.
         cluster.gather(n * 8);
-        let mut h = vec![0.0f64; n];
-        for (g, _) in &partials {
-            for (a, b) in h.iter_mut().zip(g) {
-                *a += b;
-            }
-        }
-        for (hj, wj) in h.iter_mut().zip(&w_snap) {
-            *hj = *hj / m_total as f64 + *wj;
-        }
+        let h = dsvrg_reference(&partials, &w_snap, m_total);
 
         // Line 3: auxiliary arrays R_j — local indices, consumed without
         // replacement (shuffled fresh each epoch). Steps run through the
         // lazy iterate so sparse rows cost O(nnz).
-        let mut lazy = LazyVr::new(&w_snap, &h, eta);
-        let mut done_in_epoch = 0usize;
+        let mut done_in_epoch = 0u64;
         for (j, part) in partitions.iter().enumerate() {
             // Round-robin handoff of w to node j (line 12 onwards).
             if j > 0 {
@@ -512,22 +625,37 @@ pub fn train_dsvrg<'a>(
             } else {
                 rng.shuffle(&mut r_j);
             }
-            for &gidx in &r_j {
-                lazy.step_row(&mut w, &w_snap, rows.row_ref(gidx), rows.label(gidx), params);
-                done_in_epoch += 1;
-                if done_in_epoch % ckpt_every == 0 {
-                    lazy.flush(&mut w);
+            done_in_epoch = dsvrg_stage_pass(
+                &mut w,
+                &w_snap,
+                &h,
+                eta,
+                params,
+                &r_j,
+                &mut |gidx, step| {
+                    step(rows.row_ref(gidx), rows.label(gidx));
+                    Ok(())
+                },
+                done_in_epoch,
+                ckpt_every,
+                &mut |done, wc| {
                     checkpoints.push(SvrgCheckpoint {
                         epoch,
-                        fraction: done_in_epoch as f64 / m_total as f64,
+                        fraction: done as f64 / m_total as f64,
                         elapsed: t0.elapsed().as_secs_f64(),
-                        objective: primal_objective(&w, &view, params, cluster.workers),
-                        w: w.clone(),
+                        objective: partitioned_objective(
+                            wc,
+                            rows,
+                            &partitions,
+                            params,
+                            cluster.workers,
+                        ),
+                        w: wc.to_vec(),
                     });
-                }
-            }
+                },
+            )
+            .expect("in-process visit is infallible");
         }
-        lazy.flush(&mut w);
         // w^{(l+1)} handed back to the center.
         cluster.send(n * 8);
     }

@@ -176,6 +176,32 @@ fn malformed_frames_draw_typed_errors_without_killing_the_acceptor() {
 }
 
 #[test]
+fn version_mismatch_draws_a_typed_admin_reply_naming_both_versions() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback sockets unavailable");
+        return;
+    }
+    let (server, mut client) = serve_net(linear_artifact(vec![2.0]));
+    // An otherwise-valid frame whose version byte is from the future: the
+    // server answers the protocol-negotiation reply — a typed Admin error
+    // naming both versions — then closes (frame boundaries can't be
+    // trusted across a version gap).
+    let mut f = raw_frame(0x01, &[]);
+    f[4] = 9;
+    let reply = client.send_raw(&f).unwrap();
+    match reply {
+        Reply::Error { code, msg } => {
+            assert_eq!(code as u8, ErrorCode::Admin as u8);
+            assert!(msg.contains("v9"), "must name the peer's version: {msg}");
+            assert!(msg.contains(&format!("v{VERSION}")), "must name its own version: {msg}");
+        }
+        other => panic!("expected admin error reply, got kind 0x{:02x}", other.kind()),
+    }
+    assert!(client.score(&[1.0]).is_err(), "mismatched-version connection must be closed");
+    server.stop();
+}
+
+#[test]
 fn oversized_and_non_finite_requests_are_rejected_typed() {
     if !loopback_available() {
         eprintln!("skipping: loopback sockets unavailable");
